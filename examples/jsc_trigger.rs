@@ -1,0 +1,67 @@
+//! LHC jet-trigger scenario (paper Sec. IV-A-2): fixed-latency streaming
+//! classification at initiation interval 1 — the FPGA use case the JSC
+//! models target.  Streams jets through the cycle-accurate pipeline
+//! simulator under both pipeline strategies (paper Fig. 5 / Table V) and
+//! reports the trigger's latency and sustained throughput at the modelled
+//! F_max.
+//!
+//!   cargo run --release --example jsc_trigger [-- --id jsc-m-lite-d1-a2]
+
+use anyhow::Result;
+use polylut_add::coordinator::FrozenModel;
+use polylut_add::fpga::Strategy;
+use polylut_add::sim::{LutSim, PipelineSim};
+use polylut_add::util::cli::Args;
+use polylut_add::{harness, runtime::Engine};
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[])?;
+    let id = args.get_or("id", "jsc-m-lite-d1-a2").to_string();
+    let n_jets = args.get_usize("jets", 5_000)?;
+    let engine = Engine::cpu()?;
+
+    println!("== JSC trigger: {id} ==");
+    let p = harness::prepare(&engine, &id)?;
+    println!("deployed accuracy: {}%", harness::pct(p.accuracy));
+    let model = FrozenModel::from_network(p.net.clone(), 8);
+    let sim = LutSim::new(&model.net, &model.tables);
+
+    let inputs: Vec<Vec<i32>> = (0..n_jets)
+        .map(|i| model.net.quantize_input(p.ds.test_row(i % p.ds.n_test())))
+        .collect();
+
+    for (strategy, label) in [
+        (Strategy::SeparateRegisters, "strategy 1 (separate poly/adder regs)"),
+        (Strategy::Merged, "strategy 2 (merged stage)"),
+    ] {
+        let report = harness::synth(&p, strategy)?;
+        let mut pipe = PipelineSim::new(&model.net, &model.tables, strategy);
+        let t0 = std::time::Instant::now();
+        let res = pipe.stream(&inputs);
+        let sim_wall = t0.elapsed().as_secs_f64();
+        // Functional check against the LUT simulator.
+        let ok = res
+            .outputs
+            .iter()
+            .zip(&inputs)
+            .all(|(out, inp)| out == &sim.forward_codes(inp));
+        assert!(ok, "pipeline output mismatch");
+        let ns_per_jet = 1000.0 / report.fmax_mhz;
+        println!("\n{label}:");
+        println!(
+            "  latency {} cycles @ {:.0} MHz = {:.1} ns; II=1 -> {:.1} Mjets/s on-FPGA",
+            res.latency_cycles,
+            report.fmax_mhz,
+            res.latency_cycles as f64 * ns_per_jet,
+            report.fmax_mhz
+        );
+        println!(
+            "  simulated {} jets in {} cycles ({:.2}s wall, {:.0} jets/s simulated)",
+            n_jets,
+            res.total_cycles,
+            sim_wall,
+            n_jets as f64 / sim_wall
+        );
+    }
+    Ok(())
+}

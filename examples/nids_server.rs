@@ -1,0 +1,77 @@
+//! Network-intrusion-detection serving scenario (paper Sec. IV-A-3).
+//!
+//! Deploys the trained NID model behind the L3 inference coordinator and
+//! drives a multi-client load test, comparing the two backends:
+//! - `lut`  — deployed-semantics LUT-network evaluation (FPGA software twin)
+//! - `pjrt` — the Pallas-lowered JAX eval graph through the PJRT runtime
+//!
+//!   cargo run --release --example nids_server [-- --requests 20000 --clients 8]
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use polylut_add::coordinator::{BackendSpec, FrozenModel, Server, ServerConfig};
+use polylut_add::util::cli::Args;
+use polylut_add::{harness, runtime::Engine};
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&[])?;
+    let n_requests = args.get_usize("requests", 20_000)?;
+    let n_clients = args.get_usize("clients", 8)?;
+    let id = args.get_or("id", "nid-t4-d1-a2").to_string();
+    let engine = Engine::cpu()?;
+
+    println!("== NIDS serving: {id} ==");
+    let p = harness::prepare(&engine, &id)?;
+    println!("deployed accuracy: {}% (UNSW-NB15 substitute)", harness::pct(p.accuracy));
+
+    let model = Arc::new(FrozenModel::from_network(p.net.clone(), 8));
+    for backend_name in ["lut", "pjrt"] {
+        let spec = match backend_name {
+            "lut" => BackendSpec::lut(model.clone(), polylut_add::util::pool::default_workers()),
+            _ => BackendSpec::pjrt(p.man.clone(), p.state.clone()),
+        };
+        let server = Server::start(
+            spec,
+            p.man.config.n_classes,
+            ServerConfig {
+                max_batch: 256,
+                window: Duration::from_micros(200),
+                queue_cap: 8192,
+            },
+        );
+        let correct = Arc::new(AtomicU64::new(0));
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..n_clients {
+                let client = server.client();
+                let ds = &p.ds;
+                let correct = correct.clone();
+                scope.spawn(move || {
+                    let per = n_requests / n_clients;
+                    for i in 0..per {
+                        let idx = (c * per + i) % ds.n_test();
+                        if let Ok(resp) = client.infer(ds.test_row(idx).to_vec()) {
+                            if resp.pred == ds.y_test[idx] {
+                                correct.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let served = server.metrics.responses.load(Ordering::Relaxed);
+        println!("\nbackend={backend_name}: {}", server.metrics.snapshot());
+        println!(
+            "backend={backend_name}: {:.0} req/s, serve accuracy {:.4}, wall {:.2}s",
+            served as f64 / wall,
+            correct.load(Ordering::Relaxed) as f64 / served.max(1) as f64,
+            wall
+        );
+        server.shutdown();
+    }
+    Ok(())
+}

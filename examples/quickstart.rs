@@ -1,0 +1,43 @@
+//! Quickstart: the full PolyLUT-Add flow on JSC-M Lite in under a minute.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! 1. Loads the AOT artifacts (JAX/Pallas lowered at `make artifacts`).
+//! 2. Trains via the Rust-driven PJRT loop (or loads cached weights).
+//! 3. Freezes the network into lookup tables, maps to LUT6s, and prints the
+//!    paper-style area/timing report.
+//! 4. Serves a few predictions through the LUT simulator.
+use anyhow::Result;
+use polylut_add::{fpga::Strategy, harness, runtime::Engine, sim::LutSim};
+
+fn main() -> Result<()> {
+    let engine = Engine::cpu()?;
+    println!("== PolyLUT-Add quickstart (JSC-M Lite, D=1, A=2) ==");
+    let p = harness::prepare(&engine, "jsc-m-lite-d1-a2")?;
+    println!("deployed test accuracy: {}%", harness::pct(p.accuracy));
+
+    let report = harness::synth(&p, Strategy::Merged)?;
+    println!("\n{}", report.render());
+
+    // Deployed-semantics inference through the frozen tables.
+    let tables = polylut_add::lut::compile_network(&p.net, 4);
+    let sim = LutSim::new(&p.net, &tables);
+    println!("sample predictions (LUT network vs label):");
+    for i in 0..8 {
+        let pred = sim.predict(p.ds.test_row(i));
+        println!("  jet {i}: predicted class {pred}, label {}", p.ds.y_test[i]);
+    }
+
+    // PolyLUT baseline (A=1) for comparison — the paper's headline.
+    let base = harness::prepare(&engine, "jsc-m-lite-d1-a1")?;
+    let base_report = harness::synth(&base, Strategy::Merged)?;
+    println!(
+        "\nPolyLUT-Add vs PolyLUT (iso-config): acc {}% vs {}%, LUT {} vs {} ({:.1}x)",
+        harness::pct(p.accuracy),
+        harness::pct(base.accuracy),
+        report.luts,
+        base_report.luts,
+        report.luts as f64 / base_report.luts as f64
+    );
+    Ok(())
+}

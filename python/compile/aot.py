@@ -1,0 +1,205 @@
+"""AOT lowering: JAX -> HLO text artifacts + metadata manifests.
+
+Python runs exactly once (``make artifacts``); the Rust binary is then
+self-contained.  Interchange is HLO **text**, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per configuration we emit:
+
+    artifacts/<id>.train.hlo.txt   one optimizer step (state in, state out)
+    artifacts/<id>.eval.hlo.txt    batched inference (Pallas fast path)
+    artifacts/<id>.meta.json       config, connectivity, monomial order,
+                                   state manifest + init values, opt config
+
+Usage: python -m compile.aot --out-dir ../artifacts [--set all|fig6|table4|quickstart]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs as C
+from . import train as T
+from .configs import ModelConfig
+from .model import make_indices
+from .monomials import monomial_index_lists
+from .optim import AdamWConfig
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (the interchange format).
+
+    ``as_hlo_text(True)`` == print_large_constants: the default printer
+    elides big dense literals as ``constant({...})``, which xla_extension
+    0.5.1's text parser silently turns into garbage (all-zero f32 /
+    saturated s32) — the model's frozen connectivity tables then gather
+    nonsense.  Found the hard way; exercised by rust/tests/cross_check.rs.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def artifact_id(cfg: ModelConfig) -> str:
+    return f"{cfg.name}-d{cfg.degree}-a{cfg.a_factor}"
+
+
+def dataset_of(cfg: ModelConfig) -> str:
+    base = cfg.name.split("-")[0]
+    if base == "hdr":
+        return "mnist"
+    if base == "jsc":
+        return "jsc"
+    return "nid"
+
+
+def batch_of(cfg: ModelConfig) -> int:
+    return 128 if dataset_of(cfg) == "mnist" else 512
+
+
+def fig6_set() -> list[ModelConfig]:
+    """Full-geometry configs behind Fig. 6 / Table II (paper Sec. IV-C/D)."""
+    out: list[ModelConfig] = []
+    for mk, a_values in ((C.hdr, (2, 3)), (C.jsc_xl, (2,)), (C.jsc_m_lite, (2, 3))):
+        for d in (1, 2):
+            base = mk(degree=d, a=1)
+            out.append(base)
+            out.append(C.deeper(base, 2))
+            out.append(C.wider(base, 2))
+            out.extend(mk(degree=d, a=a) for a in a_values)
+    nid = C.nid_lite(degree=1, a=1)
+    out += [nid, C.deeper(nid, 2), C.wider(nid, 2), C.nid_lite(degree=1, a=2)]
+    return out
+
+
+def table4_set() -> list[ModelConfig]:
+    return [C.hdr_add2(), C.jsc_xl_add2(), C.jsc_m_lite_add2(), C.nid_add2()]
+
+
+def quickstart_set() -> list[ModelConfig]:
+    return [C.jsc_m_lite(degree=1, a=1), C.jsc_m_lite(degree=1, a=2)]
+
+
+def config_set(name: str) -> list[ModelConfig]:
+    if name == "quickstart":
+        sets = quickstart_set()
+    elif name == "fig6":
+        sets = fig6_set()
+    elif name == "table4":
+        sets = table4_set()
+    elif name == "all":
+        sets = fig6_set() + table4_set() + quickstart_set()
+    else:
+        raise SystemExit(f"unknown --set {name!r}")
+    seen, out = set(), []
+    for cfg in sets:
+        aid = artifact_id(cfg)
+        if aid not in seen:
+            seen.add(aid)
+            out.append(cfg)
+    return out
+
+
+def emit_config(cfg: ModelConfig, out_dir: str, eval_batch: int = 256, force=False):
+    aid = artifact_id(cfg)
+    meta_path = os.path.join(out_dir, f"{aid}.meta.json")
+    train_path = os.path.join(out_dir, f"{aid}.train.hlo.txt")
+    eval_path = os.path.join(out_dir, f"{aid}.eval.hlo.txt")
+    if (
+        not force
+        and all(os.path.exists(p) for p in (meta_path, train_path, eval_path))
+    ):
+        print(f"[aot] {aid}: up to date")
+        return
+
+    opt = AdamWConfig()
+    batch = batch_of(cfg)
+    indices = make_indices(cfg)
+
+    step_fn = T.make_train_step(cfg, indices, opt)
+    lowered = jax.jit(step_fn).lower(*T.arg_specs_train(cfg, opt, batch))
+    with open(train_path, "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    eval_fn = T.make_eval_batch(cfg, indices, use_pallas=True)
+    lowered_e = jax.jit(eval_fn).lower(*T.arg_specs_eval(cfg, eval_batch))
+    with open(eval_path, "w") as f:
+        f.write(to_hlo_text(lowered_e))
+
+    manifest = T.state_manifest(cfg, opt)
+    init = T.init_state(cfg)
+    meta = {
+        "id": aid,
+        "dataset": dataset_of(cfg),
+        "batch": batch,
+        "eval_batch": eval_batch,
+        "config": {
+            "name": cfg.name,
+            "widths": list(cfg.widths),
+            "beta": list(cfg.beta),
+            "fan": list(cfg.fan),
+            "degree": cfg.degree,
+            "a_factor": cfg.a_factor,
+            "n_classes": cfg.n_classes,
+            "seed": cfg.seed,
+        },
+        "indices": [idx.tolist() for idx in indices],
+        "monomials": [
+            [list(c) for c in monomial_index_lists(cfg.fan[li], cfg.degree)]
+            for li in range(cfg.n_layers)
+        ],
+        "state": [
+            {"name": n, "shape": list(s), "role": r} for (n, s, r) in manifest
+        ],
+        "init": [np.asarray(v).reshape(-1).astype(float).tolist() for v in init],
+        "opt": {
+            "lr": opt.lr,
+            "beta1": opt.beta1,
+            "beta2": opt.beta2,
+            "eps": opt.eps,
+            "weight_decay": opt.weight_decay,
+            "warmup_steps": opt.warmup_steps,
+            "total_steps": opt.total_steps,
+            "min_lr_frac": opt.min_lr_frac,
+        },
+        "artifacts": {
+            "train": os.path.basename(train_path),
+            "eval": os.path.basename(eval_path),
+        },
+    }
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    print(f"[aot] {aid}: wrote train/eval/meta")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--set", dest="set_name", default="all")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--eval-batch", type=int, default=256)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    cfgs = config_set(args.set_name)
+    print(f"[aot] lowering {len(cfgs)} configurations -> {args.out_dir}")
+    for i, cfg in enumerate(cfgs):
+        print(f"[aot] ({i + 1}/{len(cfgs)}) {artifact_id(cfg)}", flush=True)
+        emit_config(cfg, args.out_dir, eval_batch=args.eval_batch, force=args.force)
+    # Marker for `make` staleness tracking.
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

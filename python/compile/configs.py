@@ -1,0 +1,189 @@
+"""Model configurations — paper Table I and Table IV presets.
+
+A config fully determines the network geometry: layer widths, per-layer
+fan-in ``F`` and input bit-width ``beta``, polynomial degree ``D`` and the
+PolyLUT-Add replication factor ``A`` (``A = 1`` is plain PolyLUT;
+``A = 1, D = 1`` is LogicNets).
+
+``deeper`` / ``wider`` build the paper's Section IV-C comparison variants.
+The ``*_sweep`` presets are reduced-scale twins used for the Fig. 6 accuracy
+sweep on CPU (documented in DESIGN.md §4); the full-geometry presets drive
+the Table II/III area and timing experiments.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    # widths[0] is the input feature count; widths[-1] the output neurons.
+    widths: tuple[int, ...]
+    # beta[l]: bit width of layer l's *input* codes (len == len(widths) - 1 + 1):
+    # beta[0] = beta_in, beta[1..n_layers-1] = hidden activation bits,
+    # beta[n_layers] = beta_out (output code width, signed).
+    beta: tuple[int, ...]
+    # fan[l]: fan-in F of layer l (len == n_layers).
+    fan: tuple[int, ...]
+    degree: int
+    a_factor: int  # A: sub-neurons per neuron
+    n_classes: int  # 1 => binary (single output neuron, threshold at 0)
+    seed: int = 0
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.widths) - 1
+
+    def layer_dims(self) -> list[tuple[int, int]]:
+        return [(self.widths[i], self.widths[i + 1]) for i in range(self.n_layers)]
+
+    def table_bits_poly(self, layer: int) -> int:
+        """Address bits of one Poly-layer sub-neuron table: beta * F."""
+        return self.beta[layer] * self.fan[layer]
+
+    def sub_bits(self, layer: int) -> int:
+        """Signed word width of a sub-neuron output feeding the Adder-layer.
+
+        One bit wider than the layer's *output* activation width (paper
+        Sec. III-A: widen to beta+1 to avoid adder overflow).
+        """
+        return self.beta[layer + 1] + 1
+
+    def table_bits_adder(self, layer: int) -> int:
+        """Address bits of the Adder-layer table: A * (beta + 1)."""
+        return self.a_factor * self.sub_bits(layer)
+
+
+def _uniform(name, widths, beta_in, beta, beta_out, fan_in, fan, degree, a, n_classes, seed=0):
+    n_layers = len(widths) - 1
+    betas = (beta_in,) + (beta,) * (n_layers - 1) + (beta_out,)
+    fans = (fan_in,) + (fan,) * (n_layers - 1)
+    return ModelConfig(
+        name=name, widths=tuple(widths), beta=betas, fan=fans,
+        degree=degree, a_factor=a, n_classes=n_classes, seed=seed,
+    )
+
+
+def deeper(cfg: ModelConfig, factor: int) -> ModelConfig:
+    """PolyLUT-Deeper: replicate each hidden layer `factor` times."""
+    hidden = list(cfg.widths[1:-1])
+    new_hidden = [w for w in hidden for _ in range(factor)]
+    widths = (cfg.widths[0], *new_hidden, cfg.widths[-1])
+    n_layers = len(widths) - 1
+    beta = (cfg.beta[0],) + (cfg.beta[1],) * (n_layers - 1) + (cfg.beta[-1],)
+    fan = (cfg.fan[0],) + (cfg.fan[1] if cfg.n_layers > 1 else cfg.fan[0],) * (n_layers - 1)
+    return replace(cfg, name=f"{cfg.name}-deep{factor}", widths=widths, beta=beta, fan=fan)
+
+
+def wider(cfg: ModelConfig, factor: int) -> ModelConfig:
+    """PolyLUT-Wider: multiply each hidden width by `factor`."""
+    widths = (cfg.widths[0], *[w * factor for w in cfg.widths[1:-1]], cfg.widths[-1])
+    return replace(cfg, name=f"{cfg.name}-wide{factor}", widths=widths)
+
+
+def with_a(cfg: ModelConfig, a: int) -> ModelConfig:
+    return replace(cfg, name=f"{cfg.name}-add{a}" if a > 1 else cfg.name, a_factor=a)
+
+
+def with_degree(cfg: ModelConfig, d: int) -> ModelConfig:
+    return replace(cfg, name=f"{cfg.name}-d{d}", degree=d)
+
+
+# ---------------------------------------------------------------------------
+# Paper Table I presets (full geometry; A/D varied per experiment)
+# ---------------------------------------------------------------------------
+
+def hdr(degree=1, a=1, seed=0):
+    """MNIST HDR: 784 -> 256,100,100,100,100,10; beta=2, F=6."""
+    return _uniform("hdr", (784, 256, 100, 100, 100, 100, 10),
+                    beta_in=2, beta=2, beta_out=4, fan_in=6, fan=6,
+                    degree=degree, a=a, n_classes=10, seed=seed)
+
+
+def jsc_xl(degree=1, a=1, seed=0):
+    """JSC-XL: 16 -> 128,64,64,64,5; beta=5, F=3 (beta_i=7, F_i=2)."""
+    return _uniform("jsc-xl", (16, 128, 64, 64, 64, 5),
+                    beta_in=7, beta=5, beta_out=5, fan_in=2, fan=3,
+                    degree=degree, a=a, n_classes=5, seed=seed)
+
+
+def jsc_m_lite(degree=1, a=1, seed=0):
+    """JSC-M Lite: 16 -> 64,32,5; beta=3, F=4."""
+    return _uniform("jsc-m-lite", (16, 64, 32, 5),
+                    beta_in=3, beta=3, beta_out=4, fan_in=4, fan=4,
+                    degree=degree, a=a, n_classes=5, seed=seed)
+
+
+def nid_lite(degree=1, a=1, seed=0):
+    """NID Lite: 49 -> 686,147,98,49,1; beta=3, F=5 (beta_i=1, F_i=7)."""
+    return _uniform("nid-lite", (49, 686, 147, 98, 49, 1),
+                    beta_in=1, beta=3, beta_out=2, fan_in=7, fan=5,
+                    degree=degree, a=a, n_classes=1, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Paper Table IV presets (smaller F, D=3 except NID; A=2)
+# ---------------------------------------------------------------------------
+
+def hdr_add2(seed=0):
+    return _uniform("hdr-t4", (784, 256, 100, 100, 100, 100, 10),
+                    beta_in=2, beta=2, beta_out=4, fan_in=4, fan=4,
+                    degree=3, a=2, n_classes=10, seed=seed)
+
+
+def jsc_xl_add2(seed=0):
+    return _uniform("jsc-xl-t4", (16, 128, 64, 64, 64, 5),
+                    beta_in=7, beta=5, beta_out=5, fan_in=1, fan=2,
+                    degree=3, a=2, n_classes=5, seed=seed)
+
+
+def jsc_m_lite_add2(seed=0):
+    return _uniform("jsc-m-lite-t4", (16, 64, 32, 5),
+                    beta_in=3, beta=3, beta_out=4, fan_in=2, fan=2,
+                    degree=3, a=2, n_classes=5, seed=seed)
+
+
+def nid_add2(seed=0):
+    return _uniform("nid-t4", (49, 100, 100, 50, 50, 1),
+                    beta_in=1, beta=2, beta_out=2, fan_in=6, fan=3,
+                    degree=1, a=2, n_classes=1, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Reduced-scale sweep twins (Fig. 6 accuracy runs on CPU; DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+def hdr_sweep(degree=1, a=1, seed=0):
+    """HDR at 14x14 synthetic digits, thinner trunk: CPU-trainable."""
+    return _uniform("hdr-sweep", (196, 128, 64, 64, 10),
+                    beta_in=2, beta=2, beta_out=4, fan_in=6, fan=6,
+                    degree=degree, a=a, n_classes=10, seed=seed)
+
+
+def jsc_xl_sweep(degree=1, a=1, seed=0):
+    return _uniform("jsc-xl-sweep", (16, 64, 32, 32, 5),
+                    beta_in=7, beta=5, beta_out=5, fan_in=2, fan=3,
+                    degree=degree, a=a, n_classes=5, seed=seed)
+
+
+def nid_sweep(degree=1, a=1, seed=0):
+    return _uniform("nid-sweep", (49, 128, 64, 32, 1),
+                    beta_in=1, beta=3, beta_out=2, fan_in=7, fan=5,
+                    degree=degree, a=a, n_classes=1, seed=seed)
+
+
+PRESETS = {
+    "hdr": hdr, "jsc-xl": jsc_xl, "jsc-m-lite": jsc_m_lite, "nid-lite": nid_lite,
+    "hdr-t4": hdr_add2, "jsc-xl-t4": jsc_xl_add2, "jsc-m-lite-t4": jsc_m_lite_add2,
+    "nid-t4": nid_add2,
+    "hdr-sweep": hdr_sweep, "jsc-xl-sweep": jsc_xl_sweep, "nid-sweep": nid_sweep,
+}
+
+DATASET_OF = {
+    "hdr": "mnist", "hdr-t4": "mnist", "hdr-sweep": "mnist14",
+    "jsc-xl": "jsc", "jsc-xl-t4": "jsc", "jsc-xl-sweep": "jsc",
+    "jsc-m-lite": "jsc", "jsc-m-lite-t4": "jsc",
+    "nid-lite": "nid", "nid-t4": "nid", "nid-sweep": "nid",
+}

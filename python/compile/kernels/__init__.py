@@ -1,0 +1,14 @@
+"""L1 — Pallas kernels for the PolyLUT-Add compute hot-spots.
+
+``poly_neuron`` is the QAT/enumeration hot-spot (monomial expansion fused
+with the weighted reduction); ``lut_eval`` is the deployed-network emulation
+hot-spot (per-neuron table gather).  ``ref`` holds the pure-jnp oracles.
+All kernels run ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls; see DESIGN.md §7).
+"""
+
+from .poly_neuron import poly_neuron
+from .lut_eval import lut_eval
+from .ref import lut_eval_ref, poly_neuron_ref
+
+__all__ = ["poly_neuron", "lut_eval", "poly_neuron_ref", "lut_eval_ref"]

@@ -1,0 +1,65 @@
+"""Pallas kernel: LUT-network layer evaluation (deployed-semantics emulation).
+
+After the LUT compiler freezes a layer into per-neuron lookup tables, a
+software evaluation of the deployed network is a pure gather:
+``out[b, n] = tables[n, addr[b, n]]`` where ``addr`` packs the F input codes
+into a ``beta*F``-bit address.  This is the software analogue of the FPGA LUT
+fabric — tables live in VMEM (the scratchpad analogue of distributed LUT
+RAM); dynamic per-element indexing replaces physical routing.
+
+The grid tiles (batch × neurons); each program holds a ``[tn, T]`` tile of
+table contents resident in VMEM and streams ``[tb, tn]`` address tiles
+through it.  interpret=True as for all kernels in this repo.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .poly_neuron import AOT_FULL_BLOCK, _largest_tile
+
+
+def _kernel(addr_ref, tbl_ref, out_ref):
+    addr = addr_ref[...]  # [tb, tn] int32
+    tbl = tbl_ref[...]  # [tn, T]
+    # out[b, j] = tbl[j, addr[b, j]]  ==  take_along_axis(tbl.T, addr, axis=0)
+    out_ref[...] = jnp.take_along_axis(tbl.T, addr, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile", "neuron_tile"))
+def lut_eval(
+    addr: jnp.ndarray,
+    tables: jnp.ndarray,
+    batch_tile: int = AOT_FULL_BLOCK,
+    neuron_tile: int = AOT_FULL_BLOCK,
+) -> jnp.ndarray:
+    """Evaluate one LUT layer: addr [B, N] int32, tables [N, T] -> [B, N]."""
+    b, n = addr.shape
+    n2, t = tables.shape
+    assert n == n2, (addr.shape, tables.shape)
+    tb = _largest_tile(b, batch_tile)
+    tn = _largest_tile(n, neuron_tile)
+    if (tb, tn) == (b, n):
+        # grid=() — no grid loop (xla_extension 0.5.1 compatibility; see
+        # poly_neuron.AOT_FULL_BLOCK).
+        return pl.pallas_call(
+            _kernel,
+            out_shape=jax.ShapeDtypeStruct((b, n), tables.dtype),
+            interpret=True,
+        )(addr, tables)
+    grid = (b // tb, n // tn)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, tn), lambda i, j: (i, j)),
+            pl.BlockSpec((tn, t), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), tables.dtype),
+        interpret=True,
+    )(addr, tables)

@@ -1,0 +1,100 @@
+"""Pallas kernel: fused monomial expansion + weighted reduction.
+
+The PolyLUT transfer function evaluates ``M = C(F+D, D)`` monomials per
+sub-neuron and reduces them against the weight vector (paper Eq. (1)).  A
+naive XLA graph materializes the [B, N, M] monomial tensor in HBM; this
+kernel builds each monomial in VMEM registers and accumulates in place, so
+HBM traffic is just ``xs`` in / pre-activations out.
+
+TPU mapping (DESIGN.md §7): the grid tiles (batch × neurons); each program
+holds an ``[tb, tn, F]`` slab of gathered inputs and a ``[tn, M]`` weight tile
+in VMEM — the BlockSpec expresses the HBM↔VMEM schedule that the FPGA
+implements spatially.  The M-loop is unrolled at trace time (M ≤ 84 for every
+paper config), keeping the inner body pure VPU elementwise FMA work.
+
+interpret=True always: real-TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot run.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..monomials import monomial_count, monomial_index_lists
+
+
+def _largest_tile(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (keeps the grid exact)."""
+    best = 1
+    for t in range(1, min(n, cap) + 1):
+        if n % t == 0:
+            best = t
+    return best
+
+
+def _kernel(xs_ref, w_ref, out_ref, *, combos):
+    xs = xs_ref[...]  # [tb, tn, F]
+    w = w_ref[...]  # [tn, M]
+    acc = jnp.zeros(xs.shape[:-1], dtype=xs.dtype)
+    for m, combo in enumerate(combos):
+        term = jnp.ones(xs.shape[:-1], dtype=xs.dtype)
+        for i in combo:
+            term = term * xs[..., i]
+        acc = acc + term * w[None, :, m]
+    out_ref[...] = acc
+
+
+#: Default tile caps. AOT artifacts destined for the Rust PJRT runtime use
+#: full-array blocks (grid 1×1): xla_extension 0.5.1 (the version the `xla`
+#: crate binds) mis-executes the interpret-mode grid while-loop after the HLO
+#: text round-trip — verified by the cross_check integration test.  TPU-style
+#: tiling stays available through the explicit arguments and is exercised by
+#: pytest/hypothesis.
+AOT_FULL_BLOCK = 1 << 30
+
+
+@functools.partial(jax.jit, static_argnames=("degree", "batch_tile", "neuron_tile"))
+def poly_neuron(
+    xs: jnp.ndarray,
+    w: jnp.ndarray,
+    degree: int,
+    batch_tile: int = AOT_FULL_BLOCK,
+    neuron_tile: int = AOT_FULL_BLOCK,
+) -> jnp.ndarray:
+    """Pre-activations for a layer of polynomial sub-neurons.
+
+    xs: [B, N, F] gathered (already dequantized) inputs.
+    w:  [N, M] weights, canonical monomial order.
+    Returns [B, N] f32.
+    """
+    b, n, fan_in = xs.shape
+    combos = monomial_index_lists(fan_in, degree)
+    m = monomial_count(fan_in, degree)
+    assert w.shape == (n, m), (w.shape, (n, m))
+    tb = _largest_tile(b, batch_tile)
+    tn = _largest_tile(n, neuron_tile)
+    if (tb, tn) == (b, n):
+        # Single full-array block: lower with grid=() so no grid while-loop
+        # is emitted (required for the xla_extension 0.5.1 runtime; see
+        # AOT_FULL_BLOCK above).
+        return pl.pallas_call(
+            functools.partial(_kernel, combos=combos),
+            out_shape=jax.ShapeDtypeStruct((b, n), xs.dtype),
+            interpret=True,
+        )(xs, w)
+    grid = (b // tb, n // tn)
+    return pl.pallas_call(
+        functools.partial(_kernel, combos=combos),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, tn, fan_in), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((tn, m), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), xs.dtype),
+        interpret=True,
+    )(xs, w)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the semantics the kernels must match (pytest/hypothesis compare
+them under ``assert_allclose``) and are also the differentiable path used by
+the training graph (Pallas interpret-mode calls are forward-only; the QAT
+backward pass runs through these, which XLA fuses on its own).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..monomials import monomial_index_lists
+
+
+def poly_neuron_ref(xs: jnp.ndarray, w: jnp.ndarray, degree: int) -> jnp.ndarray:
+    """Polynomial sub-neuron pre-activations.
+
+    xs: [..., N, F] gathered inputs; w: [N, M] weights in canonical monomial
+    order (monomials.py).  Returns [..., N] pre-activations
+    ``sum_m w[n, m] * monomial_m(xs[..., n, :])``.
+    """
+    fan_in = xs.shape[-1]
+    combos = monomial_index_lists(fan_in, degree)
+    assert w.shape[-1] == len(combos), (w.shape, len(combos), fan_in, degree)
+    acc = jnp.zeros(xs.shape[:-1], dtype=xs.dtype)
+    for m, combo in enumerate(combos):
+        term = jnp.ones(xs.shape[:-1], dtype=xs.dtype)
+        for i in combo:
+            term = term * xs[..., i]
+        acc = acc + term * w[..., :, m]
+    return acc
+
+
+def lut_eval_ref(addr: jnp.ndarray, tables: jnp.ndarray) -> jnp.ndarray:
+    """LUT-network layer evaluation (the software analogue of the FPGA fabric).
+
+    addr: [B, N] int32 table addresses; tables: [N, T] per-neuron contents.
+    Returns [B, N] with out[b, n] = tables[n, addr[b, n]].
+    """
+    return jnp.take_along_axis(tables.T, addr, axis=0)

@@ -1,0 +1,231 @@
+"""L2 — the PolyLUT / PolyLUT-Add model in JAX (build-time only).
+
+Datapath per layer (paper Fig. 1(b) / Fig. 3):
+
+    codes(beta) --gather F per sub-neuron--> poly transfer (degree D)
+      --> signed quant to beta+1 bits (shared per-layer scale)   [Poly-layer]
+      --> sum over the A sub-neurons --> batch-norm --> ReLU
+      --> unsigned quant to beta bits                            [Adder-layer]
+
+``A = 1`` degenerates to PolyLUT (BN folded before the activation, same
+math); ``A = 1, D = 1`` is LogicNets.  All quantizers are STE
+(quant.py) and every constant of the deployed datapath (indices, scales, BN
+affine) is exported so the Rust LUT compiler can enumerate bit-exact tables.
+
+Parameters are kept as a *flat ordered list* of named arrays — the AOT
+contract with the Rust training driver (aot.py writes the name/shape/role
+manifest; Rust treats the list as opaque device buffers between steps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import quant
+from .configs import ModelConfig
+from .kernels import poly_neuron, poly_neuron_ref
+from .monomials import monomial_count
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9  # running = mom * running + (1 - mom) * batch
+SCALE_FLOOR = 1e-3  # scale params pass through |.| + floor (rust mirrors this)
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+    role: str  # "train" | "stat"
+
+
+def scale_of(p: jnp.ndarray) -> jnp.ndarray:
+    """Positive scale from an unconstrained parameter (mirrored in Rust)."""
+    return jnp.abs(p) + SCALE_FLOOR
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def make_indices(cfg: ModelConfig) -> list[np.ndarray]:
+    """Random sparse connectivity: per layer an int32 [A, n_out, F] array.
+
+    Each sub-neuron draws F *distinct* inputs from the previous layer
+    (uniform, without replacement), as in LogicNets/PolyLUT.  Deterministic
+    in cfg.seed; exported to the meta manifest for the Rust side.
+    """
+    rng = np.random.default_rng(cfg.seed + 0xC0FFEE)
+    out = []
+    for li, (n_in, n_out) in enumerate(cfg.layer_dims()):
+        fan = cfg.fan[li]
+        idx = np.empty((cfg.a_factor, n_out, fan), dtype=np.int32)
+        for a in range(cfg.a_factor):
+            for j in range(n_out):
+                idx[a, j] = rng.choice(n_in, size=fan, replace=False)
+        out.append(idx)
+    return out
+
+
+def param_specs(cfg: ModelConfig) -> list[ParamSpec]:
+    """Flat parameter manifest: trainables first, then BN running stats."""
+    train: list[ParamSpec] = []
+    stats: list[ParamSpec] = []
+    for li, (_, n_out) in enumerate(cfg.layer_dims()):
+        m = monomial_count(cfg.fan[li], cfg.degree)
+        train += [
+            ParamSpec(f"l{li}.w", (cfg.a_factor, n_out, m), "train"),
+            ParamSpec(f"l{li}.s_pre", (1,), "train"),
+            ParamSpec(f"l{li}.s_act", (1,), "train"),
+            ParamSpec(f"l{li}.bn_g", (n_out,), "train"),
+            ParamSpec(f"l{li}.bn_b", (n_out,), "train"),
+        ]
+        stats += [
+            ParamSpec(f"l{li}.bn_m", (n_out,), "stat"),
+            ParamSpec(f"l{li}.bn_v", (n_out,), "stat"),
+        ]
+    return train + stats
+
+
+def init_params(cfg: ModelConfig) -> list[np.ndarray]:
+    """Initial values in manifest order (numpy, f32)."""
+    rng = np.random.default_rng(cfg.seed + 0x5EED)
+    vals: list[np.ndarray] = []
+    for spec in param_specs(cfg):
+        kind = spec.name.split(".")[1]
+        if kind == "w":
+            a, n, m = spec.shape
+            w = rng.normal(0.0, 1.0 / np.sqrt(m), size=spec.shape)
+            vals.append(w.astype(np.float32))
+        elif kind == "s_pre":
+            vals.append(np.full(spec.shape, 2.0, dtype=np.float32))
+        elif kind == "s_act":
+            vals.append(np.full(spec.shape, 2.0, dtype=np.float32))
+        elif kind in ("bn_g",):
+            vals.append(np.ones(spec.shape, dtype=np.float32))
+        elif kind in ("bn_b", "bn_m"):
+            vals.append(np.zeros(spec.shape, dtype=np.float32))
+        elif kind == "bn_v":
+            vals.append(np.ones(spec.shape, dtype=np.float32))
+        else:  # pragma: no cover
+            raise ValueError(spec.name)
+    return vals
+
+
+def split_flat(cfg: ModelConfig, flat: list) -> tuple[list[dict], int]:
+    """Flat list -> per-layer dicts. Returns (layers, n_train_tensors)."""
+    n_layers = cfg.n_layers
+    layers = [dict() for _ in range(n_layers)]
+    i = 0
+    for li in range(n_layers):
+        for k in ("w", "s_pre", "s_act", "bn_g", "bn_b"):
+            layers[li][k] = flat[i]
+            i += 1
+    n_train = i
+    for li in range(n_layers):
+        for k in ("bn_m", "bn_v"):
+            layers[li][k] = flat[i]
+            i += 1
+    assert i == len(flat), (i, len(flat))
+    return layers, n_train
+
+
+def join_flat(cfg: ModelConfig, layers: list[dict]) -> list:
+    flat = []
+    for li in range(cfg.n_layers):
+        for k in ("w", "s_pre", "s_act", "bn_g", "bn_b"):
+            flat.append(layers[li][k])
+    for li in range(cfg.n_layers):
+        for k in ("bn_m", "bn_v"):
+            flat.append(layers[li][k])
+    return flat
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def forward(
+    cfg: ModelConfig,
+    flat_params: list,
+    indices: list[np.ndarray],
+    x: jnp.ndarray,
+    train: bool,
+    use_pallas: bool = False,
+):
+    """Run the network.
+
+    x: [B, n_in] raw features in [0, 1].
+    Returns (logits [B, n_out] dequantized, new_flat_params) — in eval mode
+    the params pass through unchanged.
+    """
+    layers, _ = split_flat(cfg, flat_params)
+    vals = quant.quantize_input(x.astype(jnp.float32), cfg.beta[0])
+    new_layers = []
+    for li, p in enumerate(layers):
+        idx = jnp.asarray(indices[li])  # [A, n_out, F]
+        a, n_out, fan = idx.shape
+        # Gather sub-neuron inputs: [B, A, n_out, F]
+        xs = vals[:, idx]
+        if use_pallas:
+            pre = poly_neuron(
+                xs.reshape(xs.shape[0], a * n_out, fan),
+                p["w"].reshape(a * n_out, -1),
+                cfg.degree,
+            ).reshape(xs.shape[0], a, n_out)
+        else:
+            pre = poly_neuron_ref(xs, p["w"], cfg.degree)  # [B, A, n_out]
+        # Poly-layer output: signed (beta+1)-bit quant, shared scale.
+        preq = quant.quant_signed(pre, cfg.sub_bits(li), scale_of(p["s_pre"]))
+        z = preq.sum(axis=1)  # Adder: [B, n_out]
+        # Batch norm (after the adder — paper Fig. 1(b)).
+        if train:
+            mu = z.mean(axis=0)
+            var = z.var(axis=0)
+            new_m = BN_MOMENTUM * p["bn_m"] + (1.0 - BN_MOMENTUM) * mu
+            new_v = BN_MOMENTUM * p["bn_v"] + (1.0 - BN_MOMENTUM) * var
+        else:
+            mu, var = p["bn_m"], p["bn_v"]
+            new_m, new_v = p["bn_m"], p["bn_v"]
+        zn = (z - mu) / jnp.sqrt(var + BN_EPS) * p["bn_g"] + p["bn_b"]
+        last = li == cfg.n_layers - 1
+        if last:
+            # Output codes: signed beta_out-bit quant of the BN output.
+            vals = quant.quant_signed(zn, cfg.beta[li + 1], scale_of(p["s_act"]))
+        else:
+            act = jax.nn.relu(zn)
+            vals = quant.quant_unsigned(act, cfg.beta[li + 1], scale_of(p["s_act"]))
+        q = dict(p)
+        q["bn_m"], q["bn_v"] = new_m, new_v
+        new_layers.append(q)
+    return vals, join_flat(cfg, new_layers)
+
+
+# ---------------------------------------------------------------------------
+# Loss / metrics
+# ---------------------------------------------------------------------------
+
+def loss_and_acc(cfg: ModelConfig, logits: jnp.ndarray, y: jnp.ndarray):
+    """Cross-entropy (softmax or sigmoid for single-output binary) + accuracy.
+
+    Quantized logits have few discrete levels; a fixed temperature sharpens
+    the softmax so gradients stay informative (STE passes them to the weights).
+    """
+    temp = 4.0
+    if cfg.n_classes == 1:
+        logit = logits[:, 0] * temp
+        yf = y.astype(jnp.float32)
+        loss = jnp.mean(
+            jnp.maximum(logit, 0.0) - logit * yf + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+        )
+        acc = jnp.mean((logit > 0.0) == (yf > 0.5))
+    else:
+        lg = logits * temp
+        lse = jax.scipy.special.logsumexp(lg, axis=-1)
+        nll = lse - jnp.take_along_axis(lg, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
+        loss = jnp.mean(nll)
+        acc = jnp.mean(jnp.argmax(lg, axis=-1) == y)
+    return loss, acc

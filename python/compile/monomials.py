@@ -1,0 +1,79 @@
+"""Monomial enumeration shared by the JAX model and (by contract) the Rust LUT
+compiler.
+
+The PolyLUT transfer function (paper Eq. (1)) is a degree-``D`` polynomial in
+the ``F`` neuron inputs; its terms are the ``M = C(F + D, D)`` monomials of
+degree at most ``D``.  The *order* in which monomials are enumerated defines
+the layout of every weight tensor, so Python and Rust must agree exactly.
+
+Canonical order (mirrored in ``rust/src/nn/poly.rs``):
+
+    for d in 0..=D:
+        for combo in combinations_with_replacement(0..F, d)   # lexicographic
+            monomial = prod(x[i] for i in combo)
+
+``d = 0`` yields the constant monomial ``1`` (the bias is absorbed into the
+weight vector, as in the PolyLUT toolflow).
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+from functools import lru_cache
+
+import numpy as np
+
+
+def monomial_count(fan_in: int, degree: int) -> int:
+    """Number of monomials of degree <= `degree` in `fan_in` variables."""
+    return math.comb(fan_in + degree, degree)
+
+
+@lru_cache(maxsize=None)
+def monomial_exponents(fan_in: int, degree: int) -> tuple[tuple[int, ...], ...]:
+    """Exponent vectors, one per monomial, in the canonical order.
+
+    Each entry is a length-``fan_in`` tuple of exponents; entry 0 is all-zero
+    (the constant term).  ``len(result) == monomial_count(fan_in, degree)``.
+    """
+    out: list[tuple[int, ...]] = []
+    for d in range(degree + 1):
+        for combo in itertools.combinations_with_replacement(range(fan_in), d):
+            exp = [0] * fan_in
+            for i in combo:
+                exp[i] += 1
+            out.append(tuple(exp))
+    return tuple(out)
+
+
+@lru_cache(maxsize=None)
+def monomial_index_lists(fan_in: int, degree: int) -> tuple[tuple[int, ...], ...]:
+    """Same enumeration as index multisets (factor lists), e.g. (0, 0, 2)."""
+    out: list[tuple[int, ...]] = []
+    for d in range(degree + 1):
+        out.extend(itertools.combinations_with_replacement(range(fan_in), d))
+    return tuple(out)
+
+
+def exponent_matrix(fan_in: int, degree: int) -> np.ndarray:
+    """[M, F] int32 exponent matrix in canonical order."""
+    return np.asarray(monomial_exponents(fan_in, degree), dtype=np.int32).reshape(
+        monomial_count(fan_in, degree), fan_in
+    )
+
+
+def expand(x: np.ndarray, degree: int) -> np.ndarray:
+    """Reference (numpy) monomial expansion.
+
+    x: [..., F]  ->  [..., M] in canonical order.  Used only by tests and the
+    pure-numpy oracle; the JAX/Pallas paths build the same expansion.
+    """
+    fan_in = x.shape[-1]
+    cols = []
+    for combo in monomial_index_lists(fan_in, degree):
+        term = np.ones(x.shape[:-1], dtype=x.dtype)
+        for i in combo:
+            term = term * x[..., i]
+        cols.append(term)
+    return np.stack(cols, axis=-1)

@@ -1,0 +1,64 @@
+"""AdamW with cosine-decay warmup, hand-rolled (optax is not installed).
+
+Operates on flat lists of arrays so the whole optimizer state round-trips
+through the AOT boundary as plain device buffers (see aot.py / the Rust
+training driver).  Hyperparameters are baked into the lowered train_step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 2e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 1e-4
+    warmup_steps: int = 20
+    total_steps: int = 1000
+    min_lr_frac: float = 0.05
+
+
+def schedule(opt: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup then cosine decay to min_lr_frac * lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(opt.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - opt.warmup_steps) / jnp.maximum(opt.total_steps - opt.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    frac = opt.min_lr_frac + (1.0 - opt.min_lr_frac) * cos
+    return opt.lr * warm * frac
+
+
+def adamw_update(
+    opt: AdamWConfig,
+    params: list,
+    grads: list,
+    m: list,
+    v: list,
+    step: jnp.ndarray,
+):
+    """One AdamW step over flat lists. Returns (params', m', v')."""
+    lr = schedule(opt, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - opt.beta1**t
+    bc2 = 1.0 - opt.beta2**t
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi2 = opt.beta1 * mi + (1.0 - opt.beta1) * g
+        vi2 = opt.beta2 * vi + (1.0 - opt.beta2) * (g * g)
+        mhat = mi2 / bc1
+        vhat = vi2 / bc2
+        upd = mhat / (jnp.sqrt(vhat) + opt.eps) + opt.weight_decay * p
+        new_p.append(p - lr * upd)
+        new_m.append(mi2)
+        new_v.append(vi2)
+    return new_p, new_m, new_v

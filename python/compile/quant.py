@@ -1,0 +1,76 @@
+"""Quantization-aware-training primitives (straight-through estimators).
+
+The PolyLUT-Add datapath (paper Fig. 1(b)) has three quantization points:
+
+1. **Input features**: unsigned ``beta_in``-bit codes over a min-max
+   normalized [0, 1] range.
+2. **Sub-neuron pre-activations** (Poly-layer outputs): *signed*
+   ``beta + 1``-bit codes with a learnable per-layer scale — the one-bit word
+   growth the paper introduces so the Adder-layer cannot overflow.
+3. **Neuron activations** (Adder-layer outputs, after BN + ReLU): unsigned
+   ``beta``-bit codes with a learnable per-layer scale.
+
+Every quantizer is exactly reproducible in integer/fixed-point form: codes are
+what the generated lookup tables index on, values = code * step are what the
+polynomial arithmetic consumes.  The Rust hardware-functional model
+(``rust/src/nn/quant.rs``) mirrors these formulas bit-for-bit in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    """round-to-nearest-even with identity gradient (straight-through)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def quant_unsigned(x: jnp.ndarray, bits: int, scale: jnp.ndarray) -> jnp.ndarray:
+    """Unsigned uniform quantizer over [0, scale] with 2**bits levels.
+
+    Returns the *dequantized value* (code * step).  Gradients flow to both
+    ``x`` and ``scale`` via STE.  code = clip(round(x / step), 0, 2**bits - 1).
+    """
+    levels = (1 << bits) - 1
+    step = scale / levels
+    code = jnp.clip(ste_round(x / step), 0.0, float(levels))
+    return code * step
+
+
+def quant_signed(x: jnp.ndarray, bits: int, scale: jnp.ndarray) -> jnp.ndarray:
+    """Symmetric signed quantizer: codes in [-(2**(bits-1)), 2**(bits-1) - 1].
+
+    ``scale`` maps to the positive full-scale value.  Returns dequantized
+    values; the negative rail has one extra code (two's complement), matching
+    the hardware adder word.
+    """
+    pos = (1 << (bits - 1)) - 1
+    neg = -(1 << (bits - 1))
+    step = scale / pos
+    code = jnp.clip(ste_round(x / step), float(neg), float(pos))
+    return code * step
+
+
+def unsigned_code(x: jnp.ndarray, bits: int, scale: jnp.ndarray) -> jnp.ndarray:
+    """Integer code for `quant_unsigned` (no STE; inference/table path)."""
+    levels = (1 << bits) - 1
+    step = scale / levels
+    return jnp.clip(jnp.round(x / step), 0.0, float(levels)).astype(jnp.int32)
+
+
+def signed_code(x: jnp.ndarray, bits: int, scale: jnp.ndarray) -> jnp.ndarray:
+    """Integer code for `quant_signed` (no STE; inference/table path)."""
+    pos = (1 << (bits - 1)) - 1
+    neg = -(1 << (bits - 1))
+    step = scale / pos
+    return jnp.clip(jnp.round(x / step), float(neg), float(pos)).astype(jnp.int32)
+
+
+def quantize_input(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quantize raw [0, 1] features to `bits`-bit codes' dequantized values.
+
+    Fixed unit scale: the data pipeline min-max normalizes features first.
+    """
+    return quant_unsigned(x, bits, jnp.float32(1.0))

@@ -1,0 +1,120 @@
+"""Train/eval step builders for AOT lowering.
+
+The Rust driver owns the loop; these functions define ONE step as a pure
+function over a flat state list so the whole optimizer state lives in PJRT
+device buffers between steps (no host round-trips):
+
+    state = trainables(T) ++ bn_stats(S) ++ adam_m(T) ++ adam_v(T) ++ [step]
+    train_step(state..., x, y) -> state'... ++ [loss, acc]
+    eval_batch(trainables..., bn_stats..., x) -> logits   (Pallas fast path)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .configs import ModelConfig
+from .optim import AdamWConfig, adamw_update
+
+
+def state_manifest(cfg: ModelConfig, opt: AdamWConfig):
+    """Ordered (name, shape, role) manifest for the full training state."""
+    specs = M.param_specs(cfg)
+    train = [s for s in specs if s.role == "train"]
+    stats = [s for s in specs if s.role == "stat"]
+    out = [(s.name, s.shape, "train") for s in train]
+    out += [(s.name, s.shape, "stat") for s in stats]
+    out += [(f"m.{s.name}", s.shape, "opt_m") for s in train]
+    out += [(f"v.{s.name}", s.shape, "opt_v") for s in train]
+    out += [("step", (1,), "step")]
+    return out
+
+
+def init_state(cfg: ModelConfig) -> list[np.ndarray]:
+    """Initial state values in manifest order."""
+    params = M.init_params(cfg)
+    n_train = sum(1 for s in M.param_specs(cfg) if s.role == "train")
+    trainables = params[:n_train]
+    stats = params[n_train:]
+    zeros = [np.zeros_like(p) for p in trainables]
+    return (
+        trainables
+        + stats
+        + zeros
+        + [np.zeros_like(p) for p in trainables]
+        + [np.zeros((1,), np.float32)]
+    )
+
+
+def make_train_step(cfg: ModelConfig, indices: list[np.ndarray], opt: AdamWConfig):
+    specs = M.param_specs(cfg)
+    n_train = sum(1 for s in specs if s.role == "train")
+    n_stat = len(specs) - n_train
+
+    def train_step(*args):
+        t, s = n_train, n_stat
+        trainables = list(args[0:t])
+        stats = list(args[t : t + s])
+        adam_m = list(args[t + s : 2 * t + s])
+        adam_v = list(args[2 * t + s : 3 * t + s])
+        step = args[3 * t + s]
+        x = args[3 * t + s + 1]
+        y = args[3 * t + s + 2]
+
+        def loss_fn(trainables_):
+            flat = trainables_ + stats
+            logits, new_flat = M.forward(cfg, flat, indices, x, train=True)
+            loss, acc = M.loss_and_acc(cfg, logits, y)
+            return loss, (acc, new_flat[n_train:])
+
+        (loss, (acc, new_stats)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            trainables
+        )
+        new_train, new_m, new_v = adamw_update(
+            opt, trainables, grads, adam_m, adam_v, step[0]
+        )
+        new_step = step + 1.0
+        return tuple(
+            new_train
+            + new_stats
+            + new_m
+            + new_v
+            + [new_step, loss.reshape(1), acc.reshape(1)]
+        )
+
+    return train_step
+
+
+def make_eval_batch(cfg: ModelConfig, indices: list[np.ndarray], use_pallas=True):
+    specs = M.param_specs(cfg)
+    n_params = len(specs)
+
+    def eval_batch(*args):
+        flat = list(args[0:n_params])
+        x = args[n_params]
+        logits, _ = M.forward(cfg, flat, indices, x, train=False, use_pallas=use_pallas)
+        return (logits,)
+
+    return eval_batch
+
+
+def arg_specs_train(cfg: ModelConfig, opt: AdamWConfig, batch: int):
+    """ShapeDtypeStructs for lowering train_step."""
+    specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for (_, shape, _) in state_manifest(cfg, opt)
+    ]
+    specs.append(jax.ShapeDtypeStruct((batch, cfg.widths[0]), jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((batch,), jnp.int32))
+    return specs
+
+
+def arg_specs_eval(cfg: ModelConfig, batch: int):
+    specs = [
+        jax.ShapeDtypeStruct(s.shape, jnp.float32) for s in M.param_specs(cfg)
+    ]
+    specs.append(jax.ShapeDtypeStruct((batch, cfg.widths[0]), jnp.float32))
+    return specs

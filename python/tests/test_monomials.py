@@ -1,0 +1,56 @@
+"""Monomial enumeration — the cross-language weight-layout contract."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import monomials as mono
+
+
+def test_counts_formula():
+    for f in range(1, 8):
+        for d in range(1, 4):
+            assert mono.monomial_count(f, d) == math.comb(f + d, d)
+            assert len(mono.monomial_index_lists(f, d)) == mono.monomial_count(f, d)
+
+
+def test_canonical_order_f2_d2():
+    assert mono.monomial_index_lists(2, 2) == ((), (0,), (1,), (0, 0), (0, 1), (1, 1))
+
+
+def test_exponent_matrix_consistent():
+    e = mono.exponent_matrix(3, 2)
+    assert e.shape == (10, 3)
+    assert e[0].tolist() == [0, 0, 0]
+    # Every row's degree <= 2 and ordering is degree-major.
+    degs = e.sum(1)
+    assert (np.diff(degs) >= 0).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(f=st.integers(1, 6), d=st.integers(1, 3), seed=st.integers(0, 10**6))
+def test_expand_matches_manual_product(f, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(5, f)).astype(np.float64)
+    ex = mono.expand(x, d)
+    lists = mono.monomial_index_lists(f, d)
+    assert ex.shape == (5, len(lists))
+    for m, combo in enumerate(lists):
+        want = np.ones(5)
+        for i in combo:
+            want = want * x[:, i]
+        np.testing.assert_allclose(ex[:, m], want, rtol=1e-12)
+
+
+def test_first_layer_artifact_contract(tmp_path):
+    # The aot manifest exports monomials so Rust never guesses the order.
+    from compile.configs import jsc_m_lite
+
+    cfg = jsc_m_lite(degree=2, a=2)
+    lists = mono.monomial_index_lists(cfg.fan[0], cfg.degree)
+    assert lists[0] == ()
+    assert lists[1] == (0,)
+    # combinations_with_replacement ordering: last entry is the top-degree
+    # power of the last variable.
+    assert lists[-1] == tuple([cfg.fan[0] - 1] * cfg.degree)

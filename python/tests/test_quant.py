@@ -1,0 +1,66 @@
+"""Quantizer semantics — the bit-exactness contract with the Rust model."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+
+# NOTE: xla's CPU backend enables FTZ/fast-math globally, which breaks
+# hypothesis' st.floats() sanity checks — derive floats from integers instead.
+@settings(max_examples=100, deadline=None)
+@given(
+    xi=st.integers(-16_000, 16_000),
+    bits=st.integers(1, 8),
+    si=st.integers(1, 800),
+)
+def test_unsigned_code_value_consistency(xi, bits, si):
+    x, scale = xi / 1000.0, si / 100.0
+    xs = jnp.float32(x)
+    s = jnp.float32(scale)
+    code = int(quant.unsigned_code(xs, bits, s))
+    levels = (1 << bits) - 1
+    assert 0 <= code <= levels
+    val = float(quant.quant_unsigned(xs, bits, s))
+    np.testing.assert_allclose(val, code * scale / levels, rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    xi=st.integers(-16_000, 16_000),
+    bits=st.integers(2, 8),
+    si=st.integers(1, 800),
+)
+def test_signed_code_range_and_value(xi, bits, si):
+    x, scale = xi / 1000.0, si / 100.0
+    xs = jnp.float32(x)
+    s = jnp.float32(scale)
+    code = int(quant.signed_code(xs, bits, s))
+    assert -(1 << (bits - 1)) <= code <= (1 << (bits - 1)) - 1
+    val = float(quant.quant_signed(xs, bits, s))
+    pos = (1 << (bits - 1)) - 1
+    np.testing.assert_allclose(val, code * scale / pos, rtol=1e-6, atol=1e-7)
+
+
+def test_quantization_is_idempotent():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=100).astype(np.float32))
+    q1 = quant.quant_unsigned(x, 3, jnp.float32(1.0))
+    q2 = quant.quant_unsigned(q1, 3, jnp.float32(1.0))
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+def test_ste_gradient_passes_through():
+    import jax
+
+    g = jax.grad(lambda x: quant.quant_unsigned(x, 3, jnp.float32(1.0)).sum())(
+        jnp.asarray([0.4, 0.7], jnp.float32)
+    )
+    np.testing.assert_allclose(np.asarray(g), [1.0, 1.0])
+
+
+def test_round_half_even_semantics():
+    # jnp.round ties-to-even: the rust side mirrors this exactly.
+    vals = jnp.asarray([0.5, 1.5, 2.5, -0.5, -1.5], jnp.float32)
+    np.testing.assert_array_equal(np.asarray(jnp.round(vals)), [0.0, 2.0, 2.0, -0.0, -2.0])

@@ -1,0 +1,111 @@
+//! Micro-benchmarks of the hot paths (§Perf in EXPERIMENTS.md):
+//! truth-table generation, LUT6 mapping, LUT-network inference, the
+//! serving round-trip, PJRT eval-batch and train-step execution.
+//!
+//!   cargo bench --bench micro_hotpaths
+//!
+//! POLYLUT_BENCH_QUICK=1 trims budgets.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use polylut_add::coordinator::{BackendSpec, FrozenModel, Server, ServerConfig};
+use polylut_add::fpga::Strategy;
+use polylut_add::harness;
+use polylut_add::lut::tables::compile_neuron;
+use polylut_add::runtime::Engine;
+use polylut_add::sim::LutSim;
+use polylut_add::util::bench::Bench;
+use polylut_add::util::pool::default_workers;
+
+fn main() {
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    let b = Bench::default();
+    let p = harness::prepare(&engine, "jsc-m-lite-d1-a2").expect("prepare quickstart model");
+    let net = &p.net;
+
+    // L3 hot path 1: truth-table generation.
+    b.measure("tables/neuron (2^12 poly x2 + 2^8 adder)", || compile_neuron(net, 0, 0));
+    let tables = polylut_add::lut::compile_network(net, default_workers());
+    b.measure("tables/network (303 tables, parallel)", || {
+        polylut_add::lut::compile_network(net, default_workers())
+    });
+
+    // L3 hot path 2: LUT6 technology mapping.
+    b.measure("map/network (LUT6, parallel)", || {
+        polylut_add::lut::map_network_of(net, &tables, default_workers())
+    });
+
+    // L3 hot path 3: LUT-network inference.
+    let sim = LutSim::new(net, &tables);
+    let x = p.ds.test_row(0).to_vec();
+    let codes = net.quantize_input(&x);
+    let st = b.measure("lutsim/forward (1 sample)", || sim.forward_codes(&codes));
+    println!(
+        "  -> {:.0} samples/s single-thread",
+        st.throughput(1.0)
+    );
+
+    // Fixed-point float model for comparison.
+    b.measure("network/forward (float fixed-point)", || net.forward(&x));
+
+    // Serving round-trip (batched under load arrives in the server bench;
+    // here: single in-flight request latency floor).
+    let model = Arc::new(FrozenModel::from_network(net.clone(), default_workers()));
+    let server = Server::start(
+        BackendSpec::lut(model, default_workers()),
+        p.man.config.n_classes,
+        ServerConfig { max_batch: 64, window: Duration::from_micros(50), queue_cap: 1024 },
+    );
+    let client = server.client();
+    b.measure("server/round-trip (1 in-flight)", || client.infer(x.clone()).unwrap());
+    server.shutdown();
+
+    // PJRT paths.
+    let exe = engine.load_hlo(&p.man.eval_hlo).expect("eval hlo");
+    let n_params = p
+        .man
+        .state
+        .iter()
+        .filter(|s| matches!(s.role, polylut_add::meta::Role::Train | polylut_add::meta::Role::Stat))
+        .count();
+    let args: Vec<xla::Literal> = p
+        .man
+        .state
+        .iter()
+        .zip(&p.state)
+        .take(n_params)
+        .map(|(spec, vals)| {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            polylut_add::runtime::f32_literal(vals, &dims).unwrap()
+        })
+        .collect();
+    let bsz = p.man.eval_batch;
+    let mut flat = Vec::new();
+    for i in 0..bsz {
+        flat.extend_from_slice(p.ds.test_row(i % p.ds.n_test()));
+    }
+    let xlit =
+        polylut_add::runtime::f32_literal(&flat, &[bsz as i64, p.ds.n_features as i64]).unwrap();
+    let st = b.measure("pjrt/eval_batch (Pallas-lowered, 256)", || {
+        let mut a: Vec<xla::Literal> = args
+            .iter()
+            .map(|l| {
+                let dims: Vec<i64> = l.array_shape().unwrap().dims().to_vec();
+                polylut_add::runtime::f32_literal(&l.to_vec::<f32>().unwrap(), &dims).unwrap()
+            })
+            .collect();
+        a.push(
+            polylut_add::runtime::f32_literal(&flat, &[bsz as i64, p.ds.n_features as i64])
+                .unwrap(),
+        );
+        exe.run(&a).unwrap()
+    });
+    println!("  -> {:.0} samples/s via PJRT", st.throughput(bsz as f64));
+    let _ = xlit;
+
+    // FPGA back-end synthesis end to end.
+    b.measure("fpga/synthesize (tables+map+report)", || {
+        polylut_add::fpga::synthesize(net, Strategy::Merged).unwrap()
+    });
+}

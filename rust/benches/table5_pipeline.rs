@@ -1,0 +1,62 @@
+//! Table V — the two pipeline strategies on JSC-M Lite (the paper's case
+//! study): F_max, latency cycles and latency ns for D ∈ {1,2}, A ∈ {2,3}.
+//!
+//!   cargo bench --bench table5_pipeline
+//!
+//! Shape expectation: strategy (1) keeps F_max high at 2x the cycles;
+//! strategy (2) halves cycles and wins total latency at lower F_max.
+//! Cycle counts are additionally validated by the cycle-accurate pipeline
+//! simulator (not just the analytic model).
+
+use polylut_add::coordinator::FrozenModel;
+use polylut_add::fpga::Strategy;
+use polylut_add::harness;
+use polylut_add::runtime::Engine;
+use polylut_add::sim::PipelineSim;
+use polylut_add::util::bench::table;
+
+fn main() {
+    let engine = Engine::cpu().expect("PJRT CPU client");
+    let mut rows = Vec::new();
+    for d in [1u32, 2] {
+        for a in [2usize, 3] {
+            let id = format!("jsc-m-lite-d{d}-a{a}");
+            let p = match harness::prepare(&engine, &id) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("skip {id}: {e:#}");
+                    continue;
+                }
+            };
+            let model = FrozenModel::from_network(p.net.clone(), 8);
+            for (strategy, sname) in
+                [(Strategy::SeparateRegisters, "(1)"), (Strategy::Merged, "(2)")]
+            {
+                let r = harness::synth(&p, strategy).expect("synth");
+                // Validate the cycle count with the pipeline simulator.
+                let inputs: Vec<Vec<i32>> = (0..32)
+                    .map(|i| model.net.quantize_input(p.ds.test_row(i)))
+                    .collect();
+                let mut sim = PipelineSim::new(&model.net, &model.tables, strategy);
+                let res = sim.stream(&inputs);
+                assert_eq!(
+                    res.latency_cycles, r.cycles,
+                    "{id} {sname}: simulated cycles disagree with the model"
+                );
+                rows.push(vec![
+                    d.to_string(),
+                    format!("{}x{a}", p.man.config.fan[1]),
+                    sname.into(),
+                    format!("{:.0}", r.fmax_mhz),
+                    r.cycles.to_string(),
+                    format!("{:.0}", r.latency_ns),
+                ]);
+            }
+        }
+    }
+    table(
+        "Table V — pipeline strategies on JSC-M Lite (cycles validated by cycle-accurate sim)",
+        &["D", "fan-in FxA", "strategy", "F_max MHz", "cycles", "latency ns"],
+        &rows,
+    );
+}

@@ -1,0 +1,199 @@
+//! `polylut` command-line interface — the leader entrypoint of the L3
+//! coordinator.  Subcommands cover the whole toolflow:
+//!
+//! ```text
+//! polylut list                             # artifacts discovered
+//! polylut train    --id <artifact> [...]   # PJRT training loop
+//! polylut compile  --id <artifact> [...]   # truth tables -> LUT6 netlist
+//! polylut synth    --id <artifact> [...]   # area/timing report (Vivado substitute)
+//! polylut rtl      --id <artifact> --out d # emit Verilog
+//! polylut serve    --id <artifact> [...]   # batching inference server (stdin driver)
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::cli::Args;
+
+pub fn cli_main() -> Result<()> {
+    let args = Args::from_env(&["verbose", "force", "help"])?;
+    if args.flag("help") || args.positional.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    match args.positional[0].as_str() {
+        "list" => cmd_list(&args),
+        "train" => cmd_train(&args),
+        "compile" => cmd_compile(&args),
+        "synth" => cmd_synth(&args),
+        "rtl" => cmd_rtl(&args),
+        "serve" => cmd_serve(&args),
+        "report" => cmd_report(&args),
+        other => bail!("unknown subcommand {other:?} (try --help)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "polylut — PolyLUT-Add toolflow (train / LUT-compile / synth / RTL / serve)\n\n\
+         USAGE: polylut <subcommand> [options]\n\n\
+         SUBCOMMANDS\n\
+           list                          discovered artifact manifests\n\
+           train    --id <artifact>      run the PJRT training loop\n\
+                    [--steps N] [--restarts N] [--seed N] [--verbose]\n\
+           compile  --id <artifact>      generate truth tables + LUT6 netlist\n\
+           synth    --id <artifact>      area/timing/pipeline report\n\
+                    [--strategy 1|2]\n\
+           rtl      --id <artifact> --out <dir>   emit Verilog + testbench\n\
+           serve    --id <artifact>      batching inference server over stdin\n\
+                    [--backend lut|pjrt] [--batch-window-us N]\n\
+           report   --id <artifact>      full markdown report (synth + cubes)\n\n\
+         COMMON\n\
+           --artifacts <dir>             artifact directory (default: artifacts)"
+    );
+}
+
+pub fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let manifests = crate::meta::discover(&dir)
+        .with_context(|| format!("no artifacts in {} — run `make artifacts`", dir.display()))?;
+    println!("{:<24} {:>8} {:>4} {:>4} {:>3} {:>8} {}", "id", "dataset", "D", "A", "L", "tables", "widths");
+    for p in manifests {
+        let m = crate::meta::Manifest::load(&p)?;
+        println!(
+            "{:<24} {:>8} {:>4} {:>4} {:>3} {:>8} {:?}",
+            m.id,
+            m.dataset,
+            m.config.degree,
+            m.config.a_factor,
+            m.config.n_layers(),
+            m.config.table_words_total(),
+            m.config.widths
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let id = args.require("id")?;
+    let man = crate::meta::load_id(&dir, id)?;
+    let ds = crate::data::load(&man.dataset, args.get_usize("data-seed", 0)? as u64)?;
+    let opts = crate::train::TrainOptions {
+        steps: args.get_usize("steps", 400)?,
+        seed: args.get_usize("seed", 0)? as u64,
+        restarts: args.get_usize("restarts", 1)?,
+        log_every: args.get_usize("log-every", 50)?,
+        verbose: args.flag("verbose"),
+        ..Default::default()
+    };
+    let engine = crate::runtime::Engine::cpu()?;
+    println!("[polylut] training {id} on {} ({} samples)…", ds.name, ds.n_train());
+    let out = crate::train::train(&engine, &man, &ds, &opts)?;
+    println!(
+        "[polylut] done: loss {:.4}, deployed test acc {:.4} ({} restarts)",
+        out.final_loss, out.test_acc, out.restarts_run
+    );
+    let path = crate::train::save_state_tagged(&man, &out.state, &man.dir, opts.steps)?;
+    println!("[polylut] weights -> {}", path.display());
+    Ok(())
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let id = args.require("id")?;
+    let man = crate::meta::load_id(&dir, id)?;
+    let state = crate::train::load_state(&man, &man.dir)
+        .context("no trained weights — run `polylut train` first")?;
+    let net = man.network_from_state(&state)?;
+    let workers = crate::util::pool::default_workers();
+    let t0 = std::time::Instant::now();
+    let tables = crate::lut::tables::compile_network(&net, workers);
+    let t_tables = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let mapped = crate::lut::mapper::map_network_of(&net, &tables, workers);
+    println!(
+        "[polylut] {id}: {} tables ({} words) in {t_tables:.2}s; {} LUT6 / depth {} in {:.2}s",
+        tables.n_tables(),
+        tables.total_words,
+        mapped.total_luts(),
+        mapped.max_depth(),
+        t1.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_synth(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let id = args.require("id")?;
+    let strategy = args.get_usize("strategy", 2)?;
+    let man = crate::meta::load_id(&dir, id)?;
+    let state = crate::train::load_state(&man, &man.dir)
+        .context("no trained weights — run `polylut train` first")?;
+    let net = man.network_from_state(&state)?;
+    let report = crate::fpga::synthesize(&net, strategy.try_into()?)?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_rtl(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let id = args.require("id")?;
+    let out = PathBuf::from(args.require("out")?);
+    let man = crate::meta::load_id(&dir, id)?;
+    let state = crate::train::load_state(&man, &man.dir)
+        .context("no trained weights — run `polylut train` first")?;
+    let net = man.network_from_state(&state)?;
+    let files = crate::verilog::emit_project(&net, &out)?;
+    println!("[polylut] wrote {} Verilog files to {}", files.len(), out.display());
+    Ok(())
+}
+
+/// Full per-model report: accuracy, tables, mapping, timing under both
+/// pipeline strategies, and Espresso cube statistics for the first neuron
+/// of each layer (an auditable view of the trained Boolean functions).
+fn cmd_report(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let id = args.require("id")?;
+    let man = crate::meta::load_id(&dir, id)?;
+    let state = crate::train::load_state(&man, &man.dir)
+        .context("no trained weights — run `polylut train` first")?;
+    let net = man.network_from_state(&state)?;
+    let ds = crate::data::load(&man.dataset, 0)?;
+    let (_, acc) = crate::train::deployed_accuracy(&man, &state, &ds, 0)?;
+    println!("# PolyLUT-Add report: {id}\n");
+    println!("deployed test accuracy: {:.2}% on {} ({} test samples)\n", acc * 100.0, ds.name, ds.n_test());
+    for strategy in [1usize, 2] {
+        let r = crate::fpga::synthesize(&net, strategy.try_into()?)?;
+        println!("{}", r.render());
+    }
+    println!("## Boolean complexity (Espresso cube statistics, neuron 0 per layer)\n");
+    let tables = crate::lut::tables::compile_network(&net, crate::util::pool::default_workers());
+    for (l, lt) in tables.layers.iter().enumerate() {
+        let nt = &lt.neurons[0];
+        for (a, t) in nt.poly.iter().enumerate() {
+            if t.n_inputs <= 14 {
+                let (cubes, lits) = crate::lut::espresso::table_cube_stats(t);
+                println!("layer {l} sub-neuron {a}: {} inputs, {cubes} cubes, {lits} literals", t.n_inputs);
+            }
+        }
+        if let Some(adder) = &nt.adder {
+            if adder.n_inputs <= 14 {
+                let (cubes, lits) = crate::lut::espresso::table_cube_stats(adder);
+                println!("layer {l} adder: {} inputs, {cubes} cubes, {lits} literals", adder.n_inputs);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let id = args.require("id")?;
+    crate::coordinator::serve_cli(&dir, id, args)
+}

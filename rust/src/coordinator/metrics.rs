@@ -1,0 +1,123 @@
+//! Server metrics: lock-free counters + a fixed-bucket latency histogram
+//! (µs resolution, exponential buckets) good enough for p50/p95/p99 without
+//! allocation on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const BUCKETS: usize = 40;
+
+#[derive(Debug)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_samples: AtomicU64,
+    pub queue_rejects: AtomicU64,
+    hist: [AtomicU64; BUCKETS],
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            requests: AtomicU64::new(0),
+            responses: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batch_samples: AtomicU64::new(0),
+            queue_rejects: AtomicU64::new(0),
+            hist: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Bucket i covers [2^(i/2), 2^((i+1)/2)) µs approximately — two buckets
+    /// per octave from 1 µs to ~1 s.
+    fn bucket(us: f64) -> usize {
+        if us <= 1.0 {
+            return 0;
+        }
+        ((2.0 * us.log2()).floor() as usize).min(BUCKETS - 1)
+    }
+
+    fn bucket_upper_us(i: usize) -> f64 {
+        2f64.powf((i + 1) as f64 / 2.0)
+    }
+
+    pub fn record_latency(&self, us: f64) {
+        self.hist[Self::bucket(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate quantile from the histogram (upper bucket bound).
+    pub fn latency_quantile_us(&self, q: f64) -> f64 {
+        let counts: Vec<u64> =
+            self.hist.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Self::bucket_upper_us(i);
+            }
+        }
+        Self::bucket_upper_us(BUCKETS - 1)
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batch_samples.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn snapshot(&self) -> String {
+        format!(
+            "requests={} responses={} batches={} mean_batch={:.1} rejects={} p50={:.0}µs p95={:.0}µs p99={:.0}µs",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.queue_rejects.load(Ordering::Relaxed),
+            self.latency_quantile_us(0.5),
+            self.latency_quantile_us(0.95),
+            self.latency_quantile_us(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let m = Metrics::new();
+        for us in [10.0, 20.0, 30.0, 1000.0, 50.0, 40.0, 45.0, 55.0] {
+            m.record_latency(us);
+        }
+        let p50 = m.latency_quantile_us(0.5);
+        let p95 = m.latency_quantile_us(0.95);
+        assert!(p50 <= p95);
+        assert!(p95 >= 1000.0 * 0.7, "p95 {p95} should see the 1ms outlier bucket");
+    }
+
+    #[test]
+    fn bucket_monotonic() {
+        let mut last = 0;
+        for us in [0.5, 1.5, 3.0, 10.0, 100.0, 1e4, 1e6, 1e9] {
+            let b = Metrics::bucket(us);
+            assert!(b >= last);
+            last = b;
+        }
+        assert_eq!(Metrics::bucket(1e9), 39, "clamps to last bucket");
+    }
+}

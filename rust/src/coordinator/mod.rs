@@ -1,0 +1,468 @@
+//! L3 inference coordinator — request router, dynamic batcher and worker
+//! (vLLM-router-style, scaled to the paper's edge-inference setting).
+//!
+//! The paper's deployment story is ultra-low-latency edge classification
+//! (NIDS at line rate, LHC triggers); this module provides the serving
+//! runtime around the frozen model: clients submit feature vectors, a
+//! dynamic batcher groups them under a time window, and a backend executes
+//! either
+//! - the **LUT netlist simulator** (deployed semantics, per-sample, scales
+//!   across cores — the software stand-in for the FPGA), or
+//! - the **PJRT executable** (the Pallas-lowered JAX eval graph, batched —
+//!   Python is *not* involved; the HLO was lowered at build time).
+//!
+//! Everything is std-thread based (tokio is not vendored).
+
+pub mod metrics;
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+
+use crate::lut::tables::NetworkTables;
+use crate::meta::{Manifest, Role};
+use crate::nn::network::Network;
+use crate::runtime::{f32_literal, to_f32_vec, Engine, Executable};
+use crate::sim::lutsim::LutSim;
+use crate::util::cli::Args;
+use crate::util::pool::parallel_map;
+use metrics::Metrics;
+
+/// A frozen deployable model: trained network + its compiled tables.
+pub struct FrozenModel {
+    pub net: Network,
+    pub tables: NetworkTables,
+}
+
+impl FrozenModel {
+    pub fn from_network(net: Network, workers: usize) -> FrozenModel {
+        let tables = crate::lut::tables::compile_network(&net, workers);
+        FrozenModel { net, tables }
+    }
+
+    pub fn sim(&self) -> LutSim<'_> {
+        LutSim::new(&self.net, &self.tables)
+    }
+}
+
+/// Backend specification — `Send`able across threads.  PJRT handles (Rc
+/// internals in the xla crate) are NOT Send, so the actual `Backend` is
+/// constructed *inside* the batcher thread from this spec.
+pub enum BackendSpec {
+    Lut { model: Arc<FrozenModel>, workers: usize },
+    Pjrt { man: Manifest, state: Vec<Vec<f32>> },
+}
+
+impl BackendSpec {
+    pub fn lut(model: Arc<FrozenModel>, workers: usize) -> BackendSpec {
+        BackendSpec::Lut { model, workers }
+    }
+
+    pub fn pjrt(man: Manifest, state: Vec<Vec<f32>>) -> BackendSpec {
+        BackendSpec::Pjrt { man, state }
+    }
+
+    /// Build the runnable backend (call from the thread that will use it).
+    pub fn build(self) -> Result<Backend> {
+        match self {
+            BackendSpec::Lut { model, workers } => Ok(Backend::lut(model, workers)),
+            BackendSpec::Pjrt { man, state } => {
+                let engine = Engine::cpu()?;
+                Backend::pjrt(&engine, &man, &state)
+            }
+        }
+    }
+}
+
+/// Inference backends.
+pub enum Backend {
+    /// Deployed-semantics LUT evaluation, parallel across the batch.
+    Lut { model: Arc<FrozenModel>, workers: usize },
+    /// AOT-lowered JAX eval graph via PJRT (fixed batch, padded). Params
+    /// stay resident as device buffers.
+    Pjrt {
+        engine: Engine,
+        exe: Executable,
+        params: Vec<xla::PjRtBuffer>,
+        batch: usize,
+        n_features: usize,
+        n_out: usize,
+    },
+}
+
+impl Backend {
+    pub fn lut(model: Arc<FrozenModel>, workers: usize) -> Backend {
+        Backend::Lut { model, workers }
+    }
+
+    /// Build the PJRT backend from a manifest + trained state.
+    pub fn pjrt(engine: &Engine, man: &Manifest, state: &[Vec<f32>]) -> Result<Backend> {
+        let exe = engine.load_hlo(&man.eval_hlo)?;
+        let n_params = man
+            .state
+            .iter()
+            .filter(|s| matches!(s.role, Role::Train | Role::Stat))
+            .count();
+        let params: Result<Vec<xla::PjRtBuffer>> = man
+            .state
+            .iter()
+            .zip(state)
+            .take(n_params)
+            .map(|(spec, vals)| {
+                let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                engine.to_buffer(&f32_literal(vals, &dims)?)
+            })
+            .collect();
+        Ok(Backend::Pjrt {
+            engine: engine.clone(),
+            exe,
+            params: params?,
+            batch: man.eval_batch,
+            n_features: man.config.widths[0],
+            n_out: man.config.widths[man.config.n_layers()],
+        })
+    }
+
+    /// Run a batch of feature vectors; returns per-sample logits.
+    pub fn infer(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        match self {
+            Backend::Lut { model, workers } => Ok(parallel_map(xs, *workers, |_, x| {
+                model.sim().forward(x)
+            })),
+            Backend::Pjrt { engine, exe, params, batch, n_features, n_out } => {
+                let mut out = Vec::with_capacity(xs.len());
+                for chunk in xs.chunks(*batch) {
+                    // Pad the final chunk to the compiled batch size.
+                    let mut flat = Vec::with_capacity(batch * n_features);
+                    for x in chunk {
+                        if x.len() != *n_features {
+                            bail!("feature length {} != {}", x.len(), n_features);
+                        }
+                        flat.extend_from_slice(x);
+                    }
+                    flat.resize(batch * n_features, 0.0);
+                    let xbuf = engine
+                        .to_buffer(&f32_literal(&flat, &[*batch as i64, *n_features as i64])?)?;
+                    let mut refs: Vec<&xla::PjRtBuffer> = params.iter().collect();
+                    refs.push(&xbuf);
+                    let outs = exe.run_b(&refs)?;
+                    let logits = to_f32_vec(&outs[0])?;
+                    for i in 0..chunk.len() {
+                        out.push(logits[i * n_out..(i + 1) * n_out].to_vec());
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+pub struct ServerConfig {
+    /// Maximum requests per batch.
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch.
+    pub window: Duration,
+    /// Bounded ingress queue (backpressure: submit fails when full).
+    pub queue_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { max_batch: 256, window: Duration::from_micros(200), queue_cap: 4096 }
+    }
+}
+
+struct Request {
+    features: Vec<f32>,
+    enqueued: Instant,
+    resp: SyncSender<Response>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub pred: usize,
+    pub latency: Duration,
+}
+
+/// Handle for submitting requests (clonable across client threads).
+#[derive(Clone)]
+pub struct ClientHandle {
+    tx: SyncSender<Request>,
+    metrics: Arc<Metrics>,
+    n_classes: usize,
+}
+
+impl ClientHandle {
+    /// Submit one request; blocks until the response arrives.
+    pub fn infer(&self, features: Vec<f32>) -> Result<Response> {
+        let (tx, rx) = sync_channel(1);
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let req = Request { features, enqueued: Instant::now(), resp: tx };
+        match self.tx.try_send(req) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => {
+                self.metrics.queue_rejects.fetch_add(1, Ordering::Relaxed);
+                bail!("server queue full (backpressure)");
+            }
+            Err(TrySendError::Disconnected(_)) => bail!("server stopped"),
+        }
+        rx.recv().context("server dropped the request")
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+}
+
+/// The running server: a batcher thread draining the ingress queue and an
+/// inference thread executing batches on the backend.
+pub struct Server {
+    pub metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+    handle: ClientHandle,
+    pub inflight_hwm: Arc<AtomicU64>,
+}
+
+impl Server {
+    pub fn start(backend: BackendSpec, n_classes: usize, cfg: ServerConfig) -> Server {
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = sync_channel::<Request>(cfg.queue_cap);
+        let handle = ClientHandle { tx, metrics: metrics.clone(), n_classes };
+        let m = metrics.clone();
+        let s = stop.clone();
+        let hwm = Arc::new(AtomicU64::new(0));
+        let hwm2 = hwm.clone();
+        let batcher = std::thread::Builder::new()
+            .name("polylut-batcher".into())
+            .spawn(move || batcher_loop(rx, backend, n_classes, cfg, m, s, hwm2))
+            .expect("spawn batcher");
+        Server { metrics, stop, batcher: Some(batcher), handle, inflight_hwm: hwm }
+    }
+
+    pub fn client(&self) -> ClientHandle {
+        self.handle.clone()
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn batcher_loop(
+    rx: Receiver<Request>,
+    backend: BackendSpec,
+    n_classes: usize,
+    cfg: ServerConfig,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    hwm: Arc<AtomicU64>,
+) {
+    let backend = match backend.build() {
+        Ok(b) => b,
+        Err(e) => {
+            log::error!("backend construction failed: {e:#}");
+            return;
+        }
+    };
+    let rx = Mutex::new(rx);
+    while !stop.load(Ordering::Relaxed) {
+        // Collect a batch under the window.
+        let mut batch: Vec<Request> = Vec::with_capacity(cfg.max_batch);
+        {
+            let rx = rx.lock().unwrap();
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(first) => batch.push(first),
+                Err(_) => continue,
+            }
+            let deadline = Instant::now() + cfg.window;
+            while batch.len() < cfg.max_batch {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                match rx.recv_timeout(left) {
+                    Ok(r) => batch.push(r),
+                    Err(_) => break,
+                }
+            }
+        }
+        hwm.fetch_max(batch.len() as u64, Ordering::Relaxed);
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics.batch_samples.fetch_add(batch.len() as u64, Ordering::Relaxed);
+
+        let xs: Vec<Vec<f32>> = batch.iter().map(|r| r.features.clone()).collect();
+        match backend.infer(&xs) {
+            Ok(all_logits) => {
+                for (req, logits) in batch.into_iter().zip(all_logits) {
+                    let pred = if n_classes == 1 {
+                        (logits[0] > 0.0) as usize
+                    } else {
+                        logits
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .map(|(i, _)| i)
+                            .unwrap_or(0)
+                    };
+                    let latency = req.enqueued.elapsed();
+                    metrics.record_latency(latency.as_secs_f64() * 1e6);
+                    metrics.responses.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.resp.send(Response { logits, pred, latency });
+                }
+            }
+            Err(e) => {
+                log::error!("batch inference failed: {e:#}");
+                // Drop the batch; clients see a disconnected channel.
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI entry (polylut serve)
+// ---------------------------------------------------------------------------
+
+/// `polylut serve --id <artifact> [--backend lut|pjrt] [--requests N]
+///  [--clients N] [--batch-window-us N]` — runs a self-driving load test
+/// against the server with dataset samples and prints metrics.
+pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
+    let man = crate::meta::load_id(dir, id)?;
+    let ds = crate::data::load(&man.dataset, 0)?;
+    let state = crate::train::load_state(&man, &man.dir)
+        .context("no trained weights — run `polylut train` first")?;
+    let backend_name = args.get_or("backend", "lut").to_string();
+    let net = man.network_from_state(&state)?;
+    let backend = match backend_name.as_str() {
+        "lut" => {
+            let model =
+                Arc::new(FrozenModel::from_network(net, crate::util::pool::default_workers()));
+            BackendSpec::lut(model, crate::util::pool::default_workers())
+        }
+        "pjrt" => BackendSpec::pjrt(man.clone(), state.clone()),
+        other => bail!("unknown backend {other:?} (lut|pjrt)"),
+    };
+    let cfg = ServerConfig {
+        max_batch: args.get_usize("max-batch", 256)?,
+        window: Duration::from_micros(args.get_usize("batch-window-us", 200)? as u64),
+        ..Default::default()
+    };
+    let n_requests = args.get_usize("requests", 10_000)?;
+    let n_clients = args.get_usize("clients", 4)?;
+    let server = Server::start(backend, man.config.n_classes, cfg);
+
+    println!("[serve] {id} backend={backend_name}: {n_requests} requests from {n_clients} clients…");
+    let t0 = Instant::now();
+    let correct = Arc::new(AtomicU64::new(0));
+    std::thread::scope(|scope| {
+        for c in 0..n_clients {
+            let client = server.client();
+            let ds = &ds;
+            let correct = correct.clone();
+            scope.spawn(move || {
+                let per = n_requests / n_clients;
+                for i in 0..per {
+                    let idx = (c * per + i) % ds.n_test();
+                    match client.infer(ds.test_row(idx).to_vec()) {
+                        Ok(resp) => {
+                            if resp.pred == ds.y_test[idx] {
+                                correct.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Err(e) => log::warn!("request failed: {e}"),
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let served = server.metrics.responses.load(Ordering::Relaxed);
+    println!("[serve] {}", server.metrics.snapshot());
+    println!(
+        "[serve] throughput {:.0} req/s, accuracy {:.4}, wall {:.2}s",
+        served as f64 / wall.as_secs_f64(),
+        correct.load(Ordering::Relaxed) as f64 / served.max(1) as f64,
+        wall.as_secs_f64()
+    );
+    server.shutdown();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::config;
+    use crate::util::rng::Rng;
+
+    fn model() -> Arc<FrozenModel> {
+        let cfg = config::uniform("srv", &[8, 6, 3], 2, 2, 3, 3, 3, 1, 2, 3);
+        let net = Network::random(&cfg, &mut Rng::new(4));
+        Arc::new(FrozenModel::from_network(net, 2))
+    }
+
+    #[test]
+    fn server_roundtrip_lut_backend() {
+        let m = model();
+        let backend = BackendSpec::lut(m.clone(), 2);
+        let server = Server::start(
+            backend,
+            3,
+            ServerConfig { max_batch: 8, window: Duration::from_micros(100), queue_cap: 64 },
+        );
+        let client = server.client();
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+            let resp = client.infer(x.clone()).unwrap();
+            // Response must equal direct LUT-sim evaluation.
+            assert_eq!(resp.logits, m.sim().forward(&x));
+            assert!(resp.pred < 3);
+        }
+        assert_eq!(server.metrics.responses.load(Ordering::Relaxed), 50);
+        server.shutdown();
+    }
+
+    #[test]
+    fn batcher_groups_concurrent_clients() {
+        let m = model();
+        let server = Server::start(
+            BackendSpec::lut(m, 2),
+            3,
+            ServerConfig { max_batch: 64, window: Duration::from_millis(5), queue_cap: 1024 },
+        );
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let client = server.client();
+                scope.spawn(move || {
+                    let mut rng = Rng::new(7);
+                    for _ in 0..25 {
+                        let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+                        client.infer(x).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(server.metrics.responses.load(Ordering::Relaxed), 200);
+        // With 8 concurrent clients and a 5 ms window, batches must form.
+        assert!(
+            server.metrics.mean_batch_size() > 1.5,
+            "mean batch {}",
+            server.metrics.mean_batch_size()
+        );
+        server.shutdown();
+    }
+}

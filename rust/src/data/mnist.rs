@@ -1,0 +1,262 @@
+//! Synthetic handwritten-digit generator (MNIST substitute; DESIGN.md §5).
+//!
+//! Each digit 0-9 is a stroke skeleton (polyline segments in unit
+//! coordinates, hand-tuned to the usual glyph shapes).  A sample applies a
+//! random affine jitter (translate / scale / rotate / shear), rasterizes the
+//! strokes with a soft pen profile, and adds pixel noise — giving
+//! image-like statistics (spatial correlation, stroke topology, per-class
+//! multimodality from jitter) at 28×28 or 14×14.
+
+use super::Dataset;
+use crate::util::rng::Rng;
+
+/// Stroke skeletons per digit, in [0,1]² glyph coordinates (y down).
+fn skeleton(digit: usize) -> Vec<[f64; 4]> {
+    // Segments [x0, y0, x1, y1]; compact but recognisable glyphs.
+    match digit {
+        0 => vec![
+            [0.30, 0.15, 0.70, 0.15],
+            [0.70, 0.15, 0.80, 0.50],
+            [0.80, 0.50, 0.70, 0.85],
+            [0.70, 0.85, 0.30, 0.85],
+            [0.30, 0.85, 0.20, 0.50],
+            [0.20, 0.50, 0.30, 0.15],
+        ],
+        1 => vec![[0.35, 0.25, 0.55, 0.12], [0.55, 0.12, 0.55, 0.88], [0.35, 0.88, 0.75, 0.88]],
+        2 => vec![
+            [0.25, 0.25, 0.45, 0.12],
+            [0.45, 0.12, 0.70, 0.20],
+            [0.70, 0.20, 0.72, 0.40],
+            [0.72, 0.40, 0.25, 0.85],
+            [0.25, 0.85, 0.78, 0.85],
+        ],
+        3 => vec![
+            [0.25, 0.15, 0.70, 0.15],
+            [0.70, 0.15, 0.50, 0.45],
+            [0.50, 0.45, 0.75, 0.65],
+            [0.75, 0.65, 0.65, 0.85],
+            [0.65, 0.85, 0.25, 0.85],
+        ],
+        4 => vec![[0.60, 0.12, 0.22, 0.60], [0.22, 0.60, 0.80, 0.60], [0.62, 0.35, 0.62, 0.88]],
+        5 => vec![
+            [0.72, 0.15, 0.30, 0.15],
+            [0.30, 0.15, 0.28, 0.48],
+            [0.28, 0.48, 0.65, 0.45],
+            [0.65, 0.45, 0.75, 0.65],
+            [0.75, 0.65, 0.60, 0.85],
+            [0.60, 0.85, 0.25, 0.82],
+        ],
+        6 => vec![
+            [0.65, 0.12, 0.35, 0.35],
+            [0.35, 0.35, 0.25, 0.65],
+            [0.25, 0.65, 0.40, 0.88],
+            [0.40, 0.88, 0.68, 0.82],
+            [0.68, 0.82, 0.70, 0.58],
+            [0.70, 0.58, 0.30, 0.55],
+        ],
+        7 => vec![[0.22, 0.15, 0.78, 0.15], [0.78, 0.15, 0.45, 0.88], [0.35, 0.50, 0.68, 0.50]],
+        8 => vec![
+            [0.50, 0.12, 0.28, 0.30],
+            [0.28, 0.30, 0.50, 0.48],
+            [0.50, 0.48, 0.72, 0.30],
+            [0.72, 0.30, 0.50, 0.12],
+            [0.50, 0.48, 0.25, 0.70],
+            [0.25, 0.70, 0.50, 0.88],
+            [0.50, 0.88, 0.75, 0.70],
+            [0.75, 0.70, 0.50, 0.48],
+        ],
+        9 => vec![
+            [0.70, 0.42, 0.35, 0.45],
+            [0.35, 0.45, 0.28, 0.25],
+            [0.28, 0.25, 0.50, 0.12],
+            [0.50, 0.12, 0.70, 0.22],
+            [0.70, 0.22, 0.70, 0.42],
+            [0.70, 0.42, 0.60, 0.88],
+        ],
+        _ => unreachable!(),
+    }
+}
+
+struct Affine {
+    a: f64,
+    b: f64,
+    c: f64,
+    d: f64,
+    tx: f64,
+    ty: f64,
+}
+
+impl Affine {
+    fn jitter(rng: &mut Rng) -> Affine {
+        let angle = rng.range_f64(-0.22, 0.22); // ~±13°
+        let scale = rng.range_f64(0.82, 1.12);
+        let shear = rng.range_f64(-0.18, 0.18);
+        let (sin, cos) = angle.sin_cos();
+        let tx = rng.range_f64(-0.07, 0.07);
+        let ty = rng.range_f64(-0.07, 0.07);
+        Affine {
+            a: scale * cos,
+            b: scale * (shear * cos - sin),
+            c: scale * sin,
+            d: scale * (shear * sin + cos),
+            tx,
+            ty,
+        }
+    }
+
+    fn apply(&self, x: f64, y: f64) -> (f64, f64) {
+        // Centre, transform, un-centre.
+        let (cx, cy) = (x - 0.5, y - 0.5);
+        (0.5 + self.a * cx + self.b * cy + self.tx, 0.5 + self.c * cx + self.d * cy + self.ty)
+    }
+}
+
+fn dist_to_segment(px: f64, py: f64, seg: &[f64; 4]) -> f64 {
+    let (x0, y0, x1, y1) = (seg[0], seg[1], seg[2], seg[3]);
+    let (dx, dy) = (x1 - x0, y1 - y0);
+    let len2 = dx * dx + dy * dy;
+    let t = if len2 > 0.0 { (((px - x0) * dx + (py - y0) * dy) / len2).clamp(0.0, 1.0) } else { 0.0 };
+    let (qx, qy) = (x0 + t * dx, y0 + t * dy);
+    ((px - qx).powi(2) + (py - qy).powi(2)).sqrt()
+}
+
+/// Rasterize one digit sample into `side`×`side` pixels in [0,1].
+pub fn draw_digit(digit: usize, side: usize, rng: &mut Rng) -> Vec<f32> {
+    let aff = Affine::jitter(rng);
+    let pen = rng.range_f64(0.035, 0.065); // stroke half-width
+    let segs: Vec<[f64; 4]> = skeleton(digit)
+        .iter()
+        .map(|s| {
+            let (x0, y0) = aff.apply(s[0], s[1]);
+            let (x1, y1) = aff.apply(s[2], s[3]);
+            [x0, y0, x1, y1]
+        })
+        .collect();
+    let mut img = vec![0f32; side * side];
+    for r in 0..side {
+        for c in 0..side {
+            let px = (c as f64 + 0.5) / side as f64;
+            let py = (r as f64 + 0.5) / side as f64;
+            let d = segs.iter().map(|s| dist_to_segment(px, py, s)).fold(f64::MAX, f64::min);
+            // Soft pen: full ink inside the core, linear falloff outside.
+            let v = if d < pen {
+                1.0
+            } else if d < pen * 2.2 {
+                1.0 - (d - pen) / (pen * 1.2)
+            } else {
+                0.0
+            };
+            // Ink level + additive sensor noise.
+            let noise = rng.normal_ms(0.0, 0.04);
+            img[r * side + c] = ((v * rng.range_f64(0.85, 1.0)) + noise).clamp(0.0, 1.0) as f32;
+        }
+    }
+    img
+}
+
+pub fn generate(side: usize, n_train: usize, n_test: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x3141_5926);
+    let n_features = side * side;
+    let mut gen_split = |n: usize| {
+        let mut xs = Vec::with_capacity(n * n_features);
+        let mut ys = Vec::with_capacity(n);
+        for i in 0..n {
+            let digit = i % 10;
+            xs.extend(draw_digit(digit, side, &mut rng));
+            ys.push(digit);
+        }
+        // Shuffle rows so minibatches are class-mixed even without sampler.
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut xs2 = vec![0f32; xs.len()];
+        let mut ys2 = vec![0usize; n];
+        for (dst, &src) in order.iter().enumerate() {
+            xs2[dst * n_features..(dst + 1) * n_features]
+                .copy_from_slice(&xs[src * n_features..(src + 1) * n_features]);
+            ys2[dst] = ys[src];
+        }
+        (xs2, ys2)
+    };
+    let (x_train, y_train) = gen_split(n_train);
+    let (x_test, y_test) = gen_split(n_test);
+    Dataset {
+        name: format!("mnist{side}"),
+        n_features,
+        n_classes: 10,
+        x_train,
+        y_train,
+        x_test,
+        y_test,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_have_ink_and_differ() {
+        let mut rng = Rng::new(1);
+        let imgs: Vec<Vec<f32>> = (0..10).map(|d| draw_digit(d, 28, &mut rng)).collect();
+        for (d, img) in imgs.iter().enumerate() {
+            let ink: f32 = img.iter().sum();
+            assert!(ink > 20.0, "digit {d} has almost no ink ({ink})");
+            assert!(ink < 500.0, "digit {d} is a blob ({ink})");
+        }
+        // Any two digits should differ substantially (L1 distance).
+        for a in 0..10 {
+            for b in a + 1..10 {
+                let l1: f32 =
+                    imgs[a].iter().zip(&imgs[b]).map(|(x, y)| (x - y).abs()).sum();
+                assert!(l1 > 10.0, "digits {a} and {b} look identical");
+            }
+        }
+    }
+
+    #[test]
+    fn same_digit_varies_between_samples() {
+        let mut rng = Rng::new(2);
+        let a = draw_digit(3, 28, &mut rng);
+        let b = draw_digit(3, 28, &mut rng);
+        let l1: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(l1 > 5.0, "jitter should vary samples");
+    }
+
+    #[test]
+    fn nearest_centroid_separability() {
+        // A trivial classifier must beat chance comfortably: the generator
+        // is supposed to be learnable.
+        let ds = generate(14, 2000, 500, 3);
+        let f = ds.n_features;
+        let mut centroids = vec![vec![0f32; f]; 10];
+        let mut counts = [0usize; 10];
+        for i in 0..ds.n_train() {
+            let y = ds.y_train[i];
+            counts[y] += 1;
+            for (c, v) in centroids[y].iter_mut().zip(ds.train_row(i)) {
+                *c += v;
+            }
+        }
+        for (cent, n) in centroids.iter_mut().zip(counts) {
+            for c in cent.iter_mut() {
+                *c /= n as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..ds.n_test() {
+            let row = ds.test_row(i);
+            let best = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f32 = row.iter().zip(&centroids[a]).map(|(x, c)| (x - c).powi(2)).sum();
+                    let db: f32 = row.iter().zip(&centroids[b]).map(|(x, c)| (x - c).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == ds.y_test[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.n_test() as f64;
+        assert!(acc > 0.7, "nearest-centroid accuracy only {acc}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Implemented comparator area/latency models + published prior-work rows
+//! (paper Table III).
+//!
+//! Two kinds of baselines appear in Table III:
+//! 1. **LogicNets** — a special case of our own framework (A=1, D=1), so it
+//!    is *fully implemented* by the main toolflow; nothing to model here.
+//! 2. **FINN / hls4ml / Duarte / Fahim / Murovic** — external toolflows on
+//!    the authors' testbeds.  We carry their published numbers verbatim
+//!    (labelled `published`) and additionally provide first-order analytic
+//!    area models of their datapaths (`modelled`) so ablation benches can
+//!    vary geometry.  The substitution is documented in DESIGN.md §5.
+
+/// A comparison row: either published by the cited paper or produced by one
+/// of our analytic models.
+#[derive(Debug, Clone)]
+pub struct PriorRow {
+    pub system: &'static str,
+    pub dataset: &'static str,
+    pub accuracy_pct: f64,
+    pub luts: usize,
+    pub ffs: usize,
+    pub dsps: usize,
+    pub brams: usize,
+    pub fmax_mhz: f64,
+    pub latency_ns: f64,
+    pub provenance: &'static str, // "published" | "modelled"
+}
+
+/// Published rows from the paper's Table III (their cited sources).
+pub fn published_rows() -> Vec<PriorRow> {
+    vec![
+        PriorRow { system: "PolyLUT (HDR, D=4)", dataset: "mnist", accuracy_pct: 96.0, luts: 70673, ffs: 4681, dsps: 0, brams: 0, fmax_mhz: 378.0, latency_ns: 16.0, provenance: "published" },
+        PriorRow { system: "FINN", dataset: "mnist", accuracy_pct: 96.0, luts: 91131, ffs: 0, dsps: 0, brams: 5, fmax_mhz: 200.0, latency_ns: 310.0, provenance: "published" },
+        PriorRow { system: "hls4ml", dataset: "mnist", accuracy_pct: 95.0, luts: 260092, ffs: 165513, dsps: 0, brams: 0, fmax_mhz: 200.0, latency_ns: 190.0, provenance: "published" },
+        PriorRow { system: "PolyLUT (JSC-XL, D=4)", dataset: "jsc", accuracy_pct: 75.0, luts: 236541, ffs: 2775, dsps: 0, brams: 0, fmax_mhz: 235.0, latency_ns: 21.0, provenance: "published" },
+        PriorRow { system: "Duarte et al.", dataset: "jsc", accuracy_pct: 75.0, luts: 887, ffs: 97, dsps: 954, brams: 0, fmax_mhz: 200.0, latency_ns: 75.0, provenance: "published" },
+        PriorRow { system: "Fahim et al.", dataset: "jsc", accuracy_pct: 76.0, luts: 63251, ffs: 4394, dsps: 38, brams: 0, fmax_mhz: 200.0, latency_ns: 45.0, provenance: "published" },
+        PriorRow { system: "PolyLUT (JSC-M Lite, D=6)", dataset: "jsc-lite", accuracy_pct: 72.0, luts: 12436, ffs: 773, dsps: 0, brams: 0, fmax_mhz: 646.0, latency_ns: 5.0, provenance: "published" },
+        PriorRow { system: "LogicNets (JSC-M)", dataset: "jsc-lite", accuracy_pct: 72.0, luts: 37931, ffs: 810, dsps: 0, brams: 0, fmax_mhz: 427.0, latency_ns: 13.0, provenance: "published" },
+        PriorRow { system: "PolyLUT (NID-Lite, D=4)", dataset: "nid", accuracy_pct: 92.0, luts: 3336, ffs: 686, dsps: 0, brams: 0, fmax_mhz: 529.0, latency_ns: 9.0, provenance: "published" },
+        PriorRow { system: "LogicNets (NID)", dataset: "nid", accuracy_pct: 91.0, luts: 15949, ffs: 1274, dsps: 0, brams: 5, fmax_mhz: 471.0, latency_ns: 13.0, provenance: "published" },
+        PriorRow { system: "Murovic et al.", dataset: "nid", accuracy_pct: 92.0, luts: 17990, ffs: 0, dsps: 0, brams: 0, fmax_mhz: 55.0, latency_ns: 18.0, provenance: "published" },
+    ]
+}
+
+/// First-order FINN-style BNN MLP area model: per layer, XNOR gates are
+/// absorbed into the popcount compressor tree (~n_in/3 LUT6 per neuron via
+/// 6:3 compressors, plus log-depth carry), with a threshold comparator.
+pub fn bnn_mlp_model(widths: &[usize], fold: usize, fmax_mhz: f64) -> PriorRow {
+    let fold = fold.max(1);
+    let mut luts = 0usize;
+    let mut ffs = 0usize;
+    let mut cycles = 0u32;
+    for w in widths.windows(2) {
+        let (n_in, n_out) = (w[0], w[1]);
+        let popcount = (n_in as f64 / 3.0).ceil() as usize + (n_in as f64).log2().ceil() as usize;
+        let threshold = ((n_in as f64).log2().ceil() as usize).max(1);
+        // Folding time-multiplexes the PE array: 1/fold the datapath plus
+        // accumulator/control overhead per physical neuron lane.
+        let lanes = n_out.div_ceil(fold);
+        luts += lanes * (popcount + threshold + 16);
+        ffs += lanes * 8 + n_out;
+        cycles += fold as u32 * ((n_in as f64).log2().ceil() as u32).max(1) / 2;
+    }
+    let period = 1000.0 / fmax_mhz;
+    PriorRow {
+        system: "BNN-MLP (modelled)",
+        dataset: "-",
+        accuracy_pct: f64::NAN,
+        luts,
+        ffs,
+        dsps: 0,
+        brams: 0,
+        fmax_mhz,
+        latency_ns: cycles.max(1) as f64 * period,
+        provenance: "modelled",
+    }
+}
+
+/// First-order hls4ml-style fixed-point MLP model: each MAC is a DSP at
+/// reuse factor `reuse` (reuse>1 time-multiplexes), activations/control in
+/// LUTs, pipeline registers per stage.
+pub fn hls_mlp_model(widths: &[usize], bits: u32, reuse: usize, fmax_mhz: f64) -> PriorRow {
+    let mut macs = 0usize;
+    let mut ffs = 0usize;
+    for w in widths.windows(2) {
+        macs += w[0] * w[1];
+        ffs += w[1] * bits as usize * 2;
+    }
+    let dsps = macs.div_ceil(reuse.max(1));
+    // Control/activation/routing LUT overhead per DSP lane + per neuron.
+    let luts = dsps * 25 + widths.iter().skip(1).sum::<usize>() * 8 * bits as usize / 8;
+    let layers = widths.len() - 1;
+    let period = 1000.0 / fmax_mhz;
+    PriorRow {
+        system: "hls4ml-MLP (modelled)",
+        dataset: "-",
+        accuracy_pct: f64::NAN,
+        luts,
+        ffs,
+        dsps,
+        brams: 0,
+        fmax_mhz,
+        latency_ns: (layers * (3 + reuse)) as f64 * period,
+        provenance: "modelled",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn published_rows_cover_all_table3_datasets() {
+        let rows = published_rows();
+        for ds in ["mnist", "jsc", "jsc-lite", "nid"] {
+            assert!(rows.iter().any(|r| r.dataset == ds), "missing {ds}");
+        }
+    }
+
+    #[test]
+    fn bnn_model_scales_with_width() {
+        let small = bnn_mlp_model(&[784, 256, 10], 1, 200.0);
+        let large = bnn_mlp_model(&[784, 1024, 1024, 10], 1, 200.0);
+        assert!(large.luts > small.luts * 2);
+        // FINN MNIST-scale network at moderate folding lands within ~3x of
+        // the published row (91131 LUTs) — a sanity band, not a claim.
+        let finn_like = bnn_mlp_model(&[784, 1024, 1024, 1024, 10], 16, 200.0);
+        assert!(finn_like.luts > 30_000 && finn_like.luts < 300_000, "{}", finn_like.luts);
+        // Folding trades latency for area.
+        let folded = bnn_mlp_model(&[784, 1024, 10], 32, 200.0);
+        let unfolded = bnn_mlp_model(&[784, 1024, 10], 1, 200.0);
+        assert!(folded.luts < unfolded.luts / 8);
+        assert!(folded.latency_ns > unfolded.latency_ns * 4.0);
+    }
+
+    #[test]
+    fn hls_model_dsp_reuse_tradeoff() {
+        let fast = hls_mlp_model(&[16, 64, 32, 5], 16, 1, 200.0);
+        let slow = hls_mlp_model(&[16, 64, 32, 5], 16, 8, 200.0);
+        assert!(fast.dsps > slow.dsps);
+        assert!(fast.latency_ns < slow.latency_ns);
+        // Duarte et al. JSC MLP used ~954 DSPs fully parallel on a similar
+        // geometry: same order of magnitude.
+        assert!(fast.dsps > 2000 && fast.dsps < 6000);
+    }
+}

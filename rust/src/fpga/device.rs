@@ -1,0 +1,102 @@
+//! FPGA device model — AMD/Xilinx xcvu9p-flgb2104-2-i, the part the paper
+//! evaluates on (Sec. IV-B), plus the timing constants of the delay model.
+//!
+//! The delay constants are calibrated so the paper's anchor configurations
+//! land in band (DESIGN.md §6): they are *not* vendor datasheet numbers, but
+//! the structure (LUT delay + net delay per level, free MUXF7/8/9 levels
+//! with a small pass delay, congestion term growing with module size) is the
+//! standard post-synthesis estimate shape.
+
+/// A target FPGA part.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: &'static str,
+    /// Total LUT6 count (paper reports utilization % of this).
+    pub luts: usize,
+    /// Total flip-flops.
+    pub ffs: usize,
+    /// Clock-to-Q + setup overhead (ns).
+    pub t_clk_ns: f64,
+    /// LUT6 propagation delay (ns).
+    pub t_lut_ns: f64,
+    /// Average routed-net delay per logic level (ns), before congestion.
+    pub t_net_ns: f64,
+    /// MUXF7/F8/F9 pass delay (ns) — applied once per free mux level.
+    pub t_muxf_ns: f64,
+    /// Congestion factor: net delay multiplier grows with
+    /// log2(module LUTs / congestion_base).
+    pub congestion_k: f64,
+    pub congestion_base: f64,
+    /// Minimum achievable period (global clocking / FF limits), ns.
+    pub min_period_ns: f64,
+}
+
+/// The paper's evaluation part.
+pub fn xcvu9p() -> Device {
+    Device {
+        name: "xcvu9p-flgb2104-2-i",
+        luts: 1_182_240,
+        ffs: 2_364_480,
+        t_clk_ns: 0.25,
+        t_lut_ns: 0.11,
+        t_net_ns: 0.17,
+        t_muxf_ns: 0.06,
+        congestion_k: 0.22,
+        congestion_base: 4096.0,
+        // ~850 MHz: the practical global-clock ceiling on UltraScale+ -2
+        // fabric (the paper's fastest design runs at 833 MHz).
+        min_period_ns: 1.18,
+    }
+}
+
+impl Device {
+    /// Critical-path estimate for a combinational stage of `depth` LUT
+    /// levels and `free_mux_levels` dedicated-mux levels inside a module of
+    /// `module_luts` LUTs.
+    pub fn stage_period_ns(&self, depth: u32, free_mux_levels: u32, module_luts: usize) -> f64 {
+        if depth == 0 {
+            return (self.t_clk_ns + self.t_net_ns).max(self.min_period_ns);
+        }
+        let congestion =
+            1.0 + self.congestion_k * ((module_luts as f64 / self.congestion_base).max(1.0)).log2();
+        (self.t_clk_ns
+            + depth as f64 * (self.t_lut_ns + self.t_net_ns * congestion)
+            + free_mux_levels as f64 * self.t_muxf_ns)
+            .max(self.min_period_ns)
+    }
+
+    pub fn fmax_mhz(&self, period_ns: f64) -> f64 {
+        1000.0 / period_ns
+    }
+
+    pub fn lut_pct(&self, luts: usize) -> f64 {
+        100.0 * luts as f64 / self.luts as f64
+    }
+
+    pub fn ff_pct(&self, ffs: usize) -> f64 {
+        100.0 * ffs as f64 / self.ffs as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn period_monotonic_in_depth_and_size() {
+        let d = xcvu9p();
+        let p1 = d.stage_period_ns(2, 1, 1000);
+        let p2 = d.stage_period_ns(4, 3, 1000);
+        let p3 = d.stage_period_ns(4, 3, 100_000);
+        assert!(p2 > p1);
+        assert!(p3 > p2);
+        assert!(d.fmax_mhz(p1) > d.fmax_mhz(p2));
+    }
+
+    #[test]
+    fn utilization_percentages() {
+        let d = xcvu9p();
+        assert!((d.lut_pct(40551) - 3.43).abs() < 0.01, "{}", d.lut_pct(40551));
+        assert!((d.ff_pct(2837) - 0.12).abs() < 0.01);
+    }
+}

@@ -1,0 +1,244 @@
+//! FPGA synthesis model — the Vivado 2020.1 OOC substitute (DESIGN.md §6).
+//!
+//! `synthesize` runs the whole back-end: truth tables → LUT6 mapping →
+//! area/timing/pipeline report for the xcvu9p part, under either of the
+//! paper's two pipeline strategies (Fig. 5).
+
+pub mod baselines;
+pub mod device;
+
+use anyhow::Result;
+
+use crate::lut::mapper::{map_network_of, MappedNetwork};
+use crate::lut::tables::compile_network;
+use crate::nn::network::Network;
+use crate::util::pool::default_workers;
+use device::{xcvu9p, Device};
+
+/// Paper Fig. 5 pipeline strategies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// (1) Separate registers for Poly-layer and Adder-layer — doubles the
+    /// cycle count, maximizes clock frequency.
+    SeparateRegisters,
+    /// (2) Single register for the combined Poly+Adder stage — lowest
+    /// latency, lower F_max.
+    Merged,
+}
+
+impl TryFrom<usize> for Strategy {
+    type Error = anyhow::Error;
+    fn try_from(v: usize) -> Result<Strategy> {
+        match v {
+            1 => Ok(Strategy::SeparateRegisters),
+            2 => Ok(Strategy::Merged),
+            other => anyhow::bail!("pipeline strategy must be 1 or 2, got {other}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct LayerSynth {
+    pub luts: usize,
+    pub regs: usize,
+    pub depth: u32,
+    pub poly_depth: u32,
+    pub free_mux_levels: u32,
+    pub period_ns: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SynthReport {
+    pub name: String,
+    pub device: Device,
+    pub strategy: Strategy,
+    pub luts: usize,
+    pub ffs: usize,
+    pub fmax_mhz: f64,
+    pub cycles: u32,
+    pub latency_ns: f64,
+    pub table_words: u128,
+    pub gen_seconds: f64,
+    pub per_layer: Vec<LayerSynth>,
+}
+
+impl SynthReport {
+    pub fn lut_pct(&self) -> f64 {
+        self.device.lut_pct(self.luts)
+    }
+
+    pub fn ff_pct(&self) -> f64 {
+        self.device.ff_pct(self.ffs)
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "== {} on {} (pipeline strategy {}) ==\n",
+            self.name,
+            self.device.name,
+            match self.strategy {
+                Strategy::SeparateRegisters => "1: separate poly/adder registers",
+                Strategy::Merged => "2: merged poly+adder stage",
+            }
+        ));
+        s.push_str(&format!(
+            "  LUT      {:>9}  ({:.2}% of {})\n",
+            self.luts,
+            self.lut_pct(),
+            self.device.luts
+        ));
+        s.push_str(&format!(
+            "  FF       {:>9}  ({:.2}% of {})\n",
+            self.ffs,
+            self.ff_pct(),
+            self.device.ffs
+        ));
+        s.push_str(&format!("  F_max    {:>9.0} MHz\n", self.fmax_mhz));
+        s.push_str(&format!(
+            "  Latency  {:>9} cycles = {:.1} ns\n",
+            self.cycles, self.latency_ns
+        ));
+        s.push_str(&format!("  Tables   {:>9} words\n", self.table_words));
+        s.push_str(&format!("  Gen+map  {:>9.2} s\n", self.gen_seconds));
+        for (i, l) in self.per_layer.iter().enumerate() {
+            s.push_str(&format!(
+                "  layer {i}: {:>7} LUT, {:>6} FF, depth {} (poly {}), {:.2} ns\n",
+                l.luts, l.regs, l.depth, l.poly_depth, l.period_ns
+            ));
+        }
+        s
+    }
+}
+
+/// Free dedicated-mux levels used by a table of `bits` address bits.
+fn free_mux_levels_for(bits: u32) -> u32 {
+    bits.saturating_sub(6).min(3)
+}
+
+/// Area/timing analysis of an already-mapped network.
+pub fn analyze(
+    net: &Network,
+    mapped: &MappedNetwork,
+    table_words: u128,
+    strategy: Strategy,
+    gen_seconds: f64,
+) -> SynthReport {
+    let dev = xcvu9p();
+    let cfg = &net.cfg;
+    let a = cfg.a_factor;
+    let mut per_layer = Vec::new();
+    let mut worst_period = 0f64;
+    let mut total_ffs = 0usize;
+
+    for (l, ml) in mapped.layers.iter().enumerate() {
+        let n_out = cfg.widths[l + 1];
+        let luts = ml.netlist.lut_count();
+        let out_regs = n_out * cfg.beta[l + 1] as usize;
+        let poly_regs = if a > 1 { a * n_out * cfg.sub_bits(l) as usize } else { 0 };
+        let fml = free_mux_levels_for(cfg.table_bits_poly(l));
+        let (regs, period) = match strategy {
+            Strategy::Merged => {
+                // One register stage after the combined poly+adder logic.
+                (out_regs, dev.stage_period_ns(ml.depth, fml, luts))
+            }
+            Strategy::SeparateRegisters => {
+                // Two stages; the critical one sets the layer period.
+                let adder_depth = ml.depth.saturating_sub(ml.poly_depth);
+                let p_poly = dev.stage_period_ns(ml.poly_depth.max(1), fml, luts);
+                let p_add = dev.stage_period_ns(
+                    adder_depth.max(1),
+                    free_mux_levels_for(cfg.table_bits_adder(l)),
+                    luts,
+                );
+                (out_regs + poly_regs, p_poly.max(p_add))
+            }
+        };
+        worst_period = worst_period.max(period);
+        total_ffs += regs;
+        per_layer.push(LayerSynth {
+            luts,
+            regs,
+            depth: ml.depth,
+            poly_depth: ml.poly_depth,
+            free_mux_levels: fml,
+            period_ns: period,
+        });
+    }
+    // Input capture registers.
+    total_ffs += cfg.widths[0] * cfg.beta[0] as usize;
+
+    let stages_per_layer = match strategy {
+        Strategy::Merged => 1,
+        Strategy::SeparateRegisters => {
+            if a > 1 {
+                2
+            } else {
+                1
+            }
+        }
+    };
+    let cycles = (cfg.n_layers() * stages_per_layer) as u32;
+    let fmax = dev.fmax_mhz(worst_period);
+    let latency_ns = cycles as f64 * worst_period;
+
+    SynthReport {
+        name: cfg.name.clone(),
+        device: dev,
+        strategy,
+        luts: mapped.total_luts(),
+        ffs: total_ffs,
+        fmax_mhz: fmax,
+        cycles,
+        latency_ns,
+        table_words,
+        gen_seconds,
+        per_layer,
+    }
+}
+
+/// Full back-end: tables → mapping → report.
+pub fn synthesize(net: &Network, strategy: Strategy) -> Result<SynthReport> {
+    let t0 = std::time::Instant::now();
+    let tables = compile_network(net, default_workers());
+    let mapped = map_network_of(net, &tables, default_workers());
+    Ok(analyze(net, &mapped, tables.total_words, strategy, t0.elapsed().as_secs_f64()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::config;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn synthesize_tiny_network() {
+        let cfg = config::uniform("t", &[8, 6, 3], 2, 2, 3, 3, 3, 2, 2, 3);
+        let net = Network::random(&cfg, &mut Rng::new(7));
+        let r2 = synthesize(&net, Strategy::Merged).unwrap();
+        let r1 = synthesize(&net, Strategy::SeparateRegisters).unwrap();
+        assert!(r2.luts > 0);
+        // Paper Table V shape: strategy 2 halves cycles, costs F_max.
+        assert_eq!(r1.cycles, 2 * r2.cycles);
+        assert!(r1.fmax_mhz >= r2.fmax_mhz);
+        assert!(r1.ffs > r2.ffs, "strategy 1 adds poly registers");
+    }
+
+    #[test]
+    fn a1_has_single_stage_per_layer() {
+        let cfg = config::uniform("t", &[8, 6, 3], 2, 2, 3, 3, 3, 2, 1, 3);
+        let net = Network::random(&cfg, &mut Rng::new(7));
+        let r1 = synthesize(&net, Strategy::SeparateRegisters).unwrap();
+        assert_eq!(r1.cycles as usize, cfg.n_layers());
+    }
+
+    #[test]
+    fn render_contains_key_fields() {
+        let cfg = config::uniform("t", &[8, 6, 3], 2, 2, 3, 3, 3, 2, 2, 3);
+        let net = Network::random(&cfg, &mut Rng::new(7));
+        let r = synthesize(&net, Strategy::Merged).unwrap();
+        let text = r.render();
+        assert!(text.contains("F_max"));
+        assert!(text.contains("xcvu9p"));
+    }
+}

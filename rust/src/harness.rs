@@ -1,0 +1,97 @@
+//! Experiment harness — shared orchestration for examples and benches.
+//!
+//! Centralizes the train-or-load / synth / evaluate flow so every
+//! table/figure bench reproduces the paper rows through the same code path.
+//! Training is cached as `<id>.weights.json` next to the artifacts: the
+//! first bench run trains (PJRT), later runs load.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::data::{self, Dataset};
+use crate::fpga::{self, Strategy, SynthReport};
+use crate::meta::{self, Manifest};
+use crate::nn::network::Network;
+use crate::runtime::Engine;
+use crate::train::{self, TrainOptions};
+
+/// Default artifact directory (env `POLYLUT_ARTIFACTS` overrides).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("POLYLUT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// Training steps for experiment runs (env `POLYLUT_STEPS`; scale-down
+/// documented in DESIGN.md §4).
+pub fn train_steps() -> usize {
+    std::env::var("POLYLUT_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(1200)
+}
+
+/// A fully prepared experiment model.
+pub struct Prepared {
+    pub man: Manifest,
+    pub ds: Dataset,
+    pub net: Network,
+    /// Deployed-semantics test accuracy (fraction).
+    pub accuracy: f64,
+    pub state: Vec<Vec<f32>>,
+}
+
+/// Train-or-load an artifact id and evaluate deployed accuracy.
+pub fn prepare(engine: &Engine, id: &str) -> Result<Prepared> {
+    prepare_with(engine, id, train_steps(), restarts_for(id))
+}
+
+/// UNSW convergence is seed-sensitive (paper Sec. IV-B): use restarts.
+pub fn restarts_for(id: &str) -> usize {
+    if id.starts_with("nid") {
+        3
+    } else {
+        1
+    }
+}
+
+pub fn prepare_with(
+    engine: &Engine,
+    id: &str,
+    steps: usize,
+    restarts: usize,
+) -> Result<Prepared> {
+    let dir = artifacts_dir();
+    let man = meta::load_id(&dir, id)
+        .with_context(|| format!("artifact {id} — run `make artifacts` first"))?;
+    let ds = data::load(&man.dataset, 0)?;
+    let opts = TrainOptions {
+        steps,
+        restarts,
+        verbose: std::env::var("POLYLUT_VERBOSE").is_ok(),
+        ..Default::default()
+    };
+    let (state, _) = train::train_or_load(engine, &man, &ds, &opts)?;
+    let net = man.network_from_state(&state)?;
+    // Full-test-set deployed accuracy.
+    let (_, accuracy) = train::deployed_accuracy(&man, &state, &ds, 0)?;
+    Ok(Prepared { man, ds, net, accuracy, state })
+}
+
+/// Synthesize under a strategy (the Vivado-substitute back-end).
+pub fn synth(p: &Prepared, strategy: Strategy) -> Result<SynthReport> {
+    fpga::synthesize(&p.net, strategy)
+}
+
+/// Format a fraction as the paper's percentage style.
+pub fn pct(acc: f64) -> String {
+    format!("{:.1}", acc * 100.0)
+}
+
+/// "2^12 x 2 + 2^6"-style table-size strings (paper Table II).
+pub fn table_size_string(cfg: &crate::nn::ModelConfig) -> String {
+    let bits = cfg.table_bits_poly(cfg.n_layers() - 1).max(cfg.table_bits_poly(0));
+    if cfg.a_factor == 1 {
+        format!("2^{bits}")
+    } else {
+        format!("2^{bits} x {} + 2^{}", cfg.a_factor, cfg.table_bits_adder(1.min(cfg.n_layers() - 1)))
+    }
+}

@@ -1,0 +1,29 @@
+//! # PolyLUT-Add — FPGA-based LUT inference with wide inputs
+//!
+//! Full-toolflow reproduction of *PolyLUT-Add* (Lou et al., 2024): LUT-based
+//! DNN inference where each neuron is `A` PolyLUT sub-neurons combined by an
+//! adder lookup table, cutting table cost from `2^{βFA}` to
+//! `A·2^{βF} + 2^{A(β+1)}`.
+//!
+//! The stack has three layers (see DESIGN.md):
+//! - **L1/L2 (build time)**: Pallas kernels + JAX QAT model, AOT-lowered to
+//!   HLO text artifacts by `python/compile/aot.py`.
+//! - **L3 (this crate)**: training driver, LUT compiler (truth tables →
+//!   ROBDD → LUT6 mapping), Verilog emitter, FPGA area/timing model,
+//!   bit-exact netlist simulator, and a batching inference server — all in
+//!   Rust over the PJRT C API; Python never runs on the request path.
+
+pub mod coordinator;
+pub mod data;
+pub mod fpga;
+pub mod lut;
+pub mod meta;
+pub mod nn;
+pub mod runtime;
+pub mod sim;
+pub mod train;
+pub mod util;
+pub mod verilog;
+pub mod cli_app;
+pub use cli_app::cli_main;
+pub mod harness;

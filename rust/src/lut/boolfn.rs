@@ -1,0 +1,292 @@
+//! Dense Boolean functions (truth-table bitvectors) — the mapper's working
+//! representation.  A `BoolFn` over `n` variables stores `2^n` bits packed
+//! into u64 words; variable `i` is address bit `i`.  All operations are the
+//! classic cube ones: cofactoring, vacuous-variable detection, support
+//! reduction.  Sizes here are small (n ≤ 26 by config validation), so dense
+//! tables beat BDDs on simplicity and, for these sizes, on speed.
+
+use std::hash::{Hash, Hasher};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BoolFn {
+    pub n: u32,
+    /// 2^n bits, LSB-first within each u64; length = max(1, 2^n / 64).
+    pub bits: Vec<u64>,
+}
+
+impl Hash for BoolFn {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        self.n.hash(state);
+        self.bits.hash(state);
+    }
+}
+
+impl BoolFn {
+    pub fn from_bits(n: u32, bits: Vec<u64>) -> BoolFn {
+        let want = words_for(n);
+        assert_eq!(bits.len(), want, "bad bitvector length for n={n}");
+        let mut f = BoolFn { n, bits };
+        f.mask_tail();
+        f
+    }
+
+    pub fn constant(n: u32, val: bool) -> BoolFn {
+        let mut f =
+            BoolFn { n, bits: vec![if val { u64::MAX } else { 0 }; words_for(n)] };
+        f.mask_tail();
+        f
+    }
+
+    /// The projection function f = x_var.
+    pub fn var(n: u32, var: u32) -> BoolFn {
+        let size = 1usize << n;
+        let mut bits = vec![0u64; words_for(n)];
+        for addr in 0..size {
+            if (addr >> var) & 1 == 1 {
+                bits[addr / 64] |= 1 << (addr % 64);
+            }
+        }
+        BoolFn::from_bits(n, bits)
+    }
+
+    fn mask_tail(&mut self) {
+        let size = 1usize << self.n;
+        if size < 64 {
+            self.bits[0] &= (1u64 << size) - 1;
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, addr: usize) -> bool {
+        (self.bits[addr / 64] >> (addr % 64)) & 1 == 1
+    }
+
+    pub fn size(&self) -> usize {
+        1usize << self.n
+    }
+
+    pub fn is_const(&self) -> Option<bool> {
+        let size = 1usize << self.n;
+        if size < 64 {
+            let mask = (1u64 << size) - 1;
+            let v = self.bits[0] & mask;
+            if v == 0 {
+                return Some(false);
+            }
+            if v == mask {
+                return Some(true);
+            }
+            return None;
+        }
+        if self.bits.iter().all(|&w| w == 0) {
+            Some(false)
+        } else if self.bits.iter().all(|&w| w == u64::MAX) {
+            Some(true)
+        } else {
+            None
+        }
+    }
+
+    /// Positive/negative cofactor with respect to `var` (result has n-1 vars;
+    /// variables above `var` shift down by one).
+    pub fn cofactor(&self, var: u32, val: bool) -> BoolFn {
+        debug_assert!(var < self.n);
+        let n2 = self.n - 1;
+        let size2 = 1usize << n2;
+        let mut bits = vec![0u64; words_for(n2)];
+        // Fast path: var >= 6 means whole u64 words are selected.
+        if var >= 6 {
+            let stride = 1usize << (var - 6); // words per half-block
+            let mut dst = 0usize;
+            let mut src = if val { stride } else { 0 };
+            while dst < words_for(n2).max(1) && src < self.bits.len() {
+                for k in 0..stride.min(words_for(n2) - dst) {
+                    bits[dst + k] = self.bits[src + k];
+                }
+                dst += stride;
+                src += 2 * stride;
+            }
+        } else {
+            for addr2 in 0..size2 {
+                let lo_mask = (1usize << var) - 1;
+                let addr = (addr2 & lo_mask)
+                    | ((val as usize) << var)
+                    | ((addr2 & !lo_mask) << 1);
+                if self.get(addr) {
+                    bits[addr2 / 64] |= 1 << (addr2 % 64);
+                }
+            }
+        }
+        BoolFn::from_bits(n2, bits)
+    }
+
+    /// True if f does not depend on `var` — checked in place (no cofactor
+    /// materialization; this is the mapper's innermost loop).
+    pub fn is_vacuous(&self, var: u32) -> bool {
+        if var < 6 {
+            // Within-word comparison: mask of positions whose address bit
+            // `var` is 0, compared against the same word shifted by 2^var.
+            const MASKS: [u64; 6] = [
+                0x5555_5555_5555_5555,
+                0x3333_3333_3333_3333,
+                0x0F0F_0F0F_0F0F_0F0F,
+                0x00FF_00FF_00FF_00FF,
+                0x0000_FFFF_0000_FFFF,
+                0x0000_0000_FFFF_FFFF,
+            ];
+            let sh = 1u32 << var;
+            let m = if self.n <= var {
+                return true;
+            } else {
+                MASKS[var as usize]
+            };
+            // For n < 6 the tail is masked to zero already (mask_tail), and
+            // zero-vs-zero compares equal, so no special casing is needed.
+            self.bits.iter().all(|&w| ((w >> sh) ^ w) & m == 0)
+        } else {
+            // Whole-word stride comparison.
+            let stride = 1usize << (var - 6);
+            if stride >= self.bits.len() {
+                return true;
+            }
+            let mut base = 0usize;
+            while base + stride < self.bits.len() {
+                for k in 0..stride {
+                    if self.bits[base + k] != self.bits[base + stride + k] {
+                        return false;
+                    }
+                }
+                base += 2 * stride;
+            }
+            true
+        }
+    }
+
+    /// Drop all vacuous variables in a single extraction pass.
+    /// Returns (reduced fn, kept-variable list: reduced var i corresponds to
+    /// original var kept[i]).
+    pub fn support_reduce(&self) -> (BoolFn, Vec<u32>) {
+        let kept: Vec<u32> = (0..self.n).filter(|&v| !self.is_vacuous(v)).collect();
+        if kept.len() == self.n as usize {
+            return (self.clone(), kept);
+        }
+        let n2 = kept.len() as u32;
+        let mut bits = vec![0u64; words_for(n2)];
+        for addr2 in 0..(1usize << n2) {
+            // Expand the reduced address into the original space with all
+            // vacuous variables at 0.
+            let mut addr = 0usize;
+            for (i, &v) in kept.iter().enumerate() {
+                addr |= ((addr2 >> i) & 1) << v;
+            }
+            if self.get(addr) {
+                bits[addr2 / 64] |= 1 << (addr2 % 64);
+            }
+        }
+        (BoolFn::from_bits(n2, bits), kept)
+    }
+
+    /// Evaluate on a full assignment of the original variables.
+    pub fn eval(&self, assignment: &[bool]) -> bool {
+        debug_assert_eq!(assignment.len(), self.n as usize);
+        let mut addr = 0usize;
+        for (i, &b) in assignment.iter().enumerate() {
+            addr |= (b as usize) << i;
+        }
+        self.get(addr)
+    }
+
+    /// For n <= 6: the 64-bit LUT mask (truth table of a physical LUT6).
+    pub fn lut_mask(&self) -> u64 {
+        assert!(self.n <= 6, "lut_mask needs n<=6, got {}", self.n);
+        self.bits[0]
+    }
+}
+
+#[inline]
+pub fn words_for(n: u32) -> usize {
+    (1usize << n).div_ceil(64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn from_fn(n: u32, f: impl Fn(usize) -> bool) -> BoolFn {
+        let mut bits = vec![0u64; words_for(n)];
+        for addr in 0..(1usize << n) {
+            if f(addr) {
+                bits[addr / 64] |= 1 << (addr % 64);
+            }
+        }
+        BoolFn::from_bits(n, bits)
+    }
+
+    #[test]
+    fn cofactor_small_var() {
+        // f = x0 XOR x1 over 3 vars (x2 vacuous).
+        let f = from_fn(3, |a| ((a & 1) ^ ((a >> 1) & 1)) == 1);
+        let f0 = f.cofactor(0, false); // = x1 (over remaining vars x1->0, x2->1)
+        let f1 = f.cofactor(0, true); // = !x1
+        assert_eq!(f0, from_fn(2, |a| a & 1 == 1));
+        assert_eq!(f1, from_fn(2, |a| a & 1 == 0));
+        assert!(f.is_vacuous(2));
+        assert!(!f.is_vacuous(0));
+    }
+
+    #[test]
+    fn cofactor_large_var_word_path() {
+        // 8 vars; f depends only on x7: checks the word-stride fast path.
+        let f = from_fn(8, |a| (a >> 7) & 1 == 1);
+        assert_eq!(f.cofactor(7, false), BoolFn::constant(7, false));
+        assert_eq!(f.cofactor(7, true), BoolFn::constant(7, true));
+        // and a mixed function
+        let g = from_fn(8, |a| ((a >> 7) & 1 == 1) ^ (a & 1 == 1));
+        let g0 = g.cofactor(7, false);
+        assert_eq!(g0, from_fn(7, |a| a & 1 == 1));
+        let g1 = g.cofactor(7, true);
+        assert_eq!(g1, from_fn(7, |a| a & 1 == 0));
+    }
+
+    #[test]
+    fn support_reduction() {
+        // 10 vars, only x3 and x8 matter: f = x3 AND x8.
+        let f = from_fn(10, |a| ((a >> 3) & 1 == 1) && ((a >> 8) & 1 == 1));
+        let (r, kept) = f.support_reduce();
+        assert_eq!(kept, vec![3, 8]);
+        assert_eq!(r, from_fn(2, |a| a == 0b11));
+    }
+
+    #[test]
+    fn consts_and_var() {
+        assert_eq!(BoolFn::constant(4, true).is_const(), Some(true));
+        assert_eq!(BoolFn::constant(7, false).is_const(), Some(false));
+        assert_eq!(BoolFn::var(3, 1), from_fn(3, |a| (a >> 1) & 1 == 1));
+        assert_eq!(BoolFn::var(3, 1).is_const(), None);
+    }
+
+    #[test]
+    fn cofactor_consistency_random() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        for n in 3..=9u32 {
+            let f = {
+                let mut bits = vec![0u64; words_for(n)];
+                for w in bits.iter_mut() {
+                    *w = rng.next_u64();
+                }
+                BoolFn::from_bits(n, bits)
+            };
+            for var in 0..n {
+                let f0 = f.cofactor(var, false);
+                let f1 = f.cofactor(var, true);
+                for addr in 0..(1usize << n) {
+                    let bit = (addr >> var) & 1 == 1;
+                    let lo_mask = (1usize << var) - 1;
+                    let addr2 = (addr & lo_mask) | ((addr >> 1) & !lo_mask);
+                    let c = if bit { &f1 } else { &f0 };
+                    assert_eq!(f.get(addr), c.get(addr2), "n={n} var={var} addr={addr}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! Two-level Boolean minimization (Espresso-lite).
+//!
+//! LogicNets' released toolflow runs Espresso on each neuron's truth table
+//! before RTL emission; this module provides the same capability as an
+//! optional pre-pass for reporting and for the `polylut report` cube
+//! statistics.  It implements the classic Espresso loop on cube lists —
+//! EXPAND (greedy literal removal against the OFF-set), IRREDUNDANT (drop
+//! covered cubes) — over the dense `BoolFn` representation, which is exact
+//! at the sizes this repo deals with (≤ ~16 inputs).
+//!
+//! The result is a sum-of-products cover: useful both as an area proxy
+//! (cube/literal counts correlate with pre-mapping logic complexity) and to
+//! emit human-auditable Boolean expressions for small neurons.
+
+use super::boolfn::BoolFn;
+
+/// A product term over n variables: for each variable, `care` bit set means
+/// the literal participates, `value` bit gives its polarity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cube {
+    pub care: u32,
+    pub value: u32,
+}
+
+impl Cube {
+    /// The minterm cube for an assignment.
+    pub fn minterm(addr: usize, n: u32) -> Cube {
+        Cube { care: (1u32 << n) - 1, value: addr as u32 }
+    }
+
+    /// Does this cube contain the given assignment?
+    #[inline]
+    pub fn covers(&self, addr: usize) -> bool {
+        (addr as u32 ^ self.value) & self.care == 0
+    }
+
+    /// Number of literals in the product term.
+    pub fn literals(&self) -> u32 {
+        self.care.count_ones()
+    }
+
+    /// Is `other` entirely contained in this cube?
+    pub fn contains(&self, other: &Cube) -> bool {
+        // Every literal of self must be a literal of other with the same
+        // polarity.
+        self.care & other.care == self.care
+            && (self.value ^ other.value) & self.care == 0
+    }
+}
+
+/// A sum-of-products cover.
+#[derive(Debug, Clone, Default)]
+pub struct Cover {
+    pub n: u32,
+    pub cubes: Vec<Cube>,
+}
+
+impl Cover {
+    pub fn eval(&self, addr: usize) -> bool {
+        self.cubes.iter().any(|c| c.covers(addr))
+    }
+
+    pub fn literal_count(&self) -> u32 {
+        self.cubes.iter().map(|c| c.literals()).sum()
+    }
+
+    /// Verify the cover implements `f` exactly.
+    pub fn equals(&self, f: &BoolFn) -> bool {
+        (0..f.size()).all(|addr| self.eval(addr) == f.get(addr))
+    }
+
+    /// Render as a human-readable SOP expression (x3' = NOT x3).
+    pub fn to_expression(&self) -> String {
+        if self.cubes.is_empty() {
+            return "0".into();
+        }
+        let terms: Vec<String> = self
+            .cubes
+            .iter()
+            .map(|c| {
+                if c.care == 0 {
+                    return "1".into();
+                }
+                (0..self.n)
+                    .filter(|&v| c.care >> v & 1 == 1)
+                    .map(|v| {
+                        if c.value >> v & 1 == 1 {
+                            format!("x{v}")
+                        } else {
+                            format!("x{v}'")
+                        }
+                    })
+                    .collect::<Vec<_>>()
+                    .join("·")
+            })
+            .collect();
+        terms.join(" + ")
+    }
+}
+
+/// Minimize `f` into an irredundant prime-ish cover (Espresso EXPAND +
+/// IRREDUNDANT loop; exact containment checks against ON/OFF sets).
+pub fn minimize(f: &BoolFn) -> Cover {
+    let n = f.n;
+    assert!(n <= 16, "espresso-lite is for table-sized functions");
+    let size = 1usize << n;
+
+    // Start from the ON-set minterms.
+    let mut cubes: Vec<Cube> =
+        (0..size).filter(|&a| f.get(a)).map(|a| Cube::minterm(a, n)).collect();
+    if cubes.is_empty() {
+        return Cover { n, cubes };
+    }
+    if cubes.len() == size {
+        return Cover { n, cubes: vec![Cube { care: 0, value: 0 }] };
+    }
+
+    // EXPAND: greedily drop literals while the cube stays inside the ON-set.
+    for cube in cubes.iter_mut() {
+        for v in 0..n {
+            if cube.care >> v & 1 == 0 {
+                continue;
+            }
+            let candidate = Cube { care: cube.care & !(1 << v), value: cube.value };
+            // Valid iff no OFF-set point is covered. Enumerate the cube's
+            // free variables only (2^(n - literals) points).
+            if cube_inside_on_set(&candidate, f) {
+                *cube = candidate;
+            }
+        }
+    }
+
+    // Dedup + IRREDUNDANT: remove cubes covered by the union of the others.
+    cubes.sort_by_key(|c| (c.care, c.value));
+    cubes.dedup();
+    // Sort by size (largest cube first) so redundant minterms get dropped.
+    cubes.sort_by_key(|c| c.literals());
+    let mut keep: Vec<Cube> = Vec::with_capacity(cubes.len());
+    // Pairwise containment first (cheap).
+    for c in &cubes {
+        if !keep.iter().any(|k| k.contains(c)) {
+            keep.push(*c);
+        }
+    }
+    // Full irredundancy: drop any cube whose points are all covered by the
+    // rest.
+    let mut i = 0;
+    while i < keep.len() {
+        let cube = keep[i];
+        let others_cover_all = enumerate_cube(&cube, n).all(|addr| {
+            keep.iter().enumerate().any(|(j, k)| j != i && k.covers(addr))
+        });
+        if others_cover_all {
+            keep.remove(i);
+        } else {
+            i += 1;
+        }
+    }
+    Cover { n, cubes: keep }
+}
+
+/// Iterate all assignments inside a cube.
+fn enumerate_cube(cube: &Cube, n: u32) -> impl Iterator<Item = usize> + '_ {
+    let free: Vec<u32> = (0..n).filter(|&v| cube.care >> v & 1 == 0).collect();
+    let base = (cube.value & cube.care) as usize;
+    (0..(1usize << free.len())).map(move |k| {
+        let mut addr = base;
+        for (i, &v) in free.iter().enumerate() {
+            addr |= ((k >> i) & 1) << v;
+        }
+        addr
+    })
+}
+
+fn cube_inside_on_set(cube: &Cube, f: &BoolFn) -> bool {
+    enumerate_cube(cube, f.n).all(|addr| f.get(addr))
+}
+
+/// Cube-count statistics for a truth table's output bits (reporting aid).
+pub fn table_cube_stats(table: &super::tables::TruthTable) -> (usize, u32) {
+    let mut cubes = 0usize;
+    let mut literals = 0u32;
+    for b in 0..table.out_bits {
+        let f = BoolFn::from_bits(table.n_inputs, table.bit_plane(b));
+        let cover = minimize(&f);
+        cubes += cover.cubes.len();
+        literals += cover.literal_count();
+    }
+    (cubes, literals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn from_fn(n: u32, f: impl Fn(usize) -> bool) -> BoolFn {
+        let mut bits = vec![0u64; super::super::boolfn::words_for(n)];
+        for addr in 0..(1usize << n) {
+            if f(addr) {
+                bits[addr / 64] |= 1 << (addr % 64);
+            }
+        }
+        BoolFn::from_bits(n, bits)
+    }
+
+    #[test]
+    fn minimizes_and_function() {
+        // f = x0 AND x1 over 3 vars: one cube, two literals.
+        let f = from_fn(3, |a| a & 0b11 == 0b11);
+        let cover = minimize(&f);
+        assert!(cover.equals(&f));
+        assert_eq!(cover.cubes.len(), 1);
+        assert_eq!(cover.literal_count(), 2);
+        assert_eq!(cover.to_expression(), "x0·x1");
+    }
+
+    #[test]
+    fn minimizes_xor_needs_two_cubes() {
+        let f = from_fn(2, |a| (a & 1) ^ ((a >> 1) & 1) == 1);
+        let cover = minimize(&f);
+        assert!(cover.equals(&f));
+        assert_eq!(cover.cubes.len(), 2);
+        assert_eq!(cover.literal_count(), 4, "XOR is not single-cube compressible");
+    }
+
+    #[test]
+    fn constants() {
+        let f0 = BoolFn::constant(4, false);
+        assert_eq!(minimize(&f0).cubes.len(), 0);
+        let f1 = BoolFn::constant(4, true);
+        let c = minimize(&f1);
+        assert_eq!(c.cubes.len(), 1);
+        assert_eq!(c.literal_count(), 0);
+        assert_eq!(c.to_expression(), "1");
+    }
+
+    #[test]
+    fn random_functions_roundtrip_exactly() {
+        let mut rng = Rng::new(42);
+        for n in 2..=8u32 {
+            for _ in 0..8 {
+                let pattern: Vec<bool> =
+                    (0..(1usize << n)).map(|_| rng.chance(0.4)).collect();
+                let f = from_fn(n, |a| pattern[a]);
+                let cover = minimize(&f);
+                assert!(cover.equals(&f), "n={n}");
+                // Never worse than the minterm cover.
+                let minterms = (0..(1usize << n)).filter(|&a| f.get(a)).count();
+                assert!(cover.cubes.len() <= minterms.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_function_compresses_well() {
+        // f depends only on x2 (of 6 vars): must compress to 1 cube, 1 literal.
+        let f = from_fn(6, |a| (a >> 2) & 1 == 1);
+        let cover = minimize(&f);
+        assert!(cover.equals(&f));
+        assert_eq!(cover.cubes.len(), 1);
+        assert_eq!(cover.literal_count(), 1);
+        assert_eq!(cover.to_expression(), "x2");
+    }
+
+    #[test]
+    fn cube_containment_and_enumeration() {
+        let big = Cube { care: 0b001, value: 0b001 }; // x0
+        let small = Cube { care: 0b011, value: 0b011 }; // x0 x1
+        assert!(big.contains(&small));
+        assert!(!small.contains(&big));
+        let pts: Vec<usize> = enumerate_cube(&small, 3).collect();
+        assert_eq!(pts.len(), 2); // free var: x2
+        assert!(pts.contains(&0b011) && pts.contains(&0b111));
+    }
+}

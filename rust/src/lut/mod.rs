@@ -1,0 +1,12 @@
+//! The LUT compiler: truth-table generation from the trained network,
+//! Boolean-function algebra, and LUT6 technology mapping (the Vivado
+//! substitute — DESIGN.md §6).
+
+pub mod boolfn;
+pub mod espresso;
+pub mod mapper;
+pub mod netlist;
+pub mod tables;
+
+pub use mapper::{map_network_of, MappedNetwork};
+pub use tables::{compile_network, NetworkTables};

@@ -1,0 +1,178 @@
+//! Mapped netlist — the output of LUT6 technology mapping.
+//!
+//! One arena per layer: input nodes are the layer's input wires
+//! ((source neuron, bit) pairs), internal nodes are LUT6s and the dedicated
+//! CLB muxes (MUXF7/F8/F9 are free on UltraScale+; deeper mux levels burn a
+//! LUT6 each).  Identical functions of identical wires hash-cons to the same
+//! node, which is exactly the sharing Vivado finds within an out-of-context
+//! module.  The netlist is executable (bit-parallel over 64 samples) so the
+//! mapping can be property-tested against the truth tables it came from.
+
+use std::collections::HashMap;
+
+pub type NodeId = u32;
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Node {
+    /// External wire: (source index, bit) — opaque to the netlist.
+    Input { wire: u32 },
+    Const(bool),
+    /// A physical LUT with up to 6 inputs; `mask` bit i = output for input
+    /// pattern i (inputs[0] is address bit 0).
+    Lut { inputs: Vec<NodeId>, mask: u64 },
+    /// 2:1 mux. `free` muxes are the CLB's MUXF7/F8/F9; others cost a LUT6.
+    Mux { sel: NodeId, lo: NodeId, hi: NodeId, free: bool },
+}
+
+#[derive(Debug, Default)]
+pub struct Netlist {
+    pub nodes: Vec<Node>,
+    dedup: HashMap<Node, NodeId>,
+    /// Cached logic depth per node (LUT levels; free muxes add 0).
+    depth: Vec<u32>,
+}
+
+impl Netlist {
+    pub fn new() -> Netlist {
+        Netlist::default()
+    }
+
+    pub fn add(&mut self, node: Node) -> NodeId {
+        if let Some(&id) = self.dedup.get(&node) {
+            return id;
+        }
+        let d = match &node {
+            Node::Input { .. } | Node::Const(_) => 0,
+            Node::Lut { inputs, .. } => {
+                1 + inputs.iter().map(|&i| self.depth[i as usize]).max().unwrap_or(0)
+            }
+            Node::Mux { sel, lo, hi, free } => {
+                let base = [*sel, *lo, *hi]
+                    .iter()
+                    .map(|&i| self.depth[i as usize])
+                    .max()
+                    .unwrap();
+                base + if *free { 0 } else { 1 }
+            }
+        };
+        let id = self.nodes.len() as NodeId;
+        self.nodes.push(node.clone());
+        self.dedup.insert(node, id);
+        self.depth.push(d);
+        id
+    }
+
+    pub fn input(&mut self, wire: u32) -> NodeId {
+        self.add(Node::Input { wire })
+    }
+
+    pub fn constant(&mut self, v: bool) -> NodeId {
+        self.add(Node::Const(v))
+    }
+
+    pub fn depth_of(&self, id: NodeId) -> u32 {
+        self.depth[id as usize]
+    }
+
+    /// Physical LUT6 count (LUTs + non-free muxes).
+    pub fn lut_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, Node::Lut { .. } | Node::Mux { free: false, .. }))
+            .count()
+    }
+
+    pub fn free_mux_count(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Node::Mux { free: true, .. })).count()
+    }
+
+    /// Evaluate the netlist bit-parallel: `wires[w]` holds 64 samples of
+    /// input wire w (bit k = sample k).  Returns one u64 per node.
+    pub fn eval64(&self, wires: &dyn Fn(u32) -> u64) -> Vec<u64> {
+        let mut vals = vec![0u64; self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            vals[i] = match node {
+                Node::Input { wire } => wires(*wire),
+                Node::Const(v) => {
+                    if *v {
+                        u64::MAX
+                    } else {
+                        0
+                    }
+                }
+                Node::Lut { inputs, mask } => {
+                    // For every sample, assemble the LUT address from the
+                    // input bits and read the mask.
+                    let mut out = 0u64;
+                    for s in 0..64 {
+                        let mut addr = 0usize;
+                        for (k, &inp) in inputs.iter().enumerate() {
+                            addr |= (((vals[inp as usize] >> s) & 1) as usize) << k;
+                        }
+                        out |= ((mask >> addr) & 1) << s;
+                    }
+                    out
+                }
+                Node::Mux { sel, lo, hi, .. } => {
+                    let s = vals[*sel as usize];
+                    (s & vals[*hi as usize]) | (!s & vals[*lo as usize])
+                }
+            };
+        }
+        vals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_shares_nodes() {
+        let mut nl = Netlist::new();
+        let a = nl.input(0);
+        let b = nl.input(1);
+        let l1 = nl.add(Node::Lut { inputs: vec![a, b], mask: 0b0110 });
+        let l2 = nl.add(Node::Lut { inputs: vec![a, b], mask: 0b0110 });
+        assert_eq!(l1, l2);
+        assert_eq!(nl.lut_count(), 1);
+    }
+
+    #[test]
+    fn depth_tracking() {
+        let mut nl = Netlist::new();
+        let a = nl.input(0);
+        let b = nl.input(1);
+        let l1 = nl.add(Node::Lut { inputs: vec![a, b], mask: 0b1000 });
+        let l2 = nl.add(Node::Lut { inputs: vec![l1, a], mask: 0b0110 });
+        assert_eq!(nl.depth_of(l1), 1);
+        assert_eq!(nl.depth_of(l2), 2);
+        let m = nl.add(Node::Mux { sel: a, lo: l2, hi: l1, free: true });
+        assert_eq!(nl.depth_of(m), 2, "free mux adds no level");
+        let m2 = nl.add(Node::Mux { sel: a, lo: m, hi: l1, free: false });
+        assert_eq!(nl.depth_of(m2), 3);
+        assert_eq!(nl.lut_count(), 3);
+        assert_eq!(nl.free_mux_count(), 1);
+    }
+
+    #[test]
+    fn eval64_lut_and_mux() {
+        let mut nl = Netlist::new();
+        let a = nl.input(0);
+        let b = nl.input(1);
+        let xor = nl.add(Node::Lut { inputs: vec![a, b], mask: 0b0110 });
+        let mux = nl.add(Node::Mux { sel: a, lo: b, hi: xor, free: true });
+        // sample 0: a=0 b=0; 1: a=1 b=0; 2: a=0 b=1; 3: a=1 b=1
+        let wires = |w: u32| -> u64 {
+            match w {
+                0 => 0b1010,
+                1 => 0b1100,
+                _ => 0,
+            }
+        };
+        let vals = nl.eval64(&wires);
+        assert_eq!(vals[xor as usize] & 0xF, 0b0110);
+        // mux: a ? xor : b -> samples: a0->b=0, a1->xor=1, a0->b=1, a1->xor=0
+        assert_eq!(vals[mux as usize] & 0xF, 0b0110);
+    }
+}

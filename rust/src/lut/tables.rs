@@ -1,0 +1,311 @@
+//! Truth-table generation — freezing the trained network into lookup tables.
+//!
+//! This is the paper's "LUT generation" toolflow stage (Fig. 4): for every
+//! Poly-layer sub-neuron enumerate all `2^{βF}` input-code combinations
+//! through the bit-exact fixed-point transfer function; for every
+//! Adder-layer neuron (A > 1) enumerate all `2^{A(β+1)}` sub-neuron code
+//! combinations through sum → BN → activation → quant.  For A == 1 the whole
+//! neuron collapses into a single `2^{βF}` table (plain PolyLUT).
+//!
+//! Table words store the output code in raw two's complement (masked to the
+//! output width), which is exactly what the RTL ROMs hold.
+
+use crate::nn::network::Network;
+use crate::nn::quant::{from_twos_complement, to_twos_complement};
+use crate::util::pool::parallel_map;
+
+/// A single lookup table: `words[addr]` = raw output code (`out_bits` wide).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TruthTable {
+    pub n_inputs: u32,
+    pub out_bits: u32,
+    /// Whether the stored code is two's-complement signed.
+    pub signed_out: bool,
+    pub words: Vec<u32>,
+}
+
+impl TruthTable {
+    pub fn size(&self) -> usize {
+        1usize << self.n_inputs
+    }
+
+    /// Decode a word back to an integer code.
+    pub fn code_at(&self, addr: usize) -> i32 {
+        let raw = self.words[addr];
+        if self.signed_out {
+            from_twos_complement(raw, self.out_bits)
+        } else {
+            raw as i32
+        }
+    }
+
+    /// Extract single output bit `b` as a bitvector truth table
+    /// (one u64 per 64 addresses) — the mapper's input.
+    pub fn bit_plane(&self, b: u32) -> Vec<u64> {
+        let n = self.size();
+        let mut out = vec![0u64; n.div_ceil(64)];
+        for (addr, &w) in self.words.iter().enumerate() {
+            if (w >> b) & 1 == 1 {
+                out[addr / 64] |= 1u64 << (addr % 64);
+            }
+        }
+        out
+    }
+}
+
+/// Tables for one neuron.
+#[derive(Debug, Clone)]
+pub struct NeuronTables {
+    /// A tables of `2^{βF}` words each (for A == 1 this single table already
+    /// includes BN + activation and `adder` is None).
+    pub poly: Vec<TruthTable>,
+    /// The Adder-layer table (`2^{A(β+1)}` words), present iff A > 1.
+    pub adder: Option<TruthTable>,
+}
+
+impl NeuronTables {
+    pub fn words(&self) -> u128 {
+        self.poly.iter().map(|t| t.size() as u128).sum::<u128>()
+            + self.adder.as_ref().map(|t| t.size() as u128).unwrap_or(0)
+    }
+}
+
+/// Tables for one layer.
+#[derive(Debug, Clone)]
+pub struct LayerTables {
+    pub neurons: Vec<NeuronTables>,
+    /// Input code width (β of this layer).
+    pub in_bits: u32,
+    pub fan: usize,
+    /// Sub-neuron output width (β+1) — adder-table field width.
+    pub sub_bits: u32,
+    /// Layer output code width.
+    pub out_bits: u32,
+    pub signed_out: bool,
+}
+
+/// The full frozen network.
+#[derive(Debug, Clone)]
+pub struct NetworkTables {
+    pub layers: Vec<LayerTables>,
+    pub a_factor: usize,
+    /// Paper Table II "lookup table size" accounting.
+    pub total_words: u128,
+}
+
+impl NetworkTables {
+    pub fn n_tables(&self) -> usize {
+        self.layers
+            .iter()
+            .flat_map(|l| &l.neurons)
+            .map(|n| n.poly.len() + n.adder.is_some() as usize)
+            .sum()
+    }
+}
+
+/// Pack F input codes into a poly-table address (slot i at bits [i*β, (i+1)*β)).
+#[inline]
+pub fn pack_poly_addr(codes: &[i32], beta: u32) -> usize {
+    let mut addr = 0usize;
+    for (i, &c) in codes.iter().enumerate() {
+        addr |= (c as usize & ((1 << beta) - 1)) << (i as u32 * beta);
+    }
+    addr
+}
+
+/// Unpack a poly-table address into F unsigned codes.
+#[inline]
+pub fn unpack_poly_addr(addr: usize, fan: usize, beta: u32, out: &mut [i32]) {
+    let mask = (1usize << beta) - 1;
+    for (i, o) in out.iter_mut().enumerate().take(fan) {
+        *o = ((addr >> (i as u32 * beta)) & mask) as i32;
+    }
+}
+
+/// Pack A signed sub-neuron codes into an adder-table address.
+#[inline]
+pub fn pack_adder_addr(codes: &[i32], sub_bits: u32) -> usize {
+    let mut addr = 0usize;
+    for (i, &c) in codes.iter().enumerate() {
+        addr |= (to_twos_complement(c, sub_bits) as usize) << (i as u32 * sub_bits);
+    }
+    addr
+}
+
+/// Unpack an adder-table address into A signed codes.
+#[inline]
+pub fn unpack_adder_addr(addr: usize, a: usize, sub_bits: u32, out: &mut [i32]) {
+    let mask = (1usize << sub_bits) - 1;
+    for (i, o) in out.iter_mut().enumerate().take(a) {
+        *o = from_twos_complement(((addr >> (i as u32 * sub_bits)) & mask) as u32, sub_bits);
+    }
+}
+
+/// Generate all tables for one neuron of layer `l`.
+pub fn compile_neuron(net: &Network, l: usize, j: usize) -> NeuronTables {
+    let cfg = &net.cfg;
+    let (beta, fan, a) = (cfg.beta[l], cfg.fan[l], cfg.a_factor);
+    let sub_bits = cfg.sub_bits(l);
+    let out_bits = cfg.beta[l + 1];
+    let last = l == cfg.n_layers() - 1;
+    let poly_size = 1usize << (beta * fan as u32);
+    let mut in_codes = vec![0i32; fan];
+
+    if a == 1 {
+        // Plain PolyLUT: one fused table (poly → quant → BN → act → quant).
+        let mut words = vec![0u32; poly_size];
+        for (addr, w) in words.iter_mut().enumerate() {
+            unpack_poly_addr(addr, fan, beta, &mut in_codes);
+            let sub = net.sub_neuron_code(l, 0, j, &in_codes);
+            let out = net.adder_code(l, j, &[sub]);
+            *w = to_twos_complement(out, out_bits);
+        }
+        return NeuronTables {
+            poly: vec![TruthTable { n_inputs: beta * fan as u32, out_bits, signed_out: last, words }],
+            adder: None,
+        };
+    }
+
+    // Poly tables: sub-neuron transfer functions.
+    let poly = (0..a)
+        .map(|ai| {
+            let mut words = vec![0u32; poly_size];
+            for (addr, w) in words.iter_mut().enumerate() {
+                unpack_poly_addr(addr, fan, beta, &mut in_codes);
+                let sub = net.sub_neuron_code(l, ai, j, &in_codes);
+                *w = to_twos_complement(sub, sub_bits);
+            }
+            TruthTable { n_inputs: beta * fan as u32, out_bits: sub_bits, signed_out: true, words }
+        })
+        .collect();
+
+    // Adder table: A signed fields → output code.
+    let adder_size = 1usize << (a as u32 * sub_bits);
+    let mut sub_codes = vec![0i32; a];
+    let mut words = vec![0u32; adder_size];
+    for (addr, w) in words.iter_mut().enumerate() {
+        unpack_adder_addr(addr, a, sub_bits, &mut sub_codes);
+        let out = net.adder_code(l, j, &sub_codes);
+        *w = to_twos_complement(out, out_bits);
+    }
+    let adder = TruthTable {
+        n_inputs: a as u32 * sub_bits,
+        out_bits,
+        signed_out: last,
+        words,
+    };
+    NeuronTables { poly, adder: Some(adder) }
+}
+
+/// Generate all tables for a network (parallel over neurons).
+pub fn compile_network(net: &Network, workers: usize) -> NetworkTables {
+    let cfg = &net.cfg;
+    let mut layers = Vec::new();
+    for (l, (_, n_out)) in cfg.layer_dims().into_iter().enumerate() {
+        let jobs: Vec<usize> = (0..n_out).collect();
+        let neurons = parallel_map(&jobs, workers, |_, &j| compile_neuron(net, l, j));
+        layers.push(LayerTables {
+            neurons,
+            in_bits: cfg.beta[l],
+            fan: cfg.fan[l],
+            sub_bits: cfg.sub_bits(l),
+            out_bits: cfg.beta[l + 1],
+            signed_out: l == cfg.n_layers() - 1,
+        });
+    }
+    let total_words = layers.iter().flat_map(|l| &l.neurons).map(|n| n.words()).sum();
+    NetworkTables { layers, a_factor: cfg.a_factor, total_words }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::config;
+    use crate::util::rng::Rng;
+
+    fn tiny(a: usize) -> Network {
+        let cfg = config::uniform("t", &[8, 6, 3], 2, 2, 3, 3, 3, 2, a, 3);
+        Network::random(&cfg, &mut Rng::new(7))
+    }
+
+    #[test]
+    fn addr_packing_roundtrip() {
+        let mut out = [0i32; 4];
+        for addr in 0..(1usize << 8) {
+            unpack_poly_addr(addr, 4, 2, &mut out);
+            assert_eq!(pack_poly_addr(&out, 2), addr);
+        }
+        let mut s = [0i32; 2];
+        for addr in 0..(1usize << 6) {
+            unpack_adder_addr(addr, 2, 3, &mut s);
+            assert_eq!(pack_adder_addr(&s, 3), addr);
+        }
+    }
+
+    #[test]
+    fn table_matches_neuron_function() {
+        let net = tiny(2);
+        let nt = compile_neuron(&net, 0, 0);
+        assert_eq!(nt.poly.len(), 2);
+        let adder = nt.adder.as_ref().unwrap();
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let codes: Vec<i32> = (0..3).map(|_| rng.below(4) as i32).collect();
+            let addr = pack_poly_addr(&codes, 2);
+            for a in 0..2 {
+                assert_eq!(nt.poly[a].code_at(addr), net.sub_neuron_code(0, a, 0, &codes));
+            }
+            let subs = [nt.poly[0].code_at(addr), nt.poly[1].code_at(addr)];
+            let aaddr = pack_adder_addr(&subs, net.cfg.sub_bits(0));
+            assert_eq!(adder.code_at(aaddr), net.adder_code(0, 0, &subs));
+        }
+    }
+
+    #[test]
+    fn a1_is_single_fused_table() {
+        let net = tiny(1);
+        let nt = compile_neuron(&net, 0, 0);
+        assert_eq!(nt.poly.len(), 1);
+        assert!(nt.adder.is_none());
+        let t = &nt.poly[0];
+        let mut codes = [0i32; 3];
+        for addr in 0..t.size() {
+            unpack_poly_addr(addr, 3, 2, &mut codes);
+            let sub = net.sub_neuron_code(0, 0, 0, &codes);
+            assert_eq!(t.code_at(addr), net.adder_code(0, 0, &[sub]));
+        }
+    }
+
+    #[test]
+    fn paper_table_accounting() {
+        // HDR-style neuron: beta=2 F=6 A=2 -> 2 * 2^12 + 2^6 words.
+        let cfg = config::hdr(1, 2);
+        let net = Network::random(&cfg, &mut Rng::new(1));
+        let nt = compile_neuron(&net, 1, 0);
+        assert_eq!(nt.words(), 2 * (1 << 12) + (1 << 6));
+    }
+
+    #[test]
+    fn bit_plane_roundtrip() {
+        let net = tiny(2);
+        let t = &compile_neuron(&net, 0, 0).poly[0];
+        let planes: Vec<Vec<u64>> = (0..t.out_bits).map(|b| t.bit_plane(b)).collect();
+        for addr in 0..t.size() {
+            let mut raw = 0u32;
+            for (b, p) in planes.iter().enumerate() {
+                raw |= (((p[addr / 64] >> (addr % 64)) & 1) as u32) << b;
+            }
+            assert_eq!(raw, t.words[addr]);
+        }
+    }
+
+    #[test]
+    fn network_tables_totals() {
+        let net = tiny(2);
+        let all = compile_network(&net, 2);
+        assert_eq!(all.layers.len(), 2);
+        let manual: u128 = all.layers.iter().flat_map(|l| &l.neurons).map(|n| n.words()).sum();
+        assert_eq!(all.total_words, manual);
+        assert_eq!(all.total_words, net.cfg.table_words_total());
+    }
+}

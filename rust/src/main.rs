@@ -1,0 +1,6 @@
+//! `polylut` CLI — the L3 leader entrypoint.
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    polylut_add::cli_main()
+}

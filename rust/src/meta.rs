@@ -1,0 +1,257 @@
+//! Artifact manifest loading — the contract with `python/compile/aot.py`.
+//!
+//! A manifest (`artifacts/<id>.meta.json`) carries the model config, the
+//! frozen sparse connectivity, the canonical monomial order, the training
+//! state layout (name/shape/role per tensor) with initial values, optimizer
+//! hyperparameters, and the file names of the lowered HLO graphs.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::nn::network::{LayerParams, Network};
+use crate::nn::poly::monomial_count;
+use crate::nn::ModelConfig;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct StateSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub role: Role,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Train,
+    Stat,
+    OptM,
+    OptV,
+    Step,
+}
+
+impl Role {
+    fn parse(s: &str) -> Result<Role> {
+        Ok(match s {
+            "train" => Role::Train,
+            "stat" => Role::Stat,
+            "opt_m" => Role::OptM,
+            "opt_v" => Role::OptV,
+            "step" => Role::Step,
+            other => bail!("unknown state role {other:?}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub id: String,
+    pub dataset: String,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub config: ModelConfig,
+    /// indices[l][a][j] = fan-in positions.
+    pub indices: Vec<Vec<Vec<Vec<usize>>>>,
+    /// monomials[l][m] = index multiset.
+    pub monomials: Vec<Vec<Vec<usize>>>,
+    pub state: Vec<StateSpec>,
+    /// Initial state tensors (flattened), in `state` order.
+    pub init: Vec<Vec<f32>>,
+    pub train_hlo: PathBuf,
+    pub eval_hlo: PathBuf,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(path)?;
+        let dir = path.parent().unwrap_or(Path::new(".")).to_path_buf();
+        let cfg_j = j.field("config")?;
+        let config = ModelConfig {
+            name: cfg_j.field("name")?.as_str()?.to_string(),
+            widths: cfg_j.field("widths")?.usize_vec()?,
+            beta: cfg_j
+                .field("beta")?
+                .usize_vec()?
+                .into_iter()
+                .map(|b| b as u32)
+                .collect(),
+            fan: cfg_j.field("fan")?.usize_vec()?,
+            degree: cfg_j.field("degree")?.as_usize()? as u32,
+            a_factor: cfg_j.field("a_factor")?.as_usize()?,
+            n_classes: cfg_j.field("n_classes")?.as_usize()?,
+            seed: cfg_j.field("seed")?.as_i64()? as u64,
+        };
+        config.validate().context("manifest config invalid")?;
+
+        let indices = j
+            .field("indices")?
+            .as_arr()?
+            .iter()
+            .map(|layer| {
+                layer
+                    .as_arr()?
+                    .iter()
+                    .map(|sub| sub.as_arr()?.iter().map(|n| n.usize_vec()).collect())
+                    .collect()
+            })
+            .collect::<Result<Vec<Vec<Vec<Vec<usize>>>>>>()?;
+
+        let monomials = j
+            .field("monomials")?
+            .as_arr()?
+            .iter()
+            .map(|layer| layer.as_arr()?.iter().map(|m| m.usize_vec()).collect())
+            .collect::<Result<Vec<Vec<Vec<usize>>>>>()?;
+
+        let state = j
+            .field("state")?
+            .as_arr()?
+            .iter()
+            .map(|s| {
+                Ok(StateSpec {
+                    name: s.field("name")?.as_str()?.to_string(),
+                    shape: s.field("shape")?.usize_vec()?,
+                    role: Role::parse(s.field("role")?.as_str()?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let init = j
+            .field("init")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.f32_vec())
+            .collect::<Result<Vec<_>>>()?;
+        if init.len() != state.len() {
+            bail!("init count {} != state count {}", init.len(), state.len());
+        }
+        for (spec, vals) in state.iter().zip(&init) {
+            let want: usize = spec.shape.iter().product();
+            if want != vals.len() {
+                bail!("{}: init length {} != shape product {want}", spec.name, vals.len());
+            }
+        }
+
+        let arts = j.field("artifacts")?;
+        Ok(Manifest {
+            id: j.field("id")?.as_str()?.to_string(),
+            dataset: j.field("dataset")?.as_str()?.to_string(),
+            batch: j.field("batch")?.as_usize()?,
+            eval_batch: j.field("eval_batch")?.as_usize()?,
+            config,
+            indices,
+            monomials,
+            state,
+            init,
+            train_hlo: dir.join(arts.field("train")?.as_str()?),
+            eval_hlo: dir.join(arts.field("eval")?.as_str()?),
+            dir,
+        })
+    }
+
+    /// Look up a state tensor index by name.
+    pub fn state_index(&self, name: &str) -> Result<usize> {
+        self.state
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("state tensor {name:?} not in manifest"))
+    }
+
+    /// Assemble the hardware-functional `Network` from a flat state vector
+    /// (either `self.init` or trained values pulled back from PJRT buffers).
+    pub fn network_from_state(&self, state: &[Vec<f32>]) -> Result<Network> {
+        if state.len() != self.state.len() {
+            bail!("state length {} != manifest {}", state.len(), self.state.len());
+        }
+        let cfg = &self.config;
+        let mut layers = Vec::new();
+        for (l, (_, n_out)) in cfg.layer_dims().into_iter().enumerate() {
+            let m = monomial_count(cfg.fan[l], cfg.degree);
+            let a = cfg.a_factor;
+            let wflat = &state[self.state_index(&format!("l{l}.w"))?];
+            if wflat.len() != a * n_out * m {
+                bail!("l{l}.w: {} != {}", wflat.len(), a * n_out * m);
+            }
+            let w: Vec<Vec<Vec<f32>>> = (0..a)
+                .map(|ai| {
+                    (0..n_out)
+                        .map(|j| {
+                            let base = (ai * n_out + j) * m;
+                            wflat[base..base + m].to_vec()
+                        })
+                        .collect()
+                })
+                .collect();
+            let scalar = |name: &str| -> Result<f32> {
+                let v = &state[self.state_index(name)?];
+                Ok(v[0])
+            };
+            let vector = |name: &str| -> Result<Vec<f32>> {
+                Ok(state[self.state_index(name)?].clone())
+            };
+            layers.push(LayerParams {
+                indices: self.indices[l].clone(),
+                w,
+                s_pre: scalar(&format!("l{l}.s_pre"))?,
+                s_act: scalar(&format!("l{l}.s_act"))?,
+                bn_g: vector(&format!("l{l}.bn_g"))?,
+                bn_b: vector(&format!("l{l}.bn_b"))?,
+                bn_m: vector(&format!("l{l}.bn_m"))?,
+                bn_v: vector(&format!("l{l}.bn_v"))?,
+            });
+        }
+        let net = Network { cfg: cfg.clone(), layers, monomials: self.monomials.clone() };
+        net.validate()?;
+        Ok(net)
+    }
+}
+
+/// Find every manifest under a directory (sorted by id).
+pub fn discover(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let p = entry?.path();
+        if p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.ends_with(".meta.json")) {
+            out.push(p);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Load the manifest for an artifact id, e.g. "jsc-m-lite-d1-a2".
+pub fn load_id(dir: &Path, id: &str) -> Result<Manifest> {
+    Manifest::load(&dir.join(format!("{id}.meta.json")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The quickstart artifacts are produced by `make artifacts`; skip when
+    /// absent so `cargo test` works on a fresh checkout.
+    fn quickstart() -> Option<Manifest> {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/jsc-m-lite-d1-a2.meta.json");
+        p.exists().then(|| Manifest::load(&p).unwrap())
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let Some(m) = quickstart() else { return };
+        assert_eq!(m.config.widths, vec![16, 64, 32, 5]);
+        assert_eq!(m.config.a_factor, 2);
+        let net = m.network_from_state(&m.init).unwrap();
+        let x: Vec<f32> = (0..16).map(|i| i as f32 / 16.0).collect();
+        assert_eq!(net.forward(&x).len(), 5);
+    }
+
+    #[test]
+    fn monomials_match_rust_enumeration() {
+        let Some(m) = quickstart() else { return };
+        for l in 0..m.config.n_layers() {
+            let ours = crate::nn::poly::monomial_index_lists(m.config.fan[l], m.config.degree);
+            assert_eq!(ours, m.monomials[l], "layer {l}: python/rust monomial order differs");
+        }
+    }
+}

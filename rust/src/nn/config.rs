@@ -1,0 +1,290 @@
+//! Model configuration — mirrors `python/compile/configs.py` (paper Table I
+//! and Table IV presets).  The Python side is authoritative for trained
+//! artifacts (configs arrive through `meta.json`); the presets here let
+//! Rust-only paths (area/timing experiments, tests, benches) build the same
+//! geometries without Python.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    /// widths[0] = input features; widths[last] = output neurons.
+    pub widths: Vec<usize>,
+    /// beta[l] = bit width of layer l's *input* codes; beta[n_layers] = output width.
+    pub beta: Vec<u32>,
+    /// fan[l] = fan-in F of layer l's sub-neurons.
+    pub fan: Vec<usize>,
+    pub degree: u32,
+    /// A — PolyLUT sub-neurons per neuron (A=1 is plain PolyLUT).
+    pub a_factor: usize,
+    /// 1 => binary task (single output neuron, threshold at 0).
+    pub n_classes: usize,
+    pub seed: u64,
+}
+
+impl ModelConfig {
+    pub fn n_layers(&self) -> usize {
+        self.widths.len() - 1
+    }
+
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        (0..self.n_layers()).map(|i| (self.widths[i], self.widths[i + 1])).collect()
+    }
+
+    /// Signed word width of a sub-neuron output feeding the Adder-layer
+    /// (paper Sec. III-A: one bit wider than the activation to avoid
+    /// adder overflow).
+    pub fn sub_bits(&self, layer: usize) -> u32 {
+        self.beta[layer + 1] + 1
+    }
+
+    /// Address bits of one Poly-layer sub-neuron lookup table: beta * F.
+    pub fn table_bits_poly(&self, layer: usize) -> u32 {
+        self.beta[layer] * self.fan[layer] as u32
+    }
+
+    /// Address bits of the Adder-layer lookup table: A * (beta + 1).
+    /// Zero when A == 1 (no adder stage — plain PolyLUT).
+    pub fn table_bits_adder(&self, layer: usize) -> u32 {
+        if self.a_factor == 1 {
+            0
+        } else {
+            self.a_factor as u32 * self.sub_bits(layer)
+        }
+    }
+
+    /// Output code width of layer `layer` (input width of the next).
+    pub fn out_bits(&self, layer: usize) -> u32 {
+        let last = layer == self.n_layers() - 1;
+        if last {
+            self.beta[layer + 1] // signed output codes
+        } else {
+            self.beta[layer + 1] // unsigned activation codes
+        }
+    }
+
+    /// Total "lookup table size" in the paper's Table II accounting:
+    /// per neuron, A * 2^{beta*F} + (A>1 ? 2^{A*(beta+1)} : 0) table words —
+    /// summed over a single *representative* neuron (the paper reports the
+    /// per-neuron table size) or over the network via [`Self::table_words_total`].
+    pub fn table_words_neuron(&self, layer: usize) -> u128 {
+        let poly = (self.a_factor as u128) << self.table_bits_poly(layer);
+        let adder = if self.a_factor > 1 { 1u128 << self.table_bits_adder(layer) } else { 0 };
+        poly + adder
+    }
+
+    pub fn table_words_total(&self) -> u128 {
+        self.layer_dims()
+            .iter()
+            .enumerate()
+            .map(|(l, &(_, n_out))| n_out as u128 * self.table_words_neuron(l))
+            .sum()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.widths.len() < 2 {
+            bail!("need at least one layer");
+        }
+        if self.beta.len() != self.widths.len() {
+            bail!("beta length {} != widths length {}", self.beta.len(), self.widths.len());
+        }
+        if self.fan.len() != self.n_layers() {
+            bail!("fan length {} != n_layers {}", self.fan.len(), self.n_layers());
+        }
+        for (l, &(n_in, _)) in self.layer_dims().iter().enumerate() {
+            if self.fan[l] > n_in {
+                bail!("layer {l}: fan-in {} exceeds input width {n_in}", self.fan[l]);
+            }
+            if self.table_bits_poly(l) > 26 {
+                bail!(
+                    "layer {l}: poly table of 2^{} words is not practical",
+                    self.table_bits_poly(l)
+                );
+            }
+        }
+        if self.a_factor == 0 || self.degree == 0 {
+            bail!("a_factor and degree must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Builder for the uniform-geometry presets.
+#[allow(clippy::too_many_arguments)]
+pub fn uniform(
+    name: &str,
+    widths: &[usize],
+    beta_in: u32,
+    beta: u32,
+    beta_out: u32,
+    fan_in: usize,
+    fan: usize,
+    degree: u32,
+    a: usize,
+    n_classes: usize,
+) -> ModelConfig {
+    let n_layers = widths.len() - 1;
+    let mut betas = vec![beta_in];
+    betas.extend(std::iter::repeat(beta).take(n_layers - 1));
+    betas.push(beta_out);
+    let mut fans = vec![fan_in];
+    fans.extend(std::iter::repeat(fan).take(n_layers - 1));
+    ModelConfig {
+        name: name.to_string(),
+        widths: widths.to_vec(),
+        beta: betas,
+        fan: fans,
+        degree,
+        a_factor: a,
+        n_classes,
+        seed: 0,
+    }
+}
+
+// ---- paper Table I presets -------------------------------------------------
+
+pub fn hdr(degree: u32, a: usize) -> ModelConfig {
+    uniform("hdr", &[784, 256, 100, 100, 100, 100, 10], 2, 2, 4, 6, 6, degree, a, 10)
+}
+
+pub fn jsc_xl(degree: u32, a: usize) -> ModelConfig {
+    uniform("jsc-xl", &[16, 128, 64, 64, 64, 5], 7, 5, 5, 2, 3, degree, a, 5)
+}
+
+pub fn jsc_m_lite(degree: u32, a: usize) -> ModelConfig {
+    uniform("jsc-m-lite", &[16, 64, 32, 5], 3, 3, 4, 4, 4, degree, a, 5)
+}
+
+pub fn nid_lite(degree: u32, a: usize) -> ModelConfig {
+    uniform("nid-lite", &[49, 686, 147, 98, 49, 1], 1, 3, 2, 7, 5, degree, a, 1)
+}
+
+// ---- paper Table IV presets (smaller F; A=2) --------------------------------
+
+pub fn hdr_add2() -> ModelConfig {
+    uniform("hdr-t4", &[784, 256, 100, 100, 100, 100, 10], 2, 2, 4, 4, 4, 3, 2, 10)
+}
+
+pub fn jsc_xl_add2() -> ModelConfig {
+    uniform("jsc-xl-t4", &[16, 128, 64, 64, 64, 5], 7, 5, 5, 1, 2, 3, 2, 5)
+}
+
+pub fn jsc_m_lite_add2() -> ModelConfig {
+    uniform("jsc-m-lite-t4", &[16, 64, 32, 5], 3, 3, 4, 2, 2, 3, 2, 5)
+}
+
+pub fn nid_add2() -> ModelConfig {
+    uniform("nid-t4", &[49, 100, 100, 50, 50, 1], 1, 2, 2, 6, 3, 1, 2, 1)
+}
+
+/// PolyLUT-Deeper: replicate hidden layers (paper Sec. IV-C).
+pub fn deeper(cfg: &ModelConfig, factor: usize) -> ModelConfig {
+    let hidden: Vec<usize> =
+        cfg.widths[1..cfg.widths.len() - 1].iter().flat_map(|&w| vec![w; factor]).collect();
+    let mut widths = vec![cfg.widths[0]];
+    widths.extend(hidden);
+    widths.push(*cfg.widths.last().unwrap());
+    let n_layers = widths.len() - 1;
+    let mut beta = vec![cfg.beta[0]];
+    beta.extend(std::iter::repeat(cfg.beta[1]).take(n_layers - 1));
+    beta.push(*cfg.beta.last().unwrap());
+    let mut fan = vec![cfg.fan[0]];
+    let hidden_fan = if cfg.n_layers() > 1 { cfg.fan[1] } else { cfg.fan[0] };
+    fan.extend(std::iter::repeat(hidden_fan).take(n_layers - 1));
+    ModelConfig {
+        name: format!("{}-deep{factor}", cfg.name),
+        widths,
+        beta,
+        fan,
+        ..cfg.clone()
+    }
+}
+
+/// PolyLUT-Wider: multiply hidden widths (paper Sec. IV-C).
+pub fn wider(cfg: &ModelConfig, factor: usize) -> ModelConfig {
+    let mut widths = cfg.widths.clone();
+    for w in widths.iter_mut().skip(1).take(cfg.n_layers() - 1) {
+        *w *= factor;
+    }
+    ModelConfig { name: format!("{}-wide{factor}", cfg.name), widths, ..cfg.clone() }
+}
+
+pub fn preset(name: &str, degree: u32, a: usize) -> Result<ModelConfig> {
+    Ok(match name {
+        "hdr" => hdr(degree, a),
+        "jsc-xl" => jsc_xl(degree, a),
+        "jsc-m-lite" => jsc_m_lite(degree, a),
+        "nid-lite" => nid_lite(degree, a),
+        "hdr-t4" => hdr_add2(),
+        "jsc-xl-t4" => jsc_xl_add2(),
+        "jsc-m-lite-t4" => jsc_m_lite_add2(),
+        "nid-t4" => nid_add2(),
+        other => bail!("unknown preset {other:?}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for cfg in [
+            hdr(1, 1),
+            hdr(2, 3),
+            jsc_xl(2, 2),
+            jsc_m_lite(1, 2),
+            nid_lite(1, 2),
+            hdr_add2(),
+            jsc_xl_add2(),
+            jsc_m_lite_add2(),
+            nid_add2(),
+        ] {
+            cfg.validate().unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+        }
+    }
+
+    #[test]
+    fn table_accounting_matches_paper() {
+        // HDR beta=2, F=6: PolyLUT table 2^12; Add2: 2^12*2 + 2^6.
+        let p = hdr(1, 1);
+        assert_eq!(p.table_words_neuron(0), 1 << 12);
+        let a2 = hdr(1, 2);
+        assert_eq!(a2.table_words_neuron(0), (1 << 12) * 2 + (1 << 6));
+        let a3 = hdr(1, 3);
+        assert_eq!(a3.table_words_neuron(0), (1 << 12) * 3 + (1 << 9));
+        // JSC-XL beta=5, F=3: 2^15; Add2 hidden: 2^15*2 + 2^12.
+        let x = jsc_xl(1, 2);
+        assert_eq!(x.table_words_neuron(1), (1 << 15) * 2 + (1 << 12));
+        // JSC-M Lite beta=3 F=4: Add2 2^12*2+2^8, Add3 2^12*3+2^12.
+        let m2 = jsc_m_lite(1, 2);
+        assert_eq!(m2.table_words_neuron(1), (1 << 12) * 2 + (1 << 8));
+        let m3 = jsc_m_lite(1, 3);
+        assert_eq!(m3.table_words_neuron(1), (1 << 12) * 3 + (1 << 12));
+        // NID Lite beta=3 F=5: Add2 2^15*2 + 2^8.
+        let n2 = nid_lite(1, 2);
+        assert_eq!(n2.table_words_neuron(1), (1 << 15) * 2 + (1 << 8));
+    }
+
+    #[test]
+    fn deeper_wider_shapes() {
+        let base = jsc_m_lite(1, 1);
+        let d2 = deeper(&base, 2);
+        assert_eq!(d2.widths, vec![16, 64, 64, 32, 32, 5]);
+        let w2 = wider(&base, 2);
+        assert_eq!(w2.widths, vec![16, 128, 64, 5]);
+        d2.validate().unwrap();
+        w2.validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut cfg = jsc_m_lite(1, 1);
+        cfg.fan[0] = 100; // > 16 inputs
+        assert!(cfg.validate().is_err());
+        let mut cfg = jsc_m_lite(1, 1);
+        cfg.beta[0] = 9; // 9*4 = 36 address bits
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! The hardware-functional network model: configs (paper Table I/IV),
+//! bit-exact quantizers, monomial algebra, and the fixed-point forward pass
+//! that the LUT compiler enumerates and the netlist simulator must match.
+
+pub mod config;
+pub mod network;
+pub mod poly;
+pub mod quant;
+
+pub use config::ModelConfig;
+pub use network::{LayerParams, Network};

@@ -1,0 +1,310 @@
+//! The hardware-functional model: a trained PolyLUT-Add network evaluated in
+//! the exact fixed-point semantics the generated hardware implements.
+//!
+//! This is the single source of truth the LUT compiler enumerates
+//! (`lut::tables`), the netlist simulator must match bit-for-bit
+//! (`sim::lutsim`), and the Verilog testbench checks against.  The float
+//! arithmetic mirrors the JAX graph op-for-op in f32 (see quant.rs for the
+//! rounding contract).
+
+use anyhow::{bail, Result};
+
+use super::config::ModelConfig;
+use super::poly::{monomial_count, monomial_index_lists, poly_eval};
+use super::quant::{
+    scale_of, signed_code, signed_step, unsigned_code, unsigned_step, BN_EPS,
+};
+use crate::util::rng::Rng;
+
+/// Per-layer trained parameters (layout mirrors python/compile/model.py).
+#[derive(Debug, Clone)]
+pub struct LayerParams {
+    /// Sparse connectivity: indices[a][j] = the F input positions feeding
+    /// sub-neuron a of neuron j.
+    pub indices: Vec<Vec<Vec<usize>>>,
+    /// Weights, [A][n_out][M] (canonical monomial order).
+    pub w: Vec<Vec<Vec<f32>>>,
+    /// Raw scale params (pass through `scale_of`).
+    pub s_pre: f32,
+    pub s_act: f32,
+    /// Batch-norm affine + running stats, per output neuron.
+    pub bn_g: Vec<f32>,
+    pub bn_b: Vec<f32>,
+    pub bn_m: Vec<f32>,
+    pub bn_v: Vec<f32>,
+}
+
+/// A complete network: config + parameters, ready for evaluation, table
+/// generation, or RTL emission.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub cfg: ModelConfig,
+    pub layers: Vec<LayerParams>,
+    /// monomials[l] — the index multisets for layer l's (F, D).
+    pub monomials: Vec<Vec<Vec<usize>>>,
+}
+
+impl Network {
+    /// Validate structural consistency (shapes, index bounds).
+    pub fn validate(&self) -> Result<()> {
+        self.cfg.validate()?;
+        if self.layers.len() != self.cfg.n_layers() {
+            bail!("{} layers vs {} in config", self.layers.len(), self.cfg.n_layers());
+        }
+        for (l, (p, &(n_in, n_out))) in
+            self.layers.iter().zip(self.cfg.layer_dims().iter()).enumerate()
+        {
+            let (a, f) = (self.cfg.a_factor, self.cfg.fan[l]);
+            let m = monomial_count(f, self.cfg.degree);
+            if p.indices.len() != a || p.w.len() != a {
+                bail!("layer {l}: A mismatch");
+            }
+            for sub in 0..a {
+                if p.indices[sub].len() != n_out || p.w[sub].len() != n_out {
+                    bail!("layer {l} sub {sub}: n_out mismatch");
+                }
+                for j in 0..n_out {
+                    if p.indices[sub][j].len() != f {
+                        bail!("layer {l} sub {sub} neuron {j}: fan-in mismatch");
+                    }
+                    if p.w[sub][j].len() != m {
+                        bail!("layer {l} sub {sub} neuron {j}: weight count != {m}");
+                    }
+                    if let Some(&bad) = p.indices[sub][j].iter().find(|&&i| i >= n_in) {
+                        bail!("layer {l}: index {bad} out of range {n_in}");
+                    }
+                }
+            }
+            for v in [&p.bn_g, &p.bn_b, &p.bn_m, &p.bn_v] {
+                if v.len() != n_out {
+                    bail!("layer {l}: BN length mismatch");
+                }
+            }
+            if self.monomials[l].len() != m {
+                bail!("layer {l}: monomial list mismatch");
+            }
+        }
+        Ok(())
+    }
+
+    /// Random-weight network for a config (area/timing experiments and tests
+    /// that don't need trained accuracy; weight realism documented in
+    /// DESIGN.md §6).
+    pub fn random(cfg: &ModelConfig, rng: &mut Rng) -> Network {
+        let mut layers = Vec::new();
+        let mut monomials = Vec::new();
+        for (l, (n_in, n_out)) in cfg.layer_dims().into_iter().enumerate() {
+            let f = cfg.fan[l];
+            let m = monomial_count(f, cfg.degree);
+            let std = 1.0 / (m as f32).sqrt();
+            let indices = (0..cfg.a_factor)
+                .map(|_| (0..n_out).map(|_| rng.choose_distinct(n_in, f)).collect())
+                .collect();
+            let w = (0..cfg.a_factor)
+                .map(|_| {
+                    (0..n_out)
+                        .map(|_| (0..m).map(|_| rng.normal_ms(0.0, std as f64) as f32).collect())
+                        .collect()
+                })
+                .collect();
+            layers.push(LayerParams {
+                indices,
+                w,
+                s_pre: 2.0,
+                s_act: 2.0,
+                bn_g: vec![1.0; n_out],
+                bn_b: vec![0.0; n_out],
+                bn_m: (0..n_out).map(|_| rng.normal_ms(0.0, 0.3) as f32).collect(),
+                bn_v: (0..n_out).map(|_| (0.5 + rng.f64()) as f32).collect(),
+            });
+            monomials.push(monomial_index_lists(f, cfg.degree));
+        }
+        Network { cfg: cfg.clone(), layers, monomials }
+    }
+
+    /// Step (value per code unit) of layer `l`'s *input* codes.
+    pub fn in_step(&self, l: usize) -> f32 {
+        if l == 0 {
+            unsigned_step(self.cfg.beta[0], 1.0)
+        } else {
+            unsigned_step(self.cfg.beta[l], scale_of(self.layers[l - 1].s_act))
+        }
+    }
+
+    /// Step of layer `l`'s sub-neuron (Poly-layer) output codes.
+    pub fn pre_step(&self, l: usize) -> f32 {
+        signed_step(self.cfg.sub_bits(l), scale_of(self.layers[l].s_pre))
+    }
+
+    /// Step of layer `l`'s output codes.
+    pub fn out_step(&self, l: usize) -> f32 {
+        let last = l == self.cfg.n_layers() - 1;
+        let bits = self.cfg.beta[l + 1];
+        let scale = scale_of(self.layers[l].s_act);
+        if last {
+            signed_step(bits, scale)
+        } else {
+            unsigned_step(bits, scale)
+        }
+    }
+
+    /// Poly-layer sub-neuron: input codes -> signed (beta+1)-bit output code.
+    /// This is the exact function each Poly lookup table stores.
+    pub fn sub_neuron_code(&self, l: usize, a: usize, j: usize, in_codes: &[i32]) -> i32 {
+        let step_in = self.in_step(l);
+        let p = &self.layers[l];
+        let f = self.cfg.fan[l];
+        debug_assert_eq!(in_codes.len(), f);
+        debug_assert!(f <= 32, "fan-in beyond table practicality cap");
+        let mut x = [0f32; 32];
+        for i in 0..f {
+            x[i] = in_codes[i] as f32 * step_in;
+        }
+        let pre = poly_eval(&x[..f], &p.w[a][j], &self.monomials[l]);
+        signed_code(pre, self.cfg.sub_bits(l), scale_of(p.s_pre))
+    }
+
+    /// Adder-layer: A signed sub-neuron codes -> layer output code
+    /// (sum -> BN -> activation -> quant).  The exact Adder table function.
+    pub fn adder_code(&self, l: usize, j: usize, sub_codes: &[i32]) -> i32 {
+        let p = &self.layers[l];
+        let step_pre = self.pre_step(l);
+        let sum: i32 = sub_codes.iter().sum();
+        let z = sum as f32 * step_pre;
+        let zn = (z - p.bn_m[j]) / (p.bn_v[j] + BN_EPS).sqrt() * p.bn_g[j] + p.bn_b[j];
+        let last = l == self.cfg.n_layers() - 1;
+        let bits = self.cfg.beta[l + 1];
+        if last {
+            signed_code(zn, bits, scale_of(p.s_act))
+        } else {
+            unsigned_code(zn.max(0.0), bits, scale_of(p.s_act))
+        }
+    }
+
+    /// Full fixed-point forward pass over input *codes* (beta[0]-bit).
+    /// Returns the output codes (signed beta_out-bit).
+    pub fn forward_codes(&self, in_codes: &[i32]) -> Vec<i32> {
+        assert_eq!(in_codes.len(), self.cfg.widths[0]);
+        let mut codes = in_codes.to_vec();
+        for l in 0..self.cfg.n_layers() {
+            let n_out = self.cfg.widths[l + 1];
+            let mut next = vec![0i32; n_out];
+            let mut gathered = vec![0i32; self.cfg.fan[l]];
+            let mut subs = vec![0i32; self.cfg.a_factor];
+            for j in 0..n_out {
+                for a in 0..self.cfg.a_factor {
+                    for (slot, &src) in self.layers[l].indices[a][j].iter().enumerate() {
+                        gathered[slot] = codes[src];
+                    }
+                    subs[a] = self.sub_neuron_code(l, a, j, &gathered);
+                }
+                next[j] = self.adder_code(l, j, &subs);
+            }
+            codes = next;
+        }
+        codes
+    }
+
+    /// Quantize raw [0,1] features to input codes.
+    pub fn quantize_input(&self, x: &[f32]) -> Vec<i32> {
+        x.iter().map(|&v| unsigned_code(v, self.cfg.beta[0], 1.0)).collect()
+    }
+
+    /// Forward from raw features; returns dequantized logits.
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let codes = self.forward_codes(&self.quantize_input(x));
+        let l = self.cfg.n_layers() - 1;
+        let step = self.out_step(l);
+        codes.iter().map(|&c| c as f32 * step).collect()
+    }
+
+    /// Predicted class (argmax; for binary: logit > 0).
+    pub fn predict(&self, x: &[f32]) -> usize {
+        let logits = self.forward(x);
+        if self.cfg.n_classes == 1 {
+            (logits[0] > 0.0) as usize
+        } else {
+            logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        }
+    }
+
+    /// Classification accuracy over a dataset.
+    pub fn accuracy(&self, xs: &[Vec<f32>], ys: &[usize]) -> f64 {
+        let correct: usize =
+            xs.iter().zip(ys).filter(|(x, &y)| self.predict(x) == y).count();
+        correct as f64 / xs.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::config;
+
+    fn tiny() -> Network {
+        let cfg = config::uniform("tiny", &[8, 6, 3], 2, 2, 3, 3, 3, 2, 2, 3);
+        let mut rng = Rng::new(11);
+        Network::random(&cfg, &mut rng)
+    }
+
+    #[test]
+    fn random_network_validates() {
+        tiny().validate().unwrap();
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let net = tiny();
+        let x: Vec<f32> = (0..8).map(|i| i as f32 / 8.0).collect();
+        let a = net.forward(&x);
+        let b = net.forward(&x);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn output_codes_within_width() {
+        let net = tiny();
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+            let codes = net.forward_codes(&net.quantize_input(&x));
+            let bits = net.cfg.beta[net.cfg.n_layers()];
+            let lo = -(1i32 << (bits - 1));
+            let hi = (1i32 << (bits - 1)) - 1;
+            assert!(codes.iter().all(|&c| (lo..=hi).contains(&c)), "{codes:?}");
+        }
+    }
+
+    #[test]
+    fn sub_neuron_codes_within_width() {
+        let net = tiny();
+        let bits = net.cfg.sub_bits(0);
+        let lo = -(1i32 << (bits - 1));
+        let hi = (1i32 << (bits - 1)) - 1;
+        let levels = (1i32 << net.cfg.beta[0]) - 1;
+        let mut rng = Rng::new(17);
+        for _ in 0..200 {
+            let codes: Vec<i32> =
+                (0..net.cfg.fan[0]).map(|_| rng.below(levels as usize + 1) as i32).collect();
+            let c = net.sub_neuron_code(0, 0, 0, &codes);
+            assert!((lo..=hi).contains(&c));
+        }
+    }
+
+    #[test]
+    fn a1_has_no_adder_table_but_still_evaluates() {
+        let cfg = config::uniform("a1", &[8, 6, 3], 2, 2, 3, 3, 3, 1, 1, 3);
+        let mut rng = Rng::new(3);
+        let net = Network::random(&cfg, &mut rng);
+        net.validate().unwrap();
+        let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+        assert_eq!(net.forward(&x).len(), 3);
+        assert_eq!(cfg.table_bits_adder(0), 0);
+    }
+}

@@ -1,0 +1,124 @@
+//! Monomial enumeration and polynomial evaluation — the Rust mirror of
+//! `python/compile/monomials.py`.  The canonical order (degree-major,
+//! lexicographic combinations-with-replacement within a degree) defines the
+//! weight-tensor layout; a cross-language test checks it against the
+//! `monomials` section of every artifact manifest.
+
+/// Number of monomials of degree <= `degree` in `fan_in` variables:
+/// C(fan_in + degree, degree).
+pub fn monomial_count(fan_in: usize, degree: u32) -> usize {
+    let (n, k) = (fan_in + degree as usize, degree as usize);
+    // C(n, k) with small arguments; compute in u128 to stay exact.
+    let mut num: u128 = 1;
+    let mut den: u128 = 1;
+    for i in 0..k {
+        num *= (n - i) as u128;
+        den *= (i + 1) as u128;
+    }
+    (num / den) as usize
+}
+
+/// All monomials in canonical order, each as the multiset of input indices
+/// it multiplies (empty list = the constant 1).
+pub fn monomial_index_lists(fan_in: usize, degree: u32) -> Vec<Vec<usize>> {
+    fn rec(fan_in: usize, d: usize, start: usize, cur: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if cur.len() == d {
+            out.push(cur.clone());
+            return;
+        }
+        for i in start..fan_in {
+            cur.push(i);
+            rec(fan_in, d, i, cur, out);
+            cur.pop();
+        }
+    }
+    let mut out = Vec::new();
+    for d in 0..=degree as usize {
+        rec(fan_in, d, 0, &mut Vec::new(), &mut out);
+    }
+    out
+}
+
+/// Evaluate the polynomial `sum_m w[m] * monomial_m(x)` for one sub-neuron.
+/// `monomials` must be in the same order as `w`.
+#[inline]
+pub fn poly_eval(x: &[f32], w: &[f32], monomials: &[Vec<usize>]) -> f32 {
+    debug_assert_eq!(w.len(), monomials.len());
+    let mut acc = 0.0f32;
+    for (wm, combo) in w.iter().zip(monomials) {
+        let mut term = 1.0f32;
+        for &i in combo {
+            term *= x[i];
+        }
+        acc += term * wm;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts() {
+        assert_eq!(monomial_count(6, 1), 7);
+        assert_eq!(monomial_count(6, 2), 28);
+        assert_eq!(monomial_count(4, 2), 15);
+        assert_eq!(monomial_count(2, 3), 10);
+        assert_eq!(monomial_count(6, 3), 84);
+        assert_eq!(monomial_count(3, 1), 4);
+    }
+
+    #[test]
+    fn order_matches_python_f2_d2() {
+        // combinations_with_replacement(range(2), d) for d=0,1,2:
+        // [], [0], [1], [0,0], [0,1], [1,1]
+        let m = monomial_index_lists(2, 2);
+        assert_eq!(
+            m,
+            vec![vec![], vec![0], vec![1], vec![0, 0], vec![0, 1], vec![1, 1]]
+        );
+    }
+
+    #[test]
+    fn order_matches_python_f3_d2() {
+        let m = monomial_index_lists(3, 2);
+        assert_eq!(
+            m,
+            vec![
+                vec![],
+                vec![0],
+                vec![1],
+                vec![2],
+                vec![0, 0],
+                vec![0, 1],
+                vec![0, 2],
+                vec![1, 1],
+                vec![1, 2],
+                vec![2, 2],
+            ]
+        );
+    }
+
+    #[test]
+    fn enumeration_count_matches_formula() {
+        for f in 1..=7usize {
+            for d in 1..=3u32 {
+                assert_eq!(
+                    monomial_index_lists(f, d).len(),
+                    monomial_count(f, d),
+                    "F={f} D={d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eval_quadratic() {
+        // f(x) = 1 + 2*x0 + 3*x1 + 4*x0^2 + 5*x0*x1 + 6*x1^2 at (2, -1)
+        let monomials = monomial_index_lists(2, 2);
+        let w = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let v = poly_eval(&[2.0, -1.0], &w, &monomials);
+        assert_eq!(v, 1.0 + 4.0 - 3.0 + 16.0 - 10.0 + 6.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Fixed-point quantizers — bit-exact mirror of `python/compile/quant.py`.
+//!
+//! The deployed LUT network indexes on integer *codes*; the polynomial
+//! arithmetic consumes *values* = code × step.  jnp.round is
+//! round-half-to-even, so [`round_half_even`] reproduces it exactly — the
+//! one place where f32 semantics could silently diverge between the trained
+//! model and the generated tables.
+
+/// Scale parameters pass through |p| + floor (model.py `scale_of`).
+pub const SCALE_FLOOR: f32 = 1e-3;
+pub const BN_EPS: f32 = 1e-5;
+
+#[inline]
+pub fn scale_of(p: f32) -> f32 {
+    p.abs() + SCALE_FLOOR
+}
+
+/// Round half to even, matching `jnp.round` / IEEE roundTiesToEven.
+#[inline]
+pub fn round_half_even(x: f32) -> f32 {
+    let r = x.round(); // half away from zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // Tie: pick the even neighbour.
+        let f = x.floor();
+        if (f as i64) % 2 == 0 {
+            f
+        } else {
+            f + 1.0
+        }
+    } else {
+        r
+    }
+}
+
+/// Unsigned quantizer over [0, scale] with 2^bits levels.
+/// Returns the integer code in [0, 2^bits - 1].
+#[inline]
+pub fn unsigned_code(x: f32, bits: u32, scale: f32) -> i32 {
+    let levels = ((1u64 << bits) - 1) as f32;
+    let step = scale / levels;
+    round_half_even(x / step).clamp(0.0, levels) as i32
+}
+
+/// Signed symmetric quantizer; codes in [-(2^(bits-1)), 2^(bits-1) - 1].
+#[inline]
+pub fn signed_code(x: f32, bits: u32, scale: f32) -> i32 {
+    let pos = ((1u64 << (bits - 1)) - 1) as f32;
+    let neg = -((1u64 << (bits - 1)) as f32);
+    let step = scale / pos;
+    round_half_even(x / step).clamp(neg, pos) as i32
+}
+
+/// Dequantization step of the unsigned quantizer.
+#[inline]
+pub fn unsigned_step(bits: u32, scale: f32) -> f32 {
+    scale / ((1u64 << bits) - 1) as f32
+}
+
+/// Dequantization step of the signed quantizer.
+#[inline]
+pub fn signed_step(bits: u32, scale: f32) -> f32 {
+    scale / ((1u64 << (bits - 1)) - 1) as f32
+}
+
+/// Two's-complement encoding of a signed code into `bits` bits (table
+/// addressing / RTL constant emission).
+#[inline]
+pub fn to_twos_complement(code: i32, bits: u32) -> u32 {
+    (code as u32) & ((1u32 << bits) - 1)
+}
+
+/// Inverse of [`to_twos_complement`].
+#[inline]
+pub fn from_twos_complement(raw: u32, bits: u32) -> i32 {
+    let sign = 1u32 << (bits - 1);
+    if raw & sign != 0 {
+        (raw | !((1u32 << bits) - 1)) as i32
+    } else {
+        raw as i32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn half_even_ties() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(0.4999), 0.0);
+        assert_eq!(round_half_even(0.5001), 1.0);
+    }
+
+    #[test]
+    fn unsigned_codes() {
+        // 2 bits over [0, 1]: levels 0,1,2,3 at step 1/3.
+        assert_eq!(unsigned_code(0.0, 2, 1.0), 0);
+        assert_eq!(unsigned_code(1.0, 2, 1.0), 3);
+        assert_eq!(unsigned_code(0.34, 2, 1.0), 1);
+        assert_eq!(unsigned_code(2.0, 2, 1.0), 3, "clamps above");
+        assert_eq!(unsigned_code(-1.0, 2, 1.0), 0, "clamps below");
+    }
+
+    #[test]
+    fn signed_codes() {
+        // 3 bits, scale 3 => pos 3, step 1; codes -4..3.
+        assert_eq!(signed_code(0.0, 3, 3.0), 0);
+        assert_eq!(signed_code(3.0, 3, 3.0), 3);
+        assert_eq!(signed_code(100.0, 3, 3.0), 3);
+        assert_eq!(signed_code(-100.0, 3, 3.0), -4);
+        assert_eq!(signed_code(-1.2, 3, 3.0), -1);
+    }
+
+    #[test]
+    fn twos_complement_roundtrip() {
+        for bits in 2..=8u32 {
+            let lo = -(1i32 << (bits - 1));
+            let hi = (1i32 << (bits - 1)) - 1;
+            for code in lo..=hi {
+                let raw = to_twos_complement(code, bits);
+                assert!(raw < (1 << bits));
+                assert_eq!(from_twos_complement(raw, bits), code, "bits={bits}");
+            }
+        }
+    }
+
+    #[test]
+    fn steps_match_formulas() {
+        assert!((unsigned_step(2, 1.0) - 1.0 / 3.0).abs() < 1e-7);
+        assert!((signed_step(4, 7.0) - 1.0).abs() < 1e-7);
+    }
+}

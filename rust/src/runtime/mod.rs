@@ -1,0 +1,172 @@
+//! PJRT runtime — loads AOT-lowered HLO text and executes it on the CPU
+//! PJRT client via the `xla` crate.  This is the only bridge between the
+//! Rust coordinator and the JAX/Pallas-authored compute graphs; Python never
+//! runs at this point.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax >= 0.5
+//! serialized protos carry 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// Shared PJRT CPU client. Clone freely; the underlying client is
+/// reference-counted by the xla crate.
+#[derive(Clone)]
+pub struct Engine {
+    client: Arc<PjRtClient>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client: Arc::new(client) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload a host literal to a device buffer that Rust owns (and frees).
+    pub fn to_buffer(&self, lit: &Literal) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("host->device transfer: {e}"))
+    }
+
+    /// Load + compile an HLO text file into an executable.
+    pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled computation. The lowered graphs in this repo return a single
+/// tuple (aot.py lowers with return_tuple=True); `run` flattens it back to
+/// per-output literals.
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the flattened output literals.
+    ///
+    /// NOTE: prefer [`Executable::run_via`] on hot loops — the vendored C
+    /// wrapper behind `execute()` *leaks every input device buffer*
+    /// (`buffer.release()` without a matching delete in xla_rs.cc); `run`
+    /// is fine for one-shot calls.
+    pub fn run(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        let outs = self
+            .exe
+            .execute::<Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        self.flatten(outs)
+    }
+
+    /// Leak-free execution: upload the literals to Rust-owned device buffers
+    /// (freed on drop) and call `execute_b`, which borrows them.
+    pub fn run_via(&self, engine: &Engine, args: &[Literal]) -> Result<Vec<Literal>> {
+        let bufs: Vec<PjRtBuffer> =
+            args.iter().map(|l| engine.to_buffer(l)).collect::<Result<_>>()?;
+        let refs: Vec<&PjRtBuffer> = bufs.iter().collect();
+        self.run_b(&refs)
+    }
+
+    /// Execute with device buffers (inputs stay on device).
+    pub fn run_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        self.flatten(outs)
+    }
+
+    /// Execute with host literals and keep outputs as raw device buffers.
+    pub fn run_buffers(&self, args: &[Literal]) -> Result<Vec<PjRtBuffer>> {
+        let mut outs = self.exe.execute::<Literal>(args)?;
+        if outs.is_empty() {
+            bail!("{}: no replica outputs", self.name);
+        }
+        Ok(outs.swap_remove(0))
+    }
+
+    fn flatten(&self, mut outs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Literal>> {
+        if outs.is_empty() {
+            bail!("{}: no replica outputs", self.name);
+        }
+        let replica = outs.swap_remove(0);
+        let mut literals = Vec::new();
+        for buf in &replica {
+            let lit = buf.to_literal_sync()?;
+            // return_tuple=True lowers to a tuple root; decompose transparently.
+            match lit.shape()? {
+                xla::Shape::Tuple(_) => {
+                    let mut l = lit;
+                    literals.extend(l.decompose_tuple()?);
+                }
+                _ => literals.push(lit),
+            }
+        }
+        Ok(literals)
+    }
+}
+
+// ---- literal marshalling ----------------------------------------------------
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn f32_literal(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let want: i64 = dims.iter().product();
+    if want != data.len() as i64 {
+        bail!("f32_literal: {} values for shape {dims:?}", data.len());
+    }
+    Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("{e}"))
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn i32_literal(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    let want: i64 = dims.iter().product();
+    if want != data.len() as i64 {
+        bail!("i32_literal: {} values for shape {dims:?}", data.len());
+    }
+    Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("{e}"))
+}
+
+/// Extract an f32 vector from a literal (any shape, row-major).
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = f32_literal(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(to_f32_vec(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(f32_literal(&[1.0], &[2]).is_err());
+    }
+
+    #[test]
+    fn engine_compiles_reference_hlo() {
+        // PJRT smoke: only when quickstart artifacts exist (`make artifacts`).
+        let eval = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/jsc-m-lite-d1-a1.eval.hlo.txt");
+        if !eval.exists() {
+            return;
+        }
+        let engine = Engine::cpu().unwrap();
+        assert_eq!(engine.platform(), "cpu");
+        let _exe = engine.load_hlo(&eval).unwrap();
+    }
+}

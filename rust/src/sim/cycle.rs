@@ -1,0 +1,217 @@
+//! Cycle-accurate pipeline simulation (paper Fig. 5).
+//!
+//! Models the synthesized pipeline register structure clock-by-clock:
+//! strategy (1) registers the Poly-layer and Adder-layer separately
+//! (2 stages per layer when A > 1), strategy (2) merges them (1 stage per
+//! layer).  Initiation interval is 1 everywhere — a new sample enters every
+//! cycle — so the simulation validates both the latency-in-cycles numbers
+//! of Table II/V and full-throughput streaming behaviour.
+
+use crate::fpga::Strategy;
+use crate::lut::tables::{pack_adder_addr, pack_poly_addr, NetworkTables};
+use crate::nn::network::Network;
+
+/// One pipeline stage: holds the registered value (codes) per in-flight slot.
+enum Stage {
+    /// Poly sub-stage of layer l: input = previous layer codes,
+    /// output = sub-neuron codes [A * n_out].
+    Poly { layer: usize },
+    /// Adder sub-stage of layer l: input = sub codes, output = layer codes.
+    Adder { layer: usize },
+    /// Merged stage (strategy 2 or A == 1).
+    Full { layer: usize },
+}
+
+pub struct PipelineSim<'a> {
+    net: &'a Network,
+    tables: &'a NetworkTables,
+    stages: Vec<Stage>,
+    /// regs[i] = value standing *after* stage i (None = bubble).
+    regs: Vec<Option<Vec<i32>>>,
+}
+
+pub struct StreamResult {
+    /// Latency of the first sample, in cycles (= pipeline depth).
+    pub latency_cycles: u32,
+    /// Total cycles to drain `n` samples (II=1 ⇒ latency + n - 1).
+    pub total_cycles: u64,
+    pub outputs: Vec<Vec<i32>>,
+}
+
+impl<'a> PipelineSim<'a> {
+    pub fn new(net: &'a Network, tables: &'a NetworkTables, strategy: Strategy) -> Self {
+        let mut stages = Vec::new();
+        for l in 0..net.cfg.n_layers() {
+            match strategy {
+                Strategy::Merged => stages.push(Stage::Full { layer: l }),
+                Strategy::SeparateRegisters => {
+                    if net.cfg.a_factor > 1 {
+                        stages.push(Stage::Poly { layer: l });
+                        stages.push(Stage::Adder { layer: l });
+                    } else {
+                        stages.push(Stage::Full { layer: l });
+                    }
+                }
+            }
+        }
+        let regs = (0..stages.len()).map(|_| None).collect();
+        PipelineSim { net, tables, stages, regs }
+    }
+
+    pub fn depth(&self) -> u32 {
+        self.stages.len() as u32
+    }
+
+    fn eval_stage(&self, stage: &Stage, input: &[i32]) -> Vec<i32> {
+        let cfg = &self.net.cfg;
+        match *stage {
+            Stage::Poly { layer } => {
+                let lt = &self.tables.layers[layer];
+                let n_out = cfg.widths[layer + 1];
+                let mut out = Vec::with_capacity(cfg.a_factor * n_out);
+                for j in 0..n_out {
+                    for (a, t) in lt.neurons[j].poly.iter().enumerate() {
+                        let gathered: Vec<i32> = self.net.layers[layer].indices[a][j]
+                            .iter()
+                            .map(|&s| input[s])
+                            .collect();
+                        out.push(t.code_at(pack_poly_addr(&gathered, lt.in_bits)));
+                    }
+                }
+                out
+            }
+            Stage::Adder { layer } => {
+                let lt = &self.tables.layers[layer];
+                let n_out = cfg.widths[layer + 1];
+                let a = cfg.a_factor;
+                (0..n_out)
+                    .map(|j| {
+                        let subs = &input[j * a..(j + 1) * a];
+                        lt.neurons[j].adder.as_ref().unwrap().code_at(pack_adder_addr(
+                            subs,
+                            lt.sub_bits,
+                        ))
+                    })
+                    .collect()
+            }
+            Stage::Full { layer } => {
+                let lt = &self.tables.layers[layer];
+                let n_out = cfg.widths[layer + 1];
+                (0..n_out)
+                    .map(|j| {
+                        let nt = &lt.neurons[j];
+                        let subs: Vec<i32> = nt
+                            .poly
+                            .iter()
+                            .enumerate()
+                            .map(|(a, t)| {
+                                let gathered: Vec<i32> = self.net.layers[layer].indices[a][j]
+                                    .iter()
+                                    .map(|&s| input[s])
+                                    .collect();
+                                t.code_at(pack_poly_addr(&gathered, lt.in_bits))
+                            })
+                            .collect();
+                        match &nt.adder {
+                            Some(adder) => adder.code_at(pack_adder_addr(&subs, lt.sub_bits)),
+                            None => subs[0],
+                        }
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// One clock edge: shift every stage (back to front), feed `input`.
+    /// Returns the output emerging this cycle, if any.
+    pub fn tick(&mut self, input: Option<Vec<i32>>) -> Option<Vec<i32>> {
+        let out = self.regs.last().cloned().flatten();
+        for i in (1..self.stages.len()).rev() {
+            self.regs[i] = self.regs[i - 1]
+                .take()
+                .map(|v| self.eval_stage(&self.stages[i], &v));
+        }
+        self.regs[0] = input.map(|v| self.eval_stage(&self.stages[0], &v));
+        out
+    }
+
+    /// Stream a batch of input-code vectors through at II=1.
+    pub fn stream(&mut self, inputs: &[Vec<i32>]) -> StreamResult {
+        let mut outputs = Vec::with_capacity(inputs.len());
+        let mut first_latency = None;
+        let mut cycle = 0u64;
+        let mut fed = 0usize;
+        while outputs.len() < inputs.len() {
+            let input = if fed < inputs.len() {
+                fed += 1;
+                Some(inputs[fed - 1].clone())
+            } else {
+                None
+            };
+            if let Some(out) = self.tick(input) {
+                if first_latency.is_none() {
+                    first_latency = Some(cycle as u32);
+                }
+                outputs.push(out);
+            }
+            cycle += 1;
+        }
+        StreamResult {
+            latency_cycles: first_latency.unwrap_or(0),
+            total_cycles: cycle,
+            outputs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::tables::compile_network;
+    use crate::nn::config;
+    use crate::sim::lutsim::LutSim;
+    use crate::util::rng::Rng;
+
+    fn net(a: usize) -> Network {
+        let cfg = config::uniform("t", &[8, 6, 3], 2, 2, 3, 3, 3, 2, a, 3);
+        Network::random(&cfg, &mut Rng::new(a as u64))
+    }
+
+    #[test]
+    fn latency_matches_paper_cycle_counts() {
+        // JSC-M Lite case study (Table V): 3 layers, strategy 2 = 3 cycles,
+        // strategy 1 with A>1 = 6 cycles.
+        let n = net(2);
+        let tables = compile_network(&n, 1);
+        let inputs: Vec<Vec<i32>> = (0..5).map(|i| vec![(i % 4) as i32; 8]).collect();
+        let mut s2 = PipelineSim::new(&n, &tables, Strategy::Merged);
+        let r2 = s2.stream(&inputs);
+        assert_eq!(r2.latency_cycles, 2); // 2 layers in the tiny net
+        let mut s1 = PipelineSim::new(&n, &tables, Strategy::SeparateRegisters);
+        let r1 = s1.stream(&inputs);
+        assert_eq!(r1.latency_cycles, 4);
+        // II = 1: draining n samples takes latency + n cycles.
+        assert_eq!(r2.total_cycles, r2.latency_cycles as u64 + inputs.len() as u64);
+    }
+
+    #[test]
+    fn pipeline_outputs_match_lutsim_both_strategies() {
+        for a in [1, 2] {
+            let n = net(a);
+            let tables = compile_network(&n, 1);
+            let sim = LutSim::new(&n, &tables);
+            let mut rng = Rng::new(9);
+            let inputs: Vec<Vec<i32>> = (0..20)
+                .map(|_| (0..8).map(|_| rng.below(4) as i32).collect())
+                .collect();
+            for strat in [Strategy::Merged, Strategy::SeparateRegisters] {
+                let mut p = PipelineSim::new(&n, &tables, strat);
+                let r = p.stream(&inputs);
+                assert_eq!(r.outputs.len(), inputs.len());
+                for (inp, out) in inputs.iter().zip(&r.outputs) {
+                    assert_eq!(out, &sim.forward_codes(inp), "A={a} {strat:?}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! LUT-network simulator — evaluates the *frozen tables* (deployed
+//! semantics), independent of the float model.  This is the software twin of
+//! the FPGA datapath and the reference for the Verilog testbench; a property
+//! test pins it bit-exactly to `Network::forward_codes`.
+
+use crate::lut::tables::{pack_adder_addr, pack_poly_addr, NetworkTables};
+use crate::nn::network::Network;
+
+/// Simulator over a frozen network (borrows the trained network only for
+/// its connectivity and input quantizer).
+pub struct LutSim<'a> {
+    pub net: &'a Network,
+    pub tables: &'a NetworkTables,
+}
+
+impl<'a> LutSim<'a> {
+    pub fn new(net: &'a Network, tables: &'a NetworkTables) -> Self {
+        LutSim { net, tables }
+    }
+
+    /// Table-only forward pass over input codes.
+    pub fn forward_codes(&self, in_codes: &[i32]) -> Vec<i32> {
+        let cfg = &self.net.cfg;
+        let mut codes = in_codes.to_vec();
+        let mut gathered: Vec<i32> = Vec::new();
+        for (l, lt) in self.tables.layers.iter().enumerate() {
+            let n_out = cfg.widths[l + 1];
+            let mut next = vec![0i32; n_out];
+            for (j, nt) in lt.neurons.iter().enumerate() {
+                let subs: Vec<i32> = nt
+                    .poly
+                    .iter()
+                    .enumerate()
+                    .map(|(a, t)| {
+                        gathered.clear();
+                        gathered.extend(
+                            self.net.layers[l].indices[a][j].iter().map(|&s| codes[s]),
+                        );
+                        t.code_at(pack_poly_addr(&gathered, lt.in_bits))
+                    })
+                    .collect();
+                next[j] = match &nt.adder {
+                    Some(adder) => adder.code_at(pack_adder_addr(&subs, lt.sub_bits)),
+                    None => subs[0],
+                };
+            }
+            codes = next;
+        }
+        codes
+    }
+
+    /// Forward from raw [0,1] features; returns dequantized logits.
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        let codes = self.forward_codes(&self.net.quantize_input(x));
+        let l = self.net.cfg.n_layers() - 1;
+        let step = self.net.out_step(l);
+        codes.iter().map(|&c| c as f32 * step).collect()
+    }
+
+    pub fn predict(&self, x: &[f32]) -> usize {
+        let logits = self.forward(x);
+        if self.net.cfg.n_classes == 1 {
+            (logits[0] > 0.0) as usize
+        } else {
+            logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        }
+    }
+
+    pub fn accuracy(&self, ds: &crate::data::Dataset, limit: usize) -> f64 {
+        let n = if limit == 0 { ds.n_test() } else { ds.n_test().min(limit) };
+        let correct =
+            (0..n).filter(|&i| self.predict(ds.test_row(i)) == ds.y_test[i]).count();
+        correct as f64 / n.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::tables::compile_network;
+    use crate::nn::config;
+    use crate::util::rng::Rng;
+
+    /// Bit-exact equivalence: tables == float fixed-point model, for every
+    /// A and degree combination we ship.
+    #[test]
+    fn lutsim_equals_network_forward() {
+        for (a, d) in [(1, 1), (2, 1), (3, 1), (1, 2), (2, 2), (2, 3)] {
+            let cfg = config::uniform("t", &[8, 6, 3], 2, 2, 3, 3, 3, d, a, 3);
+            let net = Network::random(&cfg, &mut Rng::new(a as u64 * 10 + d as u64));
+            let tables = compile_network(&net, 1);
+            let sim = LutSim::new(&net, &tables);
+            let mut rng = Rng::new(5);
+            for _ in 0..200 {
+                let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+                let codes = net.quantize_input(&x);
+                assert_eq!(
+                    sim.forward_codes(&codes),
+                    net.forward_codes(&codes),
+                    "A={a} D={d}"
+                );
+            }
+        }
+    }
+}

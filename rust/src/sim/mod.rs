@@ -1,0 +1,8 @@
+//! Deployed-semantics simulators: the LUT-network evaluator (software twin
+//! of the FPGA datapath) and the cycle-accurate pipeline model.
+
+pub mod cycle;
+pub mod lutsim;
+
+pub use cycle::PipelineSim;
+pub use lutsim::LutSim;

@@ -1,0 +1,147 @@
+//! Mini benchmark harness (criterion is not vendored).
+//!
+//! `cargo bench` targets in this repo are `harness = false` binaries built
+//! on this module.  `Bench::measure` warms up, then collects wall-clock
+//! samples until a time budget or sample count is reached and reports
+//! median / mean / p95 with a simple MAD-based spread, in criterion-like
+//! one-line format.  `table` renders paper-style rows (used by the
+//! fig6/table2/table3/table5 benches).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub samples: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    pub mad_ns: f64,
+}
+
+impl Stats {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / (self.median_ns * 1e-9)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bench {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub min_samples: usize,
+    pub max_samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        // POLYLUT_BENCH_QUICK=1 trims budgets for CI-style smoke runs.
+        let quick = std::env::var("POLYLUT_BENCH_QUICK").is_ok();
+        Self {
+            warmup: Duration::from_millis(if quick { 50 } else { 300 }),
+            budget: Duration::from_secs(if quick { 1 } else { 3 }),
+            min_samples: 10,
+            max_samples: if quick { 100 } else { 1000 },
+        }
+    }
+}
+
+impl Bench {
+    /// Measure `f`, print a criterion-like line, return stats.
+    pub fn measure<R>(&self, name: &str, mut f: impl FnMut() -> R) -> Stats {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Sample.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let t1 = Instant::now();
+        while (t1.elapsed() < self.budget || samples_ns.len() < self.min_samples)
+            && samples_ns.len() < self.max_samples
+        {
+            let s = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(s.elapsed().as_nanos() as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let median = samples_ns[n / 2];
+        let mean = samples_ns.iter().sum::<f64>() / n as f64;
+        let p95 = samples_ns[(n as f64 * 0.95) as usize % n];
+        let mut devs: Vec<f64> = samples_ns.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[n / 2];
+        let st = Stats { samples: n, median_ns: median, mean_ns: mean, p95_ns: p95, mad_ns: mad };
+        println!(
+            "{name:<48} time: [{} ± {}]  p95: {}  ({} samples)",
+            fmt_ns(st.median_ns),
+            fmt_ns(st.mad_ns),
+            fmt_ns(st.p95_ns),
+            st.samples
+        );
+        st
+    }
+}
+
+/// Render an aligned text table (paper-style rows) to stdout.
+pub fn table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: &[String]| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths.get(i).copied().unwrap_or(8)));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>());
+    line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>());
+    for row in rows {
+        line(row);
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_fast_fn() {
+        let b = Bench {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(30),
+            min_samples: 5,
+            max_samples: 50,
+        };
+        let st = b.measure("noop", || 1 + 1);
+        assert!(st.samples >= 5);
+        assert!(st.median_ns >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities built from scratch — the deployment image vendors no
+//! serde/clap/tokio/criterion/proptest/rand, so this repo carries its own
+//! minimal, tested equivalents.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,106 @@
+//! Data-parallel helpers over std threads (tokio/rayon are not vendored).
+//!
+//! The LUT compiler and the benchmark harness are embarrassingly parallel
+//! over neurons/configs; `parallel_map` fans a slice out over a bounded set
+//! of scoped worker threads with dynamic (chunk-stealing) scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use (1..=available_parallelism).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Apply `f` to every element index of `items`, in parallel, preserving
+/// output order. `f` must be Sync; items are read-shared.
+pub fn parallel_map<T: Sync, R: Send>(
+    items: &[T],
+    workers: usize,
+    f: impl Fn(usize, &T) -> R + Sync,
+) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *out[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+}
+
+/// Parallel for over a range with dynamic scheduling; `f(i)` for i in 0..n.
+pub fn parallel_for(n: usize, workers: usize, f: impl Fn(usize) + Sync) {
+    let workers = workers.clamp(1, n.max(1));
+    if n == 0 {
+        return;
+    }
+    if workers == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |_, &x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_single_worker() {
+        let items = vec![1, 2, 3];
+        assert_eq!(parallel_map(&items, 1, |i, &x| x + i), vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn for_covers_all() {
+        use std::sync::atomic::AtomicU64;
+        let sum = AtomicU64::new(0);
+        parallel_for(100, 4, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let items: Vec<u8> = vec![];
+        assert!(parallel_map(&items, 4, |_, &x| x).is_empty());
+        parallel_for(0, 4, |_| panic!("must not run"));
+    }
+}

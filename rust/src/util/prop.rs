@@ -1,0 +1,154 @@
+//! Mini property-based testing framework (proptest is not vendored).
+//!
+//! `check` runs a property over `cases` generated inputs; on failure it
+//! re-seeds and *shrinks* by retrying the property with progressively
+//! "smaller" inputs produced by the caller's generator under a shrink hint,
+//! then panics with the failing seed so the case is reproducible:
+//!
+//! ```ignore
+//! prop::check("adder decomposition", 200, |g| {
+//!     let beta = g.usize_in(1, 6);
+//!     ...
+//!     prop::assert_prop!(lhs == rhs, "mismatch beta={beta}");
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Generator handle passed to properties: a seeded RNG plus a size budget
+/// that the shrinking loop reduces.
+pub struct Gen {
+    pub rng: Rng,
+    /// 1.0 for the initial attempt; shrunk toward 0 on failure replays.
+    pub size: f64,
+}
+
+impl Gen {
+    /// Uniform usize in [lo, hi] scaled down when shrinking.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = hi - lo;
+        let scaled = ((span as f64 * self.size).ceil() as usize).min(span);
+        lo + if scaled == 0 { 0 } else { self.rng.below(scaled + 1) }
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.f64() * self.size.max(0.05)
+    }
+
+    pub fn f32_signed(&mut self, mag: f32) -> f32 {
+        ((self.rng.f32() * 2.0 - 1.0) * mag) * self.size as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn vec_f32(&mut self, len: usize, mag: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_signed(mag)).collect()
+    }
+}
+
+/// Outcome of a single property evaluation.
+pub enum Outcome {
+    Pass,
+    Fail(String),
+}
+
+/// Run `prop` over `cases` random cases. The property signals failure by
+/// returning `Outcome::Fail` (use `prop_assert!`) or by panicking.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Gen) -> Outcome) {
+    let base_seed = match std::env::var("PROP_SEED") {
+        Ok(s) => s.parse::<u64>().expect("PROP_SEED must be u64"),
+        Err(_) => DEFAULT_SEED,
+    };
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut g = Gen { rng: Rng::new(seed), size: 1.0 };
+        if let Outcome::Fail(msg) = prop(&mut g) {
+            // Shrink: replay the same seed with smaller size budgets and
+            // report the smallest still-failing configuration.
+            let mut best = (1.0f64, msg);
+            for &size in &[0.5, 0.25, 0.1, 0.05] {
+                let mut g = Gen { rng: Rng::new(seed), size };
+                if let Outcome::Fail(m) = prop(&mut g) {
+                    best = (size, m);
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed}, size {}):\n  {}\n\
+                 reproduce with PROP_SEED={seed}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Default base seed; override per run with `PROP_SEED=<u64>`.
+const DEFAULT_SEED: u64 = 0x00DD_BA11;
+
+/// Assert inside a property; returns `Outcome::Fail` with a message.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return $crate::util::prop::Outcome::Fail(format!($($fmt)*));
+        }
+    };
+}
+
+/// Assert approximate float equality inside a property.
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $tol:expr) => {{
+        let (a, b) = ($a, $b);
+        if (a - b).abs() > $tol {
+            return $crate::util::prop::Outcome::Fail(format!(
+                "{} = {a} vs {} = {b} (tol {})",
+                stringify!($a),
+                stringify!($b),
+                $tol
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add commutes", 50, |g| {
+            let a = g.f32_signed(100.0);
+            let b = g.f32_signed(100.0);
+            prop_assert!((a + b - (b + a)).abs() < 1e-6, "a={a} b={b}");
+            Outcome::Pass
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 3, |g| {
+            let x = g.usize_in(0, 10);
+            prop_assert!(x > 100, "x={x} not > 100");
+            Outcome::Pass
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        let mut g = Gen { rng: Rng::new(1), size: 1.0 };
+        for _ in 0..100 {
+            let v = g.usize_in(3, 9);
+            assert!((3..=9).contains(&v));
+        }
+        let mut g = Gen { rng: Rng::new(1), size: 0.0 };
+        assert_eq!(g.usize_in(5, 20), 5, "size 0 shrinks to lower bound");
+    }
+}

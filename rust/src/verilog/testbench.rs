@@ -1,0 +1,137 @@
+//! Self-checking testbench emission.
+//!
+//! The testbench embeds `n` stimulus vectors (random input codes) together
+//! with golden outputs computed by the LUT simulator — the same
+//! deployed-semantics reference the property tests pin to the float model.
+//! It clocks the pipeline at II=1 and fails loudly on any mismatch, so any
+//! Verilog simulator (iverilog/verilator/xsim) can verify the generated RTL
+//! without our toolchain.
+
+use std::fmt::Write;
+
+use crate::lut::tables::NetworkTables;
+use crate::nn::network::Network;
+use crate::sim::lutsim::LutSim;
+use crate::util::rng::Rng;
+
+use super::module_name;
+
+pub fn testbench(net: &Network, tables: &NetworkTables, n_vectors: usize) -> String {
+    let cfg = &net.cfg;
+    let name = module_name(net);
+    let n_layers = cfg.n_layers();
+    let in_w = cfg.widths[0] as u32 * cfg.beta[0];
+    let out_bits = tables.layers[n_layers - 1].out_bits;
+    let out_w = cfg.widths[n_layers] as u32 * out_bits;
+    let latency = n_layers; // top is emitted with strategy-2 register structure
+
+    // Build stimulus + golden outputs via the LUT simulator.
+    let sim = LutSim::new(net, tables);
+    let mut rng = Rng::new(cfg.seed ^ 0x7B);
+    let mut stim = Vec::with_capacity(n_vectors);
+    let mut gold = Vec::with_capacity(n_vectors);
+    let levels = 1usize << cfg.beta[0];
+    for _ in 0..n_vectors {
+        let codes: Vec<i32> = (0..cfg.widths[0]).map(|_| rng.below(levels) as i32).collect();
+        let outs = sim.forward_codes(&codes);
+        stim.push(pack_hex(&codes, cfg.beta[0], in_w));
+        let raw: Vec<i32> = outs
+            .iter()
+            .map(|&c| crate::nn::quant::to_twos_complement(c, out_bits) as i32)
+            .collect();
+        gold.push(pack_hex(&raw, out_bits, out_w));
+    }
+
+    let mut v = String::new();
+    let _ = writeln!(v, "// Auto-generated self-checking testbench for {}.", cfg.name);
+    let _ = writeln!(v, "`timescale 1ns/1ps");
+    let _ = writeln!(v, "module {name}_tb;");
+    let _ = writeln!(v, "  reg clk = 0;");
+    let _ = writeln!(v, "  always #2 clk = ~clk;");
+    let _ = writeln!(v, "  reg  [{}:0] in_bus;", in_w - 1);
+    let _ = writeln!(v, "  wire [{}:0] out_bus;", out_w - 1);
+    let _ = writeln!(v, "  {name}_top dut (.clk(clk), .in_bus(in_bus), .out_bus(out_bus));");
+    let _ = writeln!(v, "  reg [{}:0] stim [0:{}];", in_w - 1, n_vectors - 1);
+    let _ = writeln!(v, "  reg [{}:0] gold [0:{}];", out_w - 1, n_vectors - 1);
+    let _ = writeln!(v, "  integer i, errors;");
+    let _ = writeln!(v, "  initial begin");
+    for (i, s) in stim.iter().enumerate() {
+        let _ = writeln!(v, "    stim[{i}] = {in_w}'h{s};");
+    }
+    for (i, g) in gold.iter().enumerate() {
+        let _ = writeln!(v, "    gold[{i}] = {out_w}'h{g};");
+    }
+    let _ = writeln!(v, "    errors = 0;");
+    let _ = writeln!(v, "    // II=1 streaming with {latency}-cycle latency.");
+    let _ = writeln!(v, "    for (i = 0; i < {}; i = i + 1) begin", n_vectors + latency);
+    let _ = writeln!(v, "      if (i < {n_vectors}) in_bus = stim[i];");
+    let _ = writeln!(v, "      @(posedge clk); #1;");
+    let _ = writeln!(v, "      if (i >= {latency}) begin");
+    let _ = writeln!(v, "        if (out_bus !== gold[i-{latency}]) begin");
+    let _ = writeln!(
+        v,
+        "          $display(\"FAIL vector %0d: got %h want %h\", i-{latency}, out_bus, gold[i-{latency}]);"
+    );
+    let _ = writeln!(v, "          errors = errors + 1;");
+    let _ = writeln!(v, "        end");
+    let _ = writeln!(v, "      end");
+    let _ = writeln!(v, "    end");
+    let _ = writeln!(v, "    if (errors == 0) $display(\"PASS: %0d vectors\", {n_vectors});");
+    let _ = writeln!(v, "    else $display(\"FAIL: %0d mismatches\", errors);");
+    let _ = writeln!(v, "    $finish;");
+    let _ = writeln!(v, "  end");
+    let _ = writeln!(v, "endmodule");
+    v
+}
+
+/// Pack per-neuron codes (LSB-first fields of `bits` each) into a hex string
+/// of total width `total_bits`.
+fn pack_hex(codes: &[i32], bits: u32, total_bits: u32) -> String {
+    let mut words = vec![0u64; (total_bits as usize).div_ceil(64)];
+    for (i, &c) in codes.iter().enumerate() {
+        let raw = (c as u64) & ((1u64 << bits) - 1);
+        let pos = i as u32 * bits;
+        let (w, off) = ((pos / 64) as usize, pos % 64);
+        words[w] |= raw << off;
+        if off + bits > 64 && w + 1 < words.len() {
+            words[w + 1] |= raw >> (64 - off);
+        }
+    }
+    // Hex, MSB first, trimmed to total_bits.
+    let nibbles = (total_bits as usize).div_ceil(4);
+    let mut s = String::with_capacity(nibbles);
+    for i in (0..nibbles).rev() {
+        let bitpos = i * 4;
+        let (w, off) = (bitpos / 64, bitpos % 64);
+        let nib = (words[w] >> off) & 0xF;
+        s.push(char::from_digit(nib as u32, 16).unwrap());
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::tables::compile_network;
+    use crate::nn::config;
+
+    #[test]
+    fn pack_hex_basic() {
+        // codes [3, 1, 2] at 2 bits each = 0b10_01_11 = 0x27 over 6 bits.
+        assert_eq!(pack_hex(&[3, 1, 2], 2, 6), "27");
+        // one 4-bit signed -1 -> 0xF.
+        assert_eq!(pack_hex(&[-1], 4, 4), "f");
+    }
+
+    #[test]
+    fn testbench_structure() {
+        let cfg = config::uniform("t", &[8, 6, 3], 2, 2, 3, 3, 3, 1, 2, 3);
+        let net = Network::random(&cfg, &mut crate::util::rng::Rng::new(1));
+        let tables = compile_network(&net, 1);
+        let tb = testbench(&net, &tables, 8);
+        assert!(tb.contains("stim[7]"));
+        assert!(tb.contains("gold[7]"));
+        assert!(tb.contains("PASS"));
+        assert_eq!(tb.matches("stim[").count(), 8 + 1); // 8 inits + 1 read (decl has a space)
+    }
+}

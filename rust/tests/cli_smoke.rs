@@ -1,0 +1,90 @@
+//! CLI smoke tests — run the `polylut` binary end to end (requires
+//! quickstart artifacts; skips otherwise).
+
+use std::path::Path;
+use std::process::Command;
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_polylut")
+}
+
+fn have_artifacts() -> bool {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/jsc-m-lite-d1-a1.meta.json")
+        .exists()
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    run_in(Path::new(env!("CARGO_MANIFEST_DIR")), args)
+}
+
+fn run_in(dir: &Path, args: &[&str]) -> (bool, String) {
+    let out = Command::new(bin())
+        .args(args)
+        .current_dir(dir)
+        .output()
+        .expect("spawn polylut");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (ok, text) = run(&["--help"]);
+    assert!(ok);
+    for sub in ["train", "compile", "synth", "rtl", "serve", "list"] {
+        assert!(text.contains(sub), "missing {sub} in help");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown subcommand"));
+}
+
+#[test]
+fn list_shows_artifacts() {
+    if !have_artifacts() {
+        return;
+    }
+    let (ok, text) = run(&["list"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("jsc-m-lite-d1-a1"));
+    assert!(text.contains("dataset"));
+}
+
+#[test]
+fn train_then_synth_roundtrip() {
+    if !have_artifacts() {
+        return;
+    }
+    // Scratch artifacts dir so the 30-step checkpoint never clobbers the
+    // bench caches in the real artifacts/ directory.
+    let scratch = std::env::temp_dir().join("polylut_cli_scratch");
+    let _ = std::fs::remove_dir_all(&scratch);
+    std::fs::create_dir_all(scratch.join("artifacts")).unwrap();
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    for f in [
+        "jsc-m-lite-d1-a1.meta.json",
+        "jsc-m-lite-d1-a1.train.hlo.txt",
+        "jsc-m-lite-d1-a1.eval.hlo.txt",
+    ] {
+        std::fs::copy(src.join(f), scratch.join("artifacts").join(f)).unwrap();
+    }
+    let (ok, text) = run_in(&scratch, &["train", "--id", "jsc-m-lite-d1-a1", "--steps", "30"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("deployed test acc"));
+    let (ok, text) = run_in(&scratch, &["synth", "--id", "jsc-m-lite-d1-a1", "--strategy", "1"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("F_max"));
+    let (ok, text) =
+        run_in(&scratch, &["rtl", "--id", "jsc-m-lite-d1-a1", "--out", "/tmp/polylut_cli_rtl"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("Verilog"));
+}

@@ -1,0 +1,67 @@
+//! Cross-language integration tests: the Rust hardware-functional model must
+//! agree with the JAX eval graph (via PJRT) on trained weights.
+use std::path::Path;
+
+use polylut_add::{data, meta, runtime, train};
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("jsc-m-lite-d1-a2.meta.json").exists().then_some(p)
+}
+
+#[test]
+fn rust_network_matches_jax_eval_graph() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let man = meta::load_id(&dir, "jsc-m-lite-d1-a2").unwrap();
+    let engine = runtime::Engine::cpu().unwrap();
+    let ds = data::load(&man.dataset, 0).unwrap();
+    // Train briefly (or reuse weights) so the comparison uses non-trivial state.
+    let opts = train::TrainOptions { steps: 60, ..Default::default() };
+    let (state, _) = train::train_or_load(&engine, &man, &ds, &opts).unwrap();
+    let net = man.network_from_state(&state).unwrap();
+
+    // PJRT eval on one batch.
+    let exe = engine.load_hlo(&man.eval_hlo).unwrap();
+    let b = man.eval_batch;
+    let mut args = Vec::new();
+    // eval graph takes trainables + bn stats (first len(param_specs) tensors).
+    let n_params = man.state.iter().filter(|s| matches!(s.role, meta::Role::Train | meta::Role::Stat)).count();
+    for (spec, vals) in man.state.iter().zip(&state).take(n_params) {
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        args.push(runtime::f32_literal(vals, &dims).unwrap());
+    }
+    let mut x = Vec::with_capacity(b * ds.n_features);
+    for i in 0..b {
+        x.extend_from_slice(ds.test_row(i));
+    }
+    args.push(runtime::f32_literal(&x, &[b as i64, ds.n_features as i64]).unwrap());
+    let outs = exe.run(&args).unwrap();
+    assert_eq!(outs.len(), 1, "eval graph returns logits only");
+    let logits = runtime::to_f32_vec(&outs[0]).unwrap();
+    let n_out = man.config.widths[man.config.n_layers()];
+    assert_eq!(logits.len(), b * n_out);
+
+    // Rust fixed-point forward must match to float tolerance, and argmax
+    // must agree on effectively every sample (ties at quantization
+    // boundaries may flip argmax when two logits are equal).
+    let mut mismatch = 0usize;
+    for i in 0..b {
+        let ours = net.forward(ds.test_row(i));
+        let jax = &logits[i * n_out..(i + 1) * n_out];
+        for (k, (&a, &b_)) in ours.iter().zip(jax).enumerate() {
+            assert!(
+                (a - b_).abs() <= 2e-3 * (1.0 + b_.abs()),
+                "sample {i} logit {k}: rust {a} vs jax {b_}"
+            );
+        }
+        let am_r = ours.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        let am_j = jax.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        if am_r != am_j {
+            mismatch += 1;
+        }
+    }
+    assert!(mismatch <= b / 100, "argmax mismatch on {mismatch}/{b} samples");
+}

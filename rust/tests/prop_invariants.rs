@@ -1,0 +1,265 @@
+//! Property-based invariants over randomly generated configurations —
+//! the heart of the correctness story (uses the in-repo mini-proptest;
+//! reproduce failures with PROP_SEED=<seed>).
+
+use polylut_add::fpga::Strategy;
+use polylut_add::lut::tables::{
+    compile_network, pack_adder_addr, pack_poly_addr, unpack_adder_addr, unpack_poly_addr,
+};
+use polylut_add::lut::{boolfn::BoolFn, map_network_of};
+use polylut_add::nn::network::Network;
+use polylut_add::nn::{config, quant};
+use polylut_add::prop_assert;
+use polylut_add::sim::{LutSim, PipelineSim};
+use polylut_add::util::prop::{check, Gen, Outcome};
+use polylut_add::util::rng::Rng;
+
+/// A random small-but-nontrivial config.
+fn random_config(g: &mut Gen) -> config::ModelConfig {
+    let n_in = g.usize_in(4, 12);
+    let hidden = g.usize_in(3, 8);
+    let n_out = g.usize_in(1, 4);
+    let beta_in = g.usize_in(1, 3) as u32;
+    let beta = g.usize_in(1, 3) as u32;
+    let fan = g.usize_in(1, 3.min(n_in));
+    let degree = g.usize_in(1, 3) as u32;
+    let a = g.usize_in(1, 3);
+    let n_classes = if n_out == 1 { 1 } else { n_out };
+    config::uniform(
+        "prop", &[n_in, hidden, n_out], beta_in, beta, beta + 1, fan.min(n_in), fan.min(hidden),
+        degree, a, n_classes,
+    )
+}
+
+#[test]
+fn lutsim_equals_fixed_point_model() {
+    check("tables reproduce the fixed-point model", 25, |g| {
+        let cfg = random_config(g);
+        if cfg.validate().is_err() {
+            return Outcome::Pass; // skip degenerate draws
+        }
+        let mut rng = g.rng.fork(1);
+        let net = Network::random(&cfg, &mut rng);
+        let tables = compile_network(&net, 1);
+        let sim = LutSim::new(&net, &tables);
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..cfg.widths[0]).map(|_| rng.f32()).collect();
+            let codes = net.quantize_input(&x);
+            prop_assert!(
+                sim.forward_codes(&codes) == net.forward_codes(&codes),
+                "cfg {cfg:?}"
+            );
+        }
+        Outcome::Pass
+    });
+}
+
+#[test]
+fn mapped_netlist_equals_tables_on_random_vectors() {
+    check("LUT6 mapping preserves every neuron function", 12, |g| {
+        let cfg = random_config(g);
+        if cfg.validate().is_err() {
+            return Outcome::Pass;
+        }
+        let mut rng = g.rng.fork(2);
+        let net = Network::random(&cfg, &mut rng);
+        let tables = compile_network(&net, 1);
+        let mapped = map_network_of(&net, &tables, 1);
+        // Layer 0: drive random input codes bit-parallel and compare.
+        let lt = &tables.layers[0];
+        let n_in = cfg.widths[0];
+        let mut codes = vec![0u32; n_in * 64];
+        for c in codes.iter_mut() {
+            *c = rng.below(1usize << lt.in_bits) as u32;
+        }
+        let wires = |w: u32| -> u64 {
+            let (src, bit) = ((w / lt.in_bits) as usize, w % lt.in_bits);
+            let mut out = 0u64;
+            for s in 0..64 {
+                out |= (((codes[src * 64 + s] >> bit) & 1) as u64) << s;
+            }
+            out
+        };
+        let vals = mapped.layers[0].netlist.eval64(&wires);
+        for (j, bits) in mapped.layers[0].roots.iter().enumerate() {
+            for s in 0..64 {
+                let gathered: Vec<Vec<i32>> = (0..cfg.a_factor)
+                    .map(|a| {
+                        net.layers[0].indices[a][j]
+                            .iter()
+                            .map(|&src| codes[src * 64 + s] as i32)
+                            .collect()
+                    })
+                    .collect();
+                let nt = &lt.neurons[j];
+                let expect = match &nt.adder {
+                    Some(adder) => {
+                        let subs: Vec<i32> = nt
+                            .poly
+                            .iter()
+                            .enumerate()
+                            .map(|(a, t)| t.code_at(pack_poly_addr(&gathered[a], lt.in_bits)))
+                            .collect();
+                        adder.code_at(pack_adder_addr(&subs, lt.sub_bits))
+                    }
+                    None => nt.poly[0].code_at(pack_poly_addr(&gathered[0], lt.in_bits)),
+                };
+                let want = quant::to_twos_complement(expect, lt.out_bits);
+                let mut got = 0u32;
+                for (b, &node) in bits.iter().enumerate() {
+                    got |= (((vals[node as usize] >> s) & 1) as u32) << b;
+                }
+                prop_assert!(got == want, "neuron {j} sample {s}: {got} != {want}");
+            }
+        }
+        Outcome::Pass
+    });
+}
+
+#[test]
+fn pipeline_sim_matches_lutsim_for_both_strategies() {
+    check("pipeline simulation == combinational reference", 10, |g| {
+        let cfg = random_config(g);
+        if cfg.validate().is_err() {
+            return Outcome::Pass;
+        }
+        let mut rng = g.rng.fork(3);
+        let net = Network::random(&cfg, &mut rng);
+        let tables = compile_network(&net, 1);
+        let sim = LutSim::new(&net, &tables);
+        let inputs: Vec<Vec<i32>> = (0..8)
+            .map(|_| {
+                (0..cfg.widths[0]).map(|_| rng.below(1usize << cfg.beta[0]) as i32).collect()
+            })
+            .collect();
+        for strategy in [Strategy::Merged, Strategy::SeparateRegisters] {
+            let mut pipe = PipelineSim::new(&net, &tables, strategy);
+            let res = pipe.stream(&inputs);
+            for (inp, out) in inputs.iter().zip(&res.outputs) {
+                prop_assert!(out == &sim.forward_codes(inp), "{strategy:?}");
+            }
+            let expect_cycles = match strategy {
+                Strategy::Merged => cfg.n_layers(),
+                Strategy::SeparateRegisters => {
+                    cfg.n_layers() * if cfg.a_factor > 1 { 2 } else { 1 }
+                }
+            } as u32;
+            prop_assert!(
+                res.latency_cycles == expect_cycles,
+                "latency {} != {expect_cycles} for {strategy:?}",
+                res.latency_cycles
+            );
+        }
+        Outcome::Pass
+    });
+}
+
+#[test]
+fn addr_packing_is_bijective() {
+    check("table address packing round-trips", 100, |g| {
+        let beta = g.usize_in(1, 5) as u32;
+        let fan = g.usize_in(1, 4);
+        let mut out = vec![0i32; fan];
+        let size = 1usize << (beta * fan as u32);
+        let addr = g.rng.below(size);
+        unpack_poly_addr(addr, fan, beta, &mut out);
+        prop_assert!(pack_poly_addr(&out, beta) == addr, "poly addr {addr}");
+        let sub_bits = g.usize_in(2, 5) as u32;
+        let a = g.usize_in(1, 3);
+        let mut subs = vec![0i32; a];
+        let aaddr = g.rng.below(1usize << (sub_bits * a as u32));
+        unpack_adder_addr(aaddr, a, sub_bits, &mut subs);
+        prop_assert!(pack_adder_addr(&subs, sub_bits) == aaddr, "adder addr {aaddr}");
+        Outcome::Pass
+    });
+}
+
+#[test]
+fn support_reduction_preserves_function() {
+    check("BoolFn::support_reduce is semantics-preserving", 60, |g| {
+        let n = g.usize_in(2, 10) as u32;
+        let words = (1usize << n).div_ceil(64);
+        let mut bits = vec![0u64; words];
+        // Random function with limited support (makes reduction non-trivial).
+        let active: Vec<u32> = (0..n).filter(|_| g.bool()).collect();
+        let mut rng = g.rng.fork(9);
+        let lut: u64 = rng.next_u64();
+        for addr in 0..(1usize << n) {
+            let key: usize = active
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (((addr >> v) & 1) << i))
+                .sum();
+            if (lut >> (key % 64)) & 1 == 1 {
+                bits[addr / 64] |= 1 << (addr % 64);
+            }
+        }
+        let f = BoolFn::from_bits(n, bits);
+        let (red, kept) = f.support_reduce();
+        prop_assert!(kept.len() <= active.len().max(1), "support grew");
+        for _ in 0..50 {
+            let addr = rng.below(1usize << n);
+            let mut raddr = 0usize;
+            for (i, &v) in kept.iter().enumerate() {
+                raddr |= ((addr >> v) & 1) << i;
+            }
+            prop_assert!(
+                f.get(addr) == red.get(raddr),
+                "n={n} addr={addr} kept={kept:?}"
+            );
+        }
+        Outcome::Pass
+    });
+}
+
+#[test]
+fn quantizer_codes_monotonic_in_input() {
+    check("quantizer codes are monotone", 100, |g| {
+        let bits = g.usize_in(1, 8) as u32;
+        let scale = (g.rng.f32() * 4.0 + 0.01).max(0.05);
+        let a = g.f32_signed(8.0);
+        let b = a + g.rng.f32() * 4.0;
+        prop_assert!(
+            quant::unsigned_code(a, bits, scale) <= quant::unsigned_code(b, bits, scale),
+            "unsigned a={a} b={b}"
+        );
+        if bits >= 2 {
+            prop_assert!(
+                quant::signed_code(a, bits, scale) <= quant::signed_code(b, bits, scale),
+                "signed a={a} b={b}"
+            );
+        }
+        Outcome::Pass
+    });
+}
+
+#[test]
+fn wide_neuron_equals_sum_of_subneurons_eq2() {
+    // Paper Eq. (2): a fan-in AF dot product equals the sum of A fan-in-F
+    // partial dot products (checked in exact float before quantization).
+    check("Eq. (2) decomposition", 80, |g| {
+        let f = g.usize_in(1, 5);
+        let a = g.usize_in(1, 4);
+        let x = g.vec_f32(a * f, 2.0);
+        let w = g.vec_f32(a * f, 2.0);
+        let b: Vec<f32> = (0..a).map(|_| g.f32_signed(1.0)).collect();
+        let wide: f64 = x
+            .iter()
+            .zip(&w)
+            .map(|(xi, wi)| (*xi as f64) * (*wi as f64))
+            .sum::<f64>()
+            + b.iter().map(|v| *v as f64).sum::<f64>();
+        let parts: f64 = (0..a)
+            .map(|ai| {
+                x[ai * f..(ai + 1) * f]
+                    .iter()
+                    .zip(&w[ai * f..(ai + 1) * f])
+                    .map(|(xi, wi)| (*xi as f64) * (*wi as f64))
+                    .sum::<f64>()
+                    + b[ai] as f64
+            })
+            .sum();
+        prop_assert!((wide - parts).abs() < 1e-9, "wide {wide} vs parts {parts}");
+        Outcome::Pass
+    });
+}
