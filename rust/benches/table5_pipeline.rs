@@ -6,17 +6,31 @@
 //! Shape expectation: strategy (1) keeps F_max high at 2x the cycles;
 //! strategy (2) halves cycles and wins total latency at lower F_max.
 //! Cycle counts are additionally validated by the cycle-accurate pipeline
-//! simulator (not just the analytic model).
+//! simulator (not just the analytic model).  For each prepared model the
+//! software twin's throughput is reported twice — naive per-sample LutSim
+//! walk vs the compiled evaluation plan — as the plan-vs-naive comparison
+//! point for this workload.
+//!
+//! Requires trained artifacts (`make artifacts`) and the native PJRT
+//! runtime; skips cleanly without them.
+
+use std::time::Instant;
 
 use polylut_add::coordinator::FrozenModel;
 use polylut_add::fpga::Strategy;
 use polylut_add::harness;
 use polylut_add::runtime::Engine;
-use polylut_add::sim::PipelineSim;
+use polylut_add::sim::{PipelineSim, Scratch};
 use polylut_add::util::bench::table;
 
 fn main() {
-    let engine = Engine::cpu().expect("PJRT CPU client");
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skip table5: PJRT unavailable ({e:#})");
+            return;
+        }
+    };
     let mut rows = Vec::new();
     for d in [1u32, 2] {
         for a in [2usize, 3] {
@@ -52,6 +66,27 @@ fn main() {
                     format!("{:.0}", r.latency_ns),
                 ]);
             }
+
+            // Plan-vs-naive software-twin throughput on a 1k-sample batch.
+            let lsim = model.sim();
+            let batch: Vec<Vec<i32>> = (0..1000)
+                .map(|i| model.net.quantize_input(p.ds.test_row(i % p.ds.n_test())))
+                .collect();
+            let t0 = Instant::now();
+            let naive: usize =
+                batch.iter().map(|c| lsim.forward_codes_reference(c).len()).sum();
+            let t_naive = t0.elapsed().as_secs_f64();
+            let mut scratch = Scratch::for_plan(&model.plan);
+            let t1 = Instant::now();
+            let planned = model.plan.forward_batch(&batch, &mut scratch).len();
+            let t_plan = t1.elapsed().as_secs_f64();
+            assert_eq!(naive / model.plan.n_outputs(), planned);
+            eprintln!(
+                "[table5] {id} software twin, 1k samples: naive {:.0}/s vs plan {:.0}/s ({:.2}x)",
+                1000.0 / t_naive,
+                1000.0 / t_plan,
+                t_naive / t_plan
+            );
         }
     }
     table(

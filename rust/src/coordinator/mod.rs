@@ -29,24 +29,29 @@ use crate::meta::{Manifest, Role};
 use crate::nn::network::Network;
 use crate::runtime::{f32_literal, to_f32_vec, Engine, Executable};
 use crate::sim::lutsim::LutSim;
+use crate::sim::plan::EvalPlan;
 use crate::util::cli::Args;
-use crate::util::pool::parallel_map;
 use metrics::Metrics;
 
-/// A frozen deployable model: trained network + its compiled tables.
+/// A frozen deployable model: trained network + its compiled tables + the
+/// precompiled batched evaluation plan the LUT backend serves from.
 pub struct FrozenModel {
     pub net: Network,
     pub tables: NetworkTables,
+    pub plan: EvalPlan,
 }
 
 impl FrozenModel {
     pub fn from_network(net: Network, workers: usize) -> FrozenModel {
         let tables = crate::lut::tables::compile_network(&net, workers);
-        FrozenModel { net, tables }
+        let plan = EvalPlan::compile(&net, &tables);
+        FrozenModel { net, tables, plan }
     }
 
     pub fn sim(&self) -> LutSim<'_> {
-        LutSim::new(&self.net, &self.tables)
+        // Share the already-compiled plan — sim() is called in per-request
+        // assertion loops and must not recompile the tables each time.
+        LutSim::with_plan(&self.net, &self.tables, &self.plan)
     }
 }
 
@@ -131,9 +136,17 @@ impl Backend {
     /// Run a batch of feature vectors; returns per-sample logits.
     pub fn infer(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         match self {
-            Backend::Lut { model, workers } => Ok(parallel_map(xs, *workers, |_, x| {
-                model.sim().forward(x)
-            })),
+            Backend::Lut { model, workers } => {
+                let plan = &model.plan;
+                for x in xs {
+                    if x.len() != plan.n_features() {
+                        bail!("feature length {} != {}", x.len(), plan.n_features());
+                    }
+                }
+                // Blocked, allocation-free batched execution over the
+                // precompiled plan (parallel across blocks, not samples).
+                Ok(plan.forward_batch_f32(xs, *workers))
+            }
             Backend::Pjrt { engine, exe, params, batch, n_features, n_out } => {
                 let mut out = Vec::with_capacity(xs.len());
                 for chunk in xs.chunks(*batch) {
@@ -312,12 +325,9 @@ fn batcher_loop(
                     let pred = if n_classes == 1 {
                         (logits[0] > 0.0) as usize
                     } else {
-                        logits
-                            .iter()
-                            .enumerate()
-                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                            .map(|(i, _)| i)
-                            .unwrap_or(0)
+                        // NaN-safe: a poisoned logit must not panic the
+                        // batcher thread and drop every in-flight request.
+                        crate::util::argmax_f32(&logits)
                     };
                     let latency = req.enqueued.elapsed();
                     metrics.record_latency(latency.as_secs_f64() * 1e6);

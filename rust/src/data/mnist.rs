@@ -249,7 +249,7 @@ mod tests {
                 .min_by(|&a, &b| {
                     let da: f32 = row.iter().zip(&centroids[a]).map(|(x, c)| (x - c).powi(2)).sum();
                     let db: f32 = row.iter().zip(&centroids[b]).map(|(x, c)| (x - c).powi(2)).sum();
-                    da.partial_cmp(&db).unwrap()
+                    da.total_cmp(&db)
                 })
                 .unwrap();
             if best == ds.y_test[i] {

@@ -39,6 +39,13 @@ impl TruthTable {
         }
     }
 
+    /// Decode every word to an `i32` code in address order — the flat-table
+    /// layout `sim::plan` compiles into (decoding happens once here, keeping
+    /// sign handling off the evaluation hot path).
+    pub fn decoded(&self) -> impl Iterator<Item = i32> + '_ {
+        (0..self.size()).map(|addr| self.code_at(addr))
+    }
+
     /// Extract single output bit `b` as a bitvector truth table
     /// (one u64 per 64 addresses) — the mapper's input.
     pub fn bit_plane(&self, b: u32) -> Vec<u64> {
@@ -82,6 +89,26 @@ pub struct LayerTables {
     /// Layer output code width.
     pub out_bits: u32,
     pub signed_out: bool,
+}
+
+impl LayerTables {
+    /// Words per poly table in this layer: `2^{β·F}`.  In a flat per-layer
+    /// table vector, sub-neuron `(j, a)` starts at
+    /// `(j*A + a) * poly_stride()`.
+    pub fn poly_stride(&self) -> usize {
+        1usize << (self.in_bits * self.fan as u32)
+    }
+
+    /// Words per adder table: `2^{A·(β+1)}`, or 0 when `a_factor == 1`
+    /// (plain PolyLUT has no adder stage).  In a flat per-layer adder
+    /// vector, neuron `j` starts at `j * adder_stride(a)`.
+    pub fn adder_stride(&self, a_factor: usize) -> usize {
+        if a_factor > 1 {
+            1usize << (a_factor as u32 * self.sub_bits)
+        } else {
+            0
+        }
+    }
 }
 
 /// The full frozen network.

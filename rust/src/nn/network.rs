@@ -218,18 +218,13 @@ impl Network {
         codes.iter().map(|&c| c as f32 * step).collect()
     }
 
-    /// Predicted class (argmax; for binary: logit > 0).
+    /// Predicted class (argmax, NaN-safe; for binary: logit > 0).
     pub fn predict(&self, x: &[f32]) -> usize {
         let logits = self.forward(x);
         if self.cfg.n_classes == 1 {
             (logits[0] > 0.0) as usize
         } else {
-            logits
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap()
+            crate::util::argmax_f32(&logits)
         }
     }
 

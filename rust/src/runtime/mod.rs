@@ -37,7 +37,9 @@ impl Engine {
             .map_err(|e| anyhow!("host->device transfer: {e}"))
     }
 
-    /// Load + compile an HLO text file into an executable.
+    /// Load + compile an HLO text file into an executable.  The executable
+    /// keeps a clone of this engine so its host-literal entry points can use
+    /// the leak-free upload-and-borrow path.
     pub fn load_hlo(&self, path: &Path) -> Result<Executable> {
         let proto = xla::HloModuleProto::from_text_file(path)
             .with_context(|| format!("parsing HLO text {}", path.display()))?;
@@ -46,7 +48,7 @@ impl Engine {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe, name: path.display().to_string() })
+        Ok(Executable { exe, name: path.display().to_string(), engine: self.clone() })
     }
 }
 
@@ -56,28 +58,24 @@ impl Engine {
 pub struct Executable {
     exe: PjRtLoadedExecutable,
     name: String,
+    engine: Engine,
 }
 
 impl Executable {
-    /// Execute with host literals; returns the flattened output literals.
-    ///
-    /// NOTE: prefer [`Executable::run_via`] on hot loops — the vendored C
-    /// wrapper behind `execute()` *leaks every input device buffer*
-    /// (`buffer.release()` without a matching delete in xla_rs.cc); `run`
-    /// is fine for one-shot calls.
-    pub fn run(&self, args: &[Literal]) -> Result<Vec<Literal>> {
-        let outs = self
-            .exe
-            .execute::<Literal>(args)
-            .with_context(|| format!("executing {}", self.name))?;
-        self.flatten(outs)
+    /// Upload host literals to Rust-owned device buffers (freed on drop).
+    /// Every host-literal entry point goes through this + `execute_b`: the
+    /// vendored C wrapper behind the raw `execute()` entry point *leaks
+    /// every input device buffer* (`buffer.release()` without a matching
+    /// delete in xla_rs.cc), so nothing here ever calls it.
+    fn upload(&self, args: &[Literal]) -> Result<Vec<PjRtBuffer>> {
+        args.iter().map(|l| self.engine.to_buffer(l)).collect()
     }
 
-    /// Leak-free execution: upload the literals to Rust-owned device buffers
-    /// (freed on drop) and call `execute_b`, which borrows them.
-    pub fn run_via(&self, engine: &Engine, args: &[Literal]) -> Result<Vec<Literal>> {
-        let bufs: Vec<PjRtBuffer> =
-            args.iter().map(|l| engine.to_buffer(l)).collect::<Result<_>>()?;
+    /// Execute with host literals; returns the flattened output literals.
+    /// Leak-free: inputs go through [`Executable::upload`] and the borrowing
+    /// `execute_b` path, so no caller can hit the leaking wrapper.
+    pub fn run(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        let bufs = self.upload(args)?;
         let refs: Vec<&PjRtBuffer> = bufs.iter().collect();
         self.run_b(&refs)
     }
@@ -92,8 +90,14 @@ impl Executable {
     }
 
     /// Execute with host literals and keep outputs as raw device buffers.
+    /// Same leak-free upload-and-borrow path as [`Executable::run`].
     pub fn run_buffers(&self, args: &[Literal]) -> Result<Vec<PjRtBuffer>> {
-        let mut outs = self.exe.execute::<Literal>(args)?;
+        let bufs = self.upload(args)?;
+        let refs: Vec<&PjRtBuffer> = bufs.iter().collect();
+        let mut outs = self
+            .exe
+            .execute_b(&refs)
+            .with_context(|| format!("executing {}", self.name))?;
         if outs.is_empty() {
             bail!("{}: no replica outputs", self.name);
         }

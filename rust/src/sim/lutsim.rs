@@ -2,24 +2,69 @@
 //! semantics), independent of the float model.  This is the software twin of
 //! the FPGA datapath and the reference for the Verilog testbench; a property
 //! test pins it bit-exactly to `Network::forward_codes`.
+//!
+//! Since the evaluation-plan engine landed, `LutSim` is a thin compatibility
+//! shim: construction compiles an [`EvalPlan`] and every forward goes
+//! through it.  The original pointer-chasing walk survives as
+//! [`LutSim::forward_codes_reference`] — an independent implementation the
+//! tests (and the `micro_hotpaths` bench baseline) cross-check the plan
+//! against.
 
 use crate::lut::tables::{pack_adder_addr, pack_poly_addr, NetworkTables};
 use crate::nn::network::Network;
+use crate::sim::plan::{EvalPlan, Scratch};
+
+/// Owned-or-borrowed plan storage: `LutSim::new` compiles its own plan;
+/// callers that already hold one (e.g. `FrozenModel`) share it instead of
+/// recompiling on every construction.
+enum PlanStore<'a> {
+    Owned(Box<EvalPlan>),
+    Shared(&'a EvalPlan),
+}
 
 /// Simulator over a frozen network (borrows the trained network only for
 /// its connectivity and input quantizer).
 pub struct LutSim<'a> {
     pub net: &'a Network,
     pub tables: &'a NetworkTables,
+    plan: PlanStore<'a>,
 }
 
 impl<'a> LutSim<'a> {
     pub fn new(net: &'a Network, tables: &'a NetworkTables) -> Self {
-        LutSim { net, tables }
+        let plan = PlanStore::Owned(Box::new(EvalPlan::compile(net, tables)));
+        LutSim { net, tables, plan }
     }
 
-    /// Table-only forward pass over input codes.
+    /// Build a shim over an already-compiled plan (no recompilation).
+    pub fn with_plan(
+        net: &'a Network,
+        tables: &'a NetworkTables,
+        plan: &'a EvalPlan,
+    ) -> Self {
+        LutSim { net, tables, plan: PlanStore::Shared(plan) }
+    }
+
+    /// The compiled evaluation plan (the batched hot path).
+    pub fn plan(&self) -> &EvalPlan {
+        match &self.plan {
+            PlanStore::Owned(p) => p,
+            PlanStore::Shared(p) => p,
+        }
+    }
+
+    /// Table-only forward pass over input codes (plan-backed).
     pub fn forward_codes(&self, in_codes: &[i32]) -> Vec<i32> {
+        let plan = self.plan();
+        let mut scratch = Scratch::for_plan(plan);
+        plan.forward_codes(in_codes, &mut scratch)
+    }
+
+    /// The original naive walk: re-gathers fan-in indices through the nested
+    /// `indices[a][j]` vectors and allocates per neuron.  Kept as an
+    /// independent reference implementation — the plan is tested bit-exact
+    /// against it, and `micro_hotpaths` uses it as the pre-plan baseline.
+    pub fn forward_codes_reference(&self, in_codes: &[i32]) -> Vec<i32> {
         let cfg = &self.net.cfg;
         let mut codes = in_codes.to_vec();
         let mut gathered: Vec<i32> = Vec::new();
@@ -51,30 +96,25 @@ impl<'a> LutSim<'a> {
 
     /// Forward from raw [0,1] features; returns dequantized logits.
     pub fn forward(&self, x: &[f32]) -> Vec<f32> {
-        let codes = self.forward_codes(&self.net.quantize_input(x));
-        let l = self.net.cfg.n_layers() - 1;
-        let step = self.net.out_step(l);
-        codes.iter().map(|&c| c as f32 * step).collect()
+        let plan = self.plan();
+        let mut scratch = Scratch::for_plan(plan);
+        plan.forward(x, &mut scratch)
     }
 
+    /// Predicted class (argmax over logits, NaN-safe; binary: logit > 0).
     pub fn predict(&self, x: &[f32]) -> usize {
-        let logits = self.forward(x);
-        if self.net.cfg.n_classes == 1 {
-            (logits[0] > 0.0) as usize
-        } else {
-            logits
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap()
-        }
+        let plan = self.plan();
+        let mut scratch = Scratch::for_plan(plan);
+        plan.predict(x, &mut scratch)
     }
 
     pub fn accuracy(&self, ds: &crate::data::Dataset, limit: usize) -> f64 {
         let n = if limit == 0 { ds.n_test() } else { ds.n_test().min(limit) };
-        let correct =
-            (0..n).filter(|&i| self.predict(ds.test_row(i)) == ds.y_test[i]).count();
+        let plan = self.plan();
+        let mut scratch = Scratch::for_plan(plan);
+        let correct = (0..n)
+            .filter(|&i| plan.predict(ds.test_row(i), &mut scratch) == ds.y_test[i])
+            .count();
         correct as f64 / n.max(1) as f64
     }
 }
@@ -87,7 +127,8 @@ mod tests {
     use crate::util::rng::Rng;
 
     /// Bit-exact equivalence: tables == float fixed-point model, for every
-    /// A and degree combination we ship.
+    /// A and degree combination we ship — through both the plan-backed path
+    /// and the naive reference walk.
     #[test]
     fn lutsim_equals_network_forward() {
         for (a, d) in [(1, 1), (2, 1), (3, 1), (1, 2), (2, 2), (2, 3)] {
@@ -99,11 +140,9 @@ mod tests {
             for _ in 0..200 {
                 let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
                 let codes = net.quantize_input(&x);
-                assert_eq!(
-                    sim.forward_codes(&codes),
-                    net.forward_codes(&codes),
-                    "A={a} D={d}"
-                );
+                let want = net.forward_codes(&codes);
+                assert_eq!(sim.forward_codes(&codes), want, "A={a} D={d}");
+                assert_eq!(sim.forward_codes_reference(&codes), want, "A={a} D={d}");
             }
         }
     }

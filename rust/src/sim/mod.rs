@@ -1,8 +1,26 @@
-//! Deployed-semantics simulators: the LUT-network evaluator (software twin
+//! Deployed-semantics simulators: the LUT-network evaluators (software twin
 //! of the FPGA datapath) and the cycle-accurate pipeline model.
+//!
+//! Three evaluators, one contract (bit-exact with `Network::forward_codes`):
+//!
+//! - [`plan::EvalPlan`] — the **hot path**.  A precompiled execution plan:
+//!   per layer, one flat `Vec<i32>` of decoded table words (sub-neuron
+//!   `(j, a)` at offset `(j·A + a)·2^{β·F}`, adder table of neuron `j` at
+//!   `j·2^{A(β+1)}`) plus one flat gather-index array, executed over
+//!   reusable double-buffered [`plan::Scratch`] so a forward pass performs
+//!   no heap allocation.  Batched entry points walk samples in blocks for
+//!   cache locality and fan blocks out over worker threads; the
+//!   coordinator's `Backend::Lut` serves from this.
+//! - [`lutsim::LutSim`] — compatibility shim over the plan, plus the
+//!   original naive table walk (`forward_codes_reference`) kept as an
+//!   independent cross-check and benchmark baseline.
+//! - [`cycle::PipelineSim`] — clock-accurate pipeline-register model
+//!   (paper Fig. 5) validating latency/II claims, not throughput.
 
 pub mod cycle;
 pub mod lutsim;
+pub mod plan;
 
 pub use cycle::PipelineSim;
 pub use lutsim::LutSim;
+pub use plan::{EvalPlan, Scratch};

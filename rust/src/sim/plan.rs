@@ -1,0 +1,389 @@
+//! Evaluation-plan compiler + batched LUT execution engine.
+//!
+//! [`super::lutsim::LutSim`] (the reference twin) walks the frozen network
+//! through three levels of `Vec` indirection per lookup
+//! (`indices[a][j][slot]`, `layers[l].neurons[j].poly[a]`) and allocates per
+//! neuron per sample.  That is fine for a property-test reference but is the
+//! wrong shape for a serving hot path.  [`EvalPlan`] flattens everything
+//! once, ahead of time:
+//!
+//! - **Flat decoded tables** — per layer, one contiguous `Vec<i32>` holding
+//!   every poly table back to back (sub-neuron `(j, a)` at offset
+//!   `(j*A + a) * poly_stride`, `poly_stride = 2^{β·F}`) and one for the
+//!   adder tables (neuron `j` at `j * adder_stride`,
+//!   `adder_stride = 2^{A·(β+1)}`).  Words are decoded from raw
+//!   two's-complement to `i32` codes at compile time, so the hot loop is a
+//!   pure gather-shift-index with no sign handling.
+//! - **Flat gather indices** — per layer, one `Vec<u32>` with the fan-in
+//!   source positions of sub-neuron `(j, a)` at `(j*A + a) * F`; no nested
+//!   `Vec` pointer-chasing while gathering.
+//! - **Reusable scratch** — [`Scratch`] carries two code buffers (double
+//!   buffered across layers) plus the sub-neuron staging slice, so a forward
+//!   pass performs **zero** heap allocation.
+//!
+//! Batched execution ([`EvalPlan::forward_batch`] /
+//! [`EvalPlan::forward_batch_f32`]) walks samples in blocks so the decoded
+//! tables stay hot in cache, and the f32 entry point fans blocks out over
+//! worker threads — this is what `Backend::Lut` in the coordinator serves
+//! from.  Bit-exactness against `Network::forward_codes` (and the naive
+//! `LutSim` reference) is pinned by tests over the same `(A, degree)` grid
+//! the simulator uses.
+
+use crate::lut::tables::NetworkTables;
+use crate::nn::network::Network;
+use crate::nn::quant::unsigned_code;
+use crate::util::pool::parallel_map;
+
+/// Upper bound on samples per block in batched execution: large enough to
+/// amortize scratch setup, small enough that a block's working set stays
+/// cache-resident.  Small batches are split finer so every worker gets a
+/// block (see [`EvalPlan::forward_batch_f32`]).
+pub const BATCH_BLOCK: usize = 32;
+
+/// One layer of the compiled plan (all tables decoded, all indices flat).
+struct LayerPlan {
+    n_out: usize,
+    /// Sub-neurons per neuron (the config's A factor).
+    a: usize,
+    fan: usize,
+    /// Input code width β of this layer.
+    in_bits: u32,
+    /// Sub-neuron output width β+1 (adder address field width).
+    sub_bits: u32,
+    /// Words per poly table: `2^{β·F}`.
+    poly_stride: usize,
+    /// Words per adder table: `2^{A·(β+1)}` (0 when A == 1: no adder stage).
+    adder_stride: usize,
+    /// Fan-in sources, flat: sub-neuron `(j, a)` slot `s` at
+    /// `(j*a_factor + a)*fan + s`.
+    gather: Vec<u32>,
+    /// Decoded poly tables, flat: sub-neuron `(j, a)` at
+    /// `(j*a_factor + a)*poly_stride`.
+    poly: Vec<i32>,
+    /// Decoded adder tables, flat: neuron `j` at `j*adder_stride`
+    /// (empty when A == 1).
+    adder: Vec<i32>,
+}
+
+/// A frozen network compiled into a flat, allocation-free execution plan.
+/// Self-contained (owns its tables) — `Send + Sync`, share behind an `Arc`.
+pub struct EvalPlan {
+    layers: Vec<LayerPlan>,
+    widths: Vec<usize>,
+    max_width: usize,
+    a_factor: usize,
+    /// Input quantizer width (β of layer 0).
+    in_bits: u32,
+    /// Dequantization step of the output codes.
+    out_step: f32,
+    n_classes: usize,
+}
+
+/// Reusable per-thread scratch for [`EvalPlan`] execution: two code buffers
+/// double-buffered across layers plus the sub-neuron staging slice.
+pub struct Scratch {
+    cur: Vec<i32>,
+    next: Vec<i32>,
+    subs: Vec<i32>,
+}
+
+impl Scratch {
+    pub fn for_plan(plan: &EvalPlan) -> Scratch {
+        Scratch {
+            cur: vec![0; plan.max_width],
+            next: vec![0; plan.max_width],
+            subs: vec![0; plan.a_factor],
+        }
+    }
+}
+
+impl EvalPlan {
+    /// Flatten `net`'s connectivity and `tables`' words into a plan.
+    pub fn compile(net: &Network, tables: &NetworkTables) -> EvalPlan {
+        let cfg = &net.cfg;
+        let a = cfg.a_factor;
+        let mut layers = Vec::with_capacity(tables.layers.len());
+        for (l, lt) in tables.layers.iter().enumerate() {
+            let n_out = cfg.widths[l + 1];
+            let fan = lt.fan;
+            let poly_stride = lt.poly_stride();
+            let adder_stride = lt.adder_stride(a);
+            let has_adder = adder_stride != 0;
+
+            let mut gather = Vec::with_capacity(n_out * a * fan);
+            let mut poly = Vec::with_capacity(n_out * a * poly_stride);
+            let mut adder = Vec::with_capacity(n_out * adder_stride);
+            for (j, nt) in lt.neurons.iter().enumerate() {
+                debug_assert_eq!(nt.poly.len(), a);
+                debug_assert_eq!(nt.adder.is_some(), has_adder);
+                for (ai, t) in nt.poly.iter().enumerate() {
+                    debug_assert_eq!(t.words.len(), poly_stride);
+                    gather.extend(net.layers[l].indices[ai][j].iter().map(|&s| s as u32));
+                    poly.extend(t.decoded());
+                }
+                if let Some(at) = &nt.adder {
+                    debug_assert_eq!(at.words.len(), adder_stride);
+                    adder.extend(at.decoded());
+                }
+            }
+            layers.push(LayerPlan {
+                n_out,
+                a,
+                fan,
+                in_bits: lt.in_bits,
+                sub_bits: lt.sub_bits,
+                poly_stride,
+                adder_stride,
+                gather,
+                poly,
+                adder,
+            });
+        }
+        EvalPlan {
+            layers,
+            widths: cfg.widths.clone(),
+            max_width: cfg.widths.iter().copied().max().unwrap_or(0),
+            a_factor: a,
+            in_bits: cfg.beta[0],
+            out_step: net.out_step(cfg.n_layers() - 1),
+            n_classes: cfg.n_classes,
+        }
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.widths[0]
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.widths[self.widths.len() - 1]
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
+    /// Quantize raw [0,1] features to input codes (mirrors
+    /// `Network::quantize_input`).
+    pub fn quantize_input(&self, x: &[f32]) -> Vec<i32> {
+        x.iter().map(|&v| unsigned_code(v, self.in_bits, 1.0)).collect()
+    }
+
+    /// Core loop: consumes input codes from `scratch.cur[..n_features]`,
+    /// leaves output codes in `scratch.cur[..n_outputs]`.  Allocation-free.
+    fn execute(&self, scratch: &mut Scratch) {
+        let Scratch { cur, next, subs } = scratch;
+        for lp in &self.layers {
+            let in_bits = lp.in_bits;
+            let in_mask = (1usize << in_bits) - 1;
+            let sub_mask = (1usize << lp.sub_bits) - 1;
+            let mut gbase = 0usize; // cursor into lp.gather
+            let mut tbase = 0usize; // cursor into lp.poly
+            for j in 0..lp.n_out {
+                if lp.adder_stride == 0 {
+                    // A == 1: one fused table per neuron.
+                    let srcs = &lp.gather[gbase..gbase + lp.fan];
+                    let mut addr = 0usize;
+                    for (s, &src) in srcs.iter().enumerate() {
+                        addr |=
+                            (cur[src as usize] as usize & in_mask) << (s as u32 * in_bits);
+                    }
+                    next[j] = lp.poly[tbase + addr];
+                    gbase += lp.fan;
+                    tbase += lp.poly_stride;
+                } else {
+                    for sub in subs[..lp.a].iter_mut() {
+                        let srcs = &lp.gather[gbase..gbase + lp.fan];
+                        let mut addr = 0usize;
+                        for (s, &src) in srcs.iter().enumerate() {
+                            addr |= (cur[src as usize] as usize & in_mask)
+                                << (s as u32 * in_bits);
+                        }
+                        *sub = lp.poly[tbase + addr];
+                        gbase += lp.fan;
+                        tbase += lp.poly_stride;
+                    }
+                    let mut aaddr = 0usize;
+                    for (ai, &sc) in subs[..lp.a].iter().enumerate() {
+                        aaddr |= (sc as usize & sub_mask) << (ai as u32 * lp.sub_bits);
+                    }
+                    next[j] = lp.adder[j * lp.adder_stride + aaddr];
+                }
+            }
+            std::mem::swap(cur, next);
+        }
+    }
+
+    /// Table-only forward pass over input codes, writing into `scratch`.
+    /// Returns the output-code slice (valid until the next call).
+    pub fn forward_codes_into<'s>(
+        &self,
+        in_codes: &[i32],
+        scratch: &'s mut Scratch,
+    ) -> &'s [i32] {
+        assert_eq!(in_codes.len(), self.n_features(), "input width mismatch");
+        scratch.cur[..in_codes.len()].copy_from_slice(in_codes);
+        self.execute(scratch);
+        &scratch.cur[..self.n_outputs()]
+    }
+
+    /// Convenience: forward pass returning owned output codes.
+    pub fn forward_codes(&self, in_codes: &[i32], scratch: &mut Scratch) -> Vec<i32> {
+        self.forward_codes_into(in_codes, scratch).to_vec()
+    }
+
+    /// Forward from raw [0,1] features; returns dequantized logits.
+    pub fn forward(&self, x: &[f32], scratch: &mut Scratch) -> Vec<f32> {
+        assert_eq!(x.len(), self.n_features(), "feature width mismatch");
+        // A scratch built for a smaller plan would silently truncate the
+        // zip below and produce plausible-but-wrong logits — reject it.
+        assert!(scratch.cur.len() >= self.max_width, "scratch built for a smaller plan");
+        for (slot, &v) in scratch.cur.iter_mut().zip(x) {
+            *slot = unsigned_code(v, self.in_bits, 1.0);
+        }
+        self.execute(scratch);
+        scratch.cur[..self.n_outputs()].iter().map(|&c| c as f32 * self.out_step).collect()
+    }
+
+    /// Predicted class (argmax; for binary: logit > 0). NaN-safe.
+    pub fn predict(&self, x: &[f32], scratch: &mut Scratch) -> usize {
+        let logits = self.forward(x, scratch);
+        if self.n_classes == 1 {
+            (logits[0] > 0.0) as usize
+        } else {
+            crate::util::argmax_f32(&logits)
+        }
+    }
+
+    /// Batched code-level forward pass: one scratch, sequential samples.
+    pub fn forward_batch(&self, xs: &[Vec<i32>], scratch: &mut Scratch) -> Vec<Vec<i32>> {
+        xs.iter().map(|x| self.forward_codes_into(x, scratch).to_vec()).collect()
+    }
+
+    /// Batched feature-level forward pass: the serving hot path.  Walks the
+    /// batch in blocks (at most [`BATCH_BLOCK`] samples each, split finer so
+    /// a small batch still yields one block per worker) and fans the blocks
+    /// out over `workers` threads (one scratch per block; ragged final block
+    /// and empty batches handled).  Output order matches `xs`.
+    pub fn forward_batch_f32(&self, xs: &[Vec<f32>], workers: usize) -> Vec<Vec<f32>> {
+        let block = if workers > 1 {
+            xs.len().div_ceil(workers).clamp(1, BATCH_BLOCK)
+        } else {
+            BATCH_BLOCK
+        };
+        let blocks: Vec<&[Vec<f32>]> = xs.chunks(block).collect();
+        let per_block: Vec<Vec<Vec<f32>>> = parallel_map(&blocks, workers, |_, block| {
+            let mut scratch = Scratch::for_plan(self);
+            block.iter().map(|x| self.forward(x, &mut scratch)).collect()
+        });
+        per_block.into_iter().flatten().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::tables::compile_network;
+    use crate::nn::config;
+    use crate::sim::lutsim::LutSim;
+    use crate::util::rng::Rng;
+
+    /// The same `(A, degree)` grid `lutsim_equals_network_forward` pins.
+    const GRID: [(usize, u32); 6] = [(1, 1), (2, 1), (3, 1), (1, 2), (2, 2), (2, 3)];
+
+    fn grid_net(a: usize, d: u32) -> (Network, NetworkTables) {
+        let cfg = config::uniform("plan-t", &[8, 6, 3], 2, 2, 3, 3, 3, d, a, 3);
+        let net = Network::random(&cfg, &mut Rng::new(a as u64 * 100 + d as u64));
+        let tables = compile_network(&net, 1);
+        (net, tables)
+    }
+
+    /// Bit-exactness: plan == naive LutSim reference == fixed-point model,
+    /// across the full (A, degree) grid.
+    #[test]
+    fn plan_equals_network_and_reference_on_grid() {
+        for (a, d) in GRID {
+            let (net, tables) = grid_net(a, d);
+            let plan = EvalPlan::compile(&net, &tables);
+            let sim = LutSim::new(&net, &tables);
+            let mut scratch = Scratch::for_plan(&plan);
+            let mut rng = Rng::new(5);
+            for _ in 0..200 {
+                let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+                let codes = net.quantize_input(&x);
+                let want = net.forward_codes(&codes);
+                assert_eq!(plan.forward_codes(&codes, &mut scratch), want, "A={a} D={d}");
+                assert_eq!(sim.forward_codes_reference(&codes), want, "A={a} D={d}");
+                // Dequantized logits agree with the model too.
+                assert_eq!(plan.forward(&x, &mut scratch), net.forward(&x), "A={a} D={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matches_per_sample_with_ragged_final_block() {
+        let (net, tables) = grid_net(2, 2);
+        let plan = EvalPlan::compile(&net, &tables);
+        let mut rng = Rng::new(11);
+        // Deliberately not a multiple of BATCH_BLOCK: final block is ragged.
+        let n = 2 * BATCH_BLOCK + 7;
+        let xs: Vec<Vec<f32>> =
+            (0..n).map(|_| (0..8).map(|_| rng.f32()).collect()).collect();
+        for workers in [1, 3] {
+            let batched = plan.forward_batch_f32(&xs, workers);
+            assert_eq!(batched.len(), n);
+            let mut scratch = Scratch::for_plan(&plan);
+            for (x, got) in xs.iter().zip(&batched) {
+                assert_eq!(got, &plan.forward(x, &mut scratch), "workers={workers}");
+            }
+        }
+        // Code-level batch path agrees as well.
+        let codes: Vec<Vec<i32>> = xs.iter().map(|x| net.quantize_input(x)).collect();
+        let mut scratch = Scratch::for_plan(&plan);
+        let batch_codes = plan.forward_batch(&codes, &mut scratch);
+        for (c, got) in codes.iter().zip(&batch_codes) {
+            assert_eq!(got, &net.forward_codes(c));
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let (net, tables) = grid_net(2, 1);
+        let plan = EvalPlan::compile(&net, &tables);
+        assert!(plan.forward_batch_f32(&[], 4).is_empty());
+        let mut scratch = Scratch::for_plan(&plan);
+        assert!(plan.forward_batch(&[], &mut scratch).is_empty());
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic() {
+        let (net, tables) = grid_net(3, 1);
+        let plan = EvalPlan::compile(&net, &tables);
+        let mut scratch = Scratch::for_plan(&plan);
+        let mut rng = Rng::new(3);
+        let xs: Vec<Vec<f32>> =
+            (0..8).map(|_| (0..8).map(|_| rng.f32()).collect()).collect();
+        // Interleave two passes over the same inputs through one scratch:
+        // results must not depend on scratch history.
+        let first: Vec<Vec<f32>> = xs.iter().map(|x| plan.forward(x, &mut scratch)).collect();
+        let second: Vec<Vec<f32>> =
+            xs.iter().rev().map(|x| plan.forward(x, &mut scratch)).collect();
+        for (a, b) in first.iter().zip(second.iter().rev()) {
+            assert_eq!(a, b);
+        }
+        let _ = net;
+    }
+
+    #[test]
+    fn predict_handles_binary_and_multiclass() {
+        let (net, tables) = grid_net(2, 1);
+        let plan = EvalPlan::compile(&net, &tables);
+        let mut scratch = Scratch::for_plan(&plan);
+        let mut rng = Rng::new(7);
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+            let p = plan.predict(&x, &mut scratch);
+            assert!(p < 3);
+            assert_eq!(p, net.predict(&x));
+        }
+    }
+}

@@ -74,13 +74,13 @@ impl Bench {
             std::hint::black_box(f());
             samples_ns.push(s.elapsed().as_nanos() as f64);
         }
-        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples_ns.sort_by(f64::total_cmp);
         let n = samples_ns.len();
         let median = samples_ns[n / 2];
         let mean = samples_ns.iter().sum::<f64>() / n as f64;
         let p95 = samples_ns[(n as f64 * 0.95) as usize % n];
         let mut devs: Vec<f64> = samples_ns.iter().map(|x| (x - median).abs()).collect();
-        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        devs.sort_by(f64::total_cmp);
         let mad = devs[n / 2];
         let st = Stats { samples: n, median_ns: median, mean_ns: mean, p95_ns: p95, mad_ns: mad };
         println!(

@@ -8,3 +8,34 @@ pub mod json;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+
+/// NaN-safe argmax over f32 logits (total order: NaN sorts above +inf, so a
+/// NaN logit can never panic the serving path the way
+/// `partial_cmp().unwrap()` did).  Returns 0 for an empty slice.
+pub fn argmax_f32(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax_f32(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax_f32(&[-1.0]), 0);
+        assert_eq!(argmax_f32(&[]), 0);
+    }
+
+    #[test]
+    fn argmax_does_not_panic_on_nan() {
+        // total_cmp puts NaN above every number — deterministic, no panic.
+        assert_eq!(argmax_f32(&[1.0, f32::NAN, 2.0]), 1);
+        assert_eq!(argmax_f32(&[f32::NAN, f32::NAN]), 1);
+        assert_eq!(argmax_f32(&[1.0, 2.0, f32::NEG_INFINITY]), 1);
+    }
+}

@@ -57,8 +57,8 @@ fn rust_network_matches_jax_eval_graph() {
                 "sample {i} logit {k}: rust {a} vs jax {b_}"
             );
         }
-        let am_r = ours.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
-        let am_j = jax.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        let am_r = polylut_add::util::argmax_f32(&ours);
+        let am_j = polylut_add::util::argmax_f32(jax);
         if am_r != am_j {
             mismatch += 1;
         }

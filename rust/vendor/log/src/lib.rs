@@ -1,0 +1,92 @@
+//! Minimal in-repo equivalent of the `log` facade (offline image; no
+//! registry).  The workspace only emits `error!` / `warn!` (plus occasional
+//! `info!` / `debug!` / `trace!`); messages go straight to stderr with a
+//! level prefix.  `RUST_LOG=off` silences everything; `RUST_LOG=debug` /
+//! `RUST_LOG=trace` enable the verbose levels.
+
+/// Log levels, ordered by severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+/// Is `level` enabled under the `RUST_LOG` environment variable?
+/// Default (unset): Error/Warn/Info on, Debug/Trace off.
+pub fn enabled(level: Level) -> bool {
+    let max = match std::env::var("RUST_LOG").ok().as_deref() {
+        Some("off") | Some("none") => return false,
+        Some("error") => Level::Error,
+        Some("warn") => Level::Warn,
+        Some("debug") => Level::Debug,
+        Some("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    level <= max
+}
+
+#[doc(hidden)]
+pub fn __log(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Error, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Warn, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Info, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Debug, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__log($crate::Level::Trace, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_levels() {
+        // Without RUST_LOG set the severe levels are on, verbose off.
+        if std::env::var("RUST_LOG").is_err() {
+            assert!(enabled(Level::Error));
+            assert!(enabled(Level::Warn));
+            assert!(!enabled(Level::Trace));
+        }
+    }
+
+    #[test]
+    fn macros_do_not_panic() {
+        error!("e {}", 1);
+        warn!("w {}", 2);
+        info!("i {}", 3);
+        debug!("d {}", 4);
+        trace!("t {}", 5);
+    }
+}
