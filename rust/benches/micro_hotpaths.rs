@@ -22,7 +22,7 @@ use polylut_add::lut::tables::compile_neuron;
 use polylut_add::nn::config;
 use polylut_add::nn::network::Network;
 use polylut_add::runtime::Engine;
-use polylut_add::sim::{LutSim, Scratch};
+use polylut_add::sim::{BitsliceNet, EvalPlan, LutSim, Scratch};
 use polylut_add::util::bench::Bench;
 use polylut_add::util::pool::default_workers;
 use polylut_add::util::rng::Rng;
@@ -63,7 +63,9 @@ fn main() {
         polylut_add::lut::compile_network(&net, default_workers())
     });
 
-    // L3 hot path 2: LUT6 technology mapping.
+    // L3 hot path 2: LUT6 technology mapping (bind one mapping for the
+    // bitslice engine below instead of re-mapping there).
+    let mapped = polylut_add::lut::map_network_of(&net, &tables, default_workers());
     b.measure("map/network (LUT6, parallel)", || {
         polylut_add::lut::map_network_of(&net, &tables, default_workers())
     });
@@ -101,6 +103,62 @@ fn main() {
         st_naive.median_ns / st_batch.median_ns,
         st_naive.median_ns / st_batch_mt.median_ns,
         default_workers()
+    );
+
+    // Bitsliced 64-lane engine on the same (deep-table, βF=12) geometry:
+    // honest crossover data — the plan's cache-resident table reads are hard
+    // to beat when each table bit maps to ~2^{βF-6} LUT6s.
+    let bits = BitsliceNet::from_mapped(&net, &tables, &mapped);
+    let bst = bits.stats();
+    println!(
+        "  bitslice engine: {} nodes, {} solo + {} grouped LUT ops ({} groups), {} mux ops",
+        bst.nodes, bst.lut_ops, bst.grouped_luts, bst.groups, bst.mux_ops
+    );
+    let mut bscratch = bits.scratch();
+    let st_bits = b.measure("bitslice/forward_batch x1000 (64-lane, 1 thread)", || {
+        bits.forward_batch(&code_rows, &mut bscratch).len()
+    });
+    println!(
+        "  -> bitslice vs plan on 1k batch ({}, 2^12 tables): {:.2}x",
+        net.cfg.name,
+        st_batch.median_ns / st_bits.median_ns
+    );
+
+    // The acceptance comparison for the bitsliced engine: the paper's
+    // Table IV Add2 geometry (small fan-in, βF = 6 → every table bit is a
+    // single LUT6 — the design point PolyLUT-Add optimizes for).  1024
+    // samples = 16 full 64-lane words, plan vs bitslice, single thread.
+    let cfg4 = config::nid_add2();
+    let net4 = Network::random(&cfg4, &mut Rng::new(0xADD2));
+    let tables4 = polylut_add::lut::compile_network(&net4, default_workers());
+    let plan4 = EvalPlan::compile(&net4, &tables4);
+    let bits4 = BitsliceNet::compile(&net4, &tables4, default_workers());
+    let mut rng4 = Rng::new(41);
+    let rows4: Vec<Vec<i32>> = (0..1024)
+        .map(|_| {
+            let x: Vec<f32> = (0..cfg4.widths[0]).map(|_| rng4.f32()).collect();
+            net4.quantize_input(&x)
+        })
+        .collect();
+    let mut pscratch4 = Scratch::for_plan(&plan4);
+    let st_plan4 = b.measure("plan/forward_batch x1024 (nid-t4, βF=6)", || {
+        plan4.forward_batch(&rows4, &mut pscratch4).len()
+    });
+    let mut bscratch4 = bits4.scratch();
+    let st_bits4 = b.measure("bitslice/forward_batch x1024 (nid-t4, βF=6)", || {
+        bits4.forward_batch(&rows4, &mut bscratch4).len()
+    });
+    // Bit-exactness of the two engines on this batch (also pinned by tests).
+    assert_eq!(
+        bits4.forward_batch(&rows4, &mut bscratch4),
+        plan4.forward_batch(&rows4, &mut pscratch4),
+        "engines disagree on nid-t4"
+    );
+    println!(
+        "  -> bitslice speedup vs plan on 1024-sample batch (nid-t4): {:.2}x ({:.0} vs {:.0} samples/s)",
+        st_plan4.median_ns / st_bits4.median_ns,
+        st_bits4.throughput(1024.0),
+        st_plan4.throughput(1024.0)
     );
 
     // Fixed-point float model for comparison.

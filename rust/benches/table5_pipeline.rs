@@ -67,7 +67,8 @@ fn main() {
                 ]);
             }
 
-            // Plan-vs-naive software-twin throughput on a 1k-sample batch.
+            // Engine comparison on a 1k-sample batch: naive per-sample walk
+            // vs the evaluation plan vs the bitsliced 64-lane engine.
             let lsim = model.sim();
             let batch: Vec<Vec<i32>> = (0..1000)
                 .map(|i| model.net.quantize_input(p.ds.test_row(i % p.ds.n_test())))
@@ -81,11 +82,22 @@ fn main() {
             let planned = model.plan.forward_batch(&batch, &mut scratch).len();
             let t_plan = t1.elapsed().as_secs_f64();
             assert_eq!(naive / model.plan.n_outputs(), planned);
+            let mut bscratch = model.bitslice.scratch();
+            let t2 = Instant::now();
+            let bitsliced = model.bitslice.forward_batch(&batch, &mut bscratch);
+            let t_bits = t2.elapsed().as_secs_f64();
+            assert_eq!(
+                bitsliced,
+                model.plan.forward_batch(&batch, &mut scratch),
+                "{id}: bitslice disagrees with the plan"
+            );
             eprintln!(
-                "[table5] {id} software twin, 1k samples: naive {:.0}/s vs plan {:.0}/s ({:.2}x)",
+                "[table5] {id} software twin, 1k samples: naive {:.0}/s vs plan {:.0}/s ({:.2}x) vs bitslice {:.0}/s ({:.2}x vs plan)",
                 1000.0 / t_naive,
                 1000.0 / t_plan,
-                t_naive / t_plan
+                t_naive / t_plan,
+                1000.0 / t_bits,
+                t_plan / t_bits
             );
         }
     }

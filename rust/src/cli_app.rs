@@ -48,6 +48,8 @@ fn print_help() {
            rtl      --id <artifact> --out <dir>   emit Verilog + testbench\n\
            serve    --id <artifact>      batching inference server over stdin\n\
                     [--backend lut|pjrt] [--batch-window-us N]\n\
+                    [--bitslice-threshold N]  batch size from which the LUT\n\
+                    backend runs bitsliced (0 = always; default: two 64-lane words)\n\
            report   --id <artifact>      full markdown report (synth + cubes)\n\n\
          COMMON\n\
            --artifacts <dir>             artifact directory (default: artifacts)"

@@ -4,6 +4,8 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use crate::sim::LutEngine;
+
 const BUCKETS: usize = 40;
 
 #[derive(Debug)]
@@ -13,6 +15,10 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub batch_samples: AtomicU64,
     pub queue_rejects: AtomicU64,
+    /// Batches the LUT backend served through the evaluation plan vs the
+    /// bitsliced 64-lane engine (both zero under the PJRT backend).
+    pub plan_batches: AtomicU64,
+    pub bitslice_batches: AtomicU64,
     hist: [AtomicU64; BUCKETS],
 }
 
@@ -24,6 +30,8 @@ impl Default for Metrics {
             batches: AtomicU64::new(0),
             batch_samples: AtomicU64::new(0),
             queue_rejects: AtomicU64::new(0),
+            plan_batches: AtomicU64::new(0),
+            bitslice_batches: AtomicU64::new(0),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -49,6 +57,14 @@ impl Metrics {
 
     pub fn record_latency(&self, us: f64) {
         self.hist[Self::bucket(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one batch against the LUT engine that executed it.
+    pub fn record_engine(&self, engine: LutEngine) {
+        match engine {
+            LutEngine::Plan => self.plan_batches.fetch_add(1, Ordering::Relaxed),
+            LutEngine::Bitslice => self.bitslice_batches.fetch_add(1, Ordering::Relaxed),
+        };
     }
 
     /// Approximate quantile from the histogram (upper bucket bound).
@@ -81,10 +97,12 @@ impl Metrics {
 
     pub fn snapshot(&self) -> String {
         format!(
-            "requests={} responses={} batches={} mean_batch={:.1} rejects={} p50={:.0}µs p95={:.0}µs p99={:.0}µs",
+            "requests={} responses={} batches={} (plan={} bitslice={}) mean_batch={:.1} rejects={} p50={:.0}µs p95={:.0}µs p99={:.0}µs",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
+            self.plan_batches.load(Ordering::Relaxed),
+            self.bitslice_batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.queue_rejects.load(Ordering::Relaxed),
             self.latency_quantile_us(0.5),
@@ -108,6 +126,17 @@ mod tests {
         let p95 = m.latency_quantile_us(0.95);
         assert!(p50 <= p95);
         assert!(p95 >= 1000.0 * 0.7, "p95 {p95} should see the 1ms outlier bucket");
+    }
+
+    #[test]
+    fn engine_routing_counters() {
+        let m = Metrics::new();
+        m.record_engine(LutEngine::Plan);
+        m.record_engine(LutEngine::Bitslice);
+        m.record_engine(LutEngine::Bitslice);
+        assert_eq!(m.plan_batches.load(Ordering::Relaxed), 1);
+        assert_eq!(m.bitslice_batches.load(Ordering::Relaxed), 2);
+        assert!(m.snapshot().contains("plan=1 bitslice=2"));
     }
 
     #[test]

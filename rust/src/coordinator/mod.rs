@@ -28,24 +28,30 @@ use crate::lut::tables::NetworkTables;
 use crate::meta::{Manifest, Role};
 use crate::nn::network::Network;
 use crate::runtime::{f32_literal, to_f32_vec, Engine, Executable};
+use crate::sim::bitslice::BitsliceNet;
 use crate::sim::lutsim::LutSim;
 use crate::sim::plan::EvalPlan;
+use crate::sim::{EngineSelect, LutEngine};
 use crate::util::cli::Args;
 use metrics::Metrics;
 
-/// A frozen deployable model: trained network + its compiled tables + the
-/// precompiled batched evaluation plan the LUT backend serves from.
+/// A frozen deployable model: trained network + its compiled tables + both
+/// precompiled LUT execution engines — the per-sample evaluation plan
+/// (latency) and the 64-sample-per-word bitsliced netlist engine
+/// (throughput).  `Backend::Lut` picks between them per batch.
 pub struct FrozenModel {
     pub net: Network,
     pub tables: NetworkTables,
     pub plan: EvalPlan,
+    pub bitslice: BitsliceNet,
 }
 
 impl FrozenModel {
     pub fn from_network(net: Network, workers: usize) -> FrozenModel {
         let tables = crate::lut::tables::compile_network(&net, workers);
         let plan = EvalPlan::compile(&net, &tables);
-        FrozenModel { net, tables, plan }
+        let bitslice = BitsliceNet::compile(&net, &tables, workers);
+        FrozenModel { net, tables, plan, bitslice }
     }
 
     pub fn sim(&self) -> LutSim<'_> {
@@ -59,13 +65,22 @@ impl FrozenModel {
 /// internals in the xla crate) are NOT Send, so the actual `Backend` is
 /// constructed *inside* the batcher thread from this spec.
 pub enum BackendSpec {
-    Lut { model: Arc<FrozenModel>, workers: usize },
+    Lut { model: Arc<FrozenModel>, workers: usize, select: EngineSelect },
     Pjrt { man: Manifest, state: Vec<Vec<f32>> },
 }
 
 impl BackendSpec {
     pub fn lut(model: Arc<FrozenModel>, workers: usize) -> BackendSpec {
-        BackendSpec::Lut { model, workers }
+        BackendSpec::Lut { model, workers, select: EngineSelect::auto() }
+    }
+
+    /// LUT backend with an explicit plan-vs-bitslice crossover policy.
+    pub fn lut_with_select(
+        model: Arc<FrozenModel>,
+        workers: usize,
+        select: EngineSelect,
+    ) -> BackendSpec {
+        BackendSpec::Lut { model, workers, select }
     }
 
     pub fn pjrt(man: Manifest, state: Vec<Vec<f32>>) -> BackendSpec {
@@ -75,7 +90,9 @@ impl BackendSpec {
     /// Build the runnable backend (call from the thread that will use it).
     pub fn build(self) -> Result<Backend> {
         match self {
-            BackendSpec::Lut { model, workers } => Ok(Backend::lut(model, workers)),
+            BackendSpec::Lut { model, workers, select } => {
+                Ok(Backend::Lut { model, workers, select })
+            }
             BackendSpec::Pjrt { man, state } => {
                 let engine = Engine::cpu()?;
                 Backend::pjrt(&engine, &man, &state)
@@ -87,7 +104,9 @@ impl BackendSpec {
 /// Inference backends.
 pub enum Backend {
     /// Deployed-semantics LUT evaluation, parallel across the batch.
-    Lut { model: Arc<FrozenModel>, workers: usize },
+    /// `select` routes each batch to the evaluation plan (small /
+    /// latency-sensitive) or the bitsliced 64-lane engine (large).
+    Lut { model: Arc<FrozenModel>, workers: usize, select: EngineSelect },
     /// AOT-lowered JAX eval graph via PJRT (fixed batch, padded). Params
     /// stay resident as device buffers.
     Pjrt {
@@ -102,7 +121,16 @@ pub enum Backend {
 
 impl Backend {
     pub fn lut(model: Arc<FrozenModel>, workers: usize) -> Backend {
-        Backend::Lut { model, workers }
+        Backend::Lut { model, workers, select: EngineSelect::auto() }
+    }
+
+    /// Which LUT engine a batch of `batch_len` samples would run on
+    /// (`None` for the PJRT backend).
+    pub fn route(&self, batch_len: usize) -> Option<LutEngine> {
+        match self {
+            Backend::Lut { select, .. } => Some(select.pick(batch_len)),
+            Backend::Pjrt { .. } => None,
+        }
     }
 
     /// Build the PJRT backend from a manifest + trained state.
@@ -136,16 +164,25 @@ impl Backend {
     /// Run a batch of feature vectors; returns per-sample logits.
     pub fn infer(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         match self {
-            Backend::Lut { model, workers } => {
+            Backend::Lut { model, workers, .. } => {
                 let plan = &model.plan;
                 for x in xs {
                     if x.len() != plan.n_features() {
                         bail!("feature length {} != {}", x.len(), plan.n_features());
                     }
                 }
-                // Blocked, allocation-free batched execution over the
-                // precompiled plan (parallel across blocks, not samples).
-                Ok(plan.forward_batch_f32(xs, *workers))
+                // Both engines are bit-exact with `Network::forward_codes`;
+                // the crossover only trades latency for throughput.  `route`
+                // is the single decision point (the batcher's metrics read
+                // the same function, so they cannot drift from execution).
+                Ok(match self.route(xs.len()).expect("Lut backend routes") {
+                    // Blocked, allocation-free batched execution over the
+                    // precompiled plan (parallel across blocks).
+                    LutEngine::Plan => plan.forward_batch_f32(xs, *workers),
+                    // Bit-parallel netlist evaluation, 64 samples per word
+                    // (parallel across words).
+                    LutEngine::Bitslice => model.bitslice.forward_batch_f32(xs, *workers),
+                })
             }
             Backend::Pjrt { engine, exe, params, batch, n_features, n_out } => {
                 let mut out = Vec::with_capacity(xs.len());
@@ -321,6 +358,11 @@ fn batcher_loop(
         let xs: Vec<Vec<f32>> = batch.iter().map(|r| r.features.clone()).collect();
         match backend.infer(&xs) {
             Ok(all_logits) => {
+                // Count the engine only for batches it actually served
+                // (same decision function infer() just used).
+                if let Some(engine) = backend.route(batch.len()) {
+                    metrics.record_engine(engine);
+                }
                 for (req, logits) in batch.into_iter().zip(all_logits) {
                     let pred = if n_classes == 1 {
                         (logits[0] > 0.0) as usize
@@ -348,23 +390,31 @@ fn batcher_loop(
 // ---------------------------------------------------------------------------
 
 /// `polylut serve --id <artifact> [--backend lut|pjrt] [--requests N]
-///  [--clients N] [--batch-window-us N]` — runs a self-driving load test
-/// against the server with dataset samples and prints metrics.
+///  [--clients N] [--batch-window-us N] [--bitslice-threshold N]` — runs a
+/// self-driving load test against the server with dataset samples and
+/// prints metrics.  `--bitslice-threshold` sets the plan-vs-bitslice batch
+/// crossover of the LUT backend (0 = always bitsliced; default
+/// [`EngineSelect::DEFAULT_CROSSOVER`]).
 pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
     let man = crate::meta::load_id(dir, id)?;
     let ds = crate::data::load(&man.dataset, 0)?;
     let state = crate::train::load_state(&man, &man.dir)
         .context("no trained weights — run `polylut train` first")?;
-    let backend_name = args.get_or("backend", "lut").to_string();
+    let backend_name = args.get_choice("backend", "lut", &["lut", "pjrt"])?.to_string();
+    let crossover = args.get_usize("bitslice-threshold", EngineSelect::DEFAULT_CROSSOVER)?;
     let net = man.network_from_state(&state)?;
     let backend = match backend_name.as_str() {
         "lut" => {
             let model =
                 Arc::new(FrozenModel::from_network(net, crate::util::pool::default_workers()));
-            BackendSpec::lut(model, crate::util::pool::default_workers())
+            BackendSpec::lut_with_select(
+                model,
+                crate::util::pool::default_workers(),
+                EngineSelect { crossover },
+            )
         }
         "pjrt" => BackendSpec::pjrt(man.clone(), state.clone()),
-        other => bail!("unknown backend {other:?} (lut|pjrt)"),
+        other => unreachable!("get_choice admitted unknown backend {other:?}"),
     };
     let cfg = ServerConfig {
         max_batch: args.get_usize("max-batch", 256)?,
@@ -375,7 +425,13 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
     let n_clients = args.get_usize("clients", 4)?;
     let server = Server::start(backend, man.config.n_classes, cfg);
 
-    println!("[serve] {id} backend={backend_name}: {n_requests} requests from {n_clients} clients…");
+    if backend_name == "lut" {
+        println!(
+            "[serve] {id} backend=lut (bitslice-threshold={crossover}): {n_requests} requests from {n_clients} clients…"
+        );
+    } else {
+        println!("[serve] {id} backend={backend_name}: {n_requests} requests from {n_clients} clients…");
+    }
     let t0 = Instant::now();
     let correct = Arc::new(AtomicU64::new(0));
     std::thread::scope(|scope| {
@@ -444,6 +500,52 @@ mod tests {
         }
         assert_eq!(server.metrics.responses.load(Ordering::Relaxed), 50);
         server.shutdown();
+    }
+
+    /// Forcing every batch through the bitsliced engine must be invisible
+    /// to clients (bit-exact logits) and visible in the routing metrics.
+    #[test]
+    fn bitslice_route_is_bit_exact_and_recorded() {
+        let m = model();
+        let backend = BackendSpec::lut_with_select(m.clone(), 2, EngineSelect::bitslice_only());
+        let server = Server::start(
+            backend,
+            3,
+            ServerConfig { max_batch: 8, window: Duration::from_micros(100), queue_cap: 64 },
+        );
+        let client = server.client();
+        let mut rng = Rng::new(2);
+        for _ in 0..30 {
+            let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+            let resp = client.infer(x.clone()).unwrap();
+            assert_eq!(resp.logits, m.sim().forward(&x));
+        }
+        assert_eq!(server.metrics.responses.load(Ordering::Relaxed), 30);
+        assert!(server.metrics.bitslice_batches.load(Ordering::Relaxed) > 0);
+        assert_eq!(server.metrics.plan_batches.load(Ordering::Relaxed), 0);
+        server.shutdown();
+    }
+
+    /// The default policy keeps single-request batches on the plan engine.
+    #[test]
+    fn small_batches_route_to_plan() {
+        let m = model();
+        let backend = Backend::lut(m.clone(), 2);
+        assert_eq!(backend.route(1), Some(LutEngine::Plan));
+        assert_eq!(backend.route(EngineSelect::DEFAULT_CROSSOVER), Some(LutEngine::Bitslice));
+        // Route choice is bit-exact either way on a whole batch.
+        let mut rng = Rng::new(6);
+        let xs: Vec<Vec<f32>> =
+            (0..150).map(|_| (0..8).map(|_| rng.f32()).collect()).collect();
+        let small = backend.infer(&xs[..4]).unwrap();
+        let sim = m.sim();
+        for (x, got) in xs[..4].iter().zip(&small) {
+            assert_eq!(got, &sim.forward(x));
+        }
+        let large = backend.infer(&xs).unwrap();
+        for (x, got) in xs.iter().zip(&large) {
+            assert_eq!(got, &sim.forward(x));
+        }
     }
 
     #[test]

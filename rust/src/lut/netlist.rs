@@ -24,6 +24,53 @@ pub enum Node {
     Mux { sel: NodeId, lo: NodeId, hi: NodeId, free: bool },
 }
 
+/// Word-level LUT evaluation — the shared mask-decomposition kernel.
+///
+/// `inputs[k]` holds 64 samples of address bit `k` (lane `s` = sample `s`);
+/// the result holds 64 samples of `mask[addr]`.  Instead of assembling a
+/// per-sample address (64 × fan shift/or operations), the mask itself is
+/// Shannon-decomposed top-down: splitting on the highest address bit halves
+/// the mask, and the two cofactor words are recombined with one word-wide
+/// mux (`lo ^ (x & (lo ^ hi))`, 3 ops for all 64 lanes).  Equal or constant
+/// cofactors prune whole subtrees, so structured (trained) masks cost well
+/// under the 2^n−1 worst-case mux count.
+///
+/// Both [`Netlist::eval64`] and the `sim::bitslice` op stream evaluate
+/// their LUT6 ops through this kernel.  Mask bits above `2^inputs.len()`
+/// are ignored.
+pub fn lut_word(mask: u64, inputs: &[u64]) -> u64 {
+    debug_assert!(inputs.len() <= 6, "physical LUTs have at most 6 inputs");
+    let n = inputs.len();
+    let m = if n == 6 { mask } else { mask & ((1u64 << (1u32 << n)) - 1) };
+    lut_word_rec(m, inputs)
+}
+
+/// Invariant: only the low `2^inputs.len()` bits of `mask` may be set.
+fn lut_word_rec(mask: u64, inputs: &[u64]) -> u64 {
+    let (&x, rest) = match inputs.split_last() {
+        None => return if mask & 1 != 0 { !0 } else { 0 },
+        Some(p) => p,
+    };
+    if mask == 0 {
+        return 0;
+    }
+    // Cofactor width is 2^(n-1) <= 32 bits, so the splits below cannot shift
+    // by 64.
+    let half = 1u32 << rest.len();
+    let full = (1u64 << half) - 1;
+    if mask == full | (full << half) {
+        return !0;
+    }
+    let lo = mask & full;
+    let hi = mask >> half;
+    if lo == hi {
+        return lut_word_rec(lo, rest);
+    }
+    let l = lut_word_rec(lo, rest);
+    let h = lut_word_rec(hi, rest);
+    l ^ (x & (l ^ h))
+}
+
 #[derive(Debug, Default)]
 pub struct Netlist {
     pub nodes: Vec<Node>,
@@ -87,7 +134,8 @@ impl Netlist {
     }
 
     /// Evaluate the netlist bit-parallel: `wires[w]` holds 64 samples of
-    /// input wire w (bit k = sample k).  Returns one u64 per node.
+    /// input wire w (bit k = sample k).  Returns one u64 per node.  LUT
+    /// nodes go through the shared word-level [`lut_word`] kernel.
     pub fn eval64(&self, wires: &dyn Fn(u32) -> u64) -> Vec<u64> {
         let mut vals = vec![0u64; self.nodes.len()];
         for (i, node) in self.nodes.iter().enumerate() {
@@ -101,8 +149,38 @@ impl Netlist {
                     }
                 }
                 Node::Lut { inputs, mask } => {
-                    // For every sample, assemble the LUT address from the
-                    // input bits and read the mask.
+                    let mut ins = [0u64; 6];
+                    for (k, &inp) in inputs.iter().enumerate() {
+                        ins[k] = vals[inp as usize];
+                    }
+                    lut_word(*mask, &ins[..inputs.len()])
+                }
+                Node::Mux { sel, lo, hi, .. } => {
+                    let s = vals[*sel as usize];
+                    (s & vals[*hi as usize]) | (!s & vals[*lo as usize])
+                }
+            };
+        }
+        vals
+    }
+
+    /// The original per-sample address-assembly walk (O(64·fan) per LUT
+    /// node), kept as an independent reference the word-level kernel is
+    /// property-tested against.
+    #[cfg(test)]
+    pub fn eval64_reference(&self, wires: &dyn Fn(u32) -> u64) -> Vec<u64> {
+        let mut vals = vec![0u64; self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            vals[i] = match node {
+                Node::Input { wire } => wires(*wire),
+                Node::Const(v) => {
+                    if *v {
+                        u64::MAX
+                    } else {
+                        0
+                    }
+                }
+                Node::Lut { inputs, mask } => {
                     let mut out = 0u64;
                     for s in 0..64 {
                         let mut addr = 0usize;
@@ -153,6 +231,69 @@ mod tests {
         assert_eq!(nl.depth_of(m2), 3);
         assert_eq!(nl.lut_count(), 3);
         assert_eq!(nl.free_mux_count(), 1);
+    }
+
+    /// The word-level kernel must agree with a per-sample mask read for
+    /// every arity, including structured (constant / equal-cofactor) masks.
+    #[test]
+    fn lut_word_matches_per_sample_lookup() {
+        let mut rng = crate::util::rng::Rng::new(0x10C4);
+        for n in 0..=6usize {
+            let width = 1u32 << n;
+            let full = if width == 64 { !0u64 } else { (1u64 << width) - 1 };
+            let mut masks = vec![0u64, full, rng.next_u64(), rng.next_u64() & rng.next_u64()];
+            if n >= 1 {
+                // Equal cofactors on the top variable (prunes to n-1 vars).
+                let lo = rng.next_u64() & (full >> (width / 2).max(1));
+                masks.push(lo | (lo << (width / 2)));
+            }
+            for mask in masks {
+                let inputs: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+                let got = lut_word(mask, &inputs);
+                for s in 0..64 {
+                    let mut addr = 0usize;
+                    for (k, &w) in inputs.iter().enumerate() {
+                        addr |= (((w >> s) & 1) as usize) << k;
+                    }
+                    let want = (mask >> addr) & 1;
+                    assert_eq!(
+                        (got >> s) & 1,
+                        want,
+                        "n={n} mask={mask:#x} sample {s} addr {addr}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Whole-netlist property: the kernel-backed eval64 is bit-identical to
+    /// the original per-sample reference walk on random netlists.
+    #[test]
+    fn eval64_matches_reference_on_random_netlists() {
+        let mut rng = crate::util::rng::Rng::new(0xE64);
+        for trial in 0..20 {
+            let mut nl = Netlist::new();
+            let mut pool: Vec<NodeId> = (0..6).map(|w| nl.input(w)).collect();
+            pool.push(nl.constant(false));
+            pool.push(nl.constant(true));
+            for _ in 0..40 {
+                let id = if rng.below(4) == 0 {
+                    let sel = pool[rng.below(pool.len())];
+                    let lo = pool[rng.below(pool.len())];
+                    let hi = pool[rng.below(pool.len())];
+                    nl.add(Node::Mux { sel, lo, hi, free: rng.below(2) == 0 })
+                } else {
+                    let fan = 1 + rng.below(6);
+                    let inputs: Vec<NodeId> =
+                        (0..fan).map(|_| pool[rng.below(pool.len())]).collect();
+                    nl.add(Node::Lut { inputs, mask: rng.next_u64() })
+                };
+                pool.push(id);
+            }
+            let seeds: Vec<u64> = (0..6).map(|_| rng.next_u64()).collect();
+            let wires = |w: u32| seeds[w as usize];
+            assert_eq!(nl.eval64(&wires), nl.eval64_reference(&wires), "trial {trial}");
+        }
     }
 
     #[test]

@@ -1,0 +1,566 @@
+//! Bitsliced 64-sample-per-word execution engine over the mapped netlist.
+//!
+//! The paper's premise is that a neuron *is* a LUT network, and a LUT
+//! network evaluated in software is fastest word-level: one `u64` holds the
+//! same wire for **64 samples at once** (bit `s` = sample `s`), so every
+//! gate costs a handful of bitwise ops *for the whole word*.  This engine is
+//! the batched-serving counterpart of [`super::plan::EvalPlan`]: the plan
+//! gathers codes and reads decoded tables one sample at a time (lowest
+//! latency, cache-resident tables), the bitslice engine transposes a word of
+//! samples into bit-planes once and then streams a flat op list per layer
+//! (highest throughput when the mapped tables are shallow).
+//!
+//! # Bit-plane layout
+//!
+//! A layer boundary carrying β-bit codes for `W` neurons is `W·β` planes:
+//!
+//! ```text
+//!                      lane 63        …        lane 1   lane 0
+//!                   ┌───────────┬───────────┬─────────┬─────────┐
+//!   planes[j·β + b] │ sample 63 │     …     │ sample 1│ sample 0│   (one u64)
+//!                   └───────────┴───────────┴─────────┴─────────┘
+//!                      bit b of neuron j's code, all samples
+//!
+//!   planes[0]      = neuron 0, code bit 0
+//!   planes[1]      = neuron 0, code bit 1
+//!   …
+//!   planes[j·β+b]  = neuron j, code bit b      (raw two's-complement bits)
+//! ```
+//!
+//! This is exactly the wire numbering the LUT6 mapper uses
+//! (`wire = src·in_bits + bit`), so a layer's **output planes are the next
+//! layer's input planes verbatim** — transposition happens only at the
+//! network edge.
+//!
+//! # Transposition cost model
+//!
+//! - **Pack** (codes → planes, network input): `width·β` planes built from
+//!   ≤64 samples — `O(width·β·64)` bit ops per word, ~`width·β` ops per
+//!   sample.  **Unpack** (planes → codes, network output) is symmetric.
+//! - **Evaluate**: one LUT6 op costs at most 63 word-muxes (3 bit ops each)
+//!   for all 64 lanes — ~3 ops *per sample* versus the plan's per-sample
+//!   gather + address assembly + table read; shared-input LUT groups (the
+//!   bits of one table) drop further to one minterm expansion
+//!   (`2^{k+1}` ANDs) plus ~`2^{k-1}` ORs per mask.  A mux op is 3 ops for
+//!   the whole word.
+//! - The engine therefore wins when the mapped netlist is shallow (βF ≤ ~8:
+//!   the paper's Table IV Add2 design point, where every table bit is a
+//!   single LUT6) and batches span full words; the plan stays ahead for
+//!   deep-table geometries (βF ≈ 12+) and tiny batches, which is why the
+//!   coordinator routes on batch size ([`super::EngineSelect`]).
+//!
+//! Ragged tails (batches not divisible by 64) are handled with
+//! [`lane_mask`]: invalid lanes are packed as zero, evaluated like any other
+//! lane, and never unpacked.
+
+use std::collections::HashMap;
+
+use crate::lut::mapper::{map_network_of, MappedNetwork};
+use crate::lut::netlist::{lut_word, Node};
+use crate::lut::tables::{LayerTables, NetworkTables};
+use crate::nn::network::Network;
+use crate::nn::quant::{from_twos_complement, unsigned_code};
+use crate::util::pool::parallel_map;
+
+/// Samples per machine word (lanes of one `u64` bit-plane).
+pub const WORD: usize = 64;
+
+/// Valid-lane mask for a word holding `n_valid` samples: lane `s` is set iff
+/// sample `s` exists.  Saturates at a full word (`n_valid >= 64`), so the
+/// remainder of any batch size can be passed directly.
+#[inline]
+pub fn lane_mask(n_valid: usize) -> u64 {
+    if n_valid >= WORD {
+        !0
+    } else {
+        (1u64 << n_valid) - 1
+    }
+}
+
+/// One step of the flat, topologically-ordered per-layer op stream.  All
+/// operands are node slots; no op owns heap memory, so executing a layer is
+/// a single linear walk.
+#[derive(Debug, Clone, Copy)]
+enum Op {
+    Const { out: u32, ones: bool },
+    /// A physical LUT evaluated through the shared word-level
+    /// mask-decomposition kernel ([`lut_word`]).
+    Lut { out: u32, mask: u64, n_in: u8, ins: [u32; 6] },
+    Mux { out: u32, sel: u32, lo: u32, hi: u32 },
+    /// ≥2 LUTs over the *identical* input tuple (typically the output bits
+    /// of one truth table): one shared minterm expansion, then one OR-reduce
+    /// per mask.  `(node, mask)` pairs live in `LayerOps::lut_nodes` /
+    /// `lut_masks` at `start..start+len`.
+    Group { n_in: u8, ins: [u32; 6], start: u32, len: u32 },
+}
+
+/// One compiled layer: input bindings, the op stream, and the output roots.
+struct LayerOps {
+    /// `(node slot, input wire)` — wire = `src·in_bits + bit`.
+    bind: Vec<(u32, u32)>,
+    ops: Vec<Op>,
+    /// Output node of bit `b` of neuron `j` at `j·out_bits + b`.
+    roots: Vec<u32>,
+    /// Backing store for [`Op::Group`] members.
+    lut_nodes: Vec<u32>,
+    lut_masks: Vec<u64>,
+    n_nodes: usize,
+    n_out: usize,
+    out_bits: u32,
+    signed_out: bool,
+}
+
+/// Engine shape statistics (for benches and logs).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BitsliceStats {
+    pub layers: usize,
+    pub nodes: usize,
+    /// LUTs evaluated individually through the Shannon kernel.
+    pub lut_ops: usize,
+    /// LUTs folded into shared-input minterm groups.
+    pub grouped_luts: usize,
+    pub groups: usize,
+    pub mux_ops: usize,
+}
+
+/// A frozen network compiled for bit-parallel word-level execution.
+/// Self-contained (owns its op streams) — `Send + Sync`, share behind `Arc`.
+pub struct BitsliceNet {
+    layers: Vec<LayerOps>,
+    n_features: usize,
+    n_outputs: usize,
+    /// Input quantizer width (β of layer 0).
+    in_bits: u32,
+    /// Dequantization step of the output codes.
+    out_step: f32,
+    /// Bit-planes needed at the widest layer boundary.
+    max_wires: usize,
+    max_nodes: usize,
+    stats: BitsliceStats,
+}
+
+/// Reusable per-thread scratch: double-buffered boundary planes plus the
+/// per-node value array.  A forward word performs zero heap allocation.
+pub struct BitsliceScratch {
+    planes: Vec<u64>,
+    next: Vec<u64>,
+    vals: Vec<u64>,
+}
+
+impl BitsliceNet {
+    /// Map `net` to LUT6 netlists and compile them into op streams.
+    pub fn compile(net: &Network, tables: &NetworkTables, workers: usize) -> BitsliceNet {
+        let mapped = map_network_of(net, tables, workers);
+        Self::from_mapped(net, tables, &mapped)
+    }
+
+    /// Compile from an already-mapped network (no re-mapping).
+    pub fn from_mapped(
+        net: &Network,
+        tables: &NetworkTables,
+        mapped: &MappedNetwork,
+    ) -> BitsliceNet {
+        let cfg = &net.cfg;
+        let mut stats = BitsliceStats::default();
+        let layers: Vec<LayerOps> = mapped
+            .layers
+            .iter()
+            .zip(&tables.layers)
+            .map(|(ml, lt)| flatten_layer(ml, lt, &mut stats))
+            .collect();
+        stats.layers = layers.len();
+        let max_wires = (0..=cfg.n_layers())
+            .map(|b| cfg.widths[b] * cfg.beta[b] as usize)
+            .max()
+            .unwrap_or(0);
+        let last = cfg.n_layers() - 1;
+        BitsliceNet {
+            max_nodes: layers.iter().map(|l| l.n_nodes).max().unwrap_or(0),
+            layers,
+            n_features: cfg.widths[0],
+            n_outputs: cfg.widths[cfg.n_layers()],
+            in_bits: cfg.beta[0],
+            out_step: net.out_step(last),
+            max_wires,
+            stats,
+        }
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.n_outputs
+    }
+
+    pub fn stats(&self) -> BitsliceStats {
+        self.stats
+    }
+
+    pub fn scratch(&self) -> BitsliceScratch {
+        BitsliceScratch {
+            planes: vec![0; self.max_wires],
+            next: vec![0; self.max_wires],
+            vals: vec![0; self.max_nodes],
+        }
+    }
+
+    /// Batched code-level forward pass, 64 samples per internal word, ragged
+    /// tail masked.  Bit-exact with `EvalPlan::forward_batch` and
+    /// `Network::forward_codes`.
+    pub fn forward_batch(
+        &self,
+        xs: &[Vec<i32>],
+        scratch: &mut BitsliceScratch,
+    ) -> Vec<Vec<i32>> {
+        let mut out = Vec::with_capacity(xs.len());
+        for word in xs.chunks(WORD) {
+            self.forward_word(word, scratch, &mut out);
+        }
+        out
+    }
+
+    /// Batched feature-level forward pass: quantize, run words in parallel
+    /// (one scratch per word), dequantize.  Output order matches `xs`.
+    pub fn forward_batch_f32(&self, xs: &[Vec<f32>], workers: usize) -> Vec<Vec<f32>> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        let words: Vec<&[Vec<f32>]> = xs.chunks(WORD).collect();
+        let per_word: Vec<Vec<Vec<f32>>> = parallel_map(&words, workers, |_, word| {
+            let codes: Vec<Vec<i32>> = word
+                .iter()
+                .map(|x| {
+                    assert_eq!(x.len(), self.n_features, "feature width mismatch");
+                    x.iter().map(|&v| unsigned_code(v, self.in_bits, 1.0)).collect()
+                })
+                .collect();
+            let mut scratch = self.scratch();
+            let mut rows = Vec::with_capacity(word.len());
+            self.forward_word(&codes, &mut scratch, &mut rows);
+            rows.into_iter()
+                .map(|row| row.iter().map(|&c| c as f32 * self.out_step).collect())
+                .collect()
+        });
+        per_word.into_iter().flatten().collect()
+    }
+
+    /// One ≤64-sample word: pack → per-layer op streams → unpack.
+    fn forward_word(
+        &self,
+        word: &[Vec<i32>],
+        scratch: &mut BitsliceScratch,
+        out: &mut Vec<Vec<i32>>,
+    ) {
+        if word.is_empty() {
+            return;
+        }
+        debug_assert!(word.len() <= WORD);
+        for row in word {
+            assert_eq!(row.len(), self.n_features, "input width mismatch");
+        }
+        pack_word(word, self.in_bits, &mut scratch.planes);
+        for lp in &self.layers {
+            lp.run(&scratch.planes, &mut scratch.vals);
+            for (plane, &root) in scratch.next.iter_mut().zip(&lp.roots) {
+                *plane = scratch.vals[root as usize];
+            }
+            std::mem::swap(&mut scratch.planes, &mut scratch.next);
+        }
+        let last = self.layers.last().expect("at least one layer");
+        let ob = last.out_bits as usize;
+        for s in 0..word.len() {
+            let mut row = Vec::with_capacity(last.n_out);
+            for j in 0..last.n_out {
+                let mut raw = 0u32;
+                for b in 0..ob {
+                    raw |= (((scratch.planes[j * ob + b] >> s) & 1) as u32) << b;
+                }
+                row.push(if last.signed_out {
+                    from_twos_complement(raw, last.out_bits)
+                } else {
+                    raw as i32
+                });
+            }
+            out.push(row);
+        }
+    }
+}
+
+/// Transpose ≤64 samples of unsigned input codes into bit-planes
+/// (`planes[f·bits + b]`, lane `s` = sample `s`); invalid lanes of a ragged
+/// word are left zero (see [`lane_mask`]).
+fn pack_word(word: &[Vec<i32>], bits: u32, planes: &mut [u64]) {
+    let bits = bits as usize;
+    let n_planes = word[0].len() * bits;
+    planes[..n_planes].fill(0);
+    for (s, row) in word.iter().enumerate() {
+        for (f, &c) in row.iter().enumerate() {
+            let c = c as u32 as u64;
+            for (b, p) in planes[f * bits..(f + 1) * bits].iter_mut().enumerate() {
+                *p |= ((c >> b) & 1) << s;
+            }
+        }
+    }
+    // Ragged-tail invariant: lanes beyond the word hold zero (the fill above
+    // plus the bounded OR loop guarantee it; unpack never reads them).
+    debug_assert!(planes[..n_planes].iter().all(|&p| p & !lane_mask(word.len()) == 0));
+}
+
+impl LayerOps {
+    /// Execute the op stream for one word.  `planes` are this layer's input
+    /// bit-planes; node values land in `vals`.
+    fn run(&self, planes: &[u64], vals: &mut [u64]) {
+        for &(node, wire) in &self.bind {
+            vals[node as usize] = planes[wire as usize];
+        }
+        for op in &self.ops {
+            match *op {
+                Op::Const { out, ones } => vals[out as usize] = if ones { !0 } else { 0 },
+                Op::Lut { out, mask, n_in, ins } => {
+                    let mut a = [0u64; 6];
+                    for (slot, &i) in a.iter_mut().zip(&ins[..n_in as usize]) {
+                        *slot = vals[i as usize];
+                    }
+                    vals[out as usize] = lut_word(mask, &a[..n_in as usize]);
+                }
+                Op::Mux { out, sel, lo, hi } => {
+                    let (s, l, h) = (vals[sel as usize], vals[lo as usize], vals[hi as usize]);
+                    vals[out as usize] = l ^ (s & (l ^ h));
+                }
+                Op::Group { n_in, ins, start, len } => {
+                    // Shared minterm expansion: buf[a] = word where lane s is
+                    // set iff the k inputs of sample s spell address a.
+                    let k = n_in as usize;
+                    let mut buf = [0u64; 64];
+                    buf[0] = !0u64;
+                    let mut cur = 1usize;
+                    for &i in &ins[..k] {
+                        let x = vals[i as usize];
+                        for j in 0..cur {
+                            let v = buf[j];
+                            buf[j + cur] = v & x;
+                            buf[j] = v & !x;
+                        }
+                        cur <<= 1;
+                    }
+                    let full = if cur == 64 { !0u64 } else { (1u64 << cur) - 1 };
+                    let lo = start as usize;
+                    let hi = lo + len as usize;
+                    for (&node, &raw_mask) in
+                        self.lut_nodes[lo..hi].iter().zip(&self.lut_masks[lo..hi])
+                    {
+                        let mask = raw_mask & full;
+                        // The 2^k minterms partition all 64 lanes, so
+                        // OR(set minterms) == !OR(clear minterms): reduce
+                        // whichever polarity has fewer terms.
+                        let (mut rem, invert) = if (mask.count_ones() as usize) * 2 <= cur {
+                            (mask, false)
+                        } else {
+                            (!mask & full, true)
+                        };
+                        let mut acc = 0u64;
+                        while rem != 0 {
+                            acc |= buf[rem.trailing_zeros() as usize];
+                            rem &= rem - 1;
+                        }
+                        vals[node as usize] = if invert { !acc } else { acc };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Flatten one mapped layer into an op stream.  Nodes are already in
+/// topological order (the netlist arena appends inputs before users); LUTs
+/// sharing an identical input tuple are folded into one [`Op::Group`],
+/// emitted at the position of the group's *first* member — safe because
+/// every member has the same (already-ready) inputs and every consumer sits
+/// after its producer.
+fn flatten_layer(
+    ml: &crate::lut::mapper::MappedLayer,
+    lt: &LayerTables,
+    stats: &mut BitsliceStats,
+) -> LayerOps {
+    let nl = &ml.netlist;
+    // Pass 1: collect LUT nodes by identical input tuple.
+    let mut group_of: HashMap<&[u32], usize> = HashMap::new();
+    let mut members: Vec<Vec<(u32, u64)>> = Vec::new();
+    for (id, node) in nl.nodes.iter().enumerate() {
+        if let Node::Lut { inputs, mask } = node {
+            let g = *group_of.entry(inputs.as_slice()).or_insert_with(|| {
+                members.push(Vec::new());
+                members.len() - 1
+            });
+            members[g].push((id as u32, *mask));
+        }
+    }
+    // Pass 2: emit ops in node order.
+    let mut bind = Vec::new();
+    let mut ops = Vec::new();
+    let mut lut_nodes = Vec::new();
+    let mut lut_masks = Vec::new();
+    for (id, node) in nl.nodes.iter().enumerate() {
+        let id = id as u32;
+        match node {
+            Node::Input { wire } => bind.push((id, *wire)),
+            Node::Const(v) => ops.push(Op::Const { out: id, ones: *v }),
+            Node::Mux { sel, lo, hi, .. } => {
+                stats.mux_ops += 1;
+                ops.push(Op::Mux { out: id, sel: *sel, lo: *lo, hi: *hi });
+            }
+            Node::Lut { inputs, mask } => {
+                let group = &members[group_of[inputs.as_slice()]];
+                if group[0].0 != id {
+                    continue; // evaluated with the group's first member
+                }
+                let mut ins = [0u32; 6];
+                ins[..inputs.len()].copy_from_slice(inputs);
+                let n_in = inputs.len() as u8;
+                if group.len() == 1 {
+                    stats.lut_ops += 1;
+                    ops.push(Op::Lut { out: id, mask: *mask, n_in, ins });
+                } else {
+                    stats.groups += 1;
+                    stats.grouped_luts += group.len();
+                    let start = lut_nodes.len() as u32;
+                    for &(node_id, m) in group {
+                        lut_nodes.push(node_id);
+                        lut_masks.push(m);
+                    }
+                    ops.push(Op::Group { n_in, ins, start, len: group.len() as u32 });
+                }
+            }
+        }
+    }
+    stats.nodes += nl.nodes.len();
+    let out_bits = lt.out_bits;
+    let mut roots = Vec::with_capacity(ml.roots.len() * out_bits as usize);
+    for bits in &ml.roots {
+        debug_assert_eq!(bits.len(), out_bits as usize);
+        roots.extend_from_slice(bits);
+    }
+    LayerOps {
+        bind,
+        ops,
+        roots,
+        lut_nodes,
+        lut_masks,
+        n_nodes: nl.nodes.len(),
+        n_out: ml.roots.len(),
+        out_bits,
+        signed_out: lt.signed_out,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::tables::compile_network;
+    use crate::nn::config;
+    use crate::sim::plan::{EvalPlan, Scratch};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn lane_mask_covers_ragged_tails() {
+        assert_eq!(lane_mask(0), 0);
+        assert_eq!(lane_mask(1), 0b1);
+        assert_eq!(lane_mask(63), u64::MAX >> 1);
+        assert_eq!(lane_mask(64), u64::MAX);
+        assert_eq!(lane_mask(65), u64::MAX, "saturates past a full word");
+    }
+
+    /// The same `(A, degree)` grid the plan tests pin.
+    const GRID: [(usize, u32); 6] = [(1, 1), (2, 1), (3, 1), (1, 2), (2, 2), (2, 3)];
+
+    fn grid_net(a: usize, d: u32) -> (Network, NetworkTables) {
+        let cfg = config::uniform("bits-t", &[8, 6, 3], 2, 2, 3, 3, 3, d, a, 3);
+        let net = Network::random(&cfg, &mut Rng::new(a as u64 * 100 + d as u64));
+        let tables = compile_network(&net, 1);
+        (net, tables)
+    }
+
+    /// Bit-exactness across the grid: bitslice == plan == fixed-point model,
+    /// on a batch spanning two full words plus a ragged tail.
+    #[test]
+    fn bitslice_equals_plan_and_network_on_grid() {
+        for (a, d) in GRID {
+            let (net, tables) = grid_net(a, d);
+            let plan = EvalPlan::compile(&net, &tables);
+            let bits = BitsliceNet::compile(&net, &tables, 1);
+            let mut rng = Rng::new(9);
+            let xs: Vec<Vec<i32>> = (0..(2 * WORD + 11))
+                .map(|_| {
+                    let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+                    net.quantize_input(&x)
+                })
+                .collect();
+            let mut bscratch = bits.scratch();
+            let got = bits.forward_batch(&xs, &mut bscratch);
+            let mut pscratch = Scratch::for_plan(&plan);
+            assert_eq!(got, plan.forward_batch(&xs, &mut pscratch), "A={a} D={d}");
+            for (x, row) in xs.iter().zip(&got) {
+                assert_eq!(row, &net.forward_codes(x), "A={a} D={d}");
+            }
+        }
+    }
+
+    /// Ragged-tail coverage: 0, 1, 63, 64 and 65-sample batches all agree
+    /// with the plan, through one reused scratch.
+    #[test]
+    fn ragged_batches_match_plan() {
+        let (net, tables) = grid_net(2, 2);
+        let plan = EvalPlan::compile(&net, &tables);
+        let bits = BitsliceNet::compile(&net, &tables, 1);
+        let mut bscratch = bits.scratch();
+        let mut pscratch = Scratch::for_plan(&plan);
+        let mut rng = Rng::new(31);
+        for n in [0usize, 1, 63, 64, 65] {
+            let xs: Vec<Vec<i32>> = (0..n)
+                .map(|_| {
+                    let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+                    net.quantize_input(&x)
+                })
+                .collect();
+            let got = bits.forward_batch(&xs, &mut bscratch);
+            assert_eq!(got.len(), n);
+            assert_eq!(got, plan.forward_batch(&xs, &mut pscratch), "batch {n}");
+        }
+    }
+
+    /// The f32 entry point matches the plan's (same quantizer, same
+    /// dequantization step), sequentially and fanned out over workers.
+    #[test]
+    fn forward_batch_f32_matches_plan() {
+        let (net, tables) = grid_net(2, 1);
+        let plan = EvalPlan::compile(&net, &tables);
+        let bits = BitsliceNet::compile(&net, &tables, 1);
+        let mut rng = Rng::new(5);
+        let xs: Vec<Vec<f32>> =
+            (0..(WORD + 9)).map(|_| (0..8).map(|_| rng.f32()).collect()).collect();
+        for workers in [1usize, 3] {
+            assert_eq!(
+                bits.forward_batch_f32(&xs, workers),
+                plan.forward_batch_f32(&xs, 1),
+                "workers={workers}"
+            );
+        }
+        assert!(bits.forward_batch_f32(&[], 4).is_empty());
+        let _ = net;
+    }
+
+    /// Grouping must fold the multi-bit tables (shared input tuples) without
+    /// changing results — sanity check that groups actually form.
+    #[test]
+    fn shared_input_tables_form_groups() {
+        let (net, tables) = grid_net(2, 1);
+        let bits = BitsliceNet::compile(&net, &tables, 1);
+        let st = bits.stats();
+        assert!(st.groups > 0, "expected shared-input LUT groups, got {st:?}");
+        assert!(st.grouped_luts >= 2 * st.groups);
+        assert_eq!(st.layers, 2);
+        assert!(st.nodes > 0);
+    }
+}

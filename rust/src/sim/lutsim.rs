@@ -12,6 +12,7 @@
 
 use crate::lut::tables::{pack_adder_addr, pack_poly_addr, NetworkTables};
 use crate::nn::network::Network;
+use crate::sim::bitslice::BitsliceNet;
 use crate::sim::plan::{EvalPlan, Scratch};
 
 /// Owned-or-borrowed plan storage: `LutSim::new` compiles its own plan;
@@ -51,6 +52,15 @@ impl<'a> LutSim<'a> {
             PlanStore::Owned(p) => p,
             PlanStore::Shared(p) => p,
         }
+    }
+
+    /// Compile the bit-parallel 64-sample-per-word engine for this frozen
+    /// network (the plan's throughput-oriented twin — see
+    /// [`crate::sim::EngineSelect`] for when to prefer which).  Compilation
+    /// maps the network to LUT6 netlists, so callers should do this once
+    /// and reuse the engine, not per request.
+    pub fn compile_bitslice(&self, workers: usize) -> BitsliceNet {
+        BitsliceNet::compile(self.net, self.tables, workers)
     }
 
     /// Table-only forward pass over input codes (plan-backed).
@@ -144,6 +154,27 @@ mod tests {
                 assert_eq!(sim.forward_codes(&codes), want, "A={a} D={d}");
                 assert_eq!(sim.forward_codes_reference(&codes), want, "A={a} D={d}");
             }
+        }
+    }
+
+    /// The throughput engine compiled off a shim agrees with the shim.
+    #[test]
+    fn compiled_bitslice_matches_shim() {
+        let cfg = config::uniform("t", &[8, 6, 3], 2, 2, 3, 3, 3, 2, 2, 3);
+        let net = Network::random(&cfg, &mut Rng::new(21));
+        let tables = compile_network(&net, 1);
+        let sim = LutSim::new(&net, &tables);
+        let bits = sim.compile_bitslice(1);
+        let mut rng = Rng::new(8);
+        let xs: Vec<Vec<i32>> = (0..70)
+            .map(|_| {
+                let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+                net.quantize_input(&x)
+            })
+            .collect();
+        let mut scratch = bits.scratch();
+        for (x, got) in xs.iter().zip(bits.forward_batch(&xs, &mut scratch)) {
+            assert_eq!(got, sim.forward_codes(x));
         }
     }
 }

@@ -1,26 +1,99 @@
 //! Deployed-semantics simulators: the LUT-network evaluators (software twin
 //! of the FPGA datapath) and the cycle-accurate pipeline model.
 //!
-//! Three evaluators, one contract (bit-exact with `Network::forward_codes`):
+//! Four evaluators, one contract (bit-exact with `Network::forward_codes`):
 //!
-//! - [`plan::EvalPlan`] — the **hot path**.  A precompiled execution plan:
-//!   per layer, one flat `Vec<i32>` of decoded table words (sub-neuron
+//! - [`plan::EvalPlan`] — the **latency engine**.  A precompiled execution
+//!   plan: per layer, one flat `Vec<i32>` of decoded table words (sub-neuron
 //!   `(j, a)` at offset `(j·A + a)·2^{β·F}`, adder table of neuron `j` at
 //!   `j·2^{A(β+1)}`) plus one flat gather-index array, executed over
 //!   reusable double-buffered [`plan::Scratch`] so a forward pass performs
-//!   no heap allocation.  Batched entry points walk samples in blocks for
-//!   cache locality and fan blocks out over worker threads; the
-//!   coordinator's `Backend::Lut` serves from this.
+//!   no heap allocation.  Lowest per-sample latency; serves small batches.
+//! - [`bitslice::BitsliceNet`] — the **throughput engine**.  The mapped
+//!   LUT6 netlists compiled into flat per-layer op streams and evaluated
+//!   bit-parallel, 64 samples per `u64` word, with transposition only at
+//!   the network edge and ragged tails masked ([`bitslice::lane_mask`]).
 //! - [`lutsim::LutSim`] — compatibility shim over the plan, plus the
 //!   original naive table walk (`forward_codes_reference`) kept as an
 //!   independent cross-check and benchmark baseline.
 //! - [`cycle::PipelineSim`] — clock-accurate pipeline-register model
 //!   (paper Fig. 5) validating latency/II claims, not throughput.
+//!
+//! [`EngineSelect`] is the plan-vs-bitslice routing policy the coordinator's
+//! `Backend::Lut` applies per batch.
 
+pub mod bitslice;
 pub mod cycle;
 pub mod lutsim;
 pub mod plan;
 
+pub use bitslice::{lane_mask, BitsliceNet, BitsliceScratch, BitsliceStats, WORD};
 pub use cycle::PipelineSim;
 pub use lutsim::LutSim;
 pub use plan::{EvalPlan, Scratch};
+
+/// Which batched LUT engine executes a batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LutEngine {
+    /// Gather + decoded-table lookup per sample ([`EvalPlan`]).
+    Plan,
+    /// 64-sample-per-word bit-parallel netlist evaluation ([`BitsliceNet`]).
+    Bitslice,
+}
+
+/// Plan-vs-bitslice selection policy: batches of at least `crossover`
+/// samples run bitsliced, smaller (latency-sensitive) ones through the
+/// plan.  `0` forces bitslice for every batch; `usize::MAX` disables it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineSelect {
+    pub crossover: usize,
+}
+
+impl EngineSelect {
+    /// Default crossover: two full 64-sample words — below that the
+    /// transposition overhead and partially-filled lanes eat the win.
+    pub const DEFAULT_CROSSOVER: usize = 2 * WORD;
+
+    pub fn auto() -> EngineSelect {
+        EngineSelect { crossover: Self::DEFAULT_CROSSOVER }
+    }
+
+    /// Never route to the bitsliced engine.
+    pub fn plan_only() -> EngineSelect {
+        EngineSelect { crossover: usize::MAX }
+    }
+
+    /// Route every batch to the bitsliced engine.
+    pub fn bitslice_only() -> EngineSelect {
+        EngineSelect { crossover: 0 }
+    }
+
+    pub fn pick(&self, batch_len: usize) -> LutEngine {
+        if batch_len >= self.crossover {
+            LutEngine::Bitslice
+        } else {
+            LutEngine::Plan
+        }
+    }
+}
+
+impl Default for EngineSelect {
+    fn default() -> Self {
+        Self::auto()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_select_routes_on_batch_size() {
+        let sel = EngineSelect::auto();
+        assert_eq!(sel.pick(1), LutEngine::Plan);
+        assert_eq!(sel.pick(EngineSelect::DEFAULT_CROSSOVER - 1), LutEngine::Plan);
+        assert_eq!(sel.pick(EngineSelect::DEFAULT_CROSSOVER), LutEngine::Bitslice);
+        assert_eq!(EngineSelect::plan_only().pick(1 << 20), LutEngine::Plan);
+        assert_eq!(EngineSelect::bitslice_only().pick(0), LutEngine::Bitslice);
+    }
+}

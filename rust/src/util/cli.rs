@@ -80,6 +80,23 @@ impl Args {
         self.get(name).ok_or_else(|| anyhow!("missing required option --{name}"))
     }
 
+    /// Value of `--name` constrained to one of `allowed` (typo guard for
+    /// enumerated options like `--backend lut|pjrt`); `default` when absent.
+    pub fn get_choice<'a>(
+        &'a self,
+        name: &str,
+        default: &'a str,
+        allowed: &[&str],
+    ) -> Result<&'a str> {
+        debug_assert!(allowed.contains(&default));
+        let v = self.get_or(name, default);
+        if allowed.contains(&v) {
+            Ok(v)
+        } else {
+            bail!("--{name}: {v:?} is not one of {}", allowed.join("|"))
+        }
+    }
+
     /// Error if any option outside `known` was supplied (typo guard).
     pub fn check_known(&self, known: &[&str]) -> Result<()> {
         for k in self.options.keys() {
@@ -127,6 +144,15 @@ mod tests {
     fn double_dash_stops_parsing() {
         let a = Args::parse(&argv(&["--x", "1", "--", "--not-an-option"]), &[]).unwrap();
         assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn choice_options() {
+        let a = Args::parse(&argv(&["--backend", "pjrt"]), &[]).unwrap();
+        assert_eq!(a.get_choice("backend", "lut", &["lut", "pjrt"]).unwrap(), "pjrt");
+        assert_eq!(a.get_choice("mode", "fast", &["fast", "slow"]).unwrap(), "fast");
+        let bad = Args::parse(&argv(&["--backend", "gpu"]), &[]).unwrap();
+        assert!(bad.get_choice("backend", "lut", &["lut", "pjrt"]).is_err());
     }
 
     #[test]

@@ -10,7 +10,7 @@ use polylut_add::lut::{boolfn::BoolFn, map_network_of};
 use polylut_add::nn::network::Network;
 use polylut_add::nn::{config, quant};
 use polylut_add::prop_assert;
-use polylut_add::sim::{LutSim, PipelineSim};
+use polylut_add::sim::{BitsliceNet, EvalPlan, LutSim, PipelineSim, Scratch, WORD};
 use polylut_add::util::prop::{check, Gen, Outcome};
 use polylut_add::util::rng::Rng;
 
@@ -112,6 +112,34 @@ fn mapped_netlist_equals_tables_on_random_vectors() {
                 prop_assert!(got == want, "neuron {j} sample {s}: {got} != {want}");
             }
         }
+        Outcome::Pass
+    });
+}
+
+#[test]
+fn bitslice_engine_equals_plan_on_random_configs() {
+    check("bitsliced 64-lane words == evaluation plan", 10, |g| {
+        let cfg = random_config(g);
+        if cfg.validate().is_err() {
+            return Outcome::Pass;
+        }
+        let mut rng = g.rng.fork(4);
+        let net = Network::random(&cfg, &mut rng);
+        let tables = compile_network(&net, 1);
+        let plan = EvalPlan::compile(&net, &tables);
+        let bits = BitsliceNet::compile(&net, &tables, 1);
+        // One full word plus a ragged tail.
+        let xs: Vec<Vec<i32>> = (0..WORD + 9)
+            .map(|_| {
+                (0..cfg.widths[0]).map(|_| rng.below(1usize << cfg.beta[0]) as i32).collect()
+            })
+            .collect();
+        let mut ps = Scratch::for_plan(&plan);
+        let mut bs = bits.scratch();
+        prop_assert!(
+            bits.forward_batch(&xs, &mut bs) == plan.forward_batch(&xs, &mut ps),
+            "cfg {cfg:?}"
+        );
         Outcome::Pass
     });
 }
