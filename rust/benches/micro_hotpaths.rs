@@ -22,7 +22,7 @@ use polylut_add::lut::tables::compile_neuron;
 use polylut_add::nn::config;
 use polylut_add::nn::network::Network;
 use polylut_add::runtime::Engine;
-use polylut_add::sim::{BitsliceNet, EvalPlan, LutSim, Scratch};
+use polylut_add::sim::{BitsliceNet, EvalPlan, LutSim, Scratch, ShardedModel};
 use polylut_add::util::bench::Bench;
 use polylut_add::util::pool::default_workers;
 use polylut_add::util::rng::Rng;
@@ -160,6 +160,55 @@ fn main() {
         st_bits4.throughput(1024.0),
         st_plan4.throughput(1024.0)
     );
+
+    // Sharded intra-sample execution on the same Table IV geometry: the
+    // acceptance comparison is single-sample latency, sharded (S workers,
+    // fan-in-aware early start over bit-plane/code handoff buffers) vs the
+    // unsharded plan.  The whole-batch runs double as a bit-exactness check
+    // against both existing engines on this geometry.
+    let shard_n = default_workers().clamp(2, 4);
+    let sharded4 = ShardedModel::compile(&net4, &tables4, shard_n, default_workers());
+    println!(
+        "  sharded engines: S={shard_n}, bitslice cone replication {:.2}x",
+        sharded4.bits.replication()
+    );
+    let single = rows4[0].clone();
+    let st_plan_1 = b.measure("plan/forward (1 sample, nid-t4)", || {
+        plan4.forward_codes_into(&single, &mut pscratch4).len()
+    });
+    let st_shard_1 = b.measure("shard-plan/forward (1 sample, nid-t4)", || {
+        sharded4.plan.forward_codes(&single).len()
+    });
+    println!(
+        "  -> sharded vs unsharded single-sample latency (nid-t4, S={shard_n}): {:.2}x ({} vs {})",
+        st_plan_1.median_ns / st_shard_1.median_ns,
+        polylut_add::util::bench::fmt_ns(st_shard_1.median_ns),
+        polylut_add::util::bench::fmt_ns(st_plan_1.median_ns),
+    );
+    let st_shard_bits = b.measure("shard-bitslice/forward_batch x1024 (nid-t4)", || {
+        sharded4.bits.forward_batch(&rows4).len()
+    });
+    println!(
+        "  -> sharded vs unsharded bitslice on 1024-sample batch (nid-t4): {:.2}x",
+        st_bits4.median_ns / st_shard_bits.median_ns
+    );
+    // Bit-exactness of the sharded engines on this batch (also pinned by
+    // the sim::shard test grid).
+    assert_eq!(
+        sharded4.plan.forward_batch(&rows4),
+        plan4.forward_batch(&rows4, &mut pscratch4),
+        "sharded plan disagrees on nid-t4"
+    );
+    assert_eq!(
+        sharded4.bits.forward_batch(&rows4),
+        bits4.forward_batch(&rows4, &mut bscratch4),
+        "sharded bitslice disagrees on nid-t4"
+    );
+    let shard_stats = sharded4.stats();
+    let cells: Vec<u64> = shard_stats.iter().map(|s| s.cells).collect();
+    let waits: Vec<u64> = shard_stats.iter().map(|s| s.waits).collect();
+    println!("  shard occupancy (cells) {cells:?}, handoff waits {waits:?}");
+    drop(sharded4);
 
     // Fixed-point float model for comparison.
     b.measure("network/forward (float fixed-point)", || net.forward(&x));

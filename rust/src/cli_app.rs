@@ -46,10 +46,18 @@ fn print_help() {
            synth    --id <artifact>      area/timing/pipeline report\n\
                     [--strategy 1|2]\n\
            rtl      --id <artifact> --out <dir>   emit Verilog + testbench\n\
-           serve    --id <artifact>      batching inference server over stdin\n\
-                    [--backend lut|pjrt] [--batch-window-us N]\n\
+           serve    --id <artifact>      batching inference server (self-driving load test)\n\
+                    [--backend lut|pjrt] [--batch-window-us N] [--max-batch N]\n\
+                    [--requests N] [--clients N]\n\
                     [--bitslice-threshold N]  batch size from which the LUT\n\
-                    backend runs bitsliced (0 = always; default: two 64-lane words)\n\
+                    backend runs bitsliced (0 = always; default: two 64-lane\n\
+                    words).  Smaller batches use the plan engine — or, with\n\
+                    [--shards N]  (default 1), the intra-sample sharded\n\
+                    engines: each request's forward pass itself runs across\n\
+                    N cores with bit-plane handoff (see ARCHITECTURE.md §4).\n\
+                    Metrics snapshot: plan/bitslice/sharded = batches served\n\
+                    per engine; shard_cells/shard_waits = per-shard occupancy\n\
+                    and handoff-wait counters (cumulative)\n\
            report   --id <artifact>      full markdown report (synth + cubes)\n\n\
          COMMON\n\
            --artifacts <dir>             artifact directory (default: artifacts)"

@@ -1,10 +1,15 @@
 //! Server metrics: lock-free counters + a fixed-bucket latency histogram
 //! (µs resolution, exponential buckets) good enough for p50/p95/p99 without
-//! allocation on the hot path.
+//! allocation on the hot path.  Engine-routing counters record which LUT
+//! engine served each batch; when intra-sample sharding is active the
+//! sharded engines' cumulative per-shard occupancy/handoff-wait counters
+//! are mirrored here after every sharded batch (see `snapshot()` and the
+//! README's metrics glossary).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
-use crate::sim::LutEngine;
+use crate::sim::{LutEngine, ShardStats};
 
 const BUCKETS: usize = 40;
 
@@ -16,9 +21,15 @@ pub struct Metrics {
     pub batch_samples: AtomicU64,
     pub queue_rejects: AtomicU64,
     /// Batches the LUT backend served through the evaluation plan vs the
-    /// bitsliced 64-lane engine (both zero under the PJRT backend).
+    /// bitsliced 64-lane engine vs the intra-sample sharded engines (all
+    /// zero under the PJRT backend).
     pub plan_batches: AtomicU64,
     pub bitslice_batches: AtomicU64,
+    pub sharded_batches: AtomicU64,
+    /// Latest cumulative per-shard counters from the sharded engines
+    /// (empty when sharding is off): `cells` = layer-cells executed
+    /// (occupancy proxy), `waits` = handoff-wait episodes.
+    shard: Mutex<Vec<ShardStats>>,
     hist: [AtomicU64; BUCKETS],
 }
 
@@ -32,6 +43,8 @@ impl Default for Metrics {
             queue_rejects: AtomicU64::new(0),
             plan_batches: AtomicU64::new(0),
             bitslice_batches: AtomicU64::new(0),
+            sharded_batches: AtomicU64::new(0),
+            shard: Mutex::new(Vec::new()),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -64,7 +77,22 @@ impl Metrics {
         match engine {
             LutEngine::Plan => self.plan_batches.fetch_add(1, Ordering::Relaxed),
             LutEngine::Bitslice => self.bitslice_batches.fetch_add(1, Ordering::Relaxed),
+            LutEngine::Sharded => self.sharded_batches.fetch_add(1, Ordering::Relaxed),
         };
+    }
+
+    /// Mirror the sharded engines' cumulative per-shard counters (called by
+    /// the batcher after a sharded batch; values are monotonic, so the last
+    /// write always reflects the engine's lifetime totals).
+    pub fn record_shard_stats(&self, stats: &[ShardStats]) {
+        let mut guard = self.shard.lock().unwrap();
+        guard.clear();
+        guard.extend_from_slice(stats);
+    }
+
+    /// Latest per-shard counters (empty when sharding is off).
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shard.lock().unwrap().clone()
     }
 
     /// Approximate quantile from the histogram (upper bucket bound).
@@ -96,19 +124,31 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> String {
-        format!(
-            "requests={} responses={} batches={} (plan={} bitslice={}) mean_batch={:.1} rejects={} p50={:.0}µs p95={:.0}µs p99={:.0}µs",
+        let mut s = format!(
+            "requests={} responses={} batches={} (plan={} bitslice={} sharded={}) mean_batch={:.1} rejects={} p50={:.0}µs p95={:.0}µs p99={:.0}µs",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.plan_batches.load(Ordering::Relaxed),
             self.bitslice_batches.load(Ordering::Relaxed),
+            self.sharded_batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.queue_rejects.load(Ordering::Relaxed),
             self.latency_quantile_us(0.5),
             self.latency_quantile_us(0.95),
             self.latency_quantile_us(0.99),
-        )
+        );
+        let shard = self.shard.lock().unwrap();
+        if !shard.is_empty() {
+            let cells: Vec<String> = shard.iter().map(|st| st.cells.to_string()).collect();
+            let waits: Vec<String> = shard.iter().map(|st| st.waits.to_string()).collect();
+            s.push_str(&format!(
+                " shard_cells=[{}] shard_waits=[{}]",
+                cells.join(","),
+                waits.join(",")
+            ));
+        }
+        s
     }
 }
 
@@ -134,9 +174,25 @@ mod tests {
         m.record_engine(LutEngine::Plan);
         m.record_engine(LutEngine::Bitslice);
         m.record_engine(LutEngine::Bitslice);
+        m.record_engine(LutEngine::Sharded);
         assert_eq!(m.plan_batches.load(Ordering::Relaxed), 1);
         assert_eq!(m.bitslice_batches.load(Ordering::Relaxed), 2);
-        assert!(m.snapshot().contains("plan=1 bitslice=2"));
+        assert_eq!(m.sharded_batches.load(Ordering::Relaxed), 1);
+        assert!(m.snapshot().contains("plan=1 bitslice=2 sharded=1"));
+    }
+
+    #[test]
+    fn shard_stats_surface_in_snapshot() {
+        let m = Metrics::new();
+        assert!(!m.snapshot().contains("shard_cells"), "hidden when sharding is off");
+        m.record_shard_stats(&[
+            ShardStats { cells: 10, waits: 2 },
+            ShardStats { cells: 9, waits: 0 },
+        ]);
+        let snap = m.snapshot();
+        assert!(snap.contains("shard_cells=[10,9]"), "{snap}");
+        assert!(snap.contains("shard_waits=[2,0]"), "{snap}");
+        assert_eq!(m.shard_stats().len(), 2);
     }
 
     #[test]

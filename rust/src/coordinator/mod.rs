@@ -31,27 +31,41 @@ use crate::runtime::{f32_literal, to_f32_vec, Engine, Executable};
 use crate::sim::bitslice::BitsliceNet;
 use crate::sim::lutsim::LutSim;
 use crate::sim::plan::EvalPlan;
-use crate::sim::{EngineSelect, LutEngine};
+use crate::sim::shard::ShardedModel;
+use crate::sim::{EngineSelect, LutEngine, ShardStats};
 use crate::util::cli::Args;
 use metrics::Metrics;
 
-/// A frozen deployable model: trained network + its compiled tables + both
+/// A frozen deployable model: trained network + its compiled tables + the
 /// precompiled LUT execution engines — the per-sample evaluation plan
-/// (latency) and the 64-sample-per-word bitsliced netlist engine
-/// (throughput).  `Backend::Lut` picks between them per batch.
+/// (latency), the 64-sample-per-word bitsliced netlist engine
+/// (throughput), and optionally the intra-sample sharded engines
+/// (`shards > 1`).  `Backend::Lut` picks between them per batch.
 pub struct FrozenModel {
     pub net: Network,
     pub tables: NetworkTables,
     pub plan: EvalPlan,
     pub bitslice: BitsliceNet,
+    /// Compiled when the model was built with `shards > 1`; required for
+    /// backends whose `EngineSelect::shards > 1`.
+    pub sharded: Option<ShardedModel>,
 }
 
 impl FrozenModel {
     pub fn from_network(net: Network, workers: usize) -> FrozenModel {
+        Self::from_network_sharded(net, workers, 1)
+    }
+
+    /// Freeze a network with intra-sample sharding compiled in: `shards > 1`
+    /// additionally builds the cache-aware-reordered [`ShardedModel`]
+    /// (spawning `2·shards` persistent worker threads).
+    pub fn from_network_sharded(net: Network, workers: usize, shards: usize) -> FrozenModel {
         let tables = crate::lut::tables::compile_network(&net, workers);
         let plan = EvalPlan::compile(&net, &tables);
         let bitslice = BitsliceNet::compile(&net, &tables, workers);
-        FrozenModel { net, tables, plan, bitslice }
+        let sharded =
+            (shards > 1).then(|| ShardedModel::compile(&net, &tables, shards, workers));
+        FrozenModel { net, tables, plan, bitslice, sharded }
     }
 
     pub fn sim(&self) -> LutSim<'_> {
@@ -125,10 +139,24 @@ impl Backend {
     }
 
     /// Which LUT engine a batch of `batch_len` samples would run on
-    /// (`None` for the PJRT backend).
+    /// (`None` for the PJRT backend).  `Sharded` is only returned when the
+    /// model actually carries compiled sharded engines, so routing can
+    /// never point at an engine that does not exist.
     pub fn route(&self, batch_len: usize) -> Option<LutEngine> {
         match self {
-            Backend::Lut { select, .. } => Some(select.pick(batch_len)),
+            Backend::Lut { model, select, .. } => Some(match select.pick(batch_len) {
+                LutEngine::Sharded if model.sharded.is_none() => LutEngine::Plan,
+                engine => engine,
+            }),
+            Backend::Pjrt { .. } => None,
+        }
+    }
+
+    /// Cumulative per-shard counters of the sharded engines (`None` when
+    /// sharding is off or the backend is PJRT).
+    pub fn shard_stats(&self) -> Option<Vec<ShardStats>> {
+        match self {
+            Backend::Lut { model, .. } => model.sharded.as_ref().map(|s| s.stats()),
             Backend::Pjrt { .. } => None,
         }
     }
@@ -182,6 +210,13 @@ impl Backend {
                     // Bit-parallel netlist evaluation, 64 samples per word
                     // (parallel across words).
                     LutEngine::Bitslice => model.bitslice.forward_batch_f32(xs, *workers),
+                    // Intra-sample sharded execution (route guarantees the
+                    // engines exist when this arm is reached).
+                    LutEngine::Sharded => model
+                        .sharded
+                        .as_ref()
+                        .expect("route only picks Sharded when compiled")
+                        .forward_batch_f32(xs),
                 })
             }
             Backend::Pjrt { engine, exe, params, batch, n_features, n_out } => {
@@ -362,6 +397,11 @@ fn batcher_loop(
                 // (same decision function infer() just used).
                 if let Some(engine) = backend.route(batch.len()) {
                     metrics.record_engine(engine);
+                    if engine == LutEngine::Sharded {
+                        if let Some(stats) = backend.shard_stats() {
+                            metrics.record_shard_stats(&stats);
+                        }
+                    }
                 }
                 for (req, logits) in batch.into_iter().zip(all_logits) {
                     let pred = if n_classes == 1 {
@@ -390,11 +430,14 @@ fn batcher_loop(
 // ---------------------------------------------------------------------------
 
 /// `polylut serve --id <artifact> [--backend lut|pjrt] [--requests N]
-///  [--clients N] [--batch-window-us N] [--bitslice-threshold N]` — runs a
-/// self-driving load test against the server with dataset samples and
-/// prints metrics.  `--bitslice-threshold` sets the plan-vs-bitslice batch
-/// crossover of the LUT backend (0 = always bitsliced; default
-/// [`EngineSelect::DEFAULT_CROSSOVER`]).
+///  [--clients N] [--batch-window-us N] [--bitslice-threshold N]
+///  [--shards N]` — runs a self-driving load test against the server with
+/// dataset samples and prints metrics.  `--bitslice-threshold` sets the
+/// batch crossover of the LUT backend above which the bitsliced engine
+/// takes over (0 = always bitsliced; default
+/// [`EngineSelect::DEFAULT_CROSSOVER`]); `--shards N` (default 1) compiles
+/// the intra-sample sharded engines and routes every sub-crossover batch
+/// through them, so a single request's forward pass runs on N cores.
 pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
     let man = crate::meta::load_id(dir, id)?;
     let ds = crate::data::load(&man.dataset, 0)?;
@@ -402,15 +445,19 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
         .context("no trained weights — run `polylut train` first")?;
     let backend_name = args.get_choice("backend", "lut", &["lut", "pjrt"])?.to_string();
     let crossover = args.get_usize("bitslice-threshold", EngineSelect::DEFAULT_CROSSOVER)?;
+    let shards = args.get_usize("shards", 1)?.max(1);
     let net = man.network_from_state(&state)?;
     let backend = match backend_name.as_str() {
         "lut" => {
-            let model =
-                Arc::new(FrozenModel::from_network(net, crate::util::pool::default_workers()));
+            let model = Arc::new(FrozenModel::from_network_sharded(
+                net,
+                crate::util::pool::default_workers(),
+                shards,
+            ));
             BackendSpec::lut_with_select(
                 model,
                 crate::util::pool::default_workers(),
-                EngineSelect { crossover },
+                EngineSelect { crossover, shards },
             )
         }
         "pjrt" => BackendSpec::pjrt(man.clone(), state.clone()),
@@ -427,7 +474,7 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
 
     if backend_name == "lut" {
         println!(
-            "[serve] {id} backend=lut (bitslice-threshold={crossover}): {n_requests} requests from {n_clients} clients…"
+            "[serve] {id} backend=lut (bitslice-threshold={crossover} shards={shards}): {n_requests} requests from {n_clients} clients…"
         );
     } else {
         println!("[serve] {id} backend={backend_name}: {n_requests} requests from {n_clients} clients…");
@@ -524,6 +571,52 @@ mod tests {
         assert!(server.metrics.bitslice_batches.load(Ordering::Relaxed) > 0);
         assert_eq!(server.metrics.plan_batches.load(Ordering::Relaxed), 0);
         server.shutdown();
+    }
+
+    /// With `--shards`-style selection, sub-crossover batches route to the
+    /// intra-sample sharded engines — invisible to clients (bit-exact
+    /// logits), visible in the routing metrics and the mirrored per-shard
+    /// counters.
+    #[test]
+    fn sharded_route_is_bit_exact_and_recorded() {
+        let cfg = config::uniform("srv-sh", &[8, 6, 3], 2, 2, 3, 3, 3, 1, 2, 3);
+        let net = Network::random(&cfg, &mut Rng::new(4));
+        let m = Arc::new(FrozenModel::from_network_sharded(net, 2, 3));
+        assert!(m.sharded.is_some(), "shards > 1 must compile the sharded engines");
+        let select = EngineSelect { crossover: usize::MAX, shards: 3 };
+        let backend = BackendSpec::lut_with_select(m.clone(), 2, select);
+        let server = Server::start(
+            backend,
+            3,
+            ServerConfig { max_batch: 8, window: Duration::from_micros(100), queue_cap: 64 },
+        );
+        let client = server.client();
+        let mut rng = Rng::new(2);
+        for _ in 0..30 {
+            let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+            let resp = client.infer(x.clone()).unwrap();
+            assert_eq!(resp.logits, m.sim().forward(&x));
+        }
+        assert_eq!(server.metrics.responses.load(Ordering::Relaxed), 30);
+        assert!(server.metrics.sharded_batches.load(Ordering::Relaxed) > 0);
+        assert_eq!(server.metrics.plan_batches.load(Ordering::Relaxed), 0);
+        assert_eq!(server.metrics.bitslice_batches.load(Ordering::Relaxed), 0);
+        let shard_stats = server.metrics.shard_stats();
+        assert_eq!(shard_stats.len(), 3, "one counter row per shard");
+        assert!(shard_stats.iter().all(|s| s.cells > 0));
+        assert!(server.metrics.snapshot().contains("shard_cells="));
+        server.shutdown();
+    }
+
+    /// A backend whose selection asks for shards but whose model was frozen
+    /// without them falls back to the plan engine instead of panicking.
+    #[test]
+    fn shardless_model_falls_back_to_plan() {
+        let m = model();
+        let select = EngineSelect { crossover: usize::MAX, shards: 4 };
+        let backend = Backend::Lut { model: m, workers: 2, select };
+        assert_eq!(backend.route(1), Some(LutEngine::Plan));
+        assert!(backend.shard_stats().is_none());
     }
 
     /// The default policy keeps single-request batches on the plan engine.

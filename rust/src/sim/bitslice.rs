@@ -52,11 +52,15 @@
 //! Ragged tails (batches not divisible by 64) are handled with
 //! [`lane_mask`]: invalid lanes are packed as zero, evaluated like any other
 //! lane, and never unpacked.
+//!
+//! The bit-plane layout doubles as the shard handoff format of the
+//! intra-sample sharded engine ([`crate::sim::shard`]); the full engine map
+//! lives in `ARCHITECTURE.md` §3–§4 at the repository root.
 
 use std::collections::HashMap;
 
 use crate::lut::mapper::{map_network_of, MappedNetwork};
-use crate::lut::netlist::{lut_word, Node};
+use crate::lut::netlist::{lut_word, Netlist, Node};
 use crate::lut::tables::{LayerTables, NetworkTables};
 use crate::nn::network::Network;
 use crate::nn::quant::{from_twos_complement, unsigned_code};
@@ -79,9 +83,10 @@ pub fn lane_mask(n_valid: usize) -> u64 {
 
 /// One step of the flat, topologically-ordered per-layer op stream.  All
 /// operands are node slots; no op owns heap memory, so executing a layer is
-/// a single linear walk.
+/// a single linear walk.  Crate-visible so [`crate::sim::shard`] can build
+/// per-shard sub-streams over the same executor.
 #[derive(Debug, Clone, Copy)]
-enum Op {
+pub(crate) enum Op {
     Const { out: u32, ones: bool },
     /// A physical LUT evaluated through the shared word-level
     /// mask-decomposition kernel ([`lut_word`]).
@@ -89,22 +94,31 @@ enum Op {
     Mux { out: u32, sel: u32, lo: u32, hi: u32 },
     /// ≥2 LUTs over the *identical* input tuple (typically the output bits
     /// of one truth table): one shared minterm expansion, then one OR-reduce
-    /// per mask.  `(node, mask)` pairs live in `LayerOps::lut_nodes` /
+    /// per mask.  `(node, mask)` pairs live in `OpStream::lut_nodes` /
     /// `lut_masks` at `start..start+len`.
     Group { n_in: u8, ins: [u32; 6], start: u32, len: u32 },
 }
 
-/// One compiled layer: input bindings, the op stream, and the output roots.
-struct LayerOps {
+/// A compiled, self-contained op stream over compact local node slots:
+/// input bindings, the ops, and the backing store for [`Op::Group`]
+/// members.  Built by [`flatten_cone`]; executed by [`exec_ops`] after the
+/// caller has bound the input planes.
+pub(crate) struct OpStream {
     /// `(node slot, input wire)` — wire = `src·in_bits + bit`.
-    bind: Vec<(u32, u32)>,
-    ops: Vec<Op>,
-    /// Output node of bit `b` of neuron `j` at `j·out_bits + b`.
+    pub(crate) bind: Vec<(u32, u32)>,
+    pub(crate) ops: Vec<Op>,
+    /// Backing store for [`Op::Group`] members (local node slots).
+    pub(crate) lut_nodes: Vec<u32>,
+    pub(crate) lut_masks: Vec<u64>,
+    /// Local node-slot count (size of the `vals` scratch this stream needs).
+    pub(crate) n_nodes: usize,
+}
+
+/// One compiled layer: the op stream plus the output roots.
+struct LayerOps {
+    stream: OpStream,
+    /// Output node (local slot) of bit `b` of neuron `j` at `j·out_bits + b`.
     roots: Vec<u32>,
-    /// Backing store for [`Op::Group`] members.
-    lut_nodes: Vec<u32>,
-    lut_masks: Vec<u64>,
-    n_nodes: usize,
     n_out: usize,
     out_bits: u32,
     signed_out: bool,
@@ -113,13 +127,17 @@ struct LayerOps {
 /// Engine shape statistics (for benches and logs).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct BitsliceStats {
+    /// Compiled layer count.
     pub layers: usize,
+    /// Total netlist nodes across all layers.
     pub nodes: usize,
     /// LUTs evaluated individually through the Shannon kernel.
     pub lut_ops: usize,
     /// LUTs folded into shared-input minterm groups.
     pub grouped_luts: usize,
+    /// Shared-input minterm groups.
     pub groups: usize,
+    /// Word-level 2:1 mux ops.
     pub mux_ops: usize,
 }
 
@@ -175,7 +193,7 @@ impl BitsliceNet {
             .unwrap_or(0);
         let last = cfg.n_layers() - 1;
         BitsliceNet {
-            max_nodes: layers.iter().map(|l| l.n_nodes).max().unwrap_or(0),
+            max_nodes: layers.iter().map(|l| l.stream.n_nodes).max().unwrap_or(0),
             layers,
             n_features: cfg.widths[0],
             n_outputs: cfg.widths[cfg.n_layers()],
@@ -186,18 +204,23 @@ impl BitsliceNet {
         }
     }
 
+    /// Input feature count (width of layer 0).
     pub fn n_features(&self) -> usize {
         self.n_features
     }
 
+    /// Output neuron count (width of the last layer boundary).
     pub fn n_outputs(&self) -> usize {
         self.n_outputs
     }
 
+    /// Engine shape statistics (op and group counts, for benches and logs).
     pub fn stats(&self) -> BitsliceStats {
         self.stats
     }
 
+    /// Allocate scratch sized for this engine (reusable across words; one
+    /// per thread).
     pub fn scratch(&self) -> BitsliceScratch {
         BitsliceScratch {
             planes: vec![0; self.max_wires],
@@ -269,29 +292,22 @@ impl BitsliceNet {
             std::mem::swap(&mut scratch.planes, &mut scratch.next);
         }
         let last = self.layers.last().expect("at least one layer");
-        let ob = last.out_bits as usize;
-        for s in 0..word.len() {
-            let mut row = Vec::with_capacity(last.n_out);
-            for j in 0..last.n_out {
-                let mut raw = 0u32;
-                for b in 0..ob {
-                    raw |= (((scratch.planes[j * ob + b] >> s) & 1) as u32) << b;
-                }
-                row.push(if last.signed_out {
-                    from_twos_complement(raw, last.out_bits)
-                } else {
-                    raw as i32
-                });
-            }
-            out.push(row);
-        }
+        unpack_word(
+            &scratch.planes,
+            last.n_out,
+            last.out_bits,
+            last.signed_out,
+            word.len(),
+            out,
+        );
     }
 }
 
 /// Transpose ≤64 samples of unsigned input codes into bit-planes
 /// (`planes[f·bits + b]`, lane `s` = sample `s`); invalid lanes of a ragged
-/// word are left zero (see [`lane_mask`]).
-fn pack_word(word: &[Vec<i32>], bits: u32, planes: &mut [u64]) {
+/// word are left zero (see [`lane_mask`]).  Shared with the sharded engine
+/// ([`crate::sim::shard`]), whose staging differs only in buffer type.
+pub(crate) fn pack_word(word: &[Vec<i32>], bits: u32, planes: &mut [u64]) {
     let bits = bits as usize;
     let n_planes = word[0].len() * bits;
     planes[..n_planes].fill(0);
@@ -308,87 +324,139 @@ fn pack_word(word: &[Vec<i32>], bits: u32, planes: &mut [u64]) {
     debug_assert!(planes[..n_planes].iter().all(|&p| p & !lane_mask(word.len()) == 0));
 }
 
+/// Inverse of [`pack_word`] at the network edge: decode the first
+/// `n_valid` lanes of `n_out·out_bits` output planes back into per-sample
+/// code rows (two's-complement when `signed_out`), appending to `out`.
+/// Shared between [`BitsliceNet::forward_batch`] and the sharded engine so
+/// the bit-plane layout lives in exactly one pack/unpack pair.
+pub(crate) fn unpack_word(
+    planes: &[u64],
+    n_out: usize,
+    out_bits: u32,
+    signed_out: bool,
+    n_valid: usize,
+    out: &mut Vec<Vec<i32>>,
+) {
+    let ob = out_bits as usize;
+    for s in 0..n_valid {
+        let mut row = Vec::with_capacity(n_out);
+        for j in 0..n_out {
+            let mut raw = 0u32;
+            for (b, plane) in planes[j * ob..(j + 1) * ob].iter().enumerate() {
+                raw |= (((plane >> s) & 1) as u32) << b;
+            }
+            row.push(if signed_out {
+                from_twos_complement(raw, out_bits)
+            } else {
+                raw as i32
+            });
+        }
+        out.push(row);
+    }
+}
+
 impl LayerOps {
     /// Execute the op stream for one word.  `planes` are this layer's input
     /// bit-planes; node values land in `vals`.
     fn run(&self, planes: &[u64], vals: &mut [u64]) {
-        for &(node, wire) in &self.bind {
+        for &(node, wire) in &self.stream.bind {
             vals[node as usize] = planes[wire as usize];
         }
-        for op in &self.ops {
-            match *op {
-                Op::Const { out, ones } => vals[out as usize] = if ones { !0 } else { 0 },
-                Op::Lut { out, mask, n_in, ins } => {
-                    let mut a = [0u64; 6];
-                    for (slot, &i) in a.iter_mut().zip(&ins[..n_in as usize]) {
-                        *slot = vals[i as usize];
-                    }
-                    vals[out as usize] = lut_word(mask, &a[..n_in as usize]);
+        exec_ops(&self.stream, vals);
+    }
+}
+
+/// Execute an [`OpStream`]'s ops over one word.  The caller must have
+/// bound the stream's input slots (`stream.bind`) into `vals` first — the
+/// binding source differs between the whole-layer engine (plain plane
+/// slices) and the sharded engine (atomic handoff buffers), which is why
+/// binding is not part of this function.
+pub(crate) fn exec_ops(stream: &OpStream, vals: &mut [u64]) {
+    for op in &stream.ops {
+        match *op {
+            Op::Const { out, ones } => vals[out as usize] = if ones { !0 } else { 0 },
+            Op::Lut { out, mask, n_in, ins } => {
+                let mut a = [0u64; 6];
+                for (slot, &i) in a.iter_mut().zip(&ins[..n_in as usize]) {
+                    *slot = vals[i as usize];
                 }
-                Op::Mux { out, sel, lo, hi } => {
-                    let (s, l, h) = (vals[sel as usize], vals[lo as usize], vals[hi as usize]);
-                    vals[out as usize] = l ^ (s & (l ^ h));
+                vals[out as usize] = lut_word(mask, &a[..n_in as usize]);
+            }
+            Op::Mux { out, sel, lo, hi } => {
+                let (s, l, h) = (vals[sel as usize], vals[lo as usize], vals[hi as usize]);
+                vals[out as usize] = l ^ (s & (l ^ h));
+            }
+            Op::Group { n_in, ins, start, len } => {
+                // Shared minterm expansion: buf[a] = word where lane s is
+                // set iff the k inputs of sample s spell address a.
+                let k = n_in as usize;
+                let mut buf = [0u64; 64];
+                buf[0] = !0u64;
+                let mut cur = 1usize;
+                for &i in &ins[..k] {
+                    let x = vals[i as usize];
+                    for j in 0..cur {
+                        let v = buf[j];
+                        buf[j + cur] = v & x;
+                        buf[j] = v & !x;
+                    }
+                    cur <<= 1;
                 }
-                Op::Group { n_in, ins, start, len } => {
-                    // Shared minterm expansion: buf[a] = word where lane s is
-                    // set iff the k inputs of sample s spell address a.
-                    let k = n_in as usize;
-                    let mut buf = [0u64; 64];
-                    buf[0] = !0u64;
-                    let mut cur = 1usize;
-                    for &i in &ins[..k] {
-                        let x = vals[i as usize];
-                        for j in 0..cur {
-                            let v = buf[j];
-                            buf[j + cur] = v & x;
-                            buf[j] = v & !x;
-                        }
-                        cur <<= 1;
+                let full = if cur == 64 { !0u64 } else { (1u64 << cur) - 1 };
+                let lo = start as usize;
+                let hi = lo + len as usize;
+                for (&node, &raw_mask) in
+                    stream.lut_nodes[lo..hi].iter().zip(&stream.lut_masks[lo..hi])
+                {
+                    let mask = raw_mask & full;
+                    // The 2^k minterms partition all 64 lanes, so
+                    // OR(set minterms) == !OR(clear minterms): reduce
+                    // whichever polarity has fewer terms.
+                    let (mut rem, invert) = if (mask.count_ones() as usize) * 2 <= cur {
+                        (mask, false)
+                    } else {
+                        (!mask & full, true)
+                    };
+                    let mut acc = 0u64;
+                    while rem != 0 {
+                        acc |= buf[rem.trailing_zeros() as usize];
+                        rem &= rem - 1;
                     }
-                    let full = if cur == 64 { !0u64 } else { (1u64 << cur) - 1 };
-                    let lo = start as usize;
-                    let hi = lo + len as usize;
-                    for (&node, &raw_mask) in
-                        self.lut_nodes[lo..hi].iter().zip(&self.lut_masks[lo..hi])
-                    {
-                        let mask = raw_mask & full;
-                        // The 2^k minterms partition all 64 lanes, so
-                        // OR(set minterms) == !OR(clear minterms): reduce
-                        // whichever polarity has fewer terms.
-                        let (mut rem, invert) = if (mask.count_ones() as usize) * 2 <= cur {
-                            (mask, false)
-                        } else {
-                            (!mask & full, true)
-                        };
-                        let mut acc = 0u64;
-                        while rem != 0 {
-                            acc |= buf[rem.trailing_zeros() as usize];
-                            rem &= rem - 1;
-                        }
-                        vals[node as usize] = if invert { !acc } else { acc };
-                    }
+                    vals[node as usize] = if invert { !acc } else { acc };
                 }
             }
         }
     }
 }
 
-/// Flatten one mapped layer into an op stream.  Nodes are already in
-/// topological order (the netlist arena appends inputs before users); LUTs
-/// sharing an identical input tuple are folded into one [`Op::Group`],
-/// emitted at the position of the group's *first* member — safe because
-/// every member has the same (already-ready) inputs and every consumer sits
-/// after its producer.
-fn flatten_layer(
-    ml: &crate::lut::mapper::MappedLayer,
-    lt: &LayerTables,
-    stats: &mut BitsliceStats,
-) -> LayerOps {
-    let nl = &ml.netlist;
-    // Pass 1: collect LUT nodes by identical input tuple.
+/// Flatten the `keep`-marked cone of a netlist into an [`OpStream`] with
+/// compact local node numbering.  Nodes are already in topological order
+/// (the netlist arena appends inputs before users), so the kept
+/// subsequence stays topological; LUTs sharing an identical input tuple
+/// (within the kept set) are folded into one [`Op::Group`], emitted at the
+/// position of the group's *first* member — safe because every member has
+/// the same (already-ready) inputs and every consumer sits after its
+/// producer.  Returns the stream plus the old-id → local-slot map
+/// (`u32::MAX` for dropped nodes), which callers use to translate root
+/// node ids.  `keep` must be closed under node inputs.
+pub(crate) fn flatten_cone(nl: &Netlist, keep: &[bool]) -> (OpStream, Vec<u32>) {
+    debug_assert_eq!(keep.len(), nl.nodes.len());
+    // Local numbering: kept nodes in id order.
+    let mut map = vec![u32::MAX; nl.nodes.len()];
+    let mut n_local = 0u32;
+    for (id, &k) in keep.iter().enumerate() {
+        if k {
+            map[id] = n_local;
+            n_local += 1;
+        }
+    }
+    // Pass 1: collect kept LUT nodes by identical input tuple.
     let mut group_of: HashMap<&[u32], usize> = HashMap::new();
     let mut members: Vec<Vec<(u32, u64)>> = Vec::new();
     for (id, node) in nl.nodes.iter().enumerate() {
+        if !keep[id] {
+            continue;
+        }
         if let Node::Lut { inputs, mask } = node {
             let g = *group_of.entry(inputs.as_slice()).or_insert_with(|| {
                 members.push(Vec::new());
@@ -403,31 +471,37 @@ fn flatten_layer(
     let mut lut_nodes = Vec::new();
     let mut lut_masks = Vec::new();
     for (id, node) in nl.nodes.iter().enumerate() {
-        let id = id as u32;
+        if !keep[id] {
+            continue;
+        }
+        let out = map[id];
         match node {
-            Node::Input { wire } => bind.push((id, *wire)),
-            Node::Const(v) => ops.push(Op::Const { out: id, ones: *v }),
+            Node::Input { wire } => bind.push((out, *wire)),
+            Node::Const(v) => ops.push(Op::Const { out, ones: *v }),
             Node::Mux { sel, lo, hi, .. } => {
-                stats.mux_ops += 1;
-                ops.push(Op::Mux { out: id, sel: *sel, lo: *lo, hi: *hi });
+                ops.push(Op::Mux {
+                    out,
+                    sel: map[*sel as usize],
+                    lo: map[*lo as usize],
+                    hi: map[*hi as usize],
+                });
             }
             Node::Lut { inputs, mask } => {
                 let group = &members[group_of[inputs.as_slice()]];
-                if group[0].0 != id {
+                if group[0].0 != id as u32 {
                     continue; // evaluated with the group's first member
                 }
                 let mut ins = [0u32; 6];
-                ins[..inputs.len()].copy_from_slice(inputs);
+                for (slot, &i) in ins.iter_mut().zip(inputs) {
+                    *slot = map[i as usize];
+                }
                 let n_in = inputs.len() as u8;
                 if group.len() == 1 {
-                    stats.lut_ops += 1;
-                    ops.push(Op::Lut { out: id, mask: *mask, n_in, ins });
+                    ops.push(Op::Lut { out, mask: *mask, n_in, ins });
                 } else {
-                    stats.groups += 1;
-                    stats.grouped_luts += group.len();
                     let start = lut_nodes.len() as u32;
                     for &(node_id, m) in group {
-                        lut_nodes.push(node_id);
+                        lut_nodes.push(map[node_id as usize]);
                         lut_masks.push(m);
                     }
                     ops.push(Op::Group { n_in, ins, start, len: group.len() as u32 });
@@ -435,24 +509,36 @@ fn flatten_layer(
             }
         }
     }
-    stats.nodes += nl.nodes.len();
+    let stream = OpStream { bind, ops, lut_nodes, lut_masks, n_nodes: n_local as usize };
+    (stream, map)
+}
+
+/// Flatten one whole mapped layer into an op stream (every node kept).
+fn flatten_layer(
+    ml: &crate::lut::mapper::MappedLayer,
+    lt: &LayerTables,
+    stats: &mut BitsliceStats,
+) -> LayerOps {
+    let nl = &ml.netlist;
+    let keep = vec![true; nl.nodes.len()];
+    let (stream, map) = flatten_cone(nl, &keep);
+    stats.nodes += stream.n_nodes;
+    stats.grouped_luts += stream.lut_nodes.len();
+    for op in &stream.ops {
+        match op {
+            Op::Lut { .. } => stats.lut_ops += 1,
+            Op::Group { .. } => stats.groups += 1,
+            Op::Mux { .. } => stats.mux_ops += 1,
+            Op::Const { .. } => {}
+        }
+    }
     let out_bits = lt.out_bits;
     let mut roots = Vec::with_capacity(ml.roots.len() * out_bits as usize);
     for bits in &ml.roots {
         debug_assert_eq!(bits.len(), out_bits as usize);
-        roots.extend_from_slice(bits);
+        roots.extend(bits.iter().map(|&n| map[n as usize]));
     }
-    LayerOps {
-        bind,
-        ops,
-        roots,
-        lut_nodes,
-        lut_masks,
-        n_nodes: nl.nodes.len(),
-        n_out: ml.roots.len(),
-        out_bits,
-        signed_out: lt.signed_out,
-    }
+    LayerOps { stream, roots, n_out: ml.roots.len(), out_bits, signed_out: lt.signed_out }
 }
 
 #[cfg(test)]

@@ -22,6 +22,8 @@ enum Stage {
     Full { layer: usize },
 }
 
+/// Clock-by-clock model of the synthesized pipeline register structure
+/// (paper Fig. 5); validates latency/II claims, not throughput.
 pub struct PipelineSim<'a> {
     net: &'a Network,
     tables: &'a NetworkTables,
@@ -30,15 +32,18 @@ pub struct PipelineSim<'a> {
     regs: Vec<Option<Vec<i32>>>,
 }
 
+/// Outcome of streaming a batch through the pipeline at II = 1.
 pub struct StreamResult {
     /// Latency of the first sample, in cycles (= pipeline depth).
     pub latency_cycles: u32,
     /// Total cycles to drain `n` samples (II=1 ⇒ latency + n - 1).
     pub total_cycles: u64,
+    /// Per-sample output codes, in input order.
     pub outputs: Vec<Vec<i32>>,
 }
 
 impl<'a> PipelineSim<'a> {
+    /// Build the stage structure for `net` under a pipeline `strategy`.
     pub fn new(net: &'a Network, tables: &'a NetworkTables, strategy: Strategy) -> Self {
         let mut stages = Vec::new();
         for l in 0..net.cfg.n_layers() {
@@ -58,6 +63,7 @@ impl<'a> PipelineSim<'a> {
         PipelineSim { net, tables, stages, regs }
     }
 
+    /// Pipeline depth in stages (= first-sample latency in cycles).
     pub fn depth(&self) -> u32 {
         self.stages.len() as u32
     }

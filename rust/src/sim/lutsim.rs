@@ -24,14 +24,18 @@ enum PlanStore<'a> {
 }
 
 /// Simulator over a frozen network (borrows the trained network only for
-/// its connectivity and input quantizer).
+/// its connectivity and input quantizer).  See `ARCHITECTURE.md` §1 for
+/// where this shim sits among the engines.
 pub struct LutSim<'a> {
+    /// The frozen network (connectivity + input quantizer).
     pub net: &'a Network,
+    /// Its compiled truth tables.
     pub tables: &'a NetworkTables,
     plan: PlanStore<'a>,
 }
 
 impl<'a> LutSim<'a> {
+    /// Build a simulator, compiling a private [`EvalPlan`] for `net`.
     pub fn new(net: &'a Network, tables: &'a NetworkTables) -> Self {
         let plan = PlanStore::Owned(Box::new(EvalPlan::compile(net, tables)));
         LutSim { net, tables, plan }
@@ -118,6 +122,8 @@ impl<'a> LutSim<'a> {
         plan.predict(x, &mut scratch)
     }
 
+    /// Deployed-semantics test accuracy over the first `limit` test rows
+    /// (0 = all).
     pub fn accuracy(&self, ds: &crate::data::Dataset, limit: usize) -> f64 {
         let n = if limit == 0 { ds.n_test() } else { ds.n_test().min(limit) };
         let plan = self.plan();

@@ -1,7 +1,7 @@
 //! Deployed-semantics simulators: the LUT-network evaluators (software twin
 //! of the FPGA datapath) and the cycle-accurate pipeline model.
 //!
-//! Four evaluators, one contract (bit-exact with `Network::forward_codes`):
+//! Five evaluators, one contract (bit-exact with `Network::forward_codes`):
 //!
 //! - [`plan::EvalPlan`] — the **latency engine**.  A precompiled execution
 //!   plan: per layer, one flat `Vec<i32>` of decoded table words (sub-neuron
@@ -13,24 +13,37 @@
 //!   LUT6 netlists compiled into flat per-layer op streams and evaluated
 //!   bit-parallel, 64 samples per `u64` word, with transposition only at
 //!   the network edge and ragged tails masked ([`bitslice::lane_mask`]).
+//! - [`shard::ShardedModel`] — the **intra-sample parallel engine**: both
+//!   of the above partitioned across S shards (neuron ranges for the plan,
+//!   bit-plane ranges for the bitslice op streams) after cache-aware neuron
+//!   reordering, with double-buffered handoff buffers and fan-in-aware
+//!   early start.  One sample's forward pass itself runs in parallel — the
+//!   low-latency route on multi-core hosts and the template for multi-node
+//!   sharding.
 //! - [`lutsim::LutSim`] — compatibility shim over the plan, plus the
 //!   original naive table walk (`forward_codes_reference`) kept as an
 //!   independent cross-check and benchmark baseline.
 //! - [`cycle::PipelineSim`] — clock-accurate pipeline-register model
 //!   (paper Fig. 5) validating latency/II claims, not throughput.
 //!
-//! [`EngineSelect`] is the plan-vs-bitslice routing policy the coordinator's
-//! `Backend::Lut` applies per batch.
+//! [`EngineSelect`] is the per-batch routing policy the coordinator's
+//! `Backend::Lut` applies.  The data layouts, crossover policy and a
+//! request's life through the stack are documented in `ARCHITECTURE.md` at
+//! the repository root.
+
+#![warn(missing_docs)]
 
 pub mod bitslice;
 pub mod cycle;
 pub mod lutsim;
 pub mod plan;
+pub mod shard;
 
 pub use bitslice::{lane_mask, BitsliceNet, BitsliceScratch, BitsliceStats, WORD};
 pub use cycle::PipelineSim;
 pub use lutsim::LutSim;
 pub use plan::{EvalPlan, Scratch};
+pub use shard::{ShardStats, ShardedBitslice, ShardedModel, ShardedPlan};
 
 /// Which batched LUT engine executes a batch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -39,14 +52,25 @@ pub enum LutEngine {
     Plan,
     /// 64-sample-per-word bit-parallel netlist evaluation ([`BitsliceNet`]).
     Bitslice,
+    /// Intra-sample sharded execution ([`ShardedModel`]): the batch is
+    /// below the bitslice crossover but S > 1 shards can parallelize each
+    /// sample (or each ≤64-sample word) internally.
+    Sharded,
 }
 
-/// Plan-vs-bitslice selection policy: batches of at least `crossover`
-/// samples run bitsliced, smaller (latency-sensitive) ones through the
-/// plan.  `0` forces bitslice for every batch; `usize::MAX` disables it.
+/// Per-batch engine selection policy: batches of at least `crossover`
+/// samples run bitsliced (batch-parallel); smaller, latency-sensitive
+/// batches run through the sharded engines when `shards > 1`, else through
+/// the plan.  `crossover = 0` forces bitslice for every batch;
+/// `usize::MAX` disables it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct EngineSelect {
+    /// Batch size at which the bitsliced engine takes over.
     pub crossover: usize,
+    /// Intra-sample shard count (1 = sharding disabled).  When a backend is
+    /// built with `shards > 1` its `FrozenModel` must carry a compiled
+    /// [`ShardedModel`].
+    pub shards: usize,
 }
 
 impl EngineSelect {
@@ -54,23 +78,33 @@ impl EngineSelect {
     /// transposition overhead and partially-filled lanes eat the win.
     pub const DEFAULT_CROSSOVER: usize = 2 * WORD;
 
+    /// The default policy: crossover at two words, sharding disabled.
     pub fn auto() -> EngineSelect {
-        EngineSelect { crossover: Self::DEFAULT_CROSSOVER }
+        EngineSelect { crossover: Self::DEFAULT_CROSSOVER, shards: 1 }
     }
 
     /// Never route to the bitsliced engine.
     pub fn plan_only() -> EngineSelect {
-        EngineSelect { crossover: usize::MAX }
+        EngineSelect { crossover: usize::MAX, shards: 1 }
     }
 
     /// Route every batch to the bitsliced engine.
     pub fn bitslice_only() -> EngineSelect {
-        EngineSelect { crossover: 0 }
+        EngineSelect { crossover: 0, shards: 1 }
     }
 
+    /// The default crossover with intra-sample sharding over `shards`
+    /// shards for sub-crossover batches.
+    pub fn with_shards(shards: usize) -> EngineSelect {
+        EngineSelect { crossover: Self::DEFAULT_CROSSOVER, shards: shards.max(1) }
+    }
+
+    /// Route a batch of `batch_len` samples to an engine.
     pub fn pick(&self, batch_len: usize) -> LutEngine {
         if batch_len >= self.crossover {
             LutEngine::Bitslice
+        } else if self.shards > 1 {
+            LutEngine::Sharded
         } else {
             LutEngine::Plan
         }
@@ -95,5 +129,17 @@ mod tests {
         assert_eq!(sel.pick(EngineSelect::DEFAULT_CROSSOVER), LutEngine::Bitslice);
         assert_eq!(EngineSelect::plan_only().pick(1 << 20), LutEngine::Plan);
         assert_eq!(EngineSelect::bitslice_only().pick(0), LutEngine::Bitslice);
+    }
+
+    #[test]
+    fn engine_select_routes_small_batches_to_shards() {
+        let sel = EngineSelect::with_shards(4);
+        assert_eq!(sel.shards, 4);
+        assert_eq!(sel.pick(1), LutEngine::Sharded);
+        assert_eq!(sel.pick(EngineSelect::DEFAULT_CROSSOVER - 1), LutEngine::Sharded);
+        // At and above the crossover, batch-parallel bitslice still wins.
+        assert_eq!(sel.pick(EngineSelect::DEFAULT_CROSSOVER), LutEngine::Bitslice);
+        // shards = 1 degrades to the plain policy.
+        assert_eq!(EngineSelect::with_shards(1).pick(1), LutEngine::Plan);
     }
 }

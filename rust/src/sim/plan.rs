@@ -28,6 +28,10 @@
 //! from.  Bit-exactness against `Network::forward_codes` (and the naive
 //! `LutSim` reference) is pinned by tests over the same `(A, degree)` grid
 //! the simulator uses.
+//!
+//! Where this engine sits among the others — and when the router prefers
+//! it over the bitsliced or sharded engines — is documented in
+//! `ARCHITECTURE.md` §2 and §5 at the repository root.
 
 use crate::lut::tables::NetworkTables;
 use crate::nn::network::Network;
@@ -41,41 +45,46 @@ use crate::util::pool::parallel_map;
 pub const BATCH_BLOCK: usize = 32;
 
 /// One layer of the compiled plan (all tables decoded, all indices flat).
-struct LayerPlan {
-    n_out: usize,
+/// Fields are crate-visible so [`crate::sim::shard`] can execute neuron
+/// subranges of a layer without re-deriving the layout.
+pub(crate) struct LayerPlan {
+    pub(crate) n_out: usize,
     /// Sub-neurons per neuron (the config's A factor).
-    a: usize,
-    fan: usize,
+    pub(crate) a: usize,
+    pub(crate) fan: usize,
     /// Input code width β of this layer.
-    in_bits: u32,
+    pub(crate) in_bits: u32,
     /// Sub-neuron output width β+1 (adder address field width).
-    sub_bits: u32,
+    pub(crate) sub_bits: u32,
     /// Words per poly table: `2^{β·F}`.
-    poly_stride: usize,
+    pub(crate) poly_stride: usize,
     /// Words per adder table: `2^{A·(β+1)}` (0 when A == 1: no adder stage).
-    adder_stride: usize,
+    pub(crate) adder_stride: usize,
     /// Fan-in sources, flat: sub-neuron `(j, a)` slot `s` at
     /// `(j*a_factor + a)*fan + s`.
-    gather: Vec<u32>,
+    pub(crate) gather: Vec<u32>,
     /// Decoded poly tables, flat: sub-neuron `(j, a)` at
     /// `(j*a_factor + a)*poly_stride`.
-    poly: Vec<i32>,
+    pub(crate) poly: Vec<i32>,
     /// Decoded adder tables, flat: neuron `j` at `j*adder_stride`
     /// (empty when A == 1).
-    adder: Vec<i32>,
+    pub(crate) adder: Vec<i32>,
 }
 
 /// A frozen network compiled into a flat, allocation-free execution plan.
 /// Self-contained (owns its tables) — `Send + Sync`, share behind an `Arc`.
+///
+/// Data layout and crossover policy are described in `ARCHITECTURE.md` §2
+/// (see also the [`crate::sim`] module docs).
 pub struct EvalPlan {
-    layers: Vec<LayerPlan>,
-    widths: Vec<usize>,
+    pub(crate) layers: Vec<LayerPlan>,
+    pub(crate) widths: Vec<usize>,
     max_width: usize,
-    a_factor: usize,
+    pub(crate) a_factor: usize,
     /// Input quantizer width (β of layer 0).
-    in_bits: u32,
+    pub(crate) in_bits: u32,
     /// Dequantization step of the output codes.
-    out_step: f32,
+    pub(crate) out_step: f32,
     n_classes: usize,
 }
 
@@ -88,6 +97,8 @@ pub struct Scratch {
 }
 
 impl Scratch {
+    /// Allocate scratch sized for `plan` (reusable across forward passes;
+    /// one per thread).
     pub fn for_plan(plan: &EvalPlan) -> Scratch {
         Scratch {
             cur: vec![0; plan.max_width],
@@ -150,14 +161,17 @@ impl EvalPlan {
         }
     }
 
+    /// Input feature count (width of layer 0).
     pub fn n_features(&self) -> usize {
         self.widths[0]
     }
 
+    /// Output neuron count (width of the last layer boundary).
     pub fn n_outputs(&self) -> usize {
         self.widths[self.widths.len() - 1]
     }
 
+    /// Number of classes (1 = binary task thresholded at 0).
     pub fn n_classes(&self) -> usize {
         self.n_classes
     }

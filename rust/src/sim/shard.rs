@@ -1,0 +1,1553 @@
+//! Sharded intra-sample execution — one forward pass spread across S
+//! shards with explicit bit-plane / code-buffer handoff.
+//!
+//! The batched engines ([`super::plan::EvalPlan`],
+//! [`super::bitslice::BitsliceNet`]) parallelize *across* samples; below one
+//! word of in-flight requests they leave every core but one idle.  This
+//! module is ROADMAP lever (b): it partitions a compiled network so that a
+//! *single* sample's forward pass runs in parallel — the software analogue
+//! of splitting a wide neuron into A sub-neurons (the paper's core move),
+//! applied one level up, and the prerequisite for multi-node serving where
+//! the same handoff crosses a network link instead of a cache line.  The
+//! full design narrative lives in `ARCHITECTURE.md` §4.
+//!
+//! # Partitioning
+//!
+//! - [`ShardedPlan`] splits every layer of an evaluation plan into S
+//!   contiguous **neuron ranges**; shard s executes neurons
+//!   `parts[l][s]` of layer l (gather → table read → store).
+//! - [`ShardedBitslice`] splits every layer's op stream into S **plane
+//!   ranges** (the output planes of a contiguous neuron range); each shard
+//!   owns the backward cone of its root planes, re-flattened into a private
+//!   op stream with compact node numbering (shared interior nodes are
+//!   replicated across cones — see [`ShardedBitslice::replication`]).
+//!
+//! Before either split, the partitioner runs **cache-aware neuron
+//! reordering** (ROADMAP lever (c), [`cache_aware_perms`]): within each
+//! hidden layer, neurons are greedily chained so consecutive neurons share
+//! fan-in sources, then the contiguous shard cuts fall between groups with
+//! disjoint fan-in — minimizing cross-shard gathers, which directly shrinks
+//! the dependency sets below.  [`permute_network`] applies the permutation
+//! to the network and its tables (the last layer keeps its order, so
+//! outputs are unchanged — a property test pins `forward_codes` equality).
+//!
+//! # Handoff and scheduling
+//!
+//! Layer boundaries are published through two shared buffers of `AtomicU64`
+//! words, double-buffered by boundary parity (boundary b lives in
+//! `bufs[b % 2]`), with the network edge in dedicated input/output staging
+//! buffers.  The bitslice shard handoff format is exactly the bit-plane
+//! layout of the boundary (`planes[j·β + b]`) — contiguous `u64` words, no
+//! per-sample marshalling, as anticipated by the ROADMAP.
+//!
+//! Shard s may start layer l as soon as its precomputed dependency set is
+//! satisfied — **fan-in-aware early start**, not a global layer barrier.
+//! Each cell carries a flat list of `(shard, threshold)` pairs, satisfied
+//! when `done[shard] ≥ threshold`, built from three hazard classes (see
+//! `compute_deps` for the position-space derivation):
+//!
+//! - *producers*: the owner of every boundary-l position s gathers must
+//!   have published layer l-1 (`done ≥ l`);
+//! - *reader blockers*: before s overwrites a parity-buffer position, every
+//!   shard still reading that position's previous generation must have
+//!   finished that layer (`done ≥ bprev+1`);
+//! - *writer ordering*: the previous generation's writer must have landed
+//!   first (`done ≥ bprev`), or a lagging shard could clobber data a
+//!   leading shard already published.
+//!
+//! The "previous generation" of a buffer position is the nearest *lower*
+//! same-parity boundary **wide enough to cover that position** — boundary
+//! widths are not monotonic, so generations can skip a parity level
+//! entirely; the adversarial-interleaving simulation of the protocol that
+//! pinned this rule down lives in-tree as the
+//! `compute_deps_admits_only_safe_interleavings` test.  Workers are
+//! persistent threads that spin briefly
+//! for the next sample (epoch) before sleeping on a condvar; within an
+//! epoch all synchronization is spin-on-atomic.  Per-shard occupancy (cells
+//! executed) and handoff-wait episodes are counted and surfaced through
+//! [`ShardStats`] into `coordinator::metrics`.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::lut::mapper::{map_network_of, MappedNetwork};
+use crate::lut::netlist::{Netlist, Node};
+use crate::lut::tables::NetworkTables;
+use crate::nn::network::Network;
+use crate::nn::quant::unsigned_code;
+use crate::sim::bitslice::{exec_ops, flatten_cone, pack_word, unpack_word, OpStream, WORD};
+use crate::sim::plan::EvalPlan;
+
+/// Cumulative per-shard execution counters (monotonic over the engine's
+/// lifetime): `cells` counts (layer, shard) work units executed —
+/// the occupancy proxy — and `waits` counts handoff-wait episodes (a
+/// dependency that was not yet published when first checked).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Layer-cells executed by this shard.
+    pub cells: u64,
+    /// Handoff-wait episodes (unready dependencies encountered).
+    pub waits: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Cache-aware neuron reordering (ROADMAP lever (c))
+// ---------------------------------------------------------------------------
+
+/// Count of common elements of two sorted, deduplicated slices.
+fn sorted_overlap(a: &[u32], b: &[u32]) -> usize {
+    let (mut i, mut j, mut n) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                n += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Greedy chain ordering: start from the neuron with the smallest first
+/// source, then repeatedly append the unplaced neuron sharing the most
+/// fan-in sources with the last placed one (ties: smaller first source,
+/// then smaller index — fully deterministic).
+fn order_by_shared_sources(srcs: &[Vec<u32>]) -> Vec<usize> {
+    let n = srcs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let first_src = |j: usize| srcs[j].first().copied().unwrap_or(u32::MAX);
+    let mut placed = vec![false; n];
+    let mut cur = (0..n).min_by_key(|&j| (first_src(j), j)).expect("n > 0");
+    placed[cur] = true;
+    let mut out = Vec::with_capacity(n);
+    out.push(cur);
+    for _ in 1..n {
+        // (candidate, overlap, first source) of the best unplaced neuron.
+        let mut best: Option<(usize, usize, u32)> = None;
+        for j in 0..n {
+            if placed[j] {
+                continue;
+            }
+            let ov = sorted_overlap(&srcs[cur], &srcs[j]);
+            let replace = match best {
+                None => true,
+                Some((bj, bov, bfs)) => {
+                    ov > bov || (ov == bov && (first_src(j), j) < (bfs, bj))
+                }
+            };
+            if replace {
+                best = Some((j, ov, first_src(j)));
+            }
+        }
+        let (j, _, _) = best.expect("unplaced neuron remains");
+        placed[j] = true;
+        out.push(j);
+        cur = j;
+    }
+    out
+}
+
+/// Compute the cache-aware neuron permutation for every layer:
+/// `perms[l][new_j] = old_j` orders layer l's output neurons so that
+/// neurons sharing fan-in sources (union over their A sub-neurons, in the
+/// *reordered* previous boundary's positions) sit adjacently.  The last
+/// layer always gets the identity permutation so network outputs keep
+/// their order.  Every returned permutation is a bijection — pinned by a
+/// property test together with `forward_codes` preservation.
+pub fn cache_aware_perms(net: &Network) -> Vec<Vec<usize>> {
+    let cfg = &net.cfg;
+    let l_count = cfg.n_layers();
+    let mut perms = Vec::with_capacity(l_count);
+    // Position of old boundary index `s` after the previous layer's reorder.
+    let mut prev_pos: Option<Vec<usize>> = None;
+    for l in 0..l_count {
+        let n_out = cfg.widths[l + 1];
+        if l == l_count - 1 {
+            perms.push((0..n_out).collect());
+            continue;
+        }
+        let srcs: Vec<Vec<u32>> = (0..n_out)
+            .map(|j| {
+                let mut v: Vec<u32> = net.layers[l]
+                    .indices
+                    .iter()
+                    .flat_map(|sub| sub[j].iter())
+                    .map(|&s| match &prev_pos {
+                        Some(pos) => pos[s] as u32,
+                        None => s as u32,
+                    })
+                    .collect();
+                v.sort_unstable();
+                v.dedup();
+                v
+            })
+            .collect();
+        let perm = order_by_shared_sources(&srcs);
+        let mut pos = vec![0usize; n_out];
+        for (nj, &oj) in perm.iter().enumerate() {
+            pos[oj] = nj;
+        }
+        prev_pos = Some(pos);
+        perms.push(perm);
+    }
+    perms
+}
+
+/// Apply per-layer output-neuron permutations to a network and its
+/// compiled tables, remapping every fan-in index through the previous
+/// layer's new ordering.  `perms[l][new_j] = old_j`; each must be a
+/// bijection over `widths[l+1]`.  If the *last* layer's permutation is the
+/// identity (as [`cache_aware_perms`] guarantees), the permuted network's
+/// `forward_codes` is bit-identical to the original's for every input.
+pub fn permute_network(
+    net: &Network,
+    tables: &NetworkTables,
+    perms: &[Vec<usize>],
+) -> (Network, NetworkTables) {
+    let l_count = net.cfg.n_layers();
+    assert_eq!(perms.len(), l_count, "one permutation per layer");
+    let mut pnet = net.clone();
+    let mut ptables = tables.clone();
+    // Position of old boundary index after the previous layer's permutation.
+    let mut prev_pos: Option<Vec<usize>> = None;
+    for l in 0..l_count {
+        let perm = &perms[l];
+        let n_out = net.cfg.widths[l + 1];
+        assert_eq!(perm.len(), n_out, "layer {l}: permutation length");
+        {
+            // Bijection check: every old index appears exactly once.
+            let mut seen = vec![false; n_out];
+            for &oj in perm {
+                assert!(oj < n_out && !seen[oj], "layer {l}: not a permutation");
+                seen[oj] = true;
+            }
+        }
+        let src_p = &net.layers[l];
+        let dst_p = &mut pnet.layers[l];
+        for a in 0..net.cfg.a_factor {
+            dst_p.indices[a] = perm
+                .iter()
+                .map(|&oj| {
+                    src_p.indices[a][oj]
+                        .iter()
+                        .map(|&s| match &prev_pos {
+                            Some(pos) => pos[s],
+                            None => s,
+                        })
+                        .collect()
+                })
+                .collect();
+            dst_p.w[a] = perm.iter().map(|&oj| src_p.w[a][oj].clone()).collect();
+        }
+        dst_p.bn_g = perm.iter().map(|&oj| src_p.bn_g[oj]).collect();
+        dst_p.bn_b = perm.iter().map(|&oj| src_p.bn_b[oj]).collect();
+        dst_p.bn_m = perm.iter().map(|&oj| src_p.bn_m[oj]).collect();
+        dst_p.bn_v = perm.iter().map(|&oj| src_p.bn_v[oj]).collect();
+        ptables.layers[l].neurons =
+            perm.iter().map(|&oj| tables.layers[l].neurons[oj].clone()).collect();
+        let mut pos = vec![0usize; n_out];
+        for (nj, &oj) in perm.iter().enumerate() {
+            pos[oj] = nj;
+        }
+        prev_pos = Some(pos);
+    }
+    (pnet, ptables)
+}
+
+// ---------------------------------------------------------------------------
+// Partition helpers
+// ---------------------------------------------------------------------------
+
+/// Split `0..costs.len()` into `shards` contiguous ranges with approximately
+/// balanced cost sums (greedy: each shard takes items until it reaches the
+/// ceiling-average of the remaining cost; the last shard takes the rest).
+/// Later ranges may be empty when there are fewer items than shards.
+fn balanced_ranges(costs: &[u64], shards: usize) -> Vec<Range<usize>> {
+    let n = costs.len();
+    let total: u64 = costs.iter().sum();
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    let mut spent = 0u64;
+    for s in 0..shards {
+        if s + 1 == shards {
+            out.push(start..n);
+            start = n;
+            continue;
+        }
+        let left = (shards - s) as u64;
+        let target = (total - spent).div_ceil(left);
+        let mut end = start;
+        let mut acc = 0u64;
+        while end < n && acc < target {
+            acc += costs[end];
+            end += 1;
+        }
+        spent += acc;
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Dependency computation (shared by both kernels)
+// ---------------------------------------------------------------------------
+
+/// Inputs for dependency computation, in boundary *position* space — code
+/// slots for the plan kernel, bit-plane indices for the bitslice kernel.
+struct DepSpec {
+    /// `bounds[b]` = position-space width of boundary b (0..=L).
+    bounds: Vec<usize>,
+    /// `write[l][s]` = positions of boundary l+1 that cell (l, s) stores.
+    write: Vec<Vec<Range<usize>>>,
+    /// `reads[l][s]` = sorted, deduplicated positions of boundary l that
+    /// cell (l, s) loads.
+    reads: Vec<Vec<Vec<usize>>>,
+}
+
+/// Build the per-cell `(shard, threshold)` dependency lists from the three
+/// hazard classes on the shared parity buffers (boundary b lives in
+/// `bufs[b % 2]`; boundaries 0 and L live in private staging and need no
+/// overwrite protection):
+///
+/// 1. **producers** — cell (l, s) reads boundary-l positions; the shard
+///    that writes each such position at layer l-1 must be done with it:
+///    threshold `l`.
+/// 2. **reader blockers** — cell (l, s) overwrites positions of
+///    boundary l+1 in `bufs[(l+1) % 2]` whose current content is the
+///    position's *previous generation*: the nearest lower same-parity
+///    boundary `bprev` wide enough to cover it (widths are not monotonic,
+///    so generations may skip parity levels).  Every shard reading that
+///    position at layer `bprev` must have finished: threshold `bprev + 1`.
+/// 3. **writer ordering** — the shard that writes the position at
+///    boundary `bprev` must have landed first (a lagging shard must not
+///    clobber a leading shard's later-generation data): threshold `bprev`.
+///
+/// All thresholds reference layers strictly below l, so the wait graph is
+/// acyclic and the schedule can never deadlock.  The rule set is pinned by
+/// an adversarial-interleaving simulation of the protocol — kept in-tree
+/// as the `compute_deps_admits_only_safe_interleavings` test — in which
+/// every interleaving the dependencies admit must read exactly the
+/// boundary generation it expects.
+fn compute_deps(spec: &DepSpec, shards: usize) -> Vec<Vec<Vec<(u32, u32)>>> {
+    use std::collections::BTreeMap;
+    let l_count = spec.write.len();
+    // Owner of position x at boundary b (the shard writing it at layer b-1).
+    let owner = |b: usize, x: usize| -> u32 {
+        for (q, r) in spec.write[b - 1].iter().enumerate() {
+            if r.contains(&x) {
+                return q as u32;
+            }
+        }
+        unreachable!("boundary {b} position {x} not covered by shard ranges")
+    };
+    let mut deps = Vec::with_capacity(l_count);
+    for l in 0..l_count {
+        let mut per_shard = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let mut set: BTreeMap<u32, u32> = BTreeMap::new();
+            let add = |set: &mut BTreeMap<u32, u32>, q: u32, thr: u32| {
+                if q as usize != s {
+                    let e = set.entry(q).or_insert(0);
+                    *e = (*e).max(thr);
+                }
+            };
+            // (1) producers.
+            if l >= 1 {
+                for &x in &spec.reads[l][s] {
+                    add(&mut set, owner(l, x), l as u32);
+                }
+            }
+            // (2)+(3) overwrite protection, for writes into parity buffers.
+            if l + 1 <= l_count - 1 {
+                let r = &spec.write[l][s];
+                let (a, b) = (r.start, r.end);
+                let mut covered = 0usize;
+                let mut bb = l as isize - 1;
+                while bb >= 1 && covered < b {
+                    let width = spec.bounds[bb as usize];
+                    let lo = a.max(covered);
+                    let hi = b.min(width);
+                    if lo < hi {
+                        for (q, rq) in spec.write[bb as usize - 1].iter().enumerate() {
+                            if rq.start.max(lo) < rq.end.min(hi) {
+                                add(&mut set, q as u32, bb as u32);
+                            }
+                        }
+                        for (q, reads) in spec.reads[bb as usize].iter().enumerate() {
+                            if reads.iter().any(|&x| (lo..hi).contains(&x)) {
+                                add(&mut set, q as u32, bb as u32 + 1);
+                            }
+                        }
+                    }
+                    covered = covered.max(width);
+                    bb -= 2;
+                }
+            }
+            per_shard.push(set.into_iter().collect::<Vec<(u32, u32)>>());
+        }
+        deps.push(per_shard);
+    }
+    deps
+}
+
+// ---------------------------------------------------------------------------
+// Generic shard runner (persistent workers + epoch protocol)
+// ---------------------------------------------------------------------------
+
+/// How long a worker spins for the next epoch before sleeping on the
+/// condvar — long enough that back-to-back samples of one batch never pay a
+/// wakeup, short enough that an idle server burns no CPU.
+const EPOCH_SPIN: usize = 1 << 12;
+
+/// A sharded execution kernel: per-(layer, shard) work cells over shared
+/// atomic handoff buffers, plus the precomputed dependency sets the runner
+/// schedules by.
+trait ShardKernel: Send + Sync + 'static {
+    /// Per-worker scratch (created inside the worker thread).
+    type Scratch;
+    fn n_layers(&self) -> usize;
+    fn n_shards(&self) -> usize;
+    /// Input staging buffer length (u64 slots).
+    fn in_len(&self) -> usize;
+    /// Output staging buffer length (u64 slots).
+    fn out_len(&self) -> usize;
+    /// Shared interior-boundary buffer length (u64 slots; max boundary).
+    fn buf_len(&self) -> usize;
+    /// `(shard, threshold)` pairs: cell (l, s) may run once
+    /// `done[shard] >= threshold` for every pair (see `compute_deps`).
+    fn deps(&self, l: usize, s: usize) -> &[(u32, u32)];
+    fn make_scratch(&self) -> Self::Scratch;
+    /// Execute cell (l, s): read boundary l from `src`, publish this
+    /// shard's slice of boundary l+1 into `dst`.
+    fn run_cell(
+        &self,
+        l: usize,
+        s: usize,
+        src: &[AtomicU64],
+        dst: &[AtomicU64],
+        scratch: &mut Self::Scratch,
+    );
+}
+
+struct Ctrl {
+    epoch: u64,
+    shutdown: bool,
+}
+
+struct RunnerInner<K: ShardKernel> {
+    kernel: K,
+    /// Network-edge staging: boundary 0 (input) and boundary L (output)
+    /// live here, never in the shared parity buffers — so only interior
+    /// boundaries contend for the double buffer.
+    input: Vec<AtomicU64>,
+    output: Vec<AtomicU64>,
+    /// Interior boundary b is published in `bufs[b % 2]`.
+    bufs: [Vec<AtomicU64>; 2],
+    /// Fast-path epoch counter (spin target); authoritative copy in `ctrl`.
+    epoch_fast: AtomicU64,
+    ctrl: Mutex<Ctrl>,
+    start_cv: Condvar,
+    /// Per-shard layers completed in the current epoch.
+    done: Vec<AtomicU32>,
+    /// Per-shard cumulative counters (see [`ShardStats`]).
+    cells: Vec<AtomicU64>,
+    waits: Vec<AtomicU64>,
+}
+
+struct ShardRunner<K: ShardKernel> {
+    inner: Arc<RunnerInner<K>>,
+    /// Serializes epochs: one in-flight sample/word at a time.
+    call: Mutex<()>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+fn spin_once(spins: &mut u32) {
+    *spins = spins.wrapping_add(1);
+    if *spins & 0x3FF == 0 {
+        std::thread::yield_now();
+    } else {
+        std::hint::spin_loop();
+    }
+}
+
+fn wait_for_epoch<K: ShardKernel>(inner: &RunnerInner<K>, seen: u64) -> Option<u64> {
+    for _ in 0..EPOCH_SPIN {
+        let e = inner.epoch_fast.load(Ordering::Acquire);
+        if e > seen {
+            return Some(e);
+        }
+        std::hint::spin_loop();
+    }
+    let mut ctrl = inner.ctrl.lock().unwrap();
+    loop {
+        if ctrl.shutdown {
+            return None;
+        }
+        if ctrl.epoch > seen {
+            return Some(ctrl.epoch);
+        }
+        ctrl = inner.start_cv.wait(ctrl).unwrap();
+    }
+}
+
+fn worker_loop<K: ShardKernel>(inner: Arc<RunnerInner<K>>, s: usize) {
+    let mut scratch = inner.kernel.make_scratch();
+    let n_layers = inner.kernel.n_layers();
+    let mut seen = 0u64;
+    loop {
+        seen = match wait_for_epoch(&inner, seen) {
+            Some(e) => e,
+            None => return,
+        };
+        let mut waited = 0u64;
+        for l in 0..n_layers {
+            for &(d, thr) in inner.kernel.deps(l, s) {
+                let d = d as usize;
+                if inner.done[d].load(Ordering::Acquire) >= thr {
+                    continue;
+                }
+                waited += 1;
+                let mut spins = 0u32;
+                while inner.done[d].load(Ordering::Acquire) < thr {
+                    spin_once(&mut spins);
+                }
+            }
+            let src = if l == 0 { &inner.input } else { &inner.bufs[l % 2] };
+            let dst =
+                if l + 1 == n_layers { &inner.output } else { &inner.bufs[(l + 1) % 2] };
+            inner.kernel.run_cell(l, s, src, dst, &mut scratch);
+            if l + 1 == n_layers {
+                // Counters must land before the final `done` store: the
+                // caller's completion wait is on `done`, and stats() /
+                // the coordinator's metrics mirror read them right after.
+                inner.cells[s].fetch_add(n_layers as u64, Ordering::Relaxed);
+                inner.waits[s].fetch_add(waited, Ordering::Relaxed);
+            }
+            inner.done[s].store(l as u32 + 1, Ordering::Release);
+        }
+    }
+}
+
+impl<K: ShardKernel> ShardRunner<K> {
+    fn new(kernel: K) -> ShardRunner<K> {
+        let shards = kernel.n_shards();
+        let (in_len, out_len, buf_len) = (kernel.in_len(), kernel.out_len(), kernel.buf_len());
+        let mk = |n: usize| (0..n).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
+        let inner = Arc::new(RunnerInner {
+            kernel,
+            input: mk(in_len),
+            output: mk(out_len),
+            bufs: [mk(buf_len), mk(buf_len)],
+            epoch_fast: AtomicU64::new(0),
+            ctrl: Mutex::new(Ctrl { epoch: 0, shutdown: false }),
+            start_cv: Condvar::new(),
+            done: (0..shards).map(|_| AtomicU32::new(0)).collect(),
+            cells: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            waits: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+        });
+        let workers = (0..shards)
+            .map(|s| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("polylut-shard-{s}"))
+                    .spawn(move || worker_loop(inner, s))
+                    .expect("spawn shard worker")
+            })
+            .collect();
+        ShardRunner { inner, call: Mutex::new(()), workers }
+    }
+
+    /// Run one epoch (one sample / one word): stage the input, launch the
+    /// shards, wait for completion, collect the output.  Epochs are fully
+    /// serialized, which is what keeps the two-buffer parity scheme safe
+    /// across samples.
+    fn run_epoch(&self, stage: impl FnOnce(&[AtomicU64]), collect: impl FnOnce(&[AtomicU64])) {
+        let _serial = self.call.lock().unwrap();
+        let inner = &*self.inner;
+        stage(&inner.input);
+        for d in &inner.done {
+            d.store(0, Ordering::Relaxed);
+        }
+        {
+            let mut ctrl = inner.ctrl.lock().unwrap();
+            ctrl.epoch += 1;
+            inner.epoch_fast.store(ctrl.epoch, Ordering::Release);
+            inner.start_cv.notify_all();
+        }
+        let n_layers = inner.kernel.n_layers() as u32;
+        for d in &inner.done {
+            let mut spins = 0u32;
+            while d.load(Ordering::Acquire) < n_layers {
+                spin_once(&mut spins);
+            }
+        }
+        collect(&inner.output);
+    }
+
+    fn stats(&self) -> Vec<ShardStats> {
+        self.inner
+            .cells
+            .iter()
+            .zip(&self.inner.waits)
+            .map(|(c, w)| ShardStats {
+                cells: c.load(Ordering::Relaxed),
+                waits: w.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+}
+
+impl<K: ShardKernel> Drop for ShardRunner<K> {
+    fn drop(&mut self) {
+        {
+            let mut ctrl = self.inner.ctrl.lock().unwrap();
+            ctrl.shutdown = true;
+            self.inner.start_cv.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan kernel: neuron-range sharding of the evaluation plan
+// ---------------------------------------------------------------------------
+
+struct PlanKernel {
+    plan: EvalPlan,
+    parts: Vec<Vec<Range<usize>>>,
+    deps: Vec<Vec<Vec<(u32, u32)>>>,
+    shards: usize,
+}
+
+/// Dependency spec of a neuron-range plan partition: positions are code
+/// slots, reads come from the flat gather arrays.
+fn plan_dep_spec(plan: &EvalPlan, parts: &[Vec<Range<usize>>]) -> DepSpec {
+    let reads = parts
+        .iter()
+        .zip(&plan.layers)
+        .map(|(ranges, lp)| {
+            ranges
+                .iter()
+                .map(|r| {
+                    let g0 = r.start * lp.a * lp.fan;
+                    let g1 = r.end * lp.a * lp.fan;
+                    let mut v: Vec<usize> =
+                        lp.gather[g0..g1].iter().map(|&p| p as usize).collect();
+                    v.sort_unstable();
+                    v.dedup();
+                    v
+                })
+                .collect()
+        })
+        .collect();
+    DepSpec { bounds: plan.widths.clone(), write: parts.to_vec(), reads }
+}
+
+impl ShardKernel for PlanKernel {
+    type Scratch = Vec<i32>;
+
+    fn n_layers(&self) -> usize {
+        self.plan.layers.len()
+    }
+
+    fn n_shards(&self) -> usize {
+        self.shards
+    }
+
+    fn in_len(&self) -> usize {
+        self.plan.widths[0]
+    }
+
+    fn out_len(&self) -> usize {
+        *self.plan.widths.last().expect("at least one boundary")
+    }
+
+    fn buf_len(&self) -> usize {
+        let w = &self.plan.widths;
+        w[1..w.len() - 1].iter().copied().max().unwrap_or(0)
+    }
+
+    fn deps(&self, l: usize, s: usize) -> &[(u32, u32)] {
+        &self.deps[l][s]
+    }
+
+    fn make_scratch(&self) -> Vec<i32> {
+        vec![0; self.plan.a_factor]
+    }
+
+    fn run_cell(
+        &self,
+        l: usize,
+        s: usize,
+        src: &[AtomicU64],
+        dst: &[AtomicU64],
+        subs: &mut Vec<i32>,
+    ) {
+        let lp = &self.plan.layers[l];
+        let r = self.parts[l][s].clone();
+        if r.is_empty() {
+            return;
+        }
+        // Mirrors `EvalPlan::execute` exactly (same gather/address/table
+        // arithmetic over the same decoded values), restricted to this
+        // shard's neuron range — which is what makes shard output
+        // bit-exact with the unsharded plan.
+        let in_bits = lp.in_bits;
+        let in_mask = (1usize << in_bits) - 1;
+        let sub_mask = (1usize << lp.sub_bits) - 1;
+        let mut gbase = r.start * lp.a * lp.fan;
+        let mut tbase = r.start * lp.a * lp.poly_stride;
+        for j in r {
+            if lp.adder_stride == 0 {
+                let srcs = &lp.gather[gbase..gbase + lp.fan];
+                let mut addr = 0usize;
+                for (slot, &si) in srcs.iter().enumerate() {
+                    let c = src[si as usize].load(Ordering::Relaxed) as u32 as i32;
+                    addr |= (c as usize & in_mask) << (slot as u32 * in_bits);
+                }
+                dst[j].store(lp.poly[tbase + addr] as u32 as u64, Ordering::Relaxed);
+                gbase += lp.fan;
+                tbase += lp.poly_stride;
+            } else {
+                for sub in subs[..lp.a].iter_mut() {
+                    let srcs = &lp.gather[gbase..gbase + lp.fan];
+                    let mut addr = 0usize;
+                    for (slot, &si) in srcs.iter().enumerate() {
+                        let c = src[si as usize].load(Ordering::Relaxed) as u32 as i32;
+                        addr |= (c as usize & in_mask) << (slot as u32 * in_bits);
+                    }
+                    *sub = lp.poly[tbase + addr];
+                    gbase += lp.fan;
+                    tbase += lp.poly_stride;
+                }
+                let mut aaddr = 0usize;
+                for (ai, &sc) in subs[..lp.a].iter().enumerate() {
+                    aaddr |= (sc as usize & sub_mask) << (ai as u32 * lp.sub_bits);
+                }
+                dst[j].store(
+                    lp.adder[j * lp.adder_stride + aaddr] as u32 as u64,
+                    Ordering::Relaxed,
+                );
+            }
+        }
+    }
+}
+
+/// The evaluation plan partitioned into S neuron-range shards with
+/// persistent workers — lowest single-sample latency on multi-core hosts
+/// once layers are wide enough to amortize the handoff.  Bit-exact with
+/// [`EvalPlan`] and `Network::forward_codes`.  See `ARCHITECTURE.md` §4.
+pub struct ShardedPlan {
+    runner: ShardRunner<PlanKernel>,
+    n_features: usize,
+    n_outputs: usize,
+    in_bits: u32,
+    out_step: f32,
+    shards: usize,
+}
+
+impl ShardedPlan {
+    /// Reorder (cache-aware), permute, compile and partition `net` into an
+    /// S-shard plan engine (spawns S worker threads).
+    pub fn compile(net: &Network, tables: &NetworkTables, shards: usize) -> ShardedPlan {
+        let perms = cache_aware_perms(net);
+        let (pnet, ptables) = permute_network(net, tables, &perms);
+        Self::from_permuted(&pnet, &ptables, shards)
+    }
+
+    /// Build from an already-permuted network (shared with the bitslice
+    /// shard engine by [`ShardedModel::compile`]).
+    pub(crate) fn from_permuted(
+        pnet: &Network,
+        ptables: &NetworkTables,
+        shards: usize,
+    ) -> ShardedPlan {
+        let shards = shards.max(1);
+        let plan = EvalPlan::compile(pnet, ptables);
+        let parts: Vec<Vec<Range<usize>>> = plan
+            .layers
+            .iter()
+            .map(|lp| {
+                let costs = vec![1u64; lp.n_out];
+                balanced_ranges(&costs, shards)
+            })
+            .collect();
+        let deps = compute_deps(&plan_dep_spec(&plan, &parts), shards);
+        let n_features = plan.n_features();
+        let n_outputs = plan.n_outputs();
+        let in_bits = plan.in_bits;
+        let out_step = plan.out_step;
+        let kernel = PlanKernel { plan, parts, deps, shards };
+        ShardedPlan {
+            runner: ShardRunner::new(kernel),
+            n_features,
+            n_outputs,
+            in_bits,
+            out_step,
+            shards,
+        }
+    }
+
+    /// Shard count S.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Cumulative per-shard occupancy / handoff-wait counters.
+    pub fn stats(&self) -> Vec<ShardStats> {
+        self.runner.stats()
+    }
+
+    /// Sharded table-only forward pass over input codes.
+    pub fn forward_codes(&self, in_codes: &[i32]) -> Vec<i32> {
+        assert_eq!(in_codes.len(), self.n_features, "input width mismatch");
+        let mut out = vec![0i32; self.n_outputs];
+        self.runner.run_epoch(
+            |input| {
+                for (slot, &c) in input.iter().zip(in_codes) {
+                    slot.store(c as u32 as u64, Ordering::Relaxed);
+                }
+            },
+            |output| {
+                for (o, slot) in out.iter_mut().zip(output) {
+                    *o = slot.load(Ordering::Relaxed) as u32 as i32;
+                }
+            },
+        );
+        out
+    }
+
+    /// Batched code-level forward pass (samples sequential, each sample
+    /// internally parallel across shards).
+    pub fn forward_batch(&self, xs: &[Vec<i32>]) -> Vec<Vec<i32>> {
+        xs.iter().map(|x| self.forward_codes(x)).collect()
+    }
+
+    /// Forward from raw [0,1] features; returns dequantized logits
+    /// (bit-exact with `EvalPlan::forward`).
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n_features, "feature width mismatch");
+        let codes: Vec<i32> =
+            x.iter().map(|&v| unsigned_code(v, self.in_bits, 1.0)).collect();
+        self.forward_codes(&codes).iter().map(|&c| c as f32 * self.out_step).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bitslice kernel: plane-range sharding of the op streams
+// ---------------------------------------------------------------------------
+
+/// One shard's slice of one layer: the op stream over its root cone plus
+/// the (global plane, local node) publication list.
+struct ShardStream {
+    stream: OpStream,
+    roots: Vec<(u32, u32)>,
+}
+
+struct BitsliceKernel {
+    layers: Vec<Vec<ShardStream>>,
+    deps: Vec<Vec<Vec<(u32, u32)>>>,
+    shards: usize,
+    in_planes: usize,
+    out_planes: usize,
+    buf_planes: usize,
+    max_nodes: usize,
+}
+
+/// Mark the backward cone of `roots` in `keep` (closed under node inputs).
+fn mark_cone(nl: &Netlist, roots: &[u32], keep: &mut [bool]) {
+    let mut stack: Vec<u32> = roots.iter().copied().filter(|&r| !keep[r as usize]).collect();
+    while let Some(id) = stack.pop() {
+        if keep[id as usize] {
+            continue;
+        }
+        keep[id as usize] = true;
+        match &nl.nodes[id as usize] {
+            Node::Input { .. } | Node::Const(_) => {}
+            Node::Lut { inputs, .. } => {
+                stack.extend(inputs.iter().copied().filter(|&i| !keep[i as usize]));
+            }
+            Node::Mux { sel, lo, hi, .. } => {
+                for c in [*sel, *lo, *hi] {
+                    if !keep[c as usize] {
+                        stack.push(c);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dependency spec of a plane-range bitslice partition: positions are
+/// bit-plane indices (neuron range scaled by the layer's output width),
+/// reads are the bind wires of each shard's op stream.
+fn bitslice_dep_spec(
+    pnet: &Network,
+    ptables: &NetworkTables,
+    layers: &[Vec<ShardStream>],
+    parts: &[Vec<Range<usize>>],
+) -> DepSpec {
+    let cfg = &pnet.cfg;
+    let l_count = layers.len();
+    let bounds: Vec<usize> =
+        (0..=l_count).map(|b| cfg.widths[b] * cfg.beta[b] as usize).collect();
+    let write = parts
+        .iter()
+        .enumerate()
+        .map(|(l, ranges)| {
+            let ob = ptables.layers[l].out_bits as usize;
+            ranges.iter().map(|r| r.start * ob..r.end * ob).collect()
+        })
+        .collect();
+    let reads = layers
+        .iter()
+        .map(|per_shard| {
+            per_shard
+                .iter()
+                .map(|st| {
+                    let mut v: Vec<usize> =
+                        st.stream.bind.iter().map(|&(_, w)| w as usize).collect();
+                    v.sort_unstable();
+                    v.dedup();
+                    v
+                })
+                .collect()
+        })
+        .collect();
+    DepSpec { bounds, write, reads }
+}
+
+fn build_bitslice_kernel(
+    pnet: &Network,
+    ptables: &NetworkTables,
+    mapped: &MappedNetwork,
+    shards: usize,
+) -> BitsliceKernel {
+    let cfg = &pnet.cfg;
+    let l_count = cfg.n_layers();
+    let mut layers = Vec::with_capacity(l_count);
+    let mut parts = Vec::with_capacity(l_count);
+    for (ml, lt) in mapped.layers.iter().zip(&ptables.layers) {
+        let nl = &ml.netlist;
+        let n_out = ml.roots.len();
+        // Cost = size of each neuron's own cone (shared nodes counted per
+        // neuron — the same replication the shard streams pay).
+        let costs: Vec<u64> = (0..n_out)
+            .map(|j| {
+                let mut keep = vec![false; nl.nodes.len()];
+                mark_cone(nl, &ml.roots[j], &mut keep);
+                keep.iter().filter(|&&k| k).count() as u64
+            })
+            .collect();
+        let ranges = balanced_ranges(&costs, shards);
+        let ob = lt.out_bits as usize;
+        let per_shard: Vec<ShardStream> = ranges
+            .iter()
+            .map(|r| {
+                let mut keep = vec![false; nl.nodes.len()];
+                for j in r.clone() {
+                    mark_cone(nl, &ml.roots[j], &mut keep);
+                }
+                let (stream, map) = flatten_cone(nl, &keep);
+                let mut roots = Vec::with_capacity(r.len() * ob);
+                for j in r.clone() {
+                    for (b, &node) in ml.roots[j].iter().enumerate() {
+                        roots.push(((j * ob + b) as u32, map[node as usize]));
+                    }
+                }
+                ShardStream { stream, roots }
+            })
+            .collect();
+        layers.push(per_shard);
+        parts.push(ranges);
+    }
+    let deps = compute_deps(&bitslice_dep_spec(pnet, ptables, &layers, &parts), shards);
+    let in_planes = cfg.widths[0] * cfg.beta[0] as usize;
+    let out_planes = cfg.widths[l_count] * cfg.beta[l_count] as usize;
+    let buf_planes =
+        (1..l_count).map(|b| cfg.widths[b] * cfg.beta[b] as usize).max().unwrap_or(0);
+    let max_nodes =
+        layers.iter().flat_map(|ls| ls.iter()).map(|st| st.stream.n_nodes).max().unwrap_or(0);
+    BitsliceKernel { layers, deps, shards, in_planes, out_planes, buf_planes, max_nodes }
+}
+
+impl ShardKernel for BitsliceKernel {
+    type Scratch = Vec<u64>;
+
+    fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    fn n_shards(&self) -> usize {
+        self.shards
+    }
+
+    fn in_len(&self) -> usize {
+        self.in_planes
+    }
+
+    fn out_len(&self) -> usize {
+        self.out_planes
+    }
+
+    fn buf_len(&self) -> usize {
+        self.buf_planes
+    }
+
+    fn deps(&self, l: usize, s: usize) -> &[(u32, u32)] {
+        &self.deps[l][s]
+    }
+
+    fn make_scratch(&self) -> Vec<u64> {
+        vec![0; self.max_nodes]
+    }
+
+    fn run_cell(
+        &self,
+        l: usize,
+        s: usize,
+        src: &[AtomicU64],
+        dst: &[AtomicU64],
+        vals: &mut Vec<u64>,
+    ) {
+        let st = &self.layers[l][s];
+        for &(node, wire) in &st.stream.bind {
+            vals[node as usize] = src[wire as usize].load(Ordering::Relaxed);
+        }
+        exec_ops(&st.stream, vals);
+        for &(plane, node) in &st.roots {
+            dst[plane as usize].store(vals[node as usize], Ordering::Relaxed);
+        }
+    }
+}
+
+/// The bitsliced netlist engine partitioned into S plane-range shards: each
+/// shard owns the backward cone of a contiguous slice of every layer's
+/// output bit-planes and publishes those planes into the shared handoff
+/// buffers.  Bit-exact with [`super::bitslice::BitsliceNet`].  See
+/// `ARCHITECTURE.md` §4.
+pub struct ShardedBitslice {
+    runner: ShardRunner<BitsliceKernel>,
+    n_features: usize,
+    n_outputs: usize,
+    in_bits: u32,
+    out_bits: u32,
+    signed_out: bool,
+    out_step: f32,
+    shards: usize,
+    replication: f64,
+}
+
+impl ShardedBitslice {
+    /// Reorder, permute, map and partition `net` into an S-shard bitslice
+    /// engine (spawns S worker threads; mapping is parallel over `workers`).
+    pub fn compile(
+        net: &Network,
+        tables: &NetworkTables,
+        shards: usize,
+        workers: usize,
+    ) -> ShardedBitslice {
+        let perms = cache_aware_perms(net);
+        let (pnet, ptables) = permute_network(net, tables, &perms);
+        Self::from_permuted(&pnet, &ptables, shards, workers)
+    }
+
+    /// Build from an already-permuted network (shared with the plan shard
+    /// engine by [`ShardedModel::compile`]).
+    pub(crate) fn from_permuted(
+        pnet: &Network,
+        ptables: &NetworkTables,
+        shards: usize,
+        workers: usize,
+    ) -> ShardedBitslice {
+        let shards = shards.max(1);
+        let mapped = map_network_of(pnet, ptables, workers);
+        let kernel = build_bitslice_kernel(pnet, ptables, &mapped, shards);
+        let total_nodes: usize = mapped.layers.iter().map(|l| l.netlist.nodes.len()).sum();
+        let shard_nodes: usize = kernel
+            .layers
+            .iter()
+            .flat_map(|ls| ls.iter())
+            .map(|st| st.stream.n_nodes)
+            .sum();
+        let cfg = &pnet.cfg;
+        let l_count = cfg.n_layers();
+        let last = &ptables.layers[l_count - 1];
+        ShardedBitslice {
+            n_features: cfg.widths[0],
+            n_outputs: cfg.widths[l_count],
+            in_bits: cfg.beta[0],
+            out_bits: last.out_bits,
+            signed_out: last.signed_out,
+            out_step: pnet.out_step(l_count - 1),
+            shards,
+            replication: shard_nodes as f64 / total_nodes.max(1) as f64,
+            runner: ShardRunner::new(kernel),
+        }
+    }
+
+    /// Shard count S.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Input feature count.
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Output neuron count.
+    pub fn n_outputs(&self) -> usize {
+        self.n_outputs
+    }
+
+    /// Node replication factor across shard cones: 1.0 = perfectly disjoint
+    /// cones, higher means interior nodes shared between neurons were
+    /// duplicated into several shards' streams.
+    pub fn replication(&self) -> f64 {
+        self.replication
+    }
+
+    /// Cumulative per-shard occupancy / handoff-wait counters.
+    pub fn stats(&self) -> Vec<ShardStats> {
+        self.runner.stats()
+    }
+
+    /// One ≤64-sample word: pack to planes, run the sharded streams, unpack.
+    /// Pack/unpack go through the same [`pack_word`]/[`unpack_word`] pair as
+    /// the unsharded engine — the bit-plane layout lives in one place — with
+    /// only the copy to/from the atomic staging buffers added here.
+    fn forward_word(&self, word: &[Vec<i32>], out: &mut Vec<Vec<i32>>) {
+        debug_assert!(!word.is_empty() && word.len() <= WORD);
+        for row in word {
+            assert_eq!(row.len(), self.n_features, "input width mismatch");
+        }
+        let mut planes = vec![0u64; self.n_features * self.in_bits as usize];
+        pack_word(word, self.in_bits, &mut planes);
+        self.runner.run_epoch(
+            |input| {
+                for (slot, &p) in input.iter().zip(&planes) {
+                    slot.store(p, Ordering::Relaxed);
+                }
+            },
+            |output| {
+                let planes: Vec<u64> =
+                    output.iter().map(|p| p.load(Ordering::Relaxed)).collect();
+                unpack_word(
+                    &planes,
+                    self.n_outputs,
+                    self.out_bits,
+                    self.signed_out,
+                    word.len(),
+                    out,
+                );
+            },
+        );
+    }
+
+    /// Batched code-level forward pass: words sequential, each word
+    /// internally parallel across shards; ragged tails handled (invalid
+    /// lanes are packed as zero and never unpacked).  Bit-exact with
+    /// `BitsliceNet::forward_batch`.
+    pub fn forward_batch(&self, xs: &[Vec<i32>]) -> Vec<Vec<i32>> {
+        let mut out = Vec::with_capacity(xs.len());
+        for word in xs.chunks(WORD) {
+            self.forward_word(word, &mut out);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Combined sharded model
+// ---------------------------------------------------------------------------
+
+/// Both sharded engines over one shared cache-aware reordering: the plan
+/// shards serve sub-word batches sample-by-sample (latency), the bitslice
+/// shards serve word-sized batches word-by-word (throughput within a
+/// word).  `Backend::Lut` routes here when `EngineSelect::shards > 1` and
+/// the batch is below the bitslice crossover.
+pub struct ShardedModel {
+    /// Neuron-range sharded evaluation plan.
+    pub plan: ShardedPlan,
+    /// Plane-range sharded bitslice engine.
+    pub bits: ShardedBitslice,
+    shards: usize,
+}
+
+impl ShardedModel {
+    /// Reorder once, then build both sharded engines from the same permuted
+    /// network (2·S worker threads total).
+    pub fn compile(
+        net: &Network,
+        tables: &NetworkTables,
+        shards: usize,
+        workers: usize,
+    ) -> ShardedModel {
+        let shards = shards.max(1);
+        let perms = cache_aware_perms(net);
+        let (pnet, ptables) = permute_network(net, tables, &perms);
+        let plan = ShardedPlan::from_permuted(&pnet, &ptables, shards);
+        let bits = ShardedBitslice::from_permuted(&pnet, &ptables, shards, workers);
+        ShardedModel { plan, bits, shards }
+    }
+
+    /// Shard count S.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Batched feature-level forward pass: word-sized batches run through
+    /// the sharded bitslice engine, smaller ones sample-by-sample through
+    /// the sharded plan.  Bit-exact with both unsharded engines.
+    pub fn forward_batch_f32(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        if xs.len() >= WORD {
+            let codes: Vec<Vec<i32>> = xs
+                .iter()
+                .map(|x| {
+                    assert_eq!(x.len(), self.bits.n_features, "feature width mismatch");
+                    x.iter().map(|&v| unsigned_code(v, self.bits.in_bits, 1.0)).collect()
+                })
+                .collect();
+            self.bits
+                .forward_batch(&codes)
+                .into_iter()
+                .map(|row| row.iter().map(|&c| c as f32 * self.bits.out_step).collect())
+                .collect()
+        } else {
+            xs.iter().map(|x| self.plan.forward(x)).collect()
+        }
+    }
+
+    /// Per-shard counters summed over both engines.
+    pub fn stats(&self) -> Vec<ShardStats> {
+        self.plan
+            .stats()
+            .into_iter()
+            .zip(self.bits.stats())
+            .map(|(p, b)| ShardStats { cells: p.cells + b.cells, waits: p.waits + b.waits })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::tables::compile_network;
+    use crate::nn::config;
+    use crate::prop_assert;
+    use crate::sim::plan::Scratch;
+    use crate::util::pool::default_workers;
+    use crate::util::prop::{self, Outcome};
+    use crate::util::rng::Rng;
+
+    /// The same `(A, degree)` grid the plan and bitslice tests pin.
+    const GRID: [(usize, u32); 6] = [(1, 1), (2, 1), (3, 1), (1, 2), (2, 2), (2, 3)];
+
+    fn grid_net(a: usize, d: u32) -> (Network, NetworkTables) {
+        let cfg = config::uniform("shard-t", &[8, 6, 3], 2, 2, 3, 3, 3, d, a, 3);
+        let net = Network::random(&cfg, &mut Rng::new(a as u64 * 100 + d as u64));
+        let tables = compile_network(&net, 1);
+        (net, tables)
+    }
+
+    fn random_codes(net: &Network, n: usize, seed: u64) -> Vec<Vec<i32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let x: Vec<f32> =
+                    (0..net.cfg.widths[0]).map(|_| rng.f32()).collect();
+                net.quantize_input(&x)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn balanced_ranges_cover_and_balance() {
+        let costs = [3u64, 1, 1, 1, 3, 1, 1, 1];
+        for shards in [1usize, 2, 3, 4, 8, 11] {
+            let ranges = balanced_ranges(&costs, shards);
+            assert_eq!(ranges.len(), shards);
+            let mut pos = 0usize;
+            for r in &ranges {
+                assert_eq!(r.start, pos, "contiguous");
+                assert!(r.end >= r.start);
+                pos = r.end;
+            }
+            assert_eq!(pos, costs.len(), "covering");
+        }
+        assert!(balanced_ranges(&[], 3).iter().all(|r| r.is_empty()));
+    }
+
+    /// The adversarial-interleaving simulation the module docs cite: a
+    /// pure-logic model of the runner executes cells in randomized orders
+    /// constrained *only* by `compute_deps`' thresholds, tagging every
+    /// parity-buffer position with the boundary generation it holds.  Any
+    /// admitted interleaving must read exactly the generation it expects —
+    /// this is the harness that pinned the previous-covering-boundary rule
+    /// (generations skip a parity level when widths are non-monotonic) and
+    /// it doubles as a no-deadlock check.
+    #[test]
+    fn compute_deps_admits_only_safe_interleavings() {
+        let mut rng = Rng::new(0x0DE9);
+        for trial in 0..300 {
+            let l_count = 1 + rng.below(6);
+            let bounds: Vec<usize> = (0..=l_count).map(|_| 1 + rng.below(12)).collect();
+            let shard_choices = [1usize, 2, 3, 5, 8];
+            let shards = shard_choices[rng.below(shard_choices.len())];
+            let write: Vec<Vec<Range<usize>>> = (0..l_count)
+                .map(|l| {
+                    let costs = vec![1u64; bounds[l + 1]];
+                    balanced_ranges(&costs, shards)
+                })
+                .collect();
+            // Arbitrary read sets (harsher than real gathers, which are
+            // derived from connectivity).
+            let reads: Vec<Vec<Vec<usize>>> = (0..l_count)
+                .map(|l| {
+                    (0..shards)
+                        .map(|_| {
+                            let n = rng.below(6);
+                            let mut v: Vec<usize> =
+                                (0..n).map(|_| rng.below(bounds[l])).collect();
+                            v.sort_unstable();
+                            v.dedup();
+                            v
+                        })
+                        .collect()
+                })
+                .collect();
+            let spec = DepSpec {
+                bounds: bounds.clone(),
+                write: write.clone(),
+                reads: reads.clone(),
+            };
+            let deps = compute_deps(&spec, shards);
+            let maxbuf = bounds[1..l_count].iter().copied().max().unwrap_or(0);
+            // tags[p][x] = boundary generation buffer p position x holds
+            // (-1 = stale data from a previous epoch).
+            let mut tags = [vec![-1isize; maxbuf], vec![-1isize; maxbuf]];
+            let mut done = vec![0u32; shards];
+            let mut progress = vec![0usize; shards];
+            while progress.iter().any(|&p| p < l_count) {
+                let ready: Vec<usize> = (0..shards)
+                    .filter(|&s| {
+                        progress[s] < l_count
+                            && deps[progress[s]][s]
+                                .iter()
+                                .all(|&(d, thr)| done[d as usize] >= thr)
+                    })
+                    .collect();
+                assert!(!ready.is_empty(), "deadlock (trial {trial})");
+                let s = ready[rng.below(ready.len())];
+                let l = progress[s];
+                if l >= 1 {
+                    for &x in &reads[l][s] {
+                        assert_eq!(
+                            tags[l % 2][x],
+                            l as isize,
+                            "trial {trial}: cell ({l}, {s}) read boundary-{l} \
+                             position {x} holding a different generation"
+                        );
+                    }
+                }
+                if l + 1 <= l_count - 1 {
+                    for x in write[l][s].clone() {
+                        tags[(l + 1) % 2][x] = l as isize + 1;
+                    }
+                }
+                done[s] = l as u32 + 1;
+                progress[s] += 1;
+            }
+        }
+    }
+
+    /// Sharded plan and sharded bitslice are bit-exact with the unsharded
+    /// plan (itself pinned to `Network::forward_codes`) over the full
+    /// (A, degree) grid, a multi-word ragged batch, and several shard
+    /// counts including more shards than neurons.
+    #[test]
+    fn sharded_engines_bit_exact_on_grid() {
+        for (a, d) in GRID {
+            let (net, tables) = grid_net(a, d);
+            let plan = EvalPlan::compile(&net, &tables);
+            let mut scratch = Scratch::for_plan(&plan);
+            let xs = random_codes(&net, 2 * WORD + 11, 9);
+            let want = plan.forward_batch(&xs, &mut scratch);
+            for (i, (x, w)) in xs.iter().zip(&want).enumerate() {
+                assert_eq!(w, &net.forward_codes(x), "A={a} D={d} sample {i}");
+            }
+            for shards in [1usize, 2, 3, 8] {
+                let model = ShardedModel::compile(&net, &tables, shards, 1);
+                assert_eq!(
+                    model.plan.forward_batch(&xs),
+                    want,
+                    "plan A={a} D={d} S={shards}"
+                );
+                assert_eq!(
+                    model.bits.forward_batch(&xs),
+                    want,
+                    "bits A={a} D={d} S={shards}"
+                );
+                let st = model.stats();
+                assert_eq!(st.len(), shards);
+                assert!(st.iter().all(|s| s.cells > 0), "every shard ran");
+            }
+        }
+    }
+
+    /// Ragged and empty batches agree with the plan through one engine
+    /// (scratch/epoch reuse across calls must not leak state).
+    #[test]
+    fn ragged_batches_match_plan() {
+        let (net, tables) = grid_net(2, 2);
+        let plan = EvalPlan::compile(&net, &tables);
+        let mut scratch = Scratch::for_plan(&plan);
+        let model = ShardedModel::compile(&net, &tables, 3, 1);
+        for n in [0usize, 1, 63, 64, 65, 130] {
+            let xs = random_codes(&net, n, 31 + n as u64);
+            let want = plan.forward_batch(&xs, &mut scratch);
+            assert_eq!(model.plan.forward_batch(&xs), want, "plan batch {n}");
+            assert_eq!(model.bits.forward_batch(&xs), want, "bits batch {n}");
+        }
+    }
+
+    /// A deeper geometry (4 layers) exercises the blocker condition
+    /// (layers 2..=L-2) and early start across shard counts, including
+    /// S = available cores.
+    #[test]
+    fn deep_geometry_bit_exact_with_blockers() {
+        let cfg = config::uniform("shard-deep", &[8, 10, 8, 6, 3], 2, 2, 3, 3, 3, 1, 2, 3);
+        let net = Network::random(&cfg, &mut Rng::new(77));
+        let tables = compile_network(&net, 1);
+        let plan = EvalPlan::compile(&net, &tables);
+        let mut scratch = Scratch::for_plan(&plan);
+        let xs = random_codes(&net, WORD + 9, 13);
+        let want = plan.forward_batch(&xs, &mut scratch);
+        for shards in [2usize, 3, default_workers()] {
+            let model = ShardedModel::compile(&net, &tables, shards, 1);
+            assert_eq!(model.plan.forward_batch(&xs), want, "plan S={shards}");
+            assert_eq!(model.bits.forward_batch(&xs), want, "bits S={shards}");
+        }
+    }
+
+    /// The f32 entry point matches the unsharded engines' dequantized
+    /// logits on both routes (sub-word → plan shards, word → bitslice
+    /// shards).
+    #[test]
+    fn forward_batch_f32_matches_unsharded() {
+        let (net, tables) = grid_net(2, 1);
+        let plan = EvalPlan::compile(&net, &tables);
+        let model = ShardedModel::compile(&net, &tables, 2, 1);
+        let mut rng = Rng::new(5);
+        for n in [5usize, WORD + 3] {
+            let xs: Vec<Vec<f32>> =
+                (0..n).map(|_| (0..8).map(|_| rng.f32()).collect()).collect();
+            assert_eq!(model.forward_batch_f32(&xs), plan.forward_batch_f32(&xs, 1), "n={n}");
+        }
+        assert!(model.forward_batch_f32(&[]).is_empty());
+    }
+
+    /// Repeated single-sample calls through one engine are deterministic
+    /// (epoch protocol resets cleanly) and waits/cells counters move.
+    #[test]
+    fn epoch_reuse_is_deterministic_and_counted() {
+        let (net, tables) = grid_net(3, 1);
+        let model = ShardedModel::compile(&net, &tables, 2, 1);
+        let xs = random_codes(&net, 8, 3);
+        let first: Vec<Vec<i32>> = xs.iter().map(|x| model.plan.forward_codes(x)).collect();
+        let second: Vec<Vec<i32>> =
+            xs.iter().rev().map(|x| model.plan.forward_codes(x)).collect();
+        for (a, b) in first.iter().zip(second.iter().rev()) {
+            assert_eq!(a, b);
+        }
+        let st = model.plan.stats();
+        let total_cells: u64 = st.iter().map(|s| s.cells).sum();
+        assert_eq!(total_cells, 16 * 2 * 2, "16 samples x 2 shards x 2 layers");
+    }
+
+    /// Property: the cache-aware reorder produces a bijection per layer
+    /// (identity on the last) and the permuted network's `forward_codes`
+    /// is bit-identical to the original's, over random geometries.
+    #[test]
+    fn prop_cache_aware_perm_bijection_preserves_forward() {
+        prop::check("cache-aware reorder", 25, |g| {
+            let a = g.usize_in(1, 3);
+            let d = g.usize_in(1, 2) as u32;
+            // Hidden widths stay >= the fan-in (3) so connectivity sampling
+            // is well-defined at every layer.
+            let w1 = g.usize_in(3, 10);
+            let w2 = g.usize_in(3, 8);
+            let cfg = config::uniform("prop-shard", &[8, w1, w2, 3], 2, 2, 3, 3, 3, d, a, 3);
+            let net = Network::random(&cfg, &mut g.rng.fork(1));
+            let tables = compile_network(&net, 1);
+            let perms = cache_aware_perms(&net);
+            prop_assert!(perms.len() == cfg.n_layers(), "one perm per layer");
+            for (l, perm) in perms.iter().enumerate() {
+                let n_out = cfg.widths[l + 1];
+                prop_assert!(perm.len() == n_out, "layer {l} length");
+                let mut sorted = perm.clone();
+                sorted.sort_unstable();
+                prop_assert!(
+                    sorted == (0..n_out).collect::<Vec<_>>(),
+                    "layer {l} not a bijection: {perm:?}"
+                );
+            }
+            let last = perms.last().expect("at least one layer");
+            prop_assert!(
+                last == &(0..cfg.widths[cfg.n_layers()]).collect::<Vec<_>>(),
+                "last layer must keep output order"
+            );
+            let (pnet, ptables) = permute_network(&net, &tables, &perms);
+            prop_assert!(
+                ptables.total_words == tables.total_words,
+                "permutation must not change table accounting"
+            );
+            let mut rng = g.rng.fork(2);
+            for _ in 0..20 {
+                let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+                let codes = net.quantize_input(&x);
+                prop_assert!(
+                    pnet.forward_codes(&codes) == net.forward_codes(&codes),
+                    "forward_codes changed under reorder"
+                );
+            }
+            Outcome::Pass
+        });
+    }
+
+    /// Reordering groups shared fan-in: interleaved neurons with two
+    /// disjoint fan-in sets must come out clustered set-by-set.
+    #[test]
+    fn reorder_groups_identical_fanin() {
+        let a_set = vec![0u32, 1, 2];
+        let b_set = vec![9u32, 10, 11];
+        let srcs = vec![
+            a_set.clone(),
+            b_set.clone(),
+            a_set.clone(),
+            b_set.clone(),
+            a_set,
+            b_set,
+        ];
+        let order = order_by_shared_sources(&srcs);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..6).collect::<Vec<_>>(), "must be a bijection");
+        // All A-fan-in neurons (even indices) first, then all B ones.
+        assert_eq!(order, vec![0, 2, 4, 1, 3, 5], "shared fan-in must cluster");
+    }
+}
