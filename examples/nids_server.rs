@@ -40,6 +40,7 @@ fn main() -> Result<()> {
                 max_batch: 256,
                 window: Duration::from_micros(200),
                 queue_cap: 8192,
+                ..Default::default()
             },
         );
         let correct = Arc::new(AtomicU64::new(0));

@@ -22,7 +22,9 @@ use polylut_add::lut::tables::compile_neuron;
 use polylut_add::nn::config;
 use polylut_add::nn::network::Network;
 use polylut_add::runtime::Engine;
-use polylut_add::sim::{BitsliceNet, EvalPlan, LutSim, Scratch, ShardedModel};
+use polylut_add::sim::{
+    BitsliceNet, EvalPlan, LutSim, Scratch, ShardPlacement, ShardWorkerHost, ShardedModel,
+};
 use polylut_add::util::bench::Bench;
 use polylut_add::util::pool::default_workers;
 use polylut_add::util::rng::Rng;
@@ -177,7 +179,7 @@ fn main() {
         plan4.forward_codes_into(&single, &mut pscratch4).len()
     });
     let st_shard_1 = b.measure("shard-plan/forward (1 sample, nid-t4)", || {
-        sharded4.plan.forward_codes(&single).len()
+        sharded4.plan.forward_codes(&single).unwrap().len()
     });
     println!(
         "  -> sharded vs unsharded single-sample latency (nid-t4, S={shard_n}): {:.2}x ({} vs {})",
@@ -186,7 +188,7 @@ fn main() {
         polylut_add::util::bench::fmt_ns(st_plan_1.median_ns),
     );
     let st_shard_bits = b.measure("shard-bitslice/forward_batch x1024 (nid-t4)", || {
-        sharded4.bits.forward_batch(&rows4).len()
+        sharded4.bits.forward_batch(&rows4).unwrap().len()
     });
     println!(
         "  -> sharded vs unsharded bitslice on 1024-sample batch (nid-t4): {:.2}x",
@@ -195,12 +197,12 @@ fn main() {
     // Bit-exactness of the sharded engines on this batch (also pinned by
     // the sim::shard test grid).
     assert_eq!(
-        sharded4.plan.forward_batch(&rows4),
+        sharded4.plan.forward_batch(&rows4).unwrap(),
         plan4.forward_batch(&rows4, &mut pscratch4),
         "sharded plan disagrees on nid-t4"
     );
     assert_eq!(
-        sharded4.bits.forward_batch(&rows4),
+        sharded4.bits.forward_batch(&rows4).unwrap(),
         bits4.forward_batch(&rows4, &mut bscratch4),
         "sharded bitslice disagrees on nid-t4"
     );
@@ -208,6 +210,55 @@ fn main() {
     let cells: Vec<u64> = shard_stats.iter().map(|s| s.cells).collect();
     let waits: Vec<u64> = shard_stats.iter().map(|s| s.waits).collect();
     println!("  shard occupancy (cells) {cells:?}, handoff waits {waits:?}");
+
+    // Wire handoff over loopback TCP (ROADMAP lever (d)): same geometry
+    // and shard count, but the last shard is hosted by an in-process
+    // `ShardWorkerHost` behind 127.0.0.1 — the LocalHandoff-vs-loopback-
+    // RemoteHandoff single-sample latency comparison.  The absolute gap is
+    // the honest cost of 2·(L) frame round-trips per sample; it bounds how
+    // much cone a remote shard must carry before distribution pays.
+    let host = Arc::new(ShardWorkerHost::compile(&net4, &tables4, shard_n, default_workers()));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    {
+        let host = host.clone();
+        std::thread::spawn(move || host.serve(listener));
+    }
+    let placement: ShardPlacement =
+        (0..shard_n).map(|s| (s + 1 == shard_n).then(|| addr.clone())).collect();
+    let wired =
+        ShardedModel::compile_placed(&net4, &tables4, shard_n, default_workers(), &placement, None)
+            .expect("loopback shard worker");
+    let st_wire_1 = b.measure("shard-plan/forward (1 sample, nid-t4, 1 shard over loopback)", || {
+        wired.plan.forward_codes(&single).unwrap().len()
+    });
+    println!(
+        "  -> LocalHandoff vs loopback RemoteHandoff single-sample (nid-t4, S={shard_n}): {:.2}x ({} vs {})",
+        st_wire_1.median_ns / st_shard_1.median_ns,
+        polylut_add::util::bench::fmt_ns(st_shard_1.median_ns),
+        polylut_add::util::bench::fmt_ns(st_wire_1.median_ns),
+    );
+    // Bit-exactness across the wire (also pinned by the sim::wire tests).
+    assert_eq!(
+        wired.plan.forward_batch(&rows4[..70]).unwrap(),
+        plan4.forward_batch(&rows4[..70], &mut pscratch4),
+        "wired plan disagrees on nid-t4"
+    );
+    assert_eq!(
+        wired.bits.forward_batch(&rows4[..64]).unwrap(),
+        bits4.forward_batch(&rows4[..64], &mut bscratch4),
+        "wired bitslice disagrees on nid-t4"
+    );
+    let ws = wired.wire_stats().expect("remote link present");
+    println!(
+        "  wire link: {} frames, {} bytes, {:.2} ms blocked, {} reconnects (spin_us={})",
+        ws.frames,
+        ws.bytes,
+        ws.wait_ns as f64 / 1e6,
+        ws.reconnects,
+        wired.spin_us()
+    );
+    drop(wired);
     drop(sharded4);
 
     // Fixed-point float model for comparison.
@@ -219,7 +270,12 @@ fn main() {
     let server = Server::start(
         BackendSpec::lut(model, default_workers()),
         net.cfg.n_classes,
-        ServerConfig { max_batch: 64, window: Duration::from_micros(50), queue_cap: 1024 },
+        ServerConfig {
+            max_batch: 64,
+            window: Duration::from_micros(50),
+            queue_cap: 1024,
+            ..Default::default()
+        },
     );
     let client = server.client();
     b.measure("server/round-trip (1 in-flight)", || client.infer(x.clone()).unwrap());

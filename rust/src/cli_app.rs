@@ -29,6 +29,7 @@ pub fn cli_main() -> Result<()> {
         "synth" => cmd_synth(&args),
         "rtl" => cmd_rtl(&args),
         "serve" => cmd_serve(&args),
+        "shard-worker" => cmd_shard_worker(&args),
         "report" => cmd_report(&args),
         other => bail!("unknown subcommand {other:?} (try --help)"),
     }
@@ -55,9 +56,24 @@ fn print_help() {
                     [--shards N]  (default 1), the intra-sample sharded\n\
                     engines: each request's forward pass itself runs across\n\
                     N cores with bit-plane handoff (see ARCHITECTURE.md §4).\n\
+                    [--shard-hosts a:p,b:p,…]  place shard i on a remote\n\
+                    `shard-worker` at entry i (`local`/`-`/empty and unlisted\n\
+                    shards stay local) — bit-planes cross the wire, outputs\n\
+                    stay bit-exact (ARCHITECTURE.md §7).\n\
+                    [--shard-spin-us N]  worker epoch spin budget before the\n\
+                    condvar sleep (default: 20 local, 0 with remote shards;\n\
+                    env POLYLUT_SHARD_SPIN_US).\n\
                     Metrics snapshot: plan/bitslice/sharded = batches served\n\
                     per engine; shard_cells/shard_waits = per-shard occupancy\n\
-                    and handoff-wait counters (cumulative)\n\
+                    and handoff-wait counters (cumulative); shard_spin_us and\n\
+                    wire_frames/bytes/wait_ns/reconnects when active\n\
+           shard-worker --listen H:P --shards S   host shards of a model for\n\
+                    a remote coordinator (one process can serve any subset;\n\
+                    each connection claims one (engine, shard) after a model-\n\
+                    fingerprint handshake).  Model source: --id <artifact>,\n\
+                    or --widths 8,6,3 [--net-seed N] [--beta-in B] [--beta B]\n\
+                    [--beta-out B] [--fan-in F] [--fan F] [--degree D] [--a A]\n\
+                    [--classes C] for a random-weight geometry (tests/benches)\n\
            report   --id <artifact>      full markdown report (synth + cubes)\n\n\
          COMMON\n\
            --artifacts <dir>             artifact directory (default: artifacts)"
@@ -206,4 +222,66 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let id = args.require("id")?;
     crate::coordinator::serve_cli(&dir, id, args)
+}
+
+/// `polylut shard-worker --listen H:P --shards S (--id X | --widths …)` —
+/// host shards of a model for a remote coordinator (ROADMAP lever (d)).
+/// The model is compiled locally and must be *identical* to the
+/// coordinator's (same weights, shard count and build); the wire handshake
+/// verifies a fingerprint of the permuted tables before serving.  Binding
+/// port 0 picks a free port; the chosen address is printed on stdout
+/// (`listening on …`) so parent processes can parse it.
+fn cmd_shard_worker(args: &Args) -> Result<()> {
+    use std::io::Write as _;
+
+    let listen = args.require("listen")?;
+    let shards = args.get_usize("shards", 2)?.max(1);
+    let workers = crate::util::pool::default_workers();
+    let net = if let Some(id) = args.get("id") {
+        let man = crate::meta::load_id(&artifacts_dir(args), id)?;
+        let state = crate::train::load_state(&man, &man.dir)
+            .context("no trained weights — run `polylut train` first")?;
+        man.network_from_state(&state)?
+    } else if let Some(widths_csv) = args.get("widths") {
+        let widths: Vec<usize> = widths_csv
+            .split(',')
+            .map(|w| {
+                w.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("--widths entry {w:?} is not a number"))
+            })
+            .collect::<Result<_>>()?;
+        let cfg = crate::nn::config::uniform(
+            "shard-worker",
+            &widths,
+            args.get_usize("beta-in", 2)? as u32,
+            args.get_usize("beta", 2)? as u32,
+            args.get_usize("beta-out", 3)? as u32,
+            args.get_usize("fan-in", 3)?,
+            args.get_usize("fan", 3)?,
+            args.get_usize("degree", 1)? as u32,
+            args.get_usize("a", 2)?,
+            args.get_usize("classes", 3)?,
+        );
+        cfg.validate()?;
+        let seed = args.get_usize("net-seed", 0)? as u64;
+        crate::nn::network::Network::random(&cfg, &mut crate::util::rng::Rng::new(seed))
+    } else {
+        bail!("shard-worker needs a model: --id <artifact> or --widths w0,w1,…");
+    };
+    let tables = crate::lut::tables::compile_network(&net, workers);
+    let host = std::sync::Arc::new(crate::sim::ShardWorkerHost::compile(
+        &net, &tables, shards, workers,
+    ));
+    let listener = std::net::TcpListener::bind(listen)
+        .with_context(|| format!("bind {listen}"))?;
+    let addr = listener.local_addr()?;
+    println!(
+        "[shard-worker] listening on {addr} shards={shards} fingerprint={:016x}",
+        host.fingerprint()
+    );
+    // Parents parse the line above from a pipe; make sure it leaves now.
+    std::io::stdout().flush()?;
+    host.serve(listener);
+    Ok(())
 }

@@ -9,7 +9,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::sim::{LutEngine, ShardStats};
+use crate::sim::{LutEngine, ShardStats, WireStats};
 
 const BUCKETS: usize = 40;
 
@@ -30,6 +30,18 @@ pub struct Metrics {
     /// (empty when sharding is off): `cells` = layer-cells executed
     /// (occupancy proxy), `waits` = handoff-wait episodes.
     shard: Mutex<Vec<ShardStats>>,
+    /// Latest cumulative wire-link counters (frames/bytes/wait-ns and
+    /// connect retries, summed over links) — mirrored after every sharded
+    /// batch when any shard is remote; all zero otherwise.
+    pub wire_frames: AtomicU64,
+    pub wire_bytes: AtomicU64,
+    pub wire_wait_ns: AtomicU64,
+    pub wire_reconnects: AtomicU64,
+    /// Whether a wire placement is active (controls snapshot rendering).
+    wire_active: AtomicU64,
+    /// Resolved shard-worker spin budget in µs (`u64::MAX` = not recorded:
+    /// sharding off).
+    shard_spin_us: AtomicU64,
     hist: [AtomicU64; BUCKETS],
 }
 
@@ -45,6 +57,12 @@ impl Default for Metrics {
             bitslice_batches: AtomicU64::new(0),
             sharded_batches: AtomicU64::new(0),
             shard: Mutex::new(Vec::new()),
+            wire_frames: AtomicU64::new(0),
+            wire_bytes: AtomicU64::new(0),
+            wire_wait_ns: AtomicU64::new(0),
+            wire_reconnects: AtomicU64::new(0),
+            wire_active: AtomicU64::new(0),
+            shard_spin_us: AtomicU64::new(u64::MAX),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -93,6 +111,23 @@ impl Metrics {
     /// Latest per-shard counters (empty when sharding is off).
     pub fn shard_stats(&self) -> Vec<ShardStats> {
         self.shard.lock().unwrap().clone()
+    }
+
+    /// Mirror the sharded engines' cumulative wire-link counters (called
+    /// by the batcher after a sharded batch on a remote placement; values
+    /// are monotonic, so the last write reflects lifetime totals).
+    pub fn record_wire(&self, ws: &WireStats) {
+        self.wire_frames.store(ws.frames, Ordering::Relaxed);
+        self.wire_bytes.store(ws.bytes, Ordering::Relaxed);
+        self.wire_wait_ns.store(ws.wait_ns, Ordering::Relaxed);
+        self.wire_reconnects.store(ws.reconnects, Ordering::Relaxed);
+        self.wire_active.store(1, Ordering::Relaxed);
+    }
+
+    /// Record the resolved shard-worker epoch spin budget (µs) so the
+    /// snapshot shows which value `POLYLUT_SHARD_SPIN_US` / config chose.
+    pub fn set_shard_spin_us(&self, spin_us: u64) {
+        self.shard_spin_us.store(spin_us, Ordering::Relaxed);
     }
 
     /// Approximate quantile from the histogram (upper bucket bound).
@@ -148,6 +183,19 @@ impl Metrics {
                 waits.join(",")
             ));
         }
+        let spin = self.shard_spin_us.load(Ordering::Relaxed);
+        if spin != u64::MAX {
+            s.push_str(&format!(" shard_spin_us={spin}"));
+        }
+        if self.wire_active.load(Ordering::Relaxed) != 0 {
+            s.push_str(&format!(
+                " wire_frames={} wire_bytes={} wire_wait_ns={} wire_reconnects={}",
+                self.wire_frames.load(Ordering::Relaxed),
+                self.wire_bytes.load(Ordering::Relaxed),
+                self.wire_wait_ns.load(Ordering::Relaxed),
+                self.wire_reconnects.load(Ordering::Relaxed),
+            ));
+        }
         s
     }
 }
@@ -193,6 +241,22 @@ mod tests {
         assert!(snap.contains("shard_cells=[10,9]"), "{snap}");
         assert!(snap.contains("shard_waits=[2,0]"), "{snap}");
         assert_eq!(m.shard_stats().len(), 2);
+    }
+
+    #[test]
+    fn wire_and_spin_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        let snap = m.snapshot();
+        assert!(!snap.contains("wire_frames"), "hidden without a wire placement");
+        assert!(!snap.contains("shard_spin_us"), "hidden until recorded");
+        m.set_shard_spin_us(0);
+        m.record_wire(&WireStats { frames: 12, bytes: 3400, wait_ns: 560, reconnects: 1 });
+        let snap = m.snapshot();
+        assert!(snap.contains("shard_spin_us=0"), "{snap}");
+        assert!(
+            snap.contains("wire_frames=12 wire_bytes=3400 wire_wait_ns=560 wire_reconnects=1"),
+            "{snap}"
+        );
     }
 
     #[test]

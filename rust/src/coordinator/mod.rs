@@ -32,6 +32,7 @@ use crate::sim::bitslice::BitsliceNet;
 use crate::sim::lutsim::LutSim;
 use crate::sim::plan::EvalPlan;
 use crate::sim::shard::ShardedModel;
+use crate::sim::wire::{parse_shard_hosts, ShardPlacement, WireStats};
 use crate::sim::{EngineSelect, LutEngine, ShardStats};
 use crate::util::cli::Args;
 use metrics::Metrics;
@@ -60,12 +61,35 @@ impl FrozenModel {
     /// additionally builds the cache-aware-reordered [`ShardedModel`]
     /// (spawning `2·shards` persistent worker threads).
     pub fn from_network_sharded(net: Network, workers: usize, shards: usize) -> FrozenModel {
+        Self::from_network_placed(net, workers, shards, &[], None)
+            .expect("all-local freeze cannot fail")
+    }
+
+    /// Freeze with a shard **placement map**: shards whose entry is
+    /// `Some("host:port")` are driven on remote `polylut shard-worker`
+    /// processes over the wire handoff (the `serve --shard-hosts` path);
+    /// `None`/unlisted shards stay on local threads.  `spin_us` overrides
+    /// the worker epoch spin budget (see `sim::resolve_spin_us`).  Fails
+    /// cleanly when a remote link cannot be established or a worker's
+    /// model fingerprint disagrees.
+    pub fn from_network_placed(
+        net: Network,
+        workers: usize,
+        shards: usize,
+        placement: &ShardPlacement,
+        spin_us: Option<u64>,
+    ) -> Result<FrozenModel> {
         let tables = crate::lut::tables::compile_network(&net, workers);
         let plan = EvalPlan::compile(&net, &tables);
         let bitslice = BitsliceNet::compile(&net, &tables, workers);
-        let sharded =
-            (shards > 1).then(|| ShardedModel::compile(&net, &tables, shards, workers));
-        FrozenModel { net, tables, plan, bitslice, sharded }
+        let sharded = if shards > 1 {
+            Some(ShardedModel::compile_placed(
+                &net, &tables, shards, workers, placement, spin_us,
+            )?)
+        } else {
+            None
+        };
+        Ok(FrozenModel { net, tables, plan, bitslice, sharded })
     }
 
     pub fn sim(&self) -> LutSim<'_> {
@@ -140,12 +164,19 @@ impl Backend {
 
     /// Which LUT engine a batch of `batch_len` samples would run on
     /// (`None` for the PJRT backend).  `Sharded` is only returned when the
-    /// model actually carries compiled sharded engines, so routing can
-    /// never point at an engine that does not exist.
+    /// model actually carries compiled sharded engines **and** they are
+    /// healthy — a sticky engine fault (panicked shard, dead wire link)
+    /// degrades routing to the in-process plan engine instead of failing
+    /// every sub-crossover batch until restart.  (The batch that observed
+    /// the fault still errors; every later batch is served.)
     pub fn route(&self, batch_len: usize) -> Option<LutEngine> {
         match self {
             Backend::Lut { model, select, .. } => Some(match select.pick(batch_len) {
-                LutEngine::Sharded if model.sharded.is_none() => LutEngine::Plan,
+                LutEngine::Sharded
+                    if model.sharded.as_ref().map_or(true, |s| s.faulted()) =>
+                {
+                    LutEngine::Plan
+                }
                 engine => engine,
             }),
             Backend::Pjrt { .. } => None,
@@ -157,6 +188,17 @@ impl Backend {
     pub fn shard_stats(&self) -> Option<Vec<ShardStats>> {
         match self {
             Backend::Lut { model, .. } => model.sharded.as_ref().map(|s| s.stats()),
+            Backend::Pjrt { .. } => None,
+        }
+    }
+
+    /// Cumulative wire-link counters of the sharded engines (`None` when
+    /// sharding is off, every shard is local, or the backend is PJRT).
+    pub fn wire_stats(&self) -> Option<WireStats> {
+        match self {
+            Backend::Lut { model, .. } => {
+                model.sharded.as_ref().and_then(|s| s.wire_stats())
+            }
             Backend::Pjrt { .. } => None,
         }
     }
@@ -211,12 +253,15 @@ impl Backend {
                     // (parallel across words).
                     LutEngine::Bitslice => model.bitslice.forward_batch_f32(xs, *workers),
                     // Intra-sample sharded execution (route guarantees the
-                    // engines exist when this arm is reached).
+                    // engines exist when this arm is reached).  A faulted
+                    // engine — panicked shard, dead wire link — surfaces
+                    // here as a clean error instead of a hung batcher.
                     LutEngine::Sharded => model
                         .sharded
                         .as_ref()
                         .expect("route only picks Sharded when compiled")
-                        .forward_batch_f32(xs),
+                        .forward_batch_f32(xs)
+                        .context("sharded engine failed")?,
                 })
             }
             Backend::Pjrt { engine, exe, params, batch, n_features, n_out } => {
@@ -258,11 +303,21 @@ pub struct ServerConfig {
     pub window: Duration,
     /// Bounded ingress queue (backpressure: submit fails when full).
     pub queue_cap: usize,
+    /// Shard-worker epoch spin budget in µs before the condvar sleep
+    /// (`None` = `POLYLUT_SHARD_SPIN_US` env, else the engine default;
+    /// remote placements default to zero).  Applied when the serve CLI
+    /// freezes the model; recorded in `metrics::snapshot()`.
+    pub shard_spin_us: Option<u64>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { max_batch: 256, window: Duration::from_micros(200), queue_cap: 4096 }
+        Self {
+            max_batch: 256,
+            window: Duration::from_micros(200),
+            queue_cap: 4096,
+            shard_spin_us: None,
+        }
     }
 }
 
@@ -401,6 +456,9 @@ fn batcher_loop(
                         if let Some(stats) = backend.shard_stats() {
                             metrics.record_shard_stats(&stats);
                         }
+                        if let Some(ws) = backend.wire_stats() {
+                            metrics.record_wire(&ws);
+                        }
                     }
                 }
                 for (req, logits) in batch.into_iter().zip(all_logits) {
@@ -431,13 +489,17 @@ fn batcher_loop(
 
 /// `polylut serve --id <artifact> [--backend lut|pjrt] [--requests N]
 ///  [--clients N] [--batch-window-us N] [--bitslice-threshold N]
-///  [--shards N]` — runs a self-driving load test against the server with
-/// dataset samples and prints metrics.  `--bitslice-threshold` sets the
-/// batch crossover of the LUT backend above which the bitsliced engine
-/// takes over (0 = always bitsliced; default
-/// [`EngineSelect::DEFAULT_CROSSOVER`]); `--shards N` (default 1) compiles
-/// the intra-sample sharded engines and routes every sub-crossover batch
-/// through them, so a single request's forward pass runs on N cores.
+///  [--shards N] [--shard-hosts a:p,b:p,…] [--shard-spin-us N]` — runs a
+/// self-driving load test against the server with dataset samples and
+/// prints metrics.  `--bitslice-threshold` sets the batch crossover of the
+/// LUT backend above which the bitsliced engine takes over (0 = always
+/// bitsliced; default [`EngineSelect::DEFAULT_CROSSOVER`]); `--shards N`
+/// (default 1) compiles the intra-sample sharded engines and routes every
+/// sub-crossover batch through them, so a single request's forward pass
+/// runs on N cores.  `--shard-hosts` places individual shards on remote
+/// `polylut shard-worker` processes (entry i = shard i; `local`/`-`/empty
+/// and unlisted shards stay local), and `--shard-spin-us` overrides the
+/// worker epoch spin budget (remote placements default to 0).
 pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
     let man = crate::meta::load_id(dir, id)?;
     let ds = crate::data::load(&man.dataset, 0)?;
@@ -446,14 +508,30 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
     let backend_name = args.get_choice("backend", "lut", &["lut", "pjrt"])?.to_string();
     let crossover = args.get_usize("bitslice-threshold", EngineSelect::DEFAULT_CROSSOVER)?;
     let shards = args.get_usize("shards", 1)?.max(1);
+    let placement = parse_shard_hosts(args.get_or("shard-hosts", ""), shards)?;
+    let n_remote = placement.iter().filter(|p| p.is_some()).count();
+    let shard_spin_us = match args.get("shard-spin-us") {
+        Some(_) => Some(args.get_usize("shard-spin-us", 0)? as u64),
+        None => None,
+    };
+    let cfg = ServerConfig {
+        max_batch: args.get_usize("max-batch", 256)?,
+        window: Duration::from_micros(args.get_usize("batch-window-us", 200)? as u64),
+        shard_spin_us,
+        ..Default::default()
+    };
     let net = man.network_from_state(&state)?;
+    let mut frozen: Option<Arc<FrozenModel>> = None;
     let backend = match backend_name.as_str() {
         "lut" => {
-            let model = Arc::new(FrozenModel::from_network_sharded(
+            let model = Arc::new(FrozenModel::from_network_placed(
                 net,
                 crate::util::pool::default_workers(),
                 shards,
-            ));
+                &placement,
+                cfg.shard_spin_us,
+            )?);
+            frozen = Some(model.clone());
             BackendSpec::lut_with_select(
                 model,
                 crate::util::pool::default_workers(),
@@ -463,18 +541,16 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
         "pjrt" => BackendSpec::pjrt(man.clone(), state.clone()),
         other => unreachable!("get_choice admitted unknown backend {other:?}"),
     };
-    let cfg = ServerConfig {
-        max_batch: args.get_usize("max-batch", 256)?,
-        window: Duration::from_micros(args.get_usize("batch-window-us", 200)? as u64),
-        ..Default::default()
-    };
     let n_requests = args.get_usize("requests", 10_000)?;
     let n_clients = args.get_usize("clients", 4)?;
     let server = Server::start(backend, man.config.n_classes, cfg);
+    if let Some(sharded) = frozen.as_ref().and_then(|m| m.sharded.as_ref()) {
+        server.metrics.set_shard_spin_us(sharded.spin_us());
+    }
 
     if backend_name == "lut" {
         println!(
-            "[serve] {id} backend=lut (bitslice-threshold={crossover} shards={shards}): {n_requests} requests from {n_clients} clients…"
+            "[serve] {id} backend=lut (bitslice-threshold={crossover} shards={shards} remote={n_remote}): {n_requests} requests from {n_clients} clients…"
         );
     } else {
         println!("[serve] {id} backend={backend_name}: {n_requests} requests from {n_clients} clients…");
@@ -534,7 +610,12 @@ mod tests {
         let server = Server::start(
             backend,
             3,
-            ServerConfig { max_batch: 8, window: Duration::from_micros(100), queue_cap: 64 },
+            ServerConfig {
+                max_batch: 8,
+                window: Duration::from_micros(100),
+                queue_cap: 64,
+                ..Default::default()
+            },
         );
         let client = server.client();
         let mut rng = Rng::new(1);
@@ -558,7 +639,12 @@ mod tests {
         let server = Server::start(
             backend,
             3,
-            ServerConfig { max_batch: 8, window: Duration::from_micros(100), queue_cap: 64 },
+            ServerConfig {
+                max_batch: 8,
+                window: Duration::from_micros(100),
+                queue_cap: 64,
+                ..Default::default()
+            },
         );
         let client = server.client();
         let mut rng = Rng::new(2);
@@ -588,7 +674,12 @@ mod tests {
         let server = Server::start(
             backend,
             3,
-            ServerConfig { max_batch: 8, window: Duration::from_micros(100), queue_cap: 64 },
+            ServerConfig {
+                max_batch: 8,
+                window: Duration::from_micros(100),
+                queue_cap: 64,
+                ..Default::default()
+            },
         );
         let client = server.client();
         let mut rng = Rng::new(2);
@@ -608,6 +699,55 @@ mod tests {
         server.shutdown();
     }
 
+    /// A placed model (one shard behind a loopback shard-worker host)
+    /// serves through the full batching stack bit-exactly, and the wire
+    /// counters reach the metrics snapshot.
+    #[test]
+    fn wire_placed_route_is_bit_exact_and_recorded() {
+        let cfg = config::uniform("srv-wire", &[8, 6, 3], 2, 2, 3, 3, 3, 1, 2, 3);
+        let net = Network::random(&cfg, &mut Rng::new(4));
+        let tables = crate::lut::tables::compile_network(&net, 2);
+        let host =
+            Arc::new(crate::sim::ShardWorkerHost::compile(&net, &tables, 2, 2));
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || host.serve(listener));
+        let placement = vec![None, Some(addr)];
+        let m = Arc::new(
+            FrozenModel::from_network_placed(net, 2, 2, &placement, None)
+                .expect("loopback placement"),
+        );
+        let sharded = m.sharded.as_ref().expect("sharded engines compiled");
+        assert_eq!(sharded.spin_us(), 0, "remote placement defaults to zero spin");
+        let select = EngineSelect { crossover: usize::MAX, shards: 2 };
+        let backend = BackendSpec::lut_with_select(m.clone(), 2, select);
+        let server = Server::start(
+            backend,
+            3,
+            ServerConfig {
+                max_batch: 8,
+                window: Duration::from_micros(100),
+                queue_cap: 64,
+                ..Default::default()
+            },
+        );
+        server.metrics.set_shard_spin_us(sharded.spin_us());
+        let client = server.client();
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+            let resp = client.infer(x.clone()).unwrap();
+            assert_eq!(resp.logits, m.sim().forward(&x));
+        }
+        assert_eq!(server.metrics.responses.load(Ordering::Relaxed), 20);
+        assert!(server.metrics.sharded_batches.load(Ordering::Relaxed) > 0);
+        assert!(server.metrics.wire_frames.load(Ordering::Relaxed) > 0);
+        let snap = server.metrics.snapshot();
+        assert!(snap.contains("wire_frames="), "{snap}");
+        assert!(snap.contains("shard_spin_us=0"), "{snap}");
+        server.shutdown();
+    }
+
     /// A backend whose selection asks for shards but whose model was frozen
     /// without them falls back to the plan engine instead of panicking.
     #[test]
@@ -617,6 +757,30 @@ mod tests {
         let backend = Backend::Lut { model: m, workers: 2, select };
         assert_eq!(backend.route(1), Some(LutEngine::Plan));
         assert!(backend.shard_stats().is_none());
+    }
+
+    /// A sticky engine fault must degrade routing to the in-process plan
+    /// engine — later batches keep being served bit-exactly instead of
+    /// erroring until the server is restarted.
+    #[test]
+    fn faulted_sharded_engine_degrades_to_plan() {
+        let cfg = config::uniform("srv-flt", &[8, 6, 3], 2, 2, 3, 3, 3, 1, 2, 3);
+        let net = Network::random(&cfg, &mut Rng::new(4));
+        let m = Arc::new(FrozenModel::from_network_sharded(net, 2, 2));
+        let select = EngineSelect { crossover: usize::MAX, shards: 2 };
+        let backend = Backend::Lut { model: m.clone(), workers: 2, select };
+        assert_eq!(backend.route(1), Some(LutEngine::Sharded), "healthy: sharded");
+        m.sharded.as_ref().unwrap().inject_fault("test wire death");
+        assert_eq!(backend.route(1), Some(LutEngine::Plan), "faulted: degrade");
+        // infer() keeps serving through the plan engine, bit-exactly.
+        let mut rng = Rng::new(9);
+        let xs: Vec<Vec<f32>> =
+            (0..3).map(|_| (0..8).map(|_| rng.f32()).collect()).collect();
+        let out = backend.infer(&xs).expect("degraded backend still serves");
+        let sim = m.sim();
+        for (x, got) in xs.iter().zip(&out) {
+            assert_eq!(got, &sim.forward(x));
+        }
     }
 
     /// The default policy keeps single-request batches on the plan engine.
@@ -647,7 +811,12 @@ mod tests {
         let server = Server::start(
             BackendSpec::lut(m, 2),
             3,
-            ServerConfig { max_batch: 64, window: Duration::from_millis(5), queue_cap: 1024 },
+            ServerConfig {
+                max_batch: 64,
+                window: Duration::from_millis(5),
+                queue_cap: 1024,
+                ..Default::default()
+            },
         );
         std::thread::scope(|scope| {
             for _ in 0..8 {

@@ -27,9 +27,12 @@
 //!   (paper Fig. 5) validating latency/II claims, not throughput.
 //!
 //! [`EngineSelect`] is the per-batch routing policy the coordinator's
-//! `Backend::Lut` applies.  The data layouts, crossover policy and a
-//! request's life through the stack are documented in `ARCHITECTURE.md` at
-//! the repository root.
+//! `Backend::Lut` applies.  The shard handoff is transport-abstracted:
+//! [`wire`] frames the boundary bit-planes over TCP so individual shards
+//! of [`shard::ShardedModel`] can live on remote `polylut shard-worker`
+//! processes (`--shard-hosts` placement).  The data layouts, crossover
+//! policy, wire protocol and a request's life through the stack are
+//! documented in `ARCHITECTURE.md` at the repository root.
 
 #![warn(missing_docs)]
 
@@ -38,12 +41,16 @@ pub mod cycle;
 pub mod lutsim;
 pub mod plan;
 pub mod shard;
+pub mod wire;
 
 pub use bitslice::{lane_mask, BitsliceNet, BitsliceScratch, BitsliceStats, WORD};
 pub use cycle::PipelineSim;
 pub use lutsim::LutSim;
 pub use plan::{EvalPlan, Scratch};
-pub use shard::{ShardStats, ShardedBitslice, ShardedModel, ShardedPlan};
+pub use shard::{
+    resolve_spin_us, ShardStats, ShardedBitslice, ShardedModel, ShardedPlan, DEFAULT_SPIN_US,
+};
+pub use wire::{parse_shard_hosts, ShardPlacement, ShardWorkerHost, WireStats};
 
 /// Which batched LUT engine executes a batch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -60,17 +60,43 @@
 //! widths are not monotonic, so generations can skip a parity level
 //! entirely; the adversarial-interleaving simulation of the protocol that
 //! pinned this rule down lives in-tree as the
-//! `compute_deps_admits_only_safe_interleavings` test.  Workers are
-//! persistent threads that spin briefly
-//! for the next sample (epoch) before sleeping on a condvar; within an
-//! epoch all synchronization is spin-on-atomic.  Per-shard occupancy (cells
+//! `compute_deps_admits_only_safe_interleavings` test (and now drives the
+//! protocol through the `Handoff` trait, not a concrete level store).
+//! Workers are persistent threads that spin briefly for the next sample
+//! (epoch) — budget configurable via `POLYLUT_SHARD_SPIN_US` /
+//! [`resolve_spin_us`] — before sleeping on a condvar; within an epoch all
+//! synchronization is spin-on-atomic.  Per-shard occupancy (cells
 //! executed) and handoff-wait episodes are counted and surfaced through
 //! [`ShardStats`] into `coordinator::metrics`.
+//!
+//! # Handoff abstraction and remote shards
+//!
+//! The wait-and-publish protocol itself is behind the crate-level
+//! `Handoff` trait: `LocalHandoff` is the shared-memory implementation
+//! (per-shard atomic levels, spin waits), `sim::wire`'s `RemoteHandoff`
+//! satisfies the same waits by frame arrival on a TCP link.  A
+//! [`crate::sim::wire::ShardPlacement`] maps each shard to a local worker
+//! thread or to a remote `polylut shard-worker` process; remote shards are driven by
+//! in-runner *proxy* threads that replay the exact same dependency
+//! schedule, shipping boundary words out and applying result frames into
+//! the shared buffers (so every hazard above still holds on this host).
+//!
+//! # Failure semantics
+//!
+//! A panicking kernel or a dead link no longer poisons a mutex and hangs
+//! the engine: worker panics are caught, recorded in the runner's sticky
+//! fault cell, and every in-flight and subsequent forward call returns a
+//! clean `Err` (the engine stays disabled; the coordinator falls back or
+//! surfaces the error).  All control-mutex locks recover from poisoning.
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
 
 use crate::lut::mapper::{map_network_of, MappedNetwork};
 use crate::lut::netlist::{Netlist, Node};
@@ -79,6 +105,7 @@ use crate::nn::network::Network;
 use crate::nn::quant::unsigned_code;
 use crate::sim::bitslice::{exec_ops, flatten_cone, pack_word, unpack_word, OpStream, WORD};
 use crate::sim::plan::EvalPlan;
+use crate::sim::wire::{EngineKind, Fnv, LinkStats, RemoteLink, WireStats};
 
 /// Cumulative per-shard execution counters (monotonic over the engine's
 /// lifetime): `cells` counts (layer, shard) work units executed —
@@ -90,6 +117,170 @@ pub struct ShardStats {
     pub cells: u64,
     /// Handoff-wait episodes (unready dependencies encountered).
     pub waits: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Handoff abstraction (wait-and-publish protocol)
+// ---------------------------------------------------------------------------
+
+/// Failure of the handoff protocol (panicked worker, dead link, poisoned
+/// control state).  Sticky: once a runner faults, every call errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct HandoffError(pub String);
+
+impl std::fmt::Display for HandoffError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for HandoffError {}
+
+/// The producer/blocker/writer **wait-and-publish** protocol between shard
+/// executors, abstracted from its transport.  `done[shard]` is a per-epoch
+/// *level*: the number of layers that shard has completed (equivalently,
+/// the highest boundary whose slice it has published).  A cell (l, s) may
+/// run once `wait(d, thr)` has returned for every `(d, thr)` in its
+/// dependency list, and announces its own boundary with
+/// `publish(s, l + 1)`.
+///
+/// Implementations: `LocalHandoff` (shared `AtomicU32` levels, spin
+/// waits — the original in-process path) and `sim::wire::RemoteHandoff`
+/// (levels advance on frame arrival, publishes ship frames).  The
+/// adversarial-interleaving protocol simulation runs against this trait.
+pub(crate) trait Handoff: Send + Sync {
+    /// Block until `done[shard] >= threshold`.  Returns whether it had to
+    /// wait (the `ShardStats::waits` accounting), or the sticky fault.
+    fn wait(&self, shard: usize, threshold: u32) -> Result<bool, HandoffError>;
+    /// Announce `done[shard] = level` (shard finished layer `level - 1`).
+    fn publish(&self, shard: usize, level: u32) -> Result<(), HandoffError>;
+    /// Current published level of `shard` (non-blocking).
+    fn level(&self, shard: usize) -> u32;
+    /// Zero all levels for a new epoch (faults are *not* cleared).
+    fn reset(&self);
+    /// Record a fault (first message wins); all waiters unblock with `Err`.
+    fn fail(&self, msg: &str);
+    /// The sticky fault, if any.
+    fn fault(&self) -> Option<String>;
+}
+
+/// Shared-memory handoff: per-shard atomic levels, spin-then-nap waits
+/// with fault polling.  This is the PR 3 protocol unchanged, minus the
+/// ability to deadlock on a dead peer.
+pub(crate) struct LocalHandoff {
+    done: Vec<AtomicU32>,
+    faulted: AtomicBool,
+    fault_msg: Mutex<String>,
+}
+
+impl LocalHandoff {
+    pub(crate) fn new(shards: usize) -> LocalHandoff {
+        LocalHandoff {
+            done: (0..shards).map(|_| AtomicU32::new(0)).collect(),
+            faulted: AtomicBool::new(false),
+            fault_msg: Mutex::new(String::new()),
+        }
+    }
+}
+
+impl Handoff for LocalHandoff {
+    fn wait(&self, shard: usize, threshold: u32) -> Result<bool, HandoffError> {
+        if self.done[shard].load(Ordering::Acquire) >= threshold {
+            return Ok(false);
+        }
+        let mut spins = 0u32;
+        loop {
+            if self.done[shard].load(Ordering::Acquire) >= threshold {
+                return Ok(true);
+            }
+            if self.faulted.load(Ordering::Relaxed) {
+                return Err(HandoffError(self.fault().unwrap_or_default()));
+            }
+            spins = spins.wrapping_add(1);
+            if spins & 0x3FFF == 0 {
+                // Long waits (a remote shard's RTT, a stalling peer) must
+                // not burn a core: nap, keep polling the fault flag.
+                std::thread::sleep(Duration::from_micros(50));
+            } else if spins & 0x3FF == 0 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    }
+
+    fn publish(&self, shard: usize, level: u32) -> Result<(), HandoffError> {
+        self.done[shard].store(level, Ordering::Release);
+        Ok(())
+    }
+
+    fn level(&self, shard: usize) -> u32 {
+        self.done[shard].load(Ordering::Acquire)
+    }
+
+    fn reset(&self) {
+        for d in &self.done {
+            d.store(0, Ordering::Relaxed);
+        }
+    }
+
+    fn fail(&self, msg: &str) {
+        let mut m = lock_ignore_poison(&self.fault_msg);
+        if !self.faulted.load(Ordering::Relaxed) {
+            *m = msg.to_string();
+        }
+        self.faulted.store(true, Ordering::Release);
+    }
+
+    fn fault(&self) -> Option<String> {
+        if self.faulted.load(Ordering::Acquire) {
+            Some(lock_ignore_poison(&self.fault_msg).clone())
+        } else {
+            None
+        }
+    }
+}
+
+/// Lock a mutex, recovering from poisoning: the guarded state here (epoch
+/// counters, fault messages) stays consistent under unwinding, and a
+/// poisoned lock must surface as a clean engine error via the fault cell —
+/// never as a panic cascade or a deadlocked server (the PR 4 bugfix for
+/// the bare `.lock().unwrap()` calls on `ctrl`).
+pub(crate) fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Spin budget (configurable; remote links want zero)
+// ---------------------------------------------------------------------------
+
+/// Default epoch spin budget in microseconds: long enough that
+/// back-to-back samples of one batch never pay a condvar wakeup, short
+/// enough that an idle server burns no CPU.
+pub const DEFAULT_SPIN_US: u64 = 20;
+
+/// Resolve the worker spin-before-condvar-sleep budget (µs): an explicit
+/// config wins, else the `POLYLUT_SHARD_SPIN_US` environment variable,
+/// else [`DEFAULT_SPIN_US`] — except that runners driving **remote**
+/// shards default to zero spin (the wire RTT dwarfs any wakeup latency, so
+/// spinning only burns the coordinator's cores).  The resolved value is
+/// recorded in `coordinator::metrics::snapshot()`.
+pub fn resolve_spin_us(config: Option<u64>, has_remote: bool) -> u64 {
+    config
+        .or_else(|| {
+            std::env::var("POLYLUT_SHARD_SPIN_US").ok().and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(if has_remote { 0 } else { DEFAULT_SPIN_US })
 }
 
 // ---------------------------------------------------------------------------
@@ -302,7 +493,9 @@ fn balanced_ranges(costs: &[u64], shards: usize) -> Vec<Range<usize>> {
 
 /// Inputs for dependency computation, in boundary *position* space — code
 /// slots for the plan kernel, bit-plane indices for the bitslice kernel.
-struct DepSpec {
+/// Retained inside each kernel after compilation: the wire layer derives a
+/// remote shard's needs/result schedule from the same read/write sets.
+pub(crate) struct DepSpec {
     /// `bounds[b]` = position-space width of boundary b (0..=L).
     bounds: Vec<usize>,
     /// `write[l][s]` = positions of boundary l+1 that cell (l, s) stores.
@@ -402,17 +595,13 @@ fn compute_deps(spec: &DepSpec, shards: usize) -> Vec<Vec<Vec<(u32, u32)>>> {
 // Generic shard runner (persistent workers + epoch protocol)
 // ---------------------------------------------------------------------------
 
-/// How long a worker spins for the next epoch before sleeping on the
-/// condvar — long enough that back-to-back samples of one batch never pay a
-/// wakeup, short enough that an idle server burns no CPU.
-const EPOCH_SPIN: usize = 1 << 12;
-
 /// A sharded execution kernel: per-(layer, shard) work cells over shared
 /// atomic handoff buffers, plus the precomputed dependency sets the runner
-/// schedules by.
-trait ShardKernel: Send + Sync + 'static {
+/// schedules by and the position-space read/write sets the wire layer
+/// derives a remote shard's frame schedule from.
+pub(crate) trait ShardKernel: Send + Sync + 'static {
     /// Per-worker scratch (created inside the worker thread).
-    type Scratch;
+    type Scratch: Send;
     fn n_layers(&self) -> usize;
     fn n_shards(&self) -> usize;
     /// Input staging buffer length (u64 slots).
@@ -424,6 +613,10 @@ trait ShardKernel: Send + Sync + 'static {
     /// `(shard, threshold)` pairs: cell (l, s) may run once
     /// `done[shard] >= threshold` for every pair (see `compute_deps`).
     fn deps(&self, l: usize, s: usize) -> &[(u32, u32)];
+    /// Sorted, deduplicated boundary-l positions cell (l, s) loads.
+    fn reads(&self, l: usize, s: usize) -> &[usize];
+    /// Boundary-(l+1) positions cell (l, s) stores.
+    fn write_range(&self, l: usize, s: usize) -> Range<usize>;
     fn make_scratch(&self) -> Self::Scratch;
     /// Execute cell (l, s): read boundary l from `src`, publish this
     /// shard's slice of boundary l+1 into `dst`.
@@ -437,6 +630,92 @@ trait ShardKernel: Send + Sync + 'static {
     );
 }
 
+/// The boundary buffers one epoch flows through: network-edge staging
+/// (boundary 0 and L) plus the two parity-indexed interior buffers
+/// (boundary b lives in `bufs[b % 2]`).  Shared by the in-process runner
+/// and the wire worker's private copies.
+pub(crate) struct BufSet {
+    pub(crate) input: Vec<AtomicU64>,
+    pub(crate) output: Vec<AtomicU64>,
+    pub(crate) bufs: [Vec<AtomicU64>; 2],
+}
+
+impl BufSet {
+    pub(crate) fn for_kernel<K: ShardKernel>(kernel: &K) -> BufSet {
+        let mk = |n: usize| (0..n).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
+        BufSet {
+            input: mk(kernel.in_len()),
+            output: mk(kernel.out_len()),
+            bufs: [mk(kernel.buf_len()), mk(kernel.buf_len())],
+        }
+    }
+
+    /// The buffer cell (l, ·) reads boundary l from.
+    pub(crate) fn src(&self, l: usize) -> &[AtomicU64] {
+        if l == 0 {
+            &self.input
+        } else {
+            &self.bufs[l % 2]
+        }
+    }
+
+    /// The buffer cell (l, ·) publishes boundary l+1 into.
+    pub(crate) fn dst(&self, l: usize, n_layers: usize) -> &[AtomicU64] {
+        if l + 1 == n_layers {
+            &self.output
+        } else {
+            &self.bufs[(l + 1) % 2]
+        }
+    }
+
+    /// The buffer holding boundary `b` (0 = input staging, `n_layers` =
+    /// output staging, interior = parity buffer).
+    pub(crate) fn boundary(&self, b: usize, n_layers: usize) -> &[AtomicU64] {
+        if b == 0 {
+            &self.input
+        } else if b == n_layers {
+            &self.output
+        } else {
+            &self.bufs[b % 2]
+        }
+    }
+}
+
+/// One shard's epoch: the generic cell loop every executor runs — local
+/// worker threads, remote proxies' peers (via `sim::wire::serve_shard`) —
+/// parameterized only by the [`Handoff`] implementation and the dependency
+/// lists (full hazard sets in-process; producer-class sets on the wire).
+/// Counters land before the final publish so `stats()` reads taken right
+/// after an epoch completes always include it.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_cells<K: ShardKernel, H: Handoff>(
+    kernel: &K,
+    handoff: &H,
+    bufs: &BufSet,
+    s: usize,
+    deps: &[&[(u32, u32)]],
+    cells: &AtomicU64,
+    waits: &AtomicU64,
+    scratch: &mut K::Scratch,
+) -> Result<(), HandoffError> {
+    let n_layers = kernel.n_layers();
+    let mut waited = 0u64;
+    for l in 0..n_layers {
+        for &(d, thr) in deps[l] {
+            if handoff.wait(d as usize, thr)? {
+                waited += 1;
+            }
+        }
+        kernel.run_cell(l, s, bufs.src(l), bufs.dst(l, n_layers), scratch);
+        if l + 1 == n_layers {
+            cells.fetch_add(n_layers as u64, Ordering::Relaxed);
+            waits.fetch_add(waited, Ordering::Relaxed);
+        }
+        handoff.publish(s, l as u32 + 1)?;
+    }
+    Ok(())
+}
+
 struct Ctrl {
     epoch: u64,
     shutdown: bool,
@@ -444,22 +723,19 @@ struct Ctrl {
 
 struct RunnerInner<K: ShardKernel> {
     kernel: K,
-    /// Network-edge staging: boundary 0 (input) and boundary L (output)
-    /// live here, never in the shared parity buffers — so only interior
-    /// boundaries contend for the double buffer.
-    input: Vec<AtomicU64>,
-    output: Vec<AtomicU64>,
-    /// Interior boundary b is published in `bufs[b % 2]`.
-    bufs: [Vec<AtomicU64>; 2],
+    bufs: BufSet,
     /// Fast-path epoch counter (spin target); authoritative copy in `ctrl`.
     epoch_fast: AtomicU64,
     ctrl: Mutex<Ctrl>,
     start_cv: Condvar,
-    /// Per-shard layers completed in the current epoch.
-    done: Vec<AtomicU32>,
+    /// Per-shard completion levels + the sticky fault cell.
+    handoff: LocalHandoff,
     /// Per-shard cumulative counters (see [`ShardStats`]).
     cells: Vec<AtomicU64>,
     waits: Vec<AtomicU64>,
+    /// Epoch spin budget before the condvar sleep (µs; see
+    /// [`resolve_spin_us`]).
+    spin_us: u64,
 }
 
 struct ShardRunner<K: ShardKernel> {
@@ -467,26 +743,30 @@ struct ShardRunner<K: ShardKernel> {
     /// Serializes epochs: one in-flight sample/word at a time.
     call: Mutex<()>,
     workers: Vec<JoinHandle<()>>,
-}
-
-fn spin_once(spins: &mut u32) {
-    *spins = spins.wrapping_add(1);
-    if *spins & 0x3FF == 0 {
-        std::thread::yield_now();
-    } else {
-        std::hint::spin_loop();
-    }
+    /// Stream handles of the remote links, kept to force blocked proxy
+    /// recvs awake at shutdown.
+    wake_streams: Vec<std::net::TcpStream>,
+    /// Per-link wire counters (one entry per remote shard).
+    link_stats: Vec<Arc<LinkStats>>,
 }
 
 fn wait_for_epoch<K: ShardKernel>(inner: &RunnerInner<K>, seen: u64) -> Option<u64> {
-    for _ in 0..EPOCH_SPIN {
-        let e = inner.epoch_fast.load(Ordering::Acquire);
-        if e > seen {
-            return Some(e);
+    if inner.spin_us > 0 {
+        let t0 = Instant::now();
+        loop {
+            for _ in 0..64 {
+                let e = inner.epoch_fast.load(Ordering::Acquire);
+                if e > seen {
+                    return Some(e);
+                }
+                std::hint::spin_loop();
+            }
+            if t0.elapsed().as_micros() as u64 >= inner.spin_us {
+                break;
+            }
         }
-        std::hint::spin_loop();
     }
-    let mut ctrl = inner.ctrl.lock().unwrap();
+    let mut ctrl = lock_ignore_poison(&inner.ctrl);
     loop {
         if ctrl.shutdown {
             return None;
@@ -494,102 +774,215 @@ fn wait_for_epoch<K: ShardKernel>(inner: &RunnerInner<K>, seen: u64) -> Option<u
         if ctrl.epoch > seen {
             return Some(ctrl.epoch);
         }
-        ctrl = inner.start_cv.wait(ctrl).unwrap();
+        ctrl = match inner.start_cv.wait(ctrl) {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
     }
 }
 
+/// Local shard executor: run this shard's cells each epoch, catching
+/// kernel panics into the sticky fault cell so a crashing shard turns into
+/// a clean engine error instead of a poisoned mutex + deadlocked server.
 fn worker_loop<K: ShardKernel>(inner: Arc<RunnerInner<K>>, s: usize) {
     let mut scratch = inner.kernel.make_scratch();
-    let n_layers = inner.kernel.n_layers();
+    let deps: Vec<&[(u32, u32)]> =
+        (0..inner.kernel.n_layers()).map(|l| inner.kernel.deps(l, s)).collect();
     let mut seen = 0u64;
     loop {
         seen = match wait_for_epoch(&inner, seen) {
             Some(e) => e,
             None => return,
         };
-        let mut waited = 0u64;
-        for l in 0..n_layers {
-            for &(d, thr) in inner.kernel.deps(l, s) {
-                let d = d as usize;
-                if inner.done[d].load(Ordering::Acquire) >= thr {
-                    continue;
-                }
-                waited += 1;
-                let mut spins = 0u32;
-                while inner.done[d].load(Ordering::Acquire) < thr {
-                    spin_once(&mut spins);
-                }
-            }
-            let src = if l == 0 { &inner.input } else { &inner.bufs[l % 2] };
-            let dst =
-                if l + 1 == n_layers { &inner.output } else { &inner.bufs[(l + 1) % 2] };
-            inner.kernel.run_cell(l, s, src, dst, &mut scratch);
-            if l + 1 == n_layers {
-                // Counters must land before the final `done` store: the
-                // caller's completion wait is on `done`, and stats() /
-                // the coordinator's metrics mirror read them right after.
-                inner.cells[s].fetch_add(n_layers as u64, Ordering::Relaxed);
-                inner.waits[s].fetch_add(waited, Ordering::Relaxed);
-            }
-            inner.done[s].store(l as u32 + 1, Ordering::Release);
+        if inner.handoff.fault().is_some() {
+            continue;
+        }
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            run_cells(
+                &inner.kernel,
+                &inner.handoff,
+                &inner.bufs,
+                s,
+                &deps,
+                &inner.cells[s],
+                &inner.waits[s],
+                &mut scratch,
+            )
+        }));
+        match run {
+            // A dependency-wait error means some peer already recorded the
+            // fault; nothing to add.
+            Ok(Ok(())) | Ok(Err(_)) => {}
+            Err(p) => inner
+                .handoff
+                .fail(&format!("shard {s} worker panicked: {}", panic_message(&*p))),
         }
     }
 }
 
+/// Remote shard executor (coordinator side): replay the shard's exact
+/// dependency schedule against the shared buffers, but execute each cell
+/// by shipping its cross-shard reads to the worker and applying the result
+/// frame — so every producer/blocker/writer hazard holds unchanged on this
+/// host, and `done[s]` advances exactly when shard `s`'s boundary slice
+/// has landed in the shared buffers (the frame-arrival mapping of the
+/// dependency waits).
+fn proxy_loop<K: ShardKernel>(inner: Arc<RunnerInner<K>>, s: usize, mut link: RemoteLink) {
+    let plan = crate::sim::wire::wire_plan(&inner.kernel, s);
+    let deps: Vec<&[(u32, u32)]> =
+        (0..inner.kernel.n_layers()).map(|l| inner.kernel.deps(l, s)).collect();
+    let mut seen = 0u64;
+    loop {
+        seen = match wait_for_epoch(&inner, seen) {
+            Some(e) => e,
+            None => break,
+        };
+        if inner.handoff.fault().is_some() {
+            continue;
+        }
+        if let Err(e) = proxy_epoch(&inner, s, &plan, &deps, &mut link, seen) {
+            inner
+                .handoff
+                .fail(&format!("remote shard {s} ({}): {}", link.peer(), e.0));
+        }
+    }
+    link.close();
+}
+
+fn proxy_epoch<K: ShardKernel>(
+    inner: &RunnerInner<K>,
+    s: usize,
+    plan: &crate::sim::wire::WirePlan,
+    deps: &[&[(u32, u32)]],
+    link: &mut RemoteLink,
+    epoch: u64,
+) -> Result<(), HandoffError> {
+    let n_layers = inner.kernel.n_layers();
+    link.start_epoch(epoch)?;
+    let mut waited = 0u64;
+    for l in 0..n_layers {
+        for &(d, thr) in deps[l] {
+            if inner.handoff.wait(d as usize, thr)? {
+                waited += 1;
+            }
+        }
+        let src = inner.bufs.src(l);
+        for (producer, range) in &plan.needs[l] {
+            let words: Vec<u64> =
+                src[range.clone()].iter().map(|w| w.load(Ordering::Relaxed)).collect();
+            link.send_need(epoch, l as u32, *producer, range.start as u32, words)?;
+        }
+        let rr = plan.result[l].clone();
+        let words = link.recv_result(epoch, l as u32 + 1, s as u32, &rr)?;
+        let dst = inner.bufs.dst(l, n_layers);
+        for (slot, w) in dst[rr].iter().zip(&words) {
+            slot.store(*w, Ordering::Relaxed);
+        }
+        if l + 1 == n_layers {
+            inner.cells[s].fetch_add(n_layers as u64, Ordering::Relaxed);
+            inner.waits[s].fetch_add(waited, Ordering::Relaxed);
+        }
+        inner.handoff.publish(s, l as u32 + 1)?;
+    }
+    Ok(())
+}
+
 impl<K: ShardKernel> ShardRunner<K> {
-    fn new(kernel: K) -> ShardRunner<K> {
+    /// All-local runner (the PR 3 behavior; cannot fail).
+    fn new_local(kernel: K, spin_us: u64) -> ShardRunner<K> {
         let shards = kernel.n_shards();
-        let (in_len, out_len, buf_len) = (kernel.in_len(), kernel.out_len(), kernel.buf_len());
-        let mk = |n: usize| (0..n).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
+        Self::new(kernel, spin_us, EngineKind::Plan, 0, &vec![None; shards])
+            .expect("all-local shard runner construction cannot fail")
+    }
+
+    /// Runner with a placement map: local worker threads for `None`
+    /// shards, connect-and-proxy for `Some(addr)` shards.  Fails cleanly
+    /// when a link cannot be established or the handshake (shard count /
+    /// model fingerprint) is rejected.
+    fn new(
+        kernel: K,
+        spin_us: u64,
+        engine: EngineKind,
+        fingerprint: u64,
+        placement: &[Option<String>],
+    ) -> Result<ShardRunner<K>> {
+        let shards = kernel.n_shards();
         let inner = Arc::new(RunnerInner {
+            bufs: BufSet::for_kernel(&kernel),
             kernel,
-            input: mk(in_len),
-            output: mk(out_len),
-            bufs: [mk(buf_len), mk(buf_len)],
             epoch_fast: AtomicU64::new(0),
             ctrl: Mutex::new(Ctrl { epoch: 0, shutdown: false }),
             start_cv: Condvar::new(),
-            done: (0..shards).map(|_| AtomicU32::new(0)).collect(),
+            handoff: LocalHandoff::new(shards),
             cells: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             waits: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            spin_us,
         });
-        let workers = (0..shards)
-            .map(|s| {
-                let inner = inner.clone();
-                std::thread::Builder::new()
-                    .name(format!("polylut-shard-{s}"))
-                    .spawn(move || worker_loop(inner, s))
-                    .expect("spawn shard worker")
-            })
-            .collect();
-        ShardRunner { inner, call: Mutex::new(()), workers }
+        let mut runner = ShardRunner {
+            inner: inner.clone(),
+            call: Mutex::new(()),
+            workers: Vec::with_capacity(shards),
+            wake_streams: Vec::new(),
+            link_stats: Vec::new(),
+        };
+        for s in 0..shards {
+            let inner = inner.clone();
+            match placement.get(s).and_then(|p| p.as_deref()) {
+                None => runner.workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("polylut-shard-{s}"))
+                        .spawn(move || worker_loop(inner, s))
+                        .expect("spawn shard worker"),
+                ),
+                Some(addr) => {
+                    let (link, wake) =
+                        RemoteLink::connect(addr, engine, shards, s, fingerprint)
+                            .map_err(|e| {
+                                anyhow::anyhow!("shard {s} -> {addr}: {e}")
+                            })?;
+                    runner.link_stats.push(link.stats());
+                    runner.wake_streams.push(wake);
+                    runner.workers.push(
+                        std::thread::Builder::new()
+                            .name(format!("polylut-proxy-{s}"))
+                            .spawn(move || proxy_loop(inner, s, link))
+                            .expect("spawn shard proxy"),
+                    );
+                }
+            }
+        }
+        Ok(runner)
     }
 
     /// Run one epoch (one sample / one word): stage the input, launch the
     /// shards, wait for completion, collect the output.  Epochs are fully
     /// serialized, which is what keeps the two-buffer parity scheme safe
-    /// across samples.
-    fn run_epoch(&self, stage: impl FnOnce(&[AtomicU64]), collect: impl FnOnce(&[AtomicU64])) {
-        let _serial = self.call.lock().unwrap();
+    /// across samples.  Errors are sticky: once a shard has panicked or a
+    /// link has died, this and every subsequent call fail fast.
+    fn run_epoch(
+        &self,
+        stage: impl FnOnce(&[AtomicU64]),
+        collect: impl FnOnce(&[AtomicU64]),
+    ) -> Result<(), HandoffError> {
         let inner = &*self.inner;
-        stage(&inner.input);
-        for d in &inner.done {
-            d.store(0, Ordering::Relaxed);
+        if let Some(msg) = inner.handoff.fault() {
+            return Err(HandoffError(msg));
         }
+        let _serial = lock_ignore_poison(&self.call);
+        stage(&inner.bufs.input);
+        inner.handoff.reset();
         {
-            let mut ctrl = inner.ctrl.lock().unwrap();
+            let mut ctrl = lock_ignore_poison(&inner.ctrl);
             ctrl.epoch += 1;
             inner.epoch_fast.store(ctrl.epoch, Ordering::Release);
             inner.start_cv.notify_all();
         }
         let n_layers = inner.kernel.n_layers() as u32;
-        for d in &inner.done {
-            let mut spins = 0u32;
-            while d.load(Ordering::Acquire) < n_layers {
-                spin_once(&mut spins);
-            }
+        for s in 0..inner.kernel.n_shards() {
+            inner.handoff.wait(s, n_layers)?;
         }
-        collect(&inner.output);
+        collect(&inner.bufs.output);
+        Ok(())
     }
 
     fn stats(&self) -> Vec<ShardStats> {
@@ -603,14 +996,29 @@ impl<K: ShardKernel> ShardRunner<K> {
             })
             .collect()
     }
+
+    /// Summed wire counters of this runner's remote links.
+    fn wire_stats(&self) -> WireStats {
+        self.link_stats
+            .iter()
+            .fold(WireStats::default(), |acc, l| acc.merged(l.snapshot()))
+    }
+
+    fn n_remote(&self) -> usize {
+        self.link_stats.len()
+    }
 }
 
 impl<K: ShardKernel> Drop for ShardRunner<K> {
     fn drop(&mut self) {
         {
-            let mut ctrl = self.inner.ctrl.lock().unwrap();
+            let mut ctrl = lock_ignore_poison(&self.inner.ctrl);
             ctrl.shutdown = true;
             self.inner.start_cv.notify_all();
+        }
+        // Unblock any proxy parked in a socket read so join() can't hang.
+        for s in &self.wake_streams {
+            let _ = s.shutdown(std::net::Shutdown::Both);
         }
         for h in self.workers.drain(..) {
             let _ = h.join();
@@ -622,9 +1030,11 @@ impl<K: ShardKernel> Drop for ShardRunner<K> {
 // Plan kernel: neuron-range sharding of the evaluation plan
 // ---------------------------------------------------------------------------
 
-struct PlanKernel {
+/// Neuron-range sharding of the evaluation plan (see [`ShardedPlan`]).
+pub(crate) struct PlanKernel {
     plan: EvalPlan,
     parts: Vec<Vec<Range<usize>>>,
+    spec: DepSpec,
     deps: Vec<Vec<Vec<(u32, u32)>>>,
     shards: usize,
 }
@@ -679,6 +1089,14 @@ impl ShardKernel for PlanKernel {
 
     fn deps(&self, l: usize, s: usize) -> &[(u32, u32)] {
         &self.deps[l][s]
+    }
+
+    fn reads(&self, l: usize, s: usize) -> &[usize] {
+        &self.spec.reads[l][s]
+    }
+
+    fn write_range(&self, l: usize, s: usize) -> Range<usize> {
+        self.spec.write[l][s].clone()
     }
 
     fn make_scratch(&self) -> Vec<i32> {
@@ -743,10 +1161,89 @@ impl ShardKernel for PlanKernel {
     }
 }
 
+/// Cache-aware reorder + permute, shared by every shard compilation path
+/// (coordinator and remote worker must agree bit-for-bit).
+pub(crate) fn permuted_for_shards(
+    net: &Network,
+    tables: &NetworkTables,
+) -> (Network, NetworkTables) {
+    let perms = cache_aware_perms(net);
+    permute_network(net, tables, &perms)
+}
+
+/// Fingerprint of a permuted model + shard count: the wire handshake
+/// refuses links whose two ends would partition or evaluate differently.
+/// Hashes the numeric geometry, the full fan-in connectivity and every
+/// table word (names/seeds excluded — they don't affect evaluation).
+pub(crate) fn shard_fingerprint(
+    pnet: &Network,
+    ptables: &NetworkTables,
+    shards: usize,
+) -> u64 {
+    let cfg = &pnet.cfg;
+    let mut h = Fnv::new();
+    h.write_u64(shards as u64);
+    h.write_u64(cfg.a_factor as u64);
+    h.write_u64(cfg.degree as u64);
+    for &w in &cfg.widths {
+        h.write_u64(w as u64);
+    }
+    for &b in &cfg.beta {
+        h.write_u64(b as u64);
+    }
+    for &f in &cfg.fan {
+        h.write_u64(f as u64);
+    }
+    for layer in &pnet.layers {
+        for sub in &layer.indices {
+            for srcs in sub {
+                for &s in srcs {
+                    h.write_u64(s as u64);
+                }
+            }
+        }
+    }
+    for lt in &ptables.layers {
+        for nt in &lt.neurons {
+            for t in nt.poly.iter().chain(nt.adder.as_ref()) {
+                h.write_u64(((t.n_inputs as u64) << 32) | t.out_bits as u64);
+                h.write_u64(t.signed_out as u64);
+                for &w in &t.words {
+                    h.write_u64(w as u64);
+                }
+            }
+        }
+    }
+    h.finish()
+}
+
+/// Compile the neuron-range plan kernel from an already-permuted model.
+pub(crate) fn plan_kernel_of(
+    pnet: &Network,
+    ptables: &NetworkTables,
+    shards: usize,
+) -> PlanKernel {
+    let shards = shards.max(1);
+    let plan = EvalPlan::compile(pnet, ptables);
+    let parts: Vec<Vec<Range<usize>>> = plan
+        .layers
+        .iter()
+        .map(|lp| {
+            let costs = vec![1u64; lp.n_out];
+            balanced_ranges(&costs, shards)
+        })
+        .collect();
+    let spec = plan_dep_spec(&plan, &parts);
+    let deps = compute_deps(&spec, shards);
+    PlanKernel { plan, parts, spec, deps, shards }
+}
+
 /// The evaluation plan partitioned into S neuron-range shards with
 /// persistent workers — lowest single-sample latency on multi-core hosts
 /// once layers are wide enough to amortize the handoff.  Bit-exact with
-/// [`EvalPlan`] and `Network::forward_codes`.  See `ARCHITECTURE.md` §4.
+/// [`EvalPlan`] and `Network::forward_codes`.  Shards may be placed on
+/// remote `polylut shard-worker` hosts (see [`ShardedModel::compile_placed`]
+/// and `ARCHITECTURE.md` §4/§7).
 pub struct ShardedPlan {
     runner: ShardRunner<PlanKernel>,
     n_features: usize,
@@ -758,44 +1255,35 @@ pub struct ShardedPlan {
 
 impl ShardedPlan {
     /// Reorder (cache-aware), permute, compile and partition `net` into an
-    /// S-shard plan engine (spawns S worker threads).
+    /// all-local S-shard plan engine (spawns S worker threads).
     pub fn compile(net: &Network, tables: &NetworkTables, shards: usize) -> ShardedPlan {
-        let perms = cache_aware_perms(net);
-        let (pnet, ptables) = permute_network(net, tables, &perms);
-        Self::from_permuted(&pnet, &ptables, shards)
+        let (pnet, ptables) = permuted_for_shards(net, tables);
+        let kernel = plan_kernel_of(&pnet, &ptables, shards);
+        Self::from_kernel(kernel, resolve_spin_us(None, false), 0, &[])
+            .expect("all-local plan shards cannot fail")
     }
 
-    /// Build from an already-permuted network (shared with the bitslice
-    /// shard engine by [`ShardedModel::compile`]).
-    pub(crate) fn from_permuted(
-        pnet: &Network,
-        ptables: &NetworkTables,
-        shards: usize,
-    ) -> ShardedPlan {
-        let shards = shards.max(1);
-        let plan = EvalPlan::compile(pnet, ptables);
-        let parts: Vec<Vec<Range<usize>>> = plan
-            .layers
-            .iter()
-            .map(|lp| {
-                let costs = vec![1u64; lp.n_out];
-                balanced_ranges(&costs, shards)
-            })
-            .collect();
-        let deps = compute_deps(&plan_dep_spec(&plan, &parts), shards);
-        let n_features = plan.n_features();
-        let n_outputs = plan.n_outputs();
-        let in_bits = plan.in_bits;
-        let out_step = plan.out_step;
-        let kernel = PlanKernel { plan, parts, deps, shards };
-        ShardedPlan {
-            runner: ShardRunner::new(kernel),
+    /// Build from a compiled kernel and a placement map (shared with
+    /// [`ShardedModel::compile_placed`]).
+    pub(crate) fn from_kernel(
+        kernel: PlanKernel,
+        spin_us: u64,
+        fingerprint: u64,
+        placement: &[Option<String>],
+    ) -> Result<ShardedPlan> {
+        let n_features = kernel.plan.n_features();
+        let n_outputs = kernel.plan.n_outputs();
+        let in_bits = kernel.plan.in_bits;
+        let out_step = kernel.plan.out_step;
+        let shards = kernel.shards;
+        Ok(ShardedPlan {
+            runner: ShardRunner::new(kernel, spin_us, EngineKind::Plan, fingerprint, placement)?,
             n_features,
             n_outputs,
             in_bits,
             out_step,
             shards,
-        }
+        })
     }
 
     /// Shard count S.
@@ -808,8 +1296,22 @@ impl ShardedPlan {
         self.runner.stats()
     }
 
-    /// Sharded table-only forward pass over input codes.
-    pub fn forward_codes(&self, in_codes: &[i32]) -> Vec<i32> {
+    /// Summed wire counters of this engine's remote links.
+    pub(crate) fn wire_stats(&self) -> WireStats {
+        self.runner.wire_stats()
+    }
+
+    pub(crate) fn n_remote(&self) -> usize {
+        self.runner.n_remote()
+    }
+
+    pub(crate) fn faulted(&self) -> bool {
+        self.runner.inner.handoff.fault().is_some()
+    }
+
+    /// Sharded table-only forward pass over input codes.  Errors when the
+    /// engine has faulted (panicked shard, dead remote link) — sticky.
+    pub fn forward_codes(&self, in_codes: &[i32]) -> Result<Vec<i32>> {
         assert_eq!(in_codes.len(), self.n_features, "input width mismatch");
         let mut out = vec![0i32; self.n_outputs];
         self.runner.run_epoch(
@@ -823,23 +1325,23 @@ impl ShardedPlan {
                     *o = slot.load(Ordering::Relaxed) as u32 as i32;
                 }
             },
-        );
-        out
+        )?;
+        Ok(out)
     }
 
     /// Batched code-level forward pass (samples sequential, each sample
     /// internally parallel across shards).
-    pub fn forward_batch(&self, xs: &[Vec<i32>]) -> Vec<Vec<i32>> {
+    pub fn forward_batch(&self, xs: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
         xs.iter().map(|x| self.forward_codes(x)).collect()
     }
 
     /// Forward from raw [0,1] features; returns dequantized logits
     /// (bit-exact with `EvalPlan::forward`).
-    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+    pub fn forward(&self, x: &[f32]) -> Result<Vec<f32>> {
         assert_eq!(x.len(), self.n_features, "feature width mismatch");
         let codes: Vec<i32> =
             x.iter().map(|&v| unsigned_code(v, self.in_bits, 1.0)).collect();
-        self.forward_codes(&codes).iter().map(|&c| c as f32 * self.out_step).collect()
+        Ok(self.forward_codes(&codes)?.iter().map(|&c| c as f32 * self.out_step).collect())
     }
 }
 
@@ -854,14 +1356,25 @@ struct ShardStream {
     roots: Vec<(u32, u32)>,
 }
 
-struct BitsliceKernel {
+/// Plane-range sharding of the bitslice op streams (see
+/// [`ShardedBitslice`]).  Carries the network-edge metadata so engines can
+/// be built from the kernel alone (both here and in a remote worker).
+pub(crate) struct BitsliceKernel {
     layers: Vec<Vec<ShardStream>>,
+    spec: DepSpec,
     deps: Vec<Vec<Vec<(u32, u32)>>>,
     shards: usize,
     in_planes: usize,
     out_planes: usize,
     buf_planes: usize,
     max_nodes: usize,
+    n_features: usize,
+    n_outputs: usize,
+    in_bits: u32,
+    out_bits: u32,
+    signed_out: bool,
+    out_step: f32,
+    replication: f64,
 }
 
 /// Mark the backward cone of `roots` in `keep` (closed under node inputs).
@@ -971,14 +1484,47 @@ fn build_bitslice_kernel(
         layers.push(per_shard);
         parts.push(ranges);
     }
-    let deps = compute_deps(&bitslice_dep_spec(pnet, ptables, &layers, &parts), shards);
+    let spec = bitslice_dep_spec(pnet, ptables, &layers, &parts);
+    let deps = compute_deps(&spec, shards);
     let in_planes = cfg.widths[0] * cfg.beta[0] as usize;
     let out_planes = cfg.widths[l_count] * cfg.beta[l_count] as usize;
     let buf_planes =
         (1..l_count).map(|b| cfg.widths[b] * cfg.beta[b] as usize).max().unwrap_or(0);
     let max_nodes =
         layers.iter().flat_map(|ls| ls.iter()).map(|st| st.stream.n_nodes).max().unwrap_or(0);
-    BitsliceKernel { layers, deps, shards, in_planes, out_planes, buf_planes, max_nodes }
+    let total_nodes: usize = mapped.layers.iter().map(|l| l.netlist.nodes.len()).sum();
+    let shard_nodes: usize =
+        layers.iter().flat_map(|ls| ls.iter()).map(|st| st.stream.n_nodes).sum();
+    let last = &ptables.layers[l_count - 1];
+    BitsliceKernel {
+        layers,
+        spec,
+        deps,
+        shards,
+        in_planes,
+        out_planes,
+        buf_planes,
+        max_nodes,
+        n_features: cfg.widths[0],
+        n_outputs: cfg.widths[l_count],
+        in_bits: cfg.beta[0],
+        out_bits: last.out_bits,
+        signed_out: last.signed_out,
+        out_step: pnet.out_step(l_count - 1),
+        replication: shard_nodes as f64 / total_nodes.max(1) as f64,
+    }
+}
+
+/// Compile the plane-range bitslice kernel from an already-permuted model
+/// (maps the netlists with `workers` threads — deterministic output).
+pub(crate) fn bits_kernel_of(
+    pnet: &Network,
+    ptables: &NetworkTables,
+    shards: usize,
+    workers: usize,
+) -> BitsliceKernel {
+    let mapped = map_network_of(pnet, ptables, workers);
+    build_bitslice_kernel(pnet, ptables, &mapped, shards.max(1))
 }
 
 impl ShardKernel for BitsliceKernel {
@@ -1006,6 +1552,14 @@ impl ShardKernel for BitsliceKernel {
 
     fn deps(&self, l: usize, s: usize) -> &[(u32, u32)] {
         &self.deps[l][s]
+    }
+
+    fn reads(&self, l: usize, s: usize) -> &[usize] {
+        &self.spec.reads[l][s]
+    }
+
+    fn write_range(&self, l: usize, s: usize) -> Range<usize> {
+        self.spec.write[l][s].clone()
     }
 
     fn make_scratch(&self) -> Vec<u64> {
@@ -1049,51 +1603,46 @@ pub struct ShardedBitslice {
 }
 
 impl ShardedBitslice {
-    /// Reorder, permute, map and partition `net` into an S-shard bitslice
-    /// engine (spawns S worker threads; mapping is parallel over `workers`).
+    /// Reorder, permute, map and partition `net` into an all-local S-shard
+    /// bitslice engine (spawns S worker threads; mapping is parallel over
+    /// `workers`).
     pub fn compile(
         net: &Network,
         tables: &NetworkTables,
         shards: usize,
         workers: usize,
     ) -> ShardedBitslice {
-        let perms = cache_aware_perms(net);
-        let (pnet, ptables) = permute_network(net, tables, &perms);
-        Self::from_permuted(&pnet, &ptables, shards, workers)
+        let (pnet, ptables) = permuted_for_shards(net, tables);
+        let kernel = bits_kernel_of(&pnet, &ptables, shards, workers);
+        Self::from_kernel(kernel, resolve_spin_us(None, false), 0, &[])
+            .expect("all-local bitslice shards cannot fail")
     }
 
-    /// Build from an already-permuted network (shared with the plan shard
-    /// engine by [`ShardedModel::compile`]).
-    pub(crate) fn from_permuted(
-        pnet: &Network,
-        ptables: &NetworkTables,
-        shards: usize,
-        workers: usize,
-    ) -> ShardedBitslice {
-        let shards = shards.max(1);
-        let mapped = map_network_of(pnet, ptables, workers);
-        let kernel = build_bitslice_kernel(pnet, ptables, &mapped, shards);
-        let total_nodes: usize = mapped.layers.iter().map(|l| l.netlist.nodes.len()).sum();
-        let shard_nodes: usize = kernel
-            .layers
-            .iter()
-            .flat_map(|ls| ls.iter())
-            .map(|st| st.stream.n_nodes)
-            .sum();
-        let cfg = &pnet.cfg;
-        let l_count = cfg.n_layers();
-        let last = &ptables.layers[l_count - 1];
-        ShardedBitslice {
-            n_features: cfg.widths[0],
-            n_outputs: cfg.widths[l_count],
-            in_bits: cfg.beta[0],
-            out_bits: last.out_bits,
-            signed_out: last.signed_out,
-            out_step: pnet.out_step(l_count - 1),
-            shards,
-            replication: shard_nodes as f64 / total_nodes.max(1) as f64,
-            runner: ShardRunner::new(kernel),
-        }
+    /// Build from a compiled kernel and a placement map (shared with
+    /// [`ShardedModel::compile_placed`]).
+    pub(crate) fn from_kernel(
+        kernel: BitsliceKernel,
+        spin_us: u64,
+        fingerprint: u64,
+        placement: &[Option<String>],
+    ) -> Result<ShardedBitslice> {
+        Ok(ShardedBitslice {
+            n_features: kernel.n_features,
+            n_outputs: kernel.n_outputs,
+            in_bits: kernel.in_bits,
+            out_bits: kernel.out_bits,
+            signed_out: kernel.signed_out,
+            out_step: kernel.out_step,
+            shards: kernel.shards,
+            replication: kernel.replication,
+            runner: ShardRunner::new(
+                kernel,
+                spin_us,
+                EngineKind::Bitslice,
+                fingerprint,
+                placement,
+            )?,
+        })
     }
 
     /// Shard count S.
@@ -1123,11 +1672,24 @@ impl ShardedBitslice {
         self.runner.stats()
     }
 
+    /// Summed wire counters of this engine's remote links.
+    pub(crate) fn wire_stats(&self) -> WireStats {
+        self.runner.wire_stats()
+    }
+
+    pub(crate) fn n_remote(&self) -> usize {
+        self.runner.n_remote()
+    }
+
+    pub(crate) fn faulted(&self) -> bool {
+        self.runner.inner.handoff.fault().is_some()
+    }
+
     /// One ≤64-sample word: pack to planes, run the sharded streams, unpack.
     /// Pack/unpack go through the same [`pack_word`]/[`unpack_word`] pair as
     /// the unsharded engine — the bit-plane layout lives in one place — with
     /// only the copy to/from the atomic staging buffers added here.
-    fn forward_word(&self, word: &[Vec<i32>], out: &mut Vec<Vec<i32>>) {
+    fn forward_word(&self, word: &[Vec<i32>], out: &mut Vec<Vec<i32>>) -> Result<()> {
         debug_assert!(!word.is_empty() && word.len() <= WORD);
         for row in word {
             assert_eq!(row.len(), self.n_features, "input width mismatch");
@@ -1152,19 +1714,20 @@ impl ShardedBitslice {
                     out,
                 );
             },
-        );
+        )?;
+        Ok(())
     }
 
     /// Batched code-level forward pass: words sequential, each word
     /// internally parallel across shards; ragged tails handled (invalid
     /// lanes are packed as zero and never unpacked).  Bit-exact with
-    /// `BitsliceNet::forward_batch`.
-    pub fn forward_batch(&self, xs: &[Vec<i32>]) -> Vec<Vec<i32>> {
+    /// `BitsliceNet::forward_batch`; errors when the engine has faulted.
+    pub fn forward_batch(&self, xs: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
         let mut out = Vec::with_capacity(xs.len());
         for word in xs.chunks(WORD) {
-            self.forward_word(word, &mut out);
+            self.forward_word(word, &mut out)?;
         }
-        out
+        Ok(out)
     }
 }
 
@@ -1176,30 +1739,69 @@ impl ShardedBitslice {
 /// shards serve sub-word batches sample-by-sample (latency), the bitslice
 /// shards serve word-sized batches word-by-word (throughput within a
 /// word).  `Backend::Lut` routes here when `EngineSelect::shards > 1` and
-/// the batch is below the bitslice crossover.
+/// the batch is below the bitslice crossover.  With a placement map
+/// ([`Self::compile_placed`]) individual shards live on remote
+/// `polylut shard-worker` hosts, handing bit-planes over TCP.
 pub struct ShardedModel {
     /// Neuron-range sharded evaluation plan.
     pub plan: ShardedPlan,
     /// Plane-range sharded bitslice engine.
     pub bits: ShardedBitslice,
     shards: usize,
+    spin_us: u64,
 }
 
 impl ShardedModel {
-    /// Reorder once, then build both sharded engines from the same permuted
-    /// network (2·S worker threads total).
+    /// Reorder once, then build both all-local sharded engines from the
+    /// same permuted network (2·S worker threads total).
     pub fn compile(
         net: &Network,
         tables: &NetworkTables,
         shards: usize,
         workers: usize,
     ) -> ShardedModel {
+        Self::compile_placed(net, tables, shards, workers, &[], None)
+            .expect("all-local sharded compilation cannot fail")
+    }
+
+    /// Reorder once, then build both sharded engines under a placement
+    /// map: `placement[s] = Some("host:port")` drives shard s on a remote
+    /// `polylut shard-worker` (each engine opens its own link), `None` and
+    /// unlisted shards run on local threads.  `spin_us` overrides the
+    /// epoch spin budget ([`resolve_spin_us`]; remote placements default
+    /// to zero spin).  Fails cleanly when a link cannot be established or
+    /// a worker's model fingerprint disagrees.
+    pub fn compile_placed(
+        net: &Network,
+        tables: &NetworkTables,
+        shards: usize,
+        workers: usize,
+        placement: &[Option<String>],
+        spin_us: Option<u64>,
+    ) -> Result<ShardedModel> {
         let shards = shards.max(1);
-        let perms = cache_aware_perms(net);
-        let (pnet, ptables) = permute_network(net, tables, &perms);
-        let plan = ShardedPlan::from_permuted(&pnet, &ptables, shards);
-        let bits = ShardedBitslice::from_permuted(&pnet, &ptables, shards, workers);
-        ShardedModel { plan, bits, shards }
+        anyhow::ensure!(
+            placement.len() <= shards,
+            "placement lists {} shards, model has {shards}",
+            placement.len()
+        );
+        let has_remote = placement.iter().any(|p| p.is_some());
+        let spin_us = resolve_spin_us(spin_us, has_remote);
+        let (pnet, ptables) = permuted_for_shards(net, tables);
+        let fingerprint = shard_fingerprint(&pnet, &ptables, shards);
+        let plan = ShardedPlan::from_kernel(
+            plan_kernel_of(&pnet, &ptables, shards),
+            spin_us,
+            fingerprint,
+            placement,
+        )?;
+        let bits = ShardedBitslice::from_kernel(
+            bits_kernel_of(&pnet, &ptables, shards, workers),
+            spin_us,
+            fingerprint,
+            placement,
+        )?;
+        Ok(ShardedModel { plan, bits, shards, spin_us })
     }
 
     /// Shard count S.
@@ -1207,12 +1809,45 @@ impl ShardedModel {
         self.shards
     }
 
+    /// The resolved epoch spin budget (µs) both runners use.
+    pub fn spin_us(&self) -> u64 {
+        self.spin_us
+    }
+
+    /// Summed wire counters over both engines' remote links (`None` when
+    /// every shard is local).
+    pub fn wire_stats(&self) -> Option<WireStats> {
+        if self.plan.n_remote() + self.bits.n_remote() == 0 {
+            return None;
+        }
+        Some(self.plan.wire_stats().merged(self.bits.wire_stats()))
+    }
+
+    /// Whether either sharded engine carries a sticky fault (panicked
+    /// shard, dead wire link).  A faulted model errors on every forward
+    /// call; `Backend::route` uses this to fall back to the in-process
+    /// plan engine instead of failing every sub-crossover batch forever.
+    pub fn faulted(&self) -> bool {
+        self.plan.faulted() || self.bits.faulted()
+    }
+
+    /// Test hook: inject a sticky fault into both engines (the production
+    /// fault paths — kernel panics, wire errors — are exercised at the
+    /// runner and wire layers; this lets API-level tests reach the faulted
+    /// state without a real failure).
+    #[cfg(test)]
+    pub(crate) fn inject_fault(&self, msg: &str) {
+        self.plan.runner.inner.handoff.fail(msg);
+        self.bits.runner.inner.handoff.fail(msg);
+    }
+
     /// Batched feature-level forward pass: word-sized batches run through
     /// the sharded bitslice engine, smaller ones sample-by-sample through
-    /// the sharded plan.  Bit-exact with both unsharded engines.
-    pub fn forward_batch_f32(&self, xs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    /// the sharded plan.  Bit-exact with both unsharded engines; errors
+    /// when an engine has faulted (sticky).
+    pub fn forward_batch_f32(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         if xs.is_empty() {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         if xs.len() >= WORD {
             let codes: Vec<Vec<i32>> = xs
@@ -1222,11 +1857,12 @@ impl ShardedModel {
                     x.iter().map(|&v| unsigned_code(v, self.bits.in_bits, 1.0)).collect()
                 })
                 .collect();
-            self.bits
-                .forward_batch(&codes)
+            Ok(self
+                .bits
+                .forward_batch(&codes)?
                 .into_iter()
                 .map(|row| row.iter().map(|&c| c as f32 * self.bits.out_step).collect())
-                .collect()
+                .collect())
         } else {
             xs.iter().map(|x| self.plan.forward(x)).collect()
         }
@@ -1292,16 +1928,19 @@ mod tests {
         assert!(balanced_ranges(&[], 3).iter().all(|r| r.is_empty()));
     }
 
-    /// The adversarial-interleaving simulation the module docs cite: a
-    /// pure-logic model of the runner executes cells in randomized orders
-    /// constrained *only* by `compute_deps`' thresholds, tagging every
-    /// parity-buffer position with the boundary generation it holds.  Any
-    /// admitted interleaving must read exactly the generation it expects —
-    /// this is the harness that pinned the previous-covering-boundary rule
-    /// (generations skip a parity level when widths are non-monotonic) and
-    /// it doubles as a no-deadlock check.
-    #[test]
-    fn compute_deps_admits_only_safe_interleavings() {
+    /// The adversarial-interleaving simulation the module docs cite,
+    /// driven **through the [`Handoff`] trait**: a pure-logic model of the
+    /// runner executes cells in randomized orders constrained *only* by
+    /// the trait's published levels against `compute_deps`' thresholds,
+    /// tagging every parity-buffer position with the boundary generation
+    /// it holds.  Any admitted interleaving must read exactly the
+    /// generation it expects — this is the harness that pinned the
+    /// previous-covering-boundary rule (generations skip a parity level
+    /// when widths are non-monotonic) and it doubles as a no-deadlock
+    /// check.  Generic over the handoff implementation so the protocol
+    /// contract is pinned on the abstraction, not on `LocalHandoff`'s
+    /// atomics.
+    fn adversarial_interleavings_against<H: Handoff>(mk: impl Fn(usize) -> H) {
         let mut rng = Rng::new(0x0DE9);
         for trial in 0..300 {
             let l_count = 1 + rng.below(6);
@@ -1336,11 +1975,11 @@ mod tests {
                 reads: reads.clone(),
             };
             let deps = compute_deps(&spec, shards);
+            let handoff = mk(shards);
             let maxbuf = bounds[1..l_count].iter().copied().max().unwrap_or(0);
             // tags[p][x] = boundary generation buffer p position x holds
             // (-1 = stale data from a previous epoch).
             let mut tags = [vec![-1isize; maxbuf], vec![-1isize; maxbuf]];
-            let mut done = vec![0u32; shards];
             let mut progress = vec![0usize; shards];
             while progress.iter().any(|&p| p < l_count) {
                 let ready: Vec<usize> = (0..shards)
@@ -1348,7 +1987,7 @@ mod tests {
                         progress[s] < l_count
                             && deps[progress[s]][s]
                                 .iter()
-                                .all(|&(d, thr)| done[d as usize] >= thr)
+                                .all(|&(d, thr)| handoff.level(d as usize) >= thr)
                     })
                     .collect();
                 assert!(!ready.is_empty(), "deadlock (trial {trial})");
@@ -1369,10 +2008,15 @@ mod tests {
                         tags[(l + 1) % 2][x] = l as isize + 1;
                     }
                 }
-                done[s] = l as u32 + 1;
+                handoff.publish(s, l as u32 + 1).expect("publish in simulation");
                 progress[s] += 1;
             }
         }
+    }
+
+    #[test]
+    fn compute_deps_admits_only_safe_interleavings() {
+        adversarial_interleavings_against(LocalHandoff::new);
     }
 
     /// Sharded plan and sharded bitslice are bit-exact with the unsharded
@@ -1393,12 +2037,12 @@ mod tests {
             for shards in [1usize, 2, 3, 8] {
                 let model = ShardedModel::compile(&net, &tables, shards, 1);
                 assert_eq!(
-                    model.plan.forward_batch(&xs),
+                    model.plan.forward_batch(&xs).unwrap(),
                     want,
                     "plan A={a} D={d} S={shards}"
                 );
                 assert_eq!(
-                    model.bits.forward_batch(&xs),
+                    model.bits.forward_batch(&xs).unwrap(),
                     want,
                     "bits A={a} D={d} S={shards}"
                 );
@@ -1420,8 +2064,8 @@ mod tests {
         for n in [0usize, 1, 63, 64, 65, 130] {
             let xs = random_codes(&net, n, 31 + n as u64);
             let want = plan.forward_batch(&xs, &mut scratch);
-            assert_eq!(model.plan.forward_batch(&xs), want, "plan batch {n}");
-            assert_eq!(model.bits.forward_batch(&xs), want, "bits batch {n}");
+            assert_eq!(model.plan.forward_batch(&xs).unwrap(), want, "plan batch {n}");
+            assert_eq!(model.bits.forward_batch(&xs).unwrap(), want, "bits batch {n}");
         }
     }
 
@@ -1439,8 +2083,8 @@ mod tests {
         let want = plan.forward_batch(&xs, &mut scratch);
         for shards in [2usize, 3, default_workers()] {
             let model = ShardedModel::compile(&net, &tables, shards, 1);
-            assert_eq!(model.plan.forward_batch(&xs), want, "plan S={shards}");
-            assert_eq!(model.bits.forward_batch(&xs), want, "bits S={shards}");
+            assert_eq!(model.plan.forward_batch(&xs).unwrap(), want, "plan S={shards}");
+            assert_eq!(model.bits.forward_batch(&xs).unwrap(), want, "bits S={shards}");
         }
     }
 
@@ -1456,9 +2100,13 @@ mod tests {
         for n in [5usize, WORD + 3] {
             let xs: Vec<Vec<f32>> =
                 (0..n).map(|_| (0..8).map(|_| rng.f32()).collect()).collect();
-            assert_eq!(model.forward_batch_f32(&xs), plan.forward_batch_f32(&xs, 1), "n={n}");
+            assert_eq!(
+                model.forward_batch_f32(&xs).unwrap(),
+                plan.forward_batch_f32(&xs, 1),
+                "n={n}"
+            );
         }
-        assert!(model.forward_batch_f32(&[]).is_empty());
+        assert!(model.forward_batch_f32(&[]).unwrap().is_empty());
     }
 
     /// Repeated single-sample calls through one engine are deterministic
@@ -1468,9 +2116,10 @@ mod tests {
         let (net, tables) = grid_net(3, 1);
         let model = ShardedModel::compile(&net, &tables, 2, 1);
         let xs = random_codes(&net, 8, 3);
-        let first: Vec<Vec<i32>> = xs.iter().map(|x| model.plan.forward_codes(x)).collect();
+        let first: Vec<Vec<i32>> =
+            xs.iter().map(|x| model.plan.forward_codes(x).unwrap()).collect();
         let second: Vec<Vec<i32>> =
-            xs.iter().rev().map(|x| model.plan.forward_codes(x)).collect();
+            xs.iter().rev().map(|x| model.plan.forward_codes(x).unwrap()).collect();
         for (a, b) in first.iter().zip(second.iter().rev()) {
             assert_eq!(a, b);
         }
@@ -1549,5 +2198,144 @@ mod tests {
         assert_eq!(sorted, (0..6).collect::<Vec<_>>(), "must be a bijection");
         // All A-fan-in neurons (even indices) first, then all B ones.
         assert_eq!(order, vec![0, 2, 4, 1, 3, 5], "shared fan-in must cluster");
+    }
+
+    /// A trivial two-layer kernel whose cell (1, 1) panics — the PR 4
+    /// regression harness for the poisoned-`ctrl` bug: a panicking shard
+    /// must become a clean, sticky engine error, never a deadlock or a
+    /// panic cascade through a poisoned mutex.
+    struct PanickingKernel;
+
+    impl ShardKernel for PanickingKernel {
+        type Scratch = ();
+
+        fn n_layers(&self) -> usize {
+            2
+        }
+
+        fn n_shards(&self) -> usize {
+            2
+        }
+
+        fn in_len(&self) -> usize {
+            4
+        }
+
+        fn out_len(&self) -> usize {
+            4
+        }
+
+        fn buf_len(&self) -> usize {
+            4
+        }
+
+        fn deps(&self, _l: usize, _s: usize) -> &[(u32, u32)] {
+            &[]
+        }
+
+        fn reads(&self, _l: usize, _s: usize) -> &[usize] {
+            &[]
+        }
+
+        fn write_range(&self, _l: usize, s: usize) -> Range<usize> {
+            2 * s..2 * (s + 1)
+        }
+
+        fn make_scratch(&self) -> Self::Scratch {}
+
+        fn run_cell(
+            &self,
+            l: usize,
+            s: usize,
+            _src: &[AtomicU64],
+            dst: &[AtomicU64],
+            _scratch: &mut Self::Scratch,
+        ) {
+            if (l, s) == (1, 1) {
+                panic!("injected kernel failure");
+            }
+            for slot in &dst[self.write_range(l, s)] {
+                slot.store(7, Ordering::Relaxed);
+            }
+        }
+    }
+
+    #[test]
+    fn panicking_kernel_is_clean_sticky_error_not_deadlock() {
+        let runner = ShardRunner::new_local(PanickingKernel, DEFAULT_SPIN_US);
+        let first = runner.run_epoch(|_| {}, |_| {});
+        let msg = first.expect_err("panicked shard must error").0;
+        assert!(msg.contains("panicked"), "error names the panic: {msg}");
+        assert!(msg.contains("injected kernel failure"), "payload survives: {msg}");
+        // Sticky: the engine stays disabled with the same clean error.
+        let second = runner.run_epoch(|_| {}, |_| {});
+        assert!(second.is_err(), "fault must be sticky");
+        // Drop must join the dead worker without hanging or panicking.
+        drop(runner);
+    }
+
+    /// The same failure surfaced through the public engine API: once the
+    /// engines carry a sticky fault, every forward call returns `Err`
+    /// promptly (no hang, no panic) and `faulted()` reports it — the
+    /// signal `Backend::route` degrades on.
+    #[test]
+    fn engine_fault_surfaces_as_result() {
+        let (net, tables) = grid_net(2, 1);
+        let model = ShardedModel::compile(&net, &tables, 2, 1);
+        let xs = random_codes(&net, 3, 8);
+        // Healthy engine: Ok, not faulted.
+        assert!(model.plan.forward_batch(&xs).is_ok());
+        assert!(model.forward_batch_f32(&[vec![0.5; 8]]).is_ok());
+        assert!(!model.faulted());
+        // Faulted engine: sticky Err through every public entry point.
+        model.inject_fault("injected test fault");
+        assert!(model.faulted());
+        let err = model.plan.forward_codes(&xs[0]).expect_err("plan must error");
+        assert!(format!("{err:#}").contains("injected test fault"), "{err:#}");
+        assert!(model.bits.forward_batch(&xs).is_err(), "bits must error");
+        assert!(model.forward_batch_f32(&[vec![0.5; 8]]).is_err(), "f32 must error");
+        // Repeated calls keep erroring cleanly (no deadlock on dead state).
+        assert!(model.plan.forward_batch(&xs).is_err());
+    }
+
+    #[test]
+    fn spin_budget_resolution() {
+        assert_eq!(resolve_spin_us(Some(7), false), 7, "explicit config wins");
+        assert_eq!(resolve_spin_us(Some(7), true), 7, "explicit config wins over remote");
+        assert_eq!(
+            resolve_spin_us(None, true),
+            0,
+            "remote placements default to zero spin"
+        );
+        // Without the env var, the local default applies.
+        if std::env::var("POLYLUT_SHARD_SPIN_US").is_err() {
+            assert_eq!(resolve_spin_us(None, false), DEFAULT_SPIN_US);
+        }
+    }
+
+    #[test]
+    fn local_model_reports_no_wire_stats() {
+        let (net, tables) = grid_net(1, 1);
+        let model = ShardedModel::compile(&net, &tables, 2, 1);
+        assert!(model.wire_stats().is_none(), "no links on an all-local model");
+        assert_eq!(model.spin_us(), resolve_spin_us(None, false));
+    }
+
+    /// The fingerprint must be sensitive to weights and shard count but
+    /// identical across independent compilations (the wire handshake
+    /// depends on it).
+    #[test]
+    fn shard_fingerprint_is_stable_and_discriminating() {
+        let (net, tables) = grid_net(2, 1);
+        let (pnet, ptables) = permuted_for_shards(&net, &tables);
+        let a = shard_fingerprint(&pnet, &ptables, 2);
+        let (pnet2, ptables2) = permuted_for_shards(&net, &tables);
+        assert_eq!(a, shard_fingerprint(&pnet2, &ptables2, 2), "deterministic");
+        assert_ne!(a, shard_fingerprint(&pnet, &ptables, 3), "shard count matters");
+        let cfg = config::uniform("shard-t", &[8, 6, 3], 2, 2, 3, 3, 3, 1, 2, 3);
+        let other = Network::random(&cfg, &mut Rng::new(999));
+        let otables = compile_network(&other, 1);
+        let (po, pot) = permuted_for_shards(&other, &otables);
+        assert_ne!(a, shard_fingerprint(&po, &pot, 2), "weights matter");
     }
 }

@@ -59,7 +59,12 @@ fn serving_stack_under_concurrent_load() {
     let server = Server::start(
         BackendSpec::lut(model.clone(), 4),
         4,
-        ServerConfig { max_batch: 32, window: Duration::from_micros(500), queue_cap: 512 },
+        ServerConfig {
+            max_batch: 32,
+            window: Duration::from_micros(500),
+            queue_cap: 512,
+            ..Default::default()
+        },
     );
     let n_clients = 6;
     let per_client = 50;
@@ -94,7 +99,12 @@ fn backpressure_rejects_when_queue_full() {
     let server = Server::start(
         BackendSpec::lut(model, 1),
         4,
-        ServerConfig { max_batch: 1, window: Duration::from_millis(30), queue_cap: 1 },
+        ServerConfig {
+            max_batch: 1,
+            window: Duration::from_millis(30),
+            queue_cap: 1,
+            ..Default::default()
+        },
     );
     let rejects = std::sync::atomic::AtomicU64::new(0);
     std::thread::scope(|scope| {

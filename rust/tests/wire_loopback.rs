@@ -1,0 +1,127 @@
+//! Integration: multi-node shard handoff over real loopback TCP with real
+//! `polylut shard-worker` **processes** (not in-process hosts — those are
+//! covered by the `sim::wire` unit tests).  Two workers are spawned from
+//! the built binary, each compiles the same random-weight model from the
+//! same CLI spec, and a mixed local/remote `ShardedModel` on the test side
+//! must be bit-exact against `Network::forward_codes` on both the plan and
+//! bitslice routes.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+
+use polylut_add::nn::config;
+use polylut_add::nn::network::Network;
+use polylut_add::sim::{ShardPlacement, ShardedModel, WORD};
+use polylut_add::util::rng::Rng;
+
+/// Model geometry shared between the test and the worker CLI args — any
+/// drift fails the fingerprint handshake, which is itself part of what
+/// this test exercises.
+const WIDTHS: &[usize] = &[8, 6, 3];
+const NET_SEED: u64 = 0xB17;
+
+fn test_net(a: usize, degree: u32) -> Network {
+    let cfg = config::uniform("wire-proc", WIDTHS, 2, 2, 3, 3, 3, degree, a, 3);
+    Network::random(&cfg, &mut Rng::new(NET_SEED))
+}
+
+struct Worker {
+    child: Child,
+    addr: String,
+}
+
+impl Worker {
+    /// Spawn `polylut shard-worker` on a free loopback port and parse the
+    /// bound address from its first stdout line.
+    fn spawn(a: usize, degree: u32, shards: usize) -> Worker {
+        let widths: Vec<String> = WIDTHS.iter().map(|w| w.to_string()).collect();
+        let mut child = Command::new(env!("CARGO_BIN_EXE_polylut"))
+            .args([
+                "shard-worker",
+                "--listen",
+                "127.0.0.1:0",
+                "--shards",
+                &shards.to_string(),
+                "--widths",
+                &widths.join(","),
+                "--net-seed",
+                &NET_SEED.to_string(),
+                "--degree",
+                &degree.to_string(),
+                "--a",
+                &a.to_string(),
+            ])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn shard-worker process");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).expect("worker banner");
+        // "[shard-worker] listening on 127.0.0.1:PORT shards=S fingerprint=…"
+        let addr = line
+            .split_whitespace()
+            .skip_while(|w| *w != "on")
+            .nth(1)
+            .unwrap_or_else(|| panic!("unparsable worker banner: {line:?}"))
+            .to_string();
+        Worker { child, addr }
+    }
+}
+
+impl Drop for Worker {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn assert_wire_bit_exact(a: usize, degree: u32, shards: usize, workers: &[&Worker]) {
+    let net = test_net(a, degree);
+    let tables = polylut_add::lut::compile_network(&net, 1);
+    // Shard 0 local; shards 1.. mapped round-robin onto the worker processes.
+    let placement: ShardPlacement = (0..shards)
+        .map(|s| (s > 0).then(|| workers[(s - 1) % workers.len()].addr.clone()))
+        .collect();
+    let model = ShardedModel::compile_placed(&net, &tables, shards, 1, &placement, None)
+        .expect("placed compile against worker processes");
+    let mut rng = Rng::new(degree as u64 * 31 + a as u64);
+    let xs: Vec<Vec<i32>> = (0..WORD + 7)
+        .map(|_| {
+            let x: Vec<f32> = (0..WIDTHS[0]).map(|_| rng.f32()).collect();
+            net.quantize_input(&x)
+        })
+        .collect();
+    let want: Vec<Vec<i32>> = xs.iter().map(|x| net.forward_codes(x)).collect();
+    assert_eq!(
+        model.plan.forward_batch(&xs).unwrap(),
+        want,
+        "plan route A={a} D={degree} S={shards}"
+    );
+    assert_eq!(
+        model.bits.forward_batch(&xs).unwrap(),
+        want,
+        "bitslice route A={a} D={degree} S={shards}"
+    );
+    let ws = model.wire_stats().expect("remote links present");
+    assert!(ws.frames > 0, "frames crossed the wire");
+    assert!(ws.bytes > ws.frames, "bytes include headers");
+}
+
+/// S = 2: one local shard + one shard in a worker process.
+#[test]
+fn two_shards_one_remote_process() {
+    let (a, degree) = (2, 1);
+    let w = Worker::spawn(a, degree, 2);
+    assert_wire_bit_exact(a, degree, 2, &[&w]);
+}
+
+/// S = 3 across two worker processes (the CI loopback job's shape): shard
+/// 0 local, shards 1 and 2 each in their own `polylut shard-worker`.
+#[test]
+fn three_shards_two_remote_processes() {
+    let (a, degree) = (1, 2);
+    let w1 = Worker::spawn(a, degree, 3);
+    let w2 = Worker::spawn(a, degree, 3);
+    assert_wire_bit_exact(a, degree, 3, &[&w1, &w2]);
+}
