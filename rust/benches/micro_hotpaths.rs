@@ -24,6 +24,7 @@ use polylut_add::nn::network::Network;
 use polylut_add::runtime::Engine;
 use polylut_add::sim::{
     BitsliceNet, EvalPlan, LutSim, Scratch, ShardPlacement, ShardWorkerHost, ShardedModel,
+    WireConfig, DEFAULT_WIRE_WINDOW,
 };
 use polylut_add::util::bench::Bench;
 use polylut_add::util::pool::default_workers;
@@ -211,12 +212,14 @@ fn main() {
     let waits: Vec<u64> = shard_stats.iter().map(|s| s.waits).collect();
     println!("  shard occupancy (cells) {cells:?}, handoff waits {waits:?}");
 
-    // Wire handoff over loopback TCP (ROADMAP lever (d)): same geometry
-    // and shard count, but the last shard is hosted by an in-process
-    // `ShardWorkerHost` behind 127.0.0.1 — the LocalHandoff-vs-loopback-
-    // RemoteHandoff single-sample latency comparison.  The absolute gap is
-    // the honest cost of 2·(L) frame round-trips per sample; it bounds how
-    // much cone a remote shard must carry before distribution pays.
+    // Wire handoff over loopback TCP (ROADMAP levers (d)/(e)): same
+    // geometry and shard count, but the last shard is hosted by an
+    // in-process `ShardWorkerHost` behind 127.0.0.1.  Two comparison
+    // points: LocalHandoff vs loopback RemoteHandoff (the honest cost of
+    // crossing a socket at all), and — the wire handoff v2 acceptance
+    // point — the windowed stream (W = DEFAULT_WIRE_WINDOW) vs the v1
+    // lock-step pacing (W = 1), which paid 2·L strictly-alternating frame
+    // round-trips per sample on this 5-layer geometry.
     let host = Arc::new(ShardWorkerHost::compile(&net4, &tables4, shard_n, default_workers()));
     let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
     let addr = listener.local_addr().expect("local addr").to_string();
@@ -226,14 +229,49 @@ fn main() {
     }
     let placement: ShardPlacement =
         (0..shard_n).map(|s| (s + 1 == shard_n).then(|| addr.clone())).collect();
-    let wired =
-        ShardedModel::compile_placed(&net4, &tables4, shard_n, default_workers(), &placement, None)
-            .expect("loopback shard worker");
-    let st_wire_1 = b.measure("shard-plan/forward (1 sample, nid-t4, 1 shard over loopback)", || {
-        wired.plan.forward_codes(&single).unwrap().len()
-    });
+    let lockstep = ShardedModel::compile_placed_wire(
+        &net4,
+        &tables4,
+        shard_n,
+        default_workers(),
+        &placement,
+        None,
+        WireConfig::lock_step(),
+    )
+    .expect("loopback shard worker (lock-step)");
+    let st_wire_lock =
+        b.measure("shard-plan/forward (1 sample, nid-t4, loopback, lock-step W=1)", || {
+            lockstep.plan.forward_codes(&single).unwrap().len()
+        });
+    // Bit-exactness under lock-step pacing, then drop it so the windowed
+    // model below owns the comparison.
+    assert_eq!(
+        lockstep.plan.forward_batch(&rows4[..70]).unwrap(),
+        plan4.forward_batch(&rows4[..70], &mut pscratch4),
+        "lock-step wired plan disagrees on nid-t4"
+    );
+    drop(lockstep);
+    let wired = ShardedModel::compile_placed(
+        &net4,
+        &tables4,
+        shard_n,
+        default_workers(),
+        &placement,
+        None,
+    )
+    .expect("loopback shard worker (windowed)");
+    let st_wire_1 = b.measure(
+        "shard-plan/forward (1 sample, nid-t4, loopback, windowed W=4)",
+        || wired.plan.forward_codes(&single).unwrap().len(),
+    );
     println!(
-        "  -> LocalHandoff vs loopback RemoteHandoff single-sample (nid-t4, S={shard_n}): {:.2}x ({} vs {})",
+        "  -> windowed (W={DEFAULT_WIRE_WINDOW}) vs lock-step (W=1) single-sample over loopback (nid-t4, S={shard_n}): {:.2}x ({} vs {})",
+        st_wire_lock.median_ns / st_wire_1.median_ns,
+        polylut_add::util::bench::fmt_ns(st_wire_1.median_ns),
+        polylut_add::util::bench::fmt_ns(st_wire_lock.median_ns),
+    );
+    println!(
+        "  -> LocalHandoff vs loopback RemoteHandoff single-sample (nid-t4, S={shard_n}, windowed): {:.2}x ({} vs {})",
         st_wire_1.median_ns / st_shard_1.median_ns,
         polylut_add::util::bench::fmt_ns(st_shard_1.median_ns),
         polylut_add::util::bench::fmt_ns(st_wire_1.median_ns),
@@ -251,11 +289,13 @@ fn main() {
     );
     let ws = wired.wire_stats().expect("remote link present");
     println!(
-        "  wire link: {} frames, {} bytes, {:.2} ms blocked, {} reconnects (spin_us={})",
+        "  wire link: {} frames, {} bytes, {:.2} ms blocked, {} reconnects, {} resumes, inflight hwm {} (spin_us={})",
         ws.frames,
         ws.bytes,
         ws.wait_ns as f64 / 1e6,
         ws.reconnects,
+        ws.resumes,
+        ws.inflight_hwm,
         wired.spin_us()
     );
     drop(wired);

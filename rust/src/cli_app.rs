@@ -58,19 +58,31 @@ fn print_help() {
                     N cores with bit-plane handoff (see ARCHITECTURE.md §4).\n\
                     [--shard-hosts a:p,b:p,…]  place shard i on a remote\n\
                     `shard-worker` at entry i (`local`/`-`/empty and unlisted\n\
-                    shards stay local) — bit-planes cross the wire, outputs\n\
-                    stay bit-exact (ARCHITECTURE.md §7).\n\
+                    shards stay local; duplicate addresses are rejected at\n\
+                    parse time) — bit-planes cross the wire, outputs stay\n\
+                    bit-exact (ARCHITECTURE.md §7).\n\
                     [--shard-spin-us N]  worker epoch spin budget before the\n\
                     condvar sleep (default: 20 local, 0 with remote shards;\n\
                     env POLYLUT_SHARD_SPIN_US).\n\
+                    [--wire-window N]  needs flights in flight per remote\n\
+                    link ahead of the last applied result (default 4;\n\
+                    1 = v1 lock-step pacing).\n\
+                    [--wire-retries N]  reconnect-and-resume attempts per\n\
+                    link incident (default 6) before the engine faults and\n\
+                    routing degrades to the in-process plan.\n\
                     Metrics snapshot: plan/bitslice/sharded = batches served\n\
                     per engine; shard_cells/shard_waits = per-shard occupancy\n\
                     and handoff-wait counters (cumulative); shard_spin_us and\n\
-                    wire_frames/bytes/wait_ns/reconnects when active\n\
+                    wire_frames/bytes/wait_ns/reconnects plus\n\
+                    wire_inflight_epochs/resumes/retry_exhausted when active\n\
            shard-worker --listen H:P --shards S   host shards of a model for\n\
-                    a remote coordinator (one process can serve any subset;\n\
-                    each connection claims one (engine, shard) after a model-\n\
-                    fingerprint handshake).  Model source: --id <artifact>,\n\
+                    a remote coordinator (each connection claims one\n\
+                    (engine, shard) after a model-fingerprint + resume-epoch\n\
+                    handshake; `serve --shard-hosts` lists one distinct\n\
+                    address per remote shard).  [--wire-window N]\n\
+                    sizes the windowed stream's pending-frame buffer (default\n\
+                    4; sessions honor the larger of this and the\n\
+                    coordinator's window).  Model source: --id <artifact>,\n\
                     or --widths 8,6,3 [--net-seed N] [--beta-in B] [--beta B]\n\
                     [--beta-out B] [--fan-in F] [--fan F] [--degree D] [--a A]\n\
                     [--classes C] for a random-weight geometry (tests/benches)\n\
@@ -270,14 +282,15 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
         bail!("shard-worker needs a model: --id <artifact> or --widths w0,w1,…");
     };
     let tables = crate::lut::tables::compile_network(&net, workers);
-    let host = std::sync::Arc::new(crate::sim::ShardWorkerHost::compile(
-        &net, &tables, shards, workers,
+    let window = args.get_usize("wire-window", crate::sim::DEFAULT_WIRE_WINDOW)?.max(1);
+    let host = std::sync::Arc::new(crate::sim::ShardWorkerHost::compile_windowed(
+        &net, &tables, shards, workers, window,
     ));
     let listener = std::net::TcpListener::bind(listen)
         .with_context(|| format!("bind {listen}"))?;
     let addr = listener.local_addr()?;
     println!(
-        "[shard-worker] listening on {addr} shards={shards} fingerprint={:016x}",
+        "[shard-worker] listening on {addr} shards={shards} wire-window={window} fingerprint={:016x}",
         host.fingerprint()
     );
     // Parents parse the line above from a pipe; make sure it leaves now.

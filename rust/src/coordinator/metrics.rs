@@ -37,6 +37,15 @@ pub struct Metrics {
     pub wire_bytes: AtomicU64,
     pub wire_wait_ns: AtomicU64,
     pub wire_reconnects: AtomicU64,
+    /// High-water mark of in-flight needs flights on any link (the
+    /// `--wire-window` unit; one flight per layer boundary, so an epoch of
+    /// an L-layer model is L flights).
+    pub wire_inflight_epochs: AtomicU64,
+    /// Successful reconnect-and-resume handshakes over all links.
+    pub wire_resumes: AtomicU64,
+    /// Link incidents whose reconnect budget was exhausted (each one
+    /// faulted its engine and degraded routing to the in-process plan).
+    pub wire_retry_exhausted: AtomicU64,
     /// Whether a wire placement is active (controls snapshot rendering).
     wire_active: AtomicU64,
     /// Resolved shard-worker spin budget in µs (`u64::MAX` = not recorded:
@@ -61,6 +70,9 @@ impl Default for Metrics {
             wire_bytes: AtomicU64::new(0),
             wire_wait_ns: AtomicU64::new(0),
             wire_reconnects: AtomicU64::new(0),
+            wire_inflight_epochs: AtomicU64::new(0),
+            wire_resumes: AtomicU64::new(0),
+            wire_retry_exhausted: AtomicU64::new(0),
             wire_active: AtomicU64::new(0),
             shard_spin_us: AtomicU64::new(u64::MAX),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -121,6 +133,9 @@ impl Metrics {
         self.wire_bytes.store(ws.bytes, Ordering::Relaxed);
         self.wire_wait_ns.store(ws.wait_ns, Ordering::Relaxed);
         self.wire_reconnects.store(ws.reconnects, Ordering::Relaxed);
+        self.wire_inflight_epochs.store(ws.inflight_hwm, Ordering::Relaxed);
+        self.wire_resumes.store(ws.resumes, Ordering::Relaxed);
+        self.wire_retry_exhausted.store(ws.retry_exhausted, Ordering::Relaxed);
         self.wire_active.store(1, Ordering::Relaxed);
     }
 
@@ -189,11 +204,15 @@ impl Metrics {
         }
         if self.wire_active.load(Ordering::Relaxed) != 0 {
             s.push_str(&format!(
-                " wire_frames={} wire_bytes={} wire_wait_ns={} wire_reconnects={}",
+                " wire_frames={} wire_bytes={} wire_wait_ns={} wire_reconnects={} \
+                 wire_inflight_epochs={} wire_resumes={} wire_retry_exhausted={}",
                 self.wire_frames.load(Ordering::Relaxed),
                 self.wire_bytes.load(Ordering::Relaxed),
                 self.wire_wait_ns.load(Ordering::Relaxed),
                 self.wire_reconnects.load(Ordering::Relaxed),
+                self.wire_inflight_epochs.load(Ordering::Relaxed),
+                self.wire_resumes.load(Ordering::Relaxed),
+                self.wire_retry_exhausted.load(Ordering::Relaxed),
             ));
         }
         s
@@ -250,11 +269,23 @@ mod tests {
         assert!(!snap.contains("wire_frames"), "hidden without a wire placement");
         assert!(!snap.contains("shard_spin_us"), "hidden until recorded");
         m.set_shard_spin_us(0);
-        m.record_wire(&WireStats { frames: 12, bytes: 3400, wait_ns: 560, reconnects: 1 });
+        m.record_wire(&WireStats {
+            frames: 12,
+            bytes: 3400,
+            wait_ns: 560,
+            reconnects: 1,
+            resumes: 2,
+            retry_exhausted: 0,
+            inflight_hwm: 4,
+        });
         let snap = m.snapshot();
         assert!(snap.contains("shard_spin_us=0"), "{snap}");
         assert!(
             snap.contains("wire_frames=12 wire_bytes=3400 wire_wait_ns=560 wire_reconnects=1"),
+            "{snap}"
+        );
+        assert!(
+            snap.contains("wire_inflight_epochs=4 wire_resumes=2 wire_retry_exhausted=0"),
             "{snap}"
         );
     }

@@ -32,8 +32,10 @@ use crate::sim::bitslice::BitsliceNet;
 use crate::sim::lutsim::LutSim;
 use crate::sim::plan::EvalPlan;
 use crate::sim::shard::ShardedModel;
-use crate::sim::wire::{parse_shard_hosts, ShardPlacement, WireStats};
-use crate::sim::{EngineSelect, LutEngine, ShardStats};
+use crate::sim::wire::{parse_shard_hosts, ShardPlacement, WireConfig, WireStats};
+use crate::sim::{
+    EngineSelect, LutEngine, ShardStats, DEFAULT_WIRE_RETRIES, DEFAULT_WIRE_WINDOW,
+};
 use crate::util::cli::Args;
 use metrics::Metrics;
 
@@ -79,12 +81,33 @@ impl FrozenModel {
         placement: &ShardPlacement,
         spin_us: Option<u64>,
     ) -> Result<FrozenModel> {
+        Self::from_network_placed_wire(
+            net,
+            workers,
+            shards,
+            placement,
+            spin_us,
+            WireConfig::default(),
+        )
+    }
+
+    /// [`FrozenModel::from_network_placed`] with explicit wire knobs (the
+    /// `serve --wire-window` / `--wire-retries` path): in-flight window per
+    /// link and the reconnect-and-resume retry budget.
+    pub fn from_network_placed_wire(
+        net: Network,
+        workers: usize,
+        shards: usize,
+        placement: &ShardPlacement,
+        spin_us: Option<u64>,
+        wire: WireConfig,
+    ) -> Result<FrozenModel> {
         let tables = crate::lut::tables::compile_network(&net, workers);
         let plan = EvalPlan::compile(&net, &tables);
         let bitslice = BitsliceNet::compile(&net, &tables, workers);
         let sharded = if shards > 1 {
-            Some(ShardedModel::compile_placed(
-                &net, &tables, shards, workers, placement, spin_us,
+            Some(ShardedModel::compile_placed_wire(
+                &net, &tables, shards, workers, placement, spin_us, wire,
             )?)
         } else {
             None
@@ -308,6 +331,21 @@ pub struct ServerConfig {
     /// remote placements default to zero).  Applied when the serve CLI
     /// freezes the model; recorded in `metrics::snapshot()`.
     pub shard_spin_us: Option<u64>,
+    /// Wire in-flight window per remote shard link: needs flights (one per
+    /// layer boundary) shipped ahead of the last applied result
+    /// (`--wire-window`; 1 = the v1 lock-step pacing).
+    pub wire_window: usize,
+    /// Reconnect-and-resume attempts per link incident before the engine
+    /// faults and routing degrades to the in-process plan
+    /// (`--wire-retries`).
+    pub wire_retries: u32,
+}
+
+impl ServerConfig {
+    /// The wire knobs as a [`WireConfig`] for the freeze path.
+    pub fn wire(&self) -> WireConfig {
+        WireConfig { window: self.wire_window.max(1), retries: self.wire_retries }
+    }
 }
 
 impl Default for ServerConfig {
@@ -317,6 +355,8 @@ impl Default for ServerConfig {
             window: Duration::from_micros(200),
             queue_cap: 4096,
             shard_spin_us: None,
+            wire_window: DEFAULT_WIRE_WINDOW,
+            wire_retries: DEFAULT_WIRE_RETRIES,
         }
     }
 }
@@ -489,17 +529,22 @@ fn batcher_loop(
 
 /// `polylut serve --id <artifact> [--backend lut|pjrt] [--requests N]
 ///  [--clients N] [--batch-window-us N] [--bitslice-threshold N]
-///  [--shards N] [--shard-hosts a:p,b:p,…] [--shard-spin-us N]` — runs a
-/// self-driving load test against the server with dataset samples and
-/// prints metrics.  `--bitslice-threshold` sets the batch crossover of the
-/// LUT backend above which the bitsliced engine takes over (0 = always
-/// bitsliced; default [`EngineSelect::DEFAULT_CROSSOVER`]); `--shards N`
-/// (default 1) compiles the intra-sample sharded engines and routes every
+///  [--shards N] [--shard-hosts a:p,b:p,…] [--shard-spin-us N]
+///  [--wire-window N] [--wire-retries N]` — runs a self-driving load test
+/// against the server with dataset samples and prints metrics.
+/// `--bitslice-threshold` sets the batch crossover of the LUT backend
+/// above which the bitsliced engine takes over (0 = always bitsliced;
+/// default [`EngineSelect::DEFAULT_CROSSOVER`]); `--shards N` (default 1)
+/// compiles the intra-sample sharded engines and routes every
 /// sub-crossover batch through them, so a single request's forward pass
 /// runs on N cores.  `--shard-hosts` places individual shards on remote
 /// `polylut shard-worker` processes (entry i = shard i; `local`/`-`/empty
-/// and unlisted shards stay local), and `--shard-spin-us` overrides the
-/// worker epoch spin budget (remote placements default to 0).
+/// and unlisted shards stay local; duplicate addresses are rejected at
+/// parse time), `--shard-spin-us` overrides the worker epoch spin budget
+/// (remote placements default to 0), `--wire-window` sets each link's
+/// in-flight needs-flight window (1 = v1 lock-step pacing) and
+/// `--wire-retries` bounds reconnect-and-resume attempts before routing
+/// degrades to the in-process plan.
 pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
     let man = crate::meta::load_id(dir, id)?;
     let ds = crate::data::load(&man.dataset, 0)?;
@@ -518,18 +563,21 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
         max_batch: args.get_usize("max-batch", 256)?,
         window: Duration::from_micros(args.get_usize("batch-window-us", 200)? as u64),
         shard_spin_us,
+        wire_window: args.get_usize("wire-window", DEFAULT_WIRE_WINDOW)?.max(1),
+        wire_retries: args.get_usize("wire-retries", DEFAULT_WIRE_RETRIES as usize)? as u32,
         ..Default::default()
     };
     let net = man.network_from_state(&state)?;
     let mut frozen: Option<Arc<FrozenModel>> = None;
     let backend = match backend_name.as_str() {
         "lut" => {
-            let model = Arc::new(FrozenModel::from_network_placed(
+            let model = Arc::new(FrozenModel::from_network_placed_wire(
                 net,
                 crate::util::pool::default_workers(),
                 shards,
                 &placement,
                 cfg.shard_spin_us,
+                cfg.wire(),
             )?);
             frozen = Some(model.clone());
             BackendSpec::lut_with_select(
@@ -543,14 +591,20 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
     };
     let n_requests = args.get_usize("requests", 10_000)?;
     let n_clients = args.get_usize("clients", 4)?;
+    let (wire_window, wire_retries) = (cfg.wire_window, cfg.wire_retries);
     let server = Server::start(backend, man.config.n_classes, cfg);
     if let Some(sharded) = frozen.as_ref().and_then(|m| m.sharded.as_ref()) {
         server.metrics.set_shard_spin_us(sharded.spin_us());
     }
 
     if backend_name == "lut" {
+        let wire_note = if n_remote > 0 {
+            format!(" wire-window={wire_window} wire-retries={wire_retries}")
+        } else {
+            String::new()
+        };
         println!(
-            "[serve] {id} backend=lut (bitslice-threshold={crossover} shards={shards} remote={n_remote}): {n_requests} requests from {n_clients} clients…"
+            "[serve] {id} backend=lut (bitslice-threshold={crossover} shards={shards} remote={n_remote}{wire_note}): {n_requests} requests from {n_clients} clients…"
         );
     } else {
         println!("[serve] {id} backend={backend_name}: {n_requests} requests from {n_clients} clients…");

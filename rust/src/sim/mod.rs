@@ -30,9 +30,12 @@
 //! `Backend::Lut` applies.  The shard handoff is transport-abstracted:
 //! [`wire`] frames the boundary bit-planes over TCP so individual shards
 //! of [`shard::ShardedModel`] can live on remote `polylut shard-worker`
-//! processes (`--shard-hosts` placement).  The data layouts, crossover
-//! policy, wire protocol and a request's life through the stack are
-//! documented in `ARCHITECTURE.md` at the repository root.
+//! processes (`--shard-hosts` placement).  Since wire handoff v2 each
+//! link is a pipelined, windowed stream ([`WireConfig`]: in-flight window
+//! + reconnect-and-resume retry budget) instead of a lock-step per-layer
+//! conversation.  The data layouts, crossover policy, wire protocol and a
+//! request's life through the stack are documented in `ARCHITECTURE.md`
+//! at the repository root.
 
 #![warn(missing_docs)]
 
@@ -50,7 +53,10 @@ pub use plan::{EvalPlan, Scratch};
 pub use shard::{
     resolve_spin_us, ShardStats, ShardedBitslice, ShardedModel, ShardedPlan, DEFAULT_SPIN_US,
 };
-pub use wire::{parse_shard_hosts, ShardPlacement, ShardWorkerHost, WireStats};
+pub use wire::{
+    parse_shard_hosts, ShardPlacement, ShardWorkerHost, WireConfig, WireStats,
+    DEFAULT_WIRE_RETRIES, DEFAULT_WIRE_WINDOW,
+};
 
 /// Which batched LUT engine executes a batch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

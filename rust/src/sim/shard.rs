@@ -76,18 +76,26 @@
 //! (per-shard atomic levels, spin waits), `sim::wire`'s `RemoteHandoff`
 //! satisfies the same waits by frame arrival on a TCP link.  A
 //! [`crate::sim::wire::ShardPlacement`] maps each shard to a local worker
-//! thread or to a remote `polylut shard-worker` process; remote shards are driven by
-//! in-runner *proxy* threads that replay the exact same dependency
-//! schedule, shipping boundary words out and applying result frames into
-//! the shared buffers (so every hazard above still holds on this host).
+//! thread or to a remote `polylut shard-worker` process; each remote
+//! shard is driven by a *sender/receiver* thread pair over a windowed
+//! link ([`crate::sim::wire::WireConfig`]): the sender replays the exact
+//! dependency schedule and ships needs flights up to the window ahead,
+//! the receiver demuxes result frames into the shared buffers and
+//! publishes `done[s]`.  Runners with any remote shard switch the shared
+//! buffers from the parity pair to **per-boundary** buffers, so
+//! apply-on-arrival cannot clobber a previous generation (all-local
+//! runners keep the parity layout and its hazard argument unchanged).
 //!
 //! # Failure semantics
 //!
-//! A panicking kernel or a dead link no longer poisons a mutex and hangs
-//! the engine: worker panics are caught, recorded in the runner's sticky
-//! fault cell, and every in-flight and subsequent forward call returns a
-//! clean `Err` (the engine stays disabled; the coordinator falls back or
-//! surfaces the error).  All control-mutex locks recover from poisoning.
+//! A panicking kernel no longer poisons a mutex and hangs the engine:
+//! worker panics are caught, recorded in the runner's sticky fault cell,
+//! and every in-flight and subsequent forward call returns a clean `Err`
+//! (the engine stays disabled; the coordinator falls back or surfaces the
+//! error).  All control-mutex locks recover from poisoning.  A dead
+//! *link*, by contrast, is no longer sticky: the wire layer reconnects
+//! and resumes the open epoch from its boundary (`ARCHITECTURE.md` §7.4)
+//! and only an exhausted retry budget faults the engine.
 
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -105,7 +113,7 @@ use crate::nn::network::Network;
 use crate::nn::quant::unsigned_code;
 use crate::sim::bitslice::{exec_ops, flatten_cone, pack_word, unpack_word, OpStream, WORD};
 use crate::sim::plan::EvalPlan;
-use crate::sim::wire::{EngineKind, Fnv, LinkStats, RemoteLink, WireStats};
+use crate::sim::wire::{EngineKind, Fnv, Frame, LinkStats, WireConfig, WireLink, WireStats};
 
 /// Cumulative per-shard execution counters (monotonic over the engine's
 /// lifetime): `cells` counts (layer, shard) work units executed —
@@ -631,22 +639,54 @@ pub(crate) trait ShardKernel: Send + Sync + 'static {
 }
 
 /// The boundary buffers one epoch flows through: network-edge staging
-/// (boundary 0 and L) plus the two parity-indexed interior buffers
-/// (boundary b lives in `bufs[b % 2]`).  Shared by the in-process runner
-/// and the wire worker's private copies.
+/// (boundary 0 and L) plus the interior buffers, in one of two modes:
+///
+/// - **parity** ([`BufSet::for_kernel`]): two shared buffers, boundary b
+///   in `bufs[b % 2]` — the memory-lean in-process layout whose overwrite
+///   hazards `compute_deps` protects;
+/// - **per-boundary** ([`BufSet::per_boundary`]): one buffer per interior
+///   boundary — used by the wire worker's private copies, where the
+///   windowed stream may apply frames in any arrival order and parity
+///   aliasing would otherwise need its own hazard machinery.
 pub(crate) struct BufSet {
     pub(crate) input: Vec<AtomicU64>,
     pub(crate) output: Vec<AtomicU64>,
-    pub(crate) bufs: [Vec<AtomicU64>; 2],
+    bufs: Vec<Vec<AtomicU64>>,
+    parity: bool,
+}
+
+fn mk_buf(n: usize) -> Vec<AtomicU64> {
+    (0..n).map(|_| AtomicU64::new(0)).collect()
 }
 
 impl BufSet {
+    /// Parity-indexed shared buffers (the in-process runner's layout).
     pub(crate) fn for_kernel<K: ShardKernel>(kernel: &K) -> BufSet {
-        let mk = |n: usize| (0..n).map(|_| AtomicU64::new(0)).collect::<Vec<_>>();
         BufSet {
-            input: mk(kernel.in_len()),
-            output: mk(kernel.out_len()),
-            bufs: [mk(kernel.buf_len()), mk(kernel.buf_len())],
+            input: mk_buf(kernel.in_len()),
+            output: mk_buf(kernel.out_len()),
+            bufs: vec![mk_buf(kernel.buf_len()), mk_buf(kernel.buf_len())],
+            parity: true,
+        }
+    }
+
+    /// One buffer per interior boundary (the wire worker's layout: frame
+    /// application is order-independent because nothing aliases).
+    pub(crate) fn per_boundary<K: ShardKernel>(kernel: &K) -> BufSet {
+        let interior = kernel.n_layers().saturating_sub(1);
+        BufSet {
+            input: mk_buf(kernel.in_len()),
+            output: mk_buf(kernel.out_len()),
+            bufs: (0..interior.max(2)).map(|_| mk_buf(kernel.buf_len())).collect(),
+            parity: false,
+        }
+    }
+
+    fn idx(&self, b: usize) -> usize {
+        if self.parity {
+            b % 2
+        } else {
+            b - 1
         }
     }
 
@@ -655,7 +695,7 @@ impl BufSet {
         if l == 0 {
             &self.input
         } else {
-            &self.bufs[l % 2]
+            &self.bufs[self.idx(l)]
         }
     }
 
@@ -664,19 +704,19 @@ impl BufSet {
         if l + 1 == n_layers {
             &self.output
         } else {
-            &self.bufs[(l + 1) % 2]
+            &self.bufs[self.idx(l + 1)]
         }
     }
 
     /// The buffer holding boundary `b` (0 = input staging, `n_layers` =
-    /// output staging, interior = parity buffer).
+    /// output staging, interior = parity or per-boundary buffer).
     pub(crate) fn boundary(&self, b: usize, n_layers: usize) -> &[AtomicU64] {
         if b == 0 {
             &self.input
         } else if b == n_layers {
             &self.output
         } else {
-            &self.bufs[b % 2]
+            &self.bufs[self.idx(b)]
         }
     }
 }
@@ -743,9 +783,9 @@ struct ShardRunner<K: ShardKernel> {
     /// Serializes epochs: one in-flight sample/word at a time.
     call: Mutex<()>,
     workers: Vec<JoinHandle<()>>,
-    /// Stream handles of the remote links, kept to force blocked proxy
-    /// recvs awake at shutdown.
-    wake_streams: Vec<std::net::TcpStream>,
+    /// The wire links of the remote shards (closed at shutdown to wake
+    /// their sender/receiver threads).
+    links: Vec<Arc<WireLink>>,
     /// Per-link wire counters (one entry per remote shard).
     link_stats: Vec<Arc<LinkStats>>,
 }
@@ -820,15 +860,21 @@ fn worker_loop<K: ShardKernel>(inner: Arc<RunnerInner<K>>, s: usize) {
     }
 }
 
-/// Remote shard executor (coordinator side): replay the shard's exact
-/// dependency schedule against the shared buffers, but execute each cell
-/// by shipping its cross-shard reads to the worker and applying the result
-/// frame — so every producer/blocker/writer hazard holds unchanged on this
-/// host, and `done[s]` advances exactly when shard `s`'s boundary slice
-/// has landed in the shared buffers (the frame-arrival mapping of the
-/// dependency waits).
-fn proxy_loop<K: ShardKernel>(inner: Arc<RunnerInner<K>>, s: usize, mut link: RemoteLink) {
-    let plan = crate::sim::wire::wire_plan(&inner.kernel, s);
+/// Remote shard **sender** (coordinator side): replay the shard's exact
+/// dependency schedule against the shared buffers, shipping each
+/// boundary's cross-shard reads as one needs flight the moment the hazard
+/// schedule allows — up to `WireConfig::window` flights ahead of the last
+/// applied result, instead of the v1 lock-step alternation.  The hazards
+/// still hold: a flight for boundary l is read from the shared buffers
+/// only after `deps[l]` are satisfied, and every overwrite of those
+/// positions waits on `done[s]` levels this link's receiver has not yet
+/// published.
+fn wire_send_loop<K: ShardKernel>(
+    inner: Arc<RunnerInner<K>>,
+    s: usize,
+    link: Arc<WireLink>,
+    needs: Vec<Vec<(u32, Range<usize>)>>,
+) {
     let deps: Vec<&[(u32, u32)]> =
         (0..inner.kernel.n_layers()).map(|l| inner.kernel.deps(l, s)).collect();
     let mut seen = 0u64;
@@ -840,75 +886,167 @@ fn proxy_loop<K: ShardKernel>(inner: Arc<RunnerInner<K>>, s: usize, mut link: Re
         if inner.handoff.fault().is_some() {
             continue;
         }
-        if let Err(e) = proxy_epoch(&inner, s, &plan, &deps, &mut link, seen) {
-            inner
-                .handoff
-                .fail(&format!("remote shard {s} ({}): {}", link.peer(), e.0));
+        if let Err(e) = send_epoch(&inner, s, &link, &needs, &deps, seen) {
+            if link.is_shutdown() {
+                break;
+            }
+            inner.handoff.fail(&format!("remote shard {s} ({}): {e}", link.peer()));
         }
     }
-    link.close();
 }
 
-fn proxy_epoch<K: ShardKernel>(
+fn send_epoch<K: ShardKernel>(
     inner: &RunnerInner<K>,
     s: usize,
-    plan: &crate::sim::wire::WirePlan,
+    link: &WireLink,
+    needs: &[Vec<(u32, Range<usize>)>],
     deps: &[&[(u32, u32)]],
-    link: &mut RemoteLink,
     epoch: u64,
 ) -> Result<(), HandoffError> {
-    let n_layers = inner.kernel.n_layers();
-    link.start_epoch(epoch)?;
+    link.begin_epoch(epoch)?;
     let mut waited = 0u64;
-    for l in 0..n_layers {
+    for (l, layer_needs) in needs.iter().enumerate() {
+        // A boundary with no cross-shard needs ships nothing, so its
+        // dep-waits would protect no reads — and MUST be skipped: the
+        // worker does not block on empty flights, so the epoch can
+        // complete (and the next epoch's handoff.reset() zero the levels)
+        // while this thread still sits in a tail wait, closing a
+        // sender ⇄ local-shard ⇄ worker wait cycle.  Skipping empty
+        // boundaries outright means the sender never outlives the epoch:
+        // every remaining flight is one the worker must consume before
+        // the epoch can finish.
+        if layer_needs.is_empty() {
+            continue;
+        }
         for &(d, thr) in deps[l] {
             if inner.handoff.wait(d as usize, thr)? {
                 waited += 1;
             }
         }
         let src = inner.bufs.src(l);
-        for (producer, range) in &plan.needs[l] {
-            let words: Vec<u64> =
-                src[range.clone()].iter().map(|w| w.load(Ordering::Relaxed)).collect();
-            link.send_need(epoch, l as u32, *producer, range.start as u32, words)?;
-        }
-        let rr = plan.result[l].clone();
-        let words = link.recv_result(epoch, l as u32 + 1, s as u32, &rr)?;
-        let dst = inner.bufs.dst(l, n_layers);
-        for (slot, w) in dst[rr].iter().zip(&words) {
-            slot.store(*w, Ordering::Relaxed);
-        }
-        if l + 1 == n_layers {
-            inner.cells[s].fetch_add(n_layers as u64, Ordering::Relaxed);
-            inner.waits[s].fetch_add(waited, Ordering::Relaxed);
-        }
-        inner.handoff.publish(s, l as u32 + 1)?;
+        let frames: Vec<Frame> = layer_needs
+            .iter()
+            .map(|(producer, range)| {
+                let words: Vec<u64> =
+                    src[range.clone()].iter().map(|w| w.load(Ordering::Relaxed)).collect();
+                Frame::data(epoch, l as u32, *producer, range.start as u32, words)
+            })
+            .collect();
+        link.ship_flight(l as u32, &frames)?;
     }
+    inner.waits[s].fetch_add(waited, Ordering::Relaxed);
     Ok(())
+}
+
+/// Remote shard **receiver** (coordinator side): demultiplex result frames
+/// off the link (any arrival order — the link's completion table hands
+/// them over as a contiguous boundary prefix, dropping resume-replay
+/// duplicates), apply each to the shared buffers, and advance `done[s]` —
+/// so every other shard's dependency wait on this shard is satisfied
+/// exactly when its slice has landed, as in v1.
+fn wire_recv_loop<K: ShardKernel>(
+    inner: Arc<RunnerInner<K>>,
+    s: usize,
+    link: Arc<WireLink>,
+    result: Vec<Range<usize>>,
+) {
+    let n_layers = inner.kernel.n_layers();
+    loop {
+        match link.recv_applied() {
+            Ok(None) => return, // shutdown
+            Ok(Some(f)) => {
+                let l = f.boundary as usize - 1;
+                let rr = &result[l];
+                if f.shard as usize != s
+                    || f.start as usize != rr.start
+                    || f.words.len() != rr.len()
+                {
+                    let msg = format!(
+                        "result frame mismatch: got (boundary {}, shard {}, {}+{}), \
+                         want (boundary {}, shard {s}, {}+{})",
+                        f.boundary,
+                        f.shard,
+                        f.start,
+                        f.words.len(),
+                        f.boundary,
+                        rr.start,
+                        rr.len(),
+                    );
+                    link.kill(&msg);
+                    inner.handoff.fail(&format!(
+                        "remote shard {s} ({}): {msg}",
+                        link.peer()
+                    ));
+                    return;
+                }
+                let dst = inner.bufs.dst(l, n_layers);
+                for (slot, w) in dst[rr.clone()].iter().zip(&f.words) {
+                    slot.store(*w, Ordering::Relaxed);
+                }
+                link.mark_applied(f.boundary);
+                if f.boundary as usize == n_layers {
+                    inner.cells[s].fetch_add(n_layers as u64, Ordering::Relaxed);
+                }
+                let _ = inner.handoff.publish(s, f.boundary);
+            }
+            Err(e) => {
+                if !link.is_shutdown() {
+                    inner.handoff.fail(&format!(
+                        "remote shard {s} ({}): {e}",
+                        link.peer()
+                    ));
+                }
+                return;
+            }
+        }
+    }
 }
 
 impl<K: ShardKernel> ShardRunner<K> {
     /// All-local runner (the PR 3 behavior; cannot fail).
     fn new_local(kernel: K, spin_us: u64) -> ShardRunner<K> {
         let shards = kernel.n_shards();
-        Self::new(kernel, spin_us, EngineKind::Plan, 0, &vec![None; shards])
-            .expect("all-local shard runner construction cannot fail")
+        Self::new(
+            kernel,
+            spin_us,
+            EngineKind::Plan,
+            0,
+            &vec![None; shards],
+            WireConfig::default(),
+        )
+        .expect("all-local shard runner construction cannot fail")
     }
 
     /// Runner with a placement map: local worker threads for `None`
-    /// shards, connect-and-proxy for `Some(addr)` shards.  Fails cleanly
-    /// when a link cannot be established or the handshake (shard count /
-    /// model fingerprint) is rejected.
+    /// shards, a windowed sender/receiver thread pair per `Some(addr)`
+    /// shard.  Fails cleanly when a link cannot be established or the
+    /// handshake (shard count / model fingerprint) is rejected.
     fn new(
         kernel: K,
         spin_us: u64,
         engine: EngineKind,
         fingerprint: u64,
         placement: &[Option<String>],
+        wire: WireConfig,
     ) -> Result<ShardRunner<K>> {
         let shards = kernel.n_shards();
+        let has_remote = placement.iter().any(|p| p.is_some());
+        // All-local runners keep the memory-lean parity buffers (the PR 3
+        // layout compute_deps' hazard classes protect).  Runners with any
+        // remote shard use per-boundary buffers: the windowed receiver
+        // applies result frames the moment they arrive — possibly before
+        // the sender has even reached that boundary in the hazard
+        // schedule (a remote cell with zero cross-shard needs runs ahead
+        // of its empty flight) — and with nothing aliased there is no
+        // previous generation to clobber, so apply-on-arrival is safe and
+        // the local shards' parity-hazard waits become harmlessly
+        // conservative.
         let inner = Arc::new(RunnerInner {
-            bufs: BufSet::for_kernel(&kernel),
+            bufs: if has_remote {
+                BufSet::per_boundary(&kernel)
+            } else {
+                BufSet::for_kernel(&kernel)
+            },
             kernel,
             epoch_fast: AtomicU64::new(0),
             ctrl: Mutex::new(Ctrl { epoch: 0, shutdown: false }),
@@ -922,9 +1060,10 @@ impl<K: ShardKernel> ShardRunner<K> {
             inner: inner.clone(),
             call: Mutex::new(()),
             workers: Vec::with_capacity(shards),
-            wake_streams: Vec::new(),
+            links: Vec::new(),
             link_stats: Vec::new(),
         };
+        let n_layers = inner.kernel.n_layers();
         for s in 0..shards {
             let inner = inner.clone();
             match placement.get(s).and_then(|p| p.as_deref()) {
@@ -935,18 +1074,36 @@ impl<K: ShardKernel> ShardRunner<K> {
                         .expect("spawn shard worker"),
                 ),
                 Some(addr) => {
-                    let (link, wake) =
-                        RemoteLink::connect(addr, engine, shards, s, fingerprint)
-                            .map_err(|e| {
-                                anyhow::anyhow!("shard {s} -> {addr}: {e}")
-                            })?;
+                    let link = WireLink::connect(
+                        addr,
+                        engine,
+                        shards,
+                        s,
+                        fingerprint,
+                        n_layers,
+                        wire,
+                    )
+                    .map_err(|e| anyhow::anyhow!("shard {s} -> {addr}: {e}"))?;
                     runner.link_stats.push(link.stats());
-                    runner.wake_streams.push(wake);
+                    runner.links.push(link.clone());
+                    // One wire-plan compilation per link, split between the
+                    // thread pair (sender: needs schedule; receiver: result
+                    // ranges).
+                    let wp = crate::sim::wire::wire_plan(&inner.kernel, s);
+                    let (needs, result) = (wp.needs, wp.result);
+                    let send_inner = inner.clone();
+                    let send_link = link.clone();
                     runner.workers.push(
                         std::thread::Builder::new()
-                            .name(format!("polylut-proxy-{s}"))
-                            .spawn(move || proxy_loop(inner, s, link))
-                            .expect("spawn shard proxy"),
+                            .name(format!("polylut-wire-send-{s}"))
+                            .spawn(move || wire_send_loop(send_inner, s, send_link, needs))
+                            .expect("spawn wire sender"),
+                    );
+                    runner.workers.push(
+                        std::thread::Builder::new()
+                            .name(format!("polylut-wire-recv-{s}"))
+                            .spawn(move || wire_recv_loop(inner, s, link, result))
+                            .expect("spawn wire receiver"),
                     );
                 }
             }
@@ -1016,9 +1173,11 @@ impl<K: ShardKernel> Drop for ShardRunner<K> {
             ctrl.shutdown = true;
             self.inner.start_cv.notify_all();
         }
-        // Unblock any proxy parked in a socket read so join() can't hang.
-        for s in &self.wake_streams {
-            let _ = s.shutdown(std::net::Shutdown::Both);
+        // Close every link: sets the shutdown flag and shuts the socket,
+        // so senders blocked on the window gate and receivers parked in a
+        // read unblock and join() can't hang.
+        for link in &self.links {
+            link.close();
         }
         for h in self.workers.drain(..) {
             let _ = h.join();
@@ -1259,17 +1418,18 @@ impl ShardedPlan {
     pub fn compile(net: &Network, tables: &NetworkTables, shards: usize) -> ShardedPlan {
         let (pnet, ptables) = permuted_for_shards(net, tables);
         let kernel = plan_kernel_of(&pnet, &ptables, shards);
-        Self::from_kernel(kernel, resolve_spin_us(None, false), 0, &[])
+        Self::from_kernel(kernel, resolve_spin_us(None, false), 0, &[], WireConfig::default())
             .expect("all-local plan shards cannot fail")
     }
 
-    /// Build from a compiled kernel and a placement map (shared with
-    /// [`ShardedModel::compile_placed`]).
+    /// Build from a compiled kernel, a placement map and the wire knobs
+    /// (shared with [`ShardedModel::compile_placed_wire`]).
     pub(crate) fn from_kernel(
         kernel: PlanKernel,
         spin_us: u64,
         fingerprint: u64,
         placement: &[Option<String>],
+        wire: WireConfig,
     ) -> Result<ShardedPlan> {
         let n_features = kernel.plan.n_features();
         let n_outputs = kernel.plan.n_outputs();
@@ -1277,7 +1437,14 @@ impl ShardedPlan {
         let out_step = kernel.plan.out_step;
         let shards = kernel.shards;
         Ok(ShardedPlan {
-            runner: ShardRunner::new(kernel, spin_us, EngineKind::Plan, fingerprint, placement)?,
+            runner: ShardRunner::new(
+                kernel,
+                spin_us,
+                EngineKind::Plan,
+                fingerprint,
+                placement,
+                wire,
+            )?,
             n_features,
             n_outputs,
             in_bits,
@@ -1614,17 +1781,18 @@ impl ShardedBitslice {
     ) -> ShardedBitslice {
         let (pnet, ptables) = permuted_for_shards(net, tables);
         let kernel = bits_kernel_of(&pnet, &ptables, shards, workers);
-        Self::from_kernel(kernel, resolve_spin_us(None, false), 0, &[])
+        Self::from_kernel(kernel, resolve_spin_us(None, false), 0, &[], WireConfig::default())
             .expect("all-local bitslice shards cannot fail")
     }
 
-    /// Build from a compiled kernel and a placement map (shared with
-    /// [`ShardedModel::compile_placed`]).
+    /// Build from a compiled kernel, a placement map and the wire knobs
+    /// (shared with [`ShardedModel::compile_placed_wire`]).
     pub(crate) fn from_kernel(
         kernel: BitsliceKernel,
         spin_us: u64,
         fingerprint: u64,
         placement: &[Option<String>],
+        wire: WireConfig,
     ) -> Result<ShardedBitslice> {
         Ok(ShardedBitslice {
             n_features: kernel.n_features,
@@ -1641,6 +1809,7 @@ impl ShardedBitslice {
                 EngineKind::Bitslice,
                 fingerprint,
                 placement,
+                wire,
             )?,
         })
     }
@@ -1779,6 +1948,30 @@ impl ShardedModel {
         placement: &[Option<String>],
         spin_us: Option<u64>,
     ) -> Result<ShardedModel> {
+        Self::compile_placed_wire(
+            net,
+            tables,
+            shards,
+            workers,
+            placement,
+            spin_us,
+            WireConfig::default(),
+        )
+    }
+
+    /// [`ShardedModel::compile_placed`] with explicit wire knobs: the
+    /// in-flight window (`--wire-window`; 1 = v1 lock-step pacing) and the
+    /// reconnect-and-resume retry budget (`--wire-retries`) every remote
+    /// link uses.
+    pub fn compile_placed_wire(
+        net: &Network,
+        tables: &NetworkTables,
+        shards: usize,
+        workers: usize,
+        placement: &[Option<String>],
+        spin_us: Option<u64>,
+        wire: WireConfig,
+    ) -> Result<ShardedModel> {
         let shards = shards.max(1);
         anyhow::ensure!(
             placement.len() <= shards,
@@ -1794,12 +1987,14 @@ impl ShardedModel {
             spin_us,
             fingerprint,
             placement,
+            wire,
         )?;
         let bits = ShardedBitslice::from_kernel(
             bits_kernel_of(&pnet, &ptables, shards, workers),
             spin_us,
             fingerprint,
             placement,
+            wire,
         )?;
         Ok(ShardedModel { plan, bits, shards, spin_us })
     }

@@ -13,10 +13,11 @@
 //!   plane-range, generation parity)` header, FNV-1a checksum, raw `u64`
 //!   payload words.  Corrupted input of any kind decodes to a clean
 //!   [`WireError`], never a panic.
-//! - the **coordinator side**: `RemoteLink` (connect + handshake + framed
-//!   send/recv with per-link [`WireStats`]) used by the shard runner's
-//!   proxy threads, and [`parse_shard_hosts`] for the
-//!   `--shard-hosts` placement map.
+//! - the **coordinator side**: `WireLink` (connect + resume handshake +
+//!   windowed framed IO with per-link [`WireStats`]) shared by the shard
+//!   runner's sender/receiver thread pair, and [`parse_shard_hosts`] for
+//!   the `--shard-hosts` placement map (duplicate addresses rejected at
+//!   parse time).
 //! - the **worker side**: [`ShardWorkerHost`] (the `polylut shard-worker`
 //!   process body) and `RemoteHandoff`, the `sim::shard::Handoff`
 //!   implementation that maps the per-cell `(shard, threshold)` dependency
@@ -24,19 +25,28 @@
 //!   all of its expected frames for a boundary have been applied to the
 //!   worker's private buffers.
 //!
-//! The per-epoch conversation on one link (one engine × one shard) is
-//! strictly alternating — `Start`, then per layer: needs frames from the
-//! coordinator, one result frame back — so frame application order is
-//! total (TCP) and the worker needs no overwrite-hazard machinery of its
-//! own; the coordinator proxy replays the full hazard schedule before
-//! touching the shared buffers.  See `ARCHITECTURE.md` §7 for the frame
-//! layout diagram and the failure-behavior contract.
+//! Since wire handoff v2 the per-link conversation is a **pipelined,
+//! windowed stream**, not a lock-step request/response alternation: a
+//! per-link *sender* ships the needs flight for boundary l as soon as the
+//! hazard schedule allows — up to [`WireConfig::window`] flights ahead of
+//! the last applied result — while a *receiver* demultiplexes result
+//! frames through a per-`(epoch, boundary, shard)` completion table, so
+//! completion no longer assumes TCP delivery order and frames of adjacent
+//! epochs may share a flight.  Link failures are no longer sticky: the
+//! coordinator keeps a per-epoch replay log, re-handshakes on reconnect
+//! (fingerprint + resume-epoch header in the Hello frame) and replays the
+//! open epoch from its boundary; only an exhausted retry budget
+//! ([`WireConfig::retries`]) faults the engine and lets `Backend::route`
+//! degrade to the in-process plan.  See `ARCHITECTURE.md` §7 for the
+//! frame layout, the window diagram and the retry → resume → degrade
+//! failure ladder.
 
+use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
-use std::net::{Shutdown, TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
 use std::ops::Range;
-use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -80,10 +90,13 @@ impl Fnv {
 // Frame codec
 // ---------------------------------------------------------------------------
 
-/// Versioned frame magic: ASCII `PLW1`.  A major protocol change bumps the
+/// Versioned frame magic: ASCII `PLW2`.  A major protocol change bumps the
 /// trailing digit, so mismatched builds fail the handshake with
-/// [`WireError::BadMagic`] instead of misparsing frames.
-pub const MAGIC: u32 = u32::from_le_bytes(*b"PLW1");
+/// [`WireError::BadMagic`] instead of misparsing frames.  `PLW1` was the
+/// lock-step request/response protocol; `PLW2` is the pipelined, windowed
+/// stream with the resume handshake (Hello carries a resume-epoch and
+/// window header).
+pub const MAGIC: u32 = u32::from_le_bytes(*b"PLW2");
 
 /// Header bytes after the `u32` length prefix.
 const HEADER_LEN: usize = 40;
@@ -96,7 +109,9 @@ pub const MAX_FRAME_WORDS: usize = 1 << 23;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FrameKind {
     /// Connection opener (coordinator → worker): payload
-    /// `[engine, shards, fingerprint]`, `shard` field = claimed shard.
+    /// `[engine, shards, fingerprint, resume_epoch, window]`, `shard`
+    /// field = claimed shard (the last two entries are the v2 resume
+    /// handshake).
     Hello,
     /// Handshake accept (worker → coordinator): payload `[fingerprint]`.
     HelloAck,
@@ -215,7 +230,7 @@ impl std::fmt::Display for WireError {
         match self {
             WireError::Io(e) => write!(f, "wire i/o: {e}"),
             WireError::BadMagic(m) => {
-                write!(f, "bad frame magic {m:#010x} (want {MAGIC:#010x} = \"PLW1\")")
+                write!(f, "bad frame magic {m:#010x} (want {MAGIC:#010x} = \"PLW2\")")
             }
             WireError::BadKind(k) => write!(f, "unknown frame kind {k}"),
             WireError::Truncated { need, got } => {
@@ -362,6 +377,90 @@ fn frame_bytes(words: usize) -> u64 {
     (4 + HEADER_LEN + 8 * words) as u64
 }
 
+// ---------------------------------------------------------------------------
+// Patient (progress-aware) frame reads
+// ---------------------------------------------------------------------------
+
+/// Consecutive zero-progress read-timeout windows (each [`RECV_TIMEOUT`]
+/// long) before a mid-epoch peer is declared dead.  The liveness bound is
+/// **progress-aware**: any byte arriving resets the count, so a slow wide
+/// frame trickling in under the windowed stream can take arbitrarily long
+/// without being misclassified as a half-open peer — only a peer that goes
+/// completely silent for `LIVENESS_STRIKES × RECV_TIMEOUT` mid-epoch is
+/// dropped.
+const LIVENESS_STRIKES: u32 = 2;
+
+/// Read exactly `buf.len()` bytes, tolerating read-timeout wakeups as long
+/// as bytes keep arriving (see [`LIVENESS_STRIKES`]).  With `idle_ok`,
+/// a timeout *before the first byte* returns `Ok(false)` instead of
+/// striking — the between-epochs idle classification, where a silent peer
+/// is an idle coordinator, not a dead one.  Returns `Ok(true)` when the
+/// buffer is filled.
+fn read_full_patient(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    idle_ok: bool,
+) -> Result<bool, WireError> {
+    let mut filled = 0usize;
+    let mut zero_windows = 0u32;
+    while filled < buf.len() {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(WireError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "link closed",
+                )))
+            }
+            Ok(n) => {
+                filled += n;
+                zero_windows = 0;
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if filled == 0 && idle_ok {
+                    return Ok(false);
+                }
+                zero_windows += 1;
+                if zero_windows >= LIVENESS_STRIKES {
+                    return Err(WireError::Io(e));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one length-prefixed frame with the progress-aware liveness bound.
+/// `Ok(None)` = idle timeout before any byte (only when `idle_ok`); once a
+/// frame has started, only sustained zero-progress fails the read, so the
+/// length prefix and body are never desynchronized by a timeout landing
+/// mid-frame.
+fn read_frame_patient(
+    stream: &mut TcpStream,
+    idle_ok: bool,
+) -> Result<Option<Frame>, WireError> {
+    let mut len4 = [0u8; 4];
+    if !read_full_patient(stream, &mut len4, idle_ok)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len < HEADER_LEN {
+        return Err(WireError::Truncated { need: HEADER_LEN, got: len });
+    }
+    if len > HEADER_LEN + 8 * MAX_FRAME_WORDS {
+        return Err(WireError::Oversized { words: (len - HEADER_LEN) / 8 });
+    }
+    let mut body = vec![0u8; len];
+    read_full_patient(stream, &mut body, false)?;
+    decode_frame(&body).map(Some)
+}
+
 fn fault_frame(msg: &str) -> Frame {
     let bytes = msg.as_bytes();
     let mut words = Vec::with_capacity(bytes.len().div_ceil(8));
@@ -391,6 +490,50 @@ fn fault_message(f: &Frame) -> String {
 }
 
 // ---------------------------------------------------------------------------
+// Wire configuration (window + retry knobs)
+// ---------------------------------------------------------------------------
+
+/// Default in-flight window: needs flights (one per layer boundary) a link's
+/// sender may run ahead of the last applied result.  Four flights hide the
+/// round-trip on every geometry the benches track; `1` reproduces the v1
+/// lock-step pacing exactly.
+pub const DEFAULT_WIRE_WINDOW: usize = 4;
+
+/// Default reconnect budget: dial attempts per link incident (exponential
+/// backoff between attempts) before the engine faults and `Backend::route`
+/// degrades to the in-process plan.
+pub const DEFAULT_WIRE_RETRIES: u32 = 6;
+
+/// Tuning knobs of the v2 wire protocol, plumbed from `ServerConfig` /
+/// `polylut serve --wire-window / --wire-retries` down to every link.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireConfig {
+    /// Maximum needs flights (one per layer boundary) in flight per link
+    /// ahead of the last applied result.  `1` = lock-step parity with the
+    /// v1 protocol; values ≥ the layer count stream a whole epoch without
+    /// ever blocking on a result.
+    pub window: usize,
+    /// Reconnect attempts per link incident before the sticky engine
+    /// fault.  The *initial* connect at compile time keeps a short fixed
+    /// budget (a dead address is a config error, not an outage).
+    pub retries: u32,
+}
+
+impl Default for WireConfig {
+    fn default() -> WireConfig {
+        WireConfig { window: DEFAULT_WIRE_WINDOW, retries: DEFAULT_WIRE_RETRIES }
+    }
+}
+
+impl WireConfig {
+    /// The v1 pacing: one flight in flight, ship needs(l) only after the
+    /// result of boundary l has been applied.
+    pub fn lock_step() -> WireConfig {
+        WireConfig { window: 1, ..WireConfig::default() }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Placement + stats
 // ---------------------------------------------------------------------------
 
@@ -402,6 +545,16 @@ pub type ShardPlacement = Vec<Option<String>>;
 /// Parse a `--shard-hosts` spec (`addr,addr,…`; `local`, `-` or an empty
 /// entry keep that shard on a local thread; unlisted trailing shards are
 /// local) into a placement map of length `shards`.
+///
+/// Duplicate `host:port` entries — two distinct shards pointed at the
+/// same worker address — are rejected here, at parse time, with a message
+/// naming both shard indices.  A duplicated entry in a hand-written spec
+/// is almost always a copy-paste typo that silently halves the fleet (two
+/// shards quietly share one host's cores and links), so the CLI refuses
+/// it up front.  Hosting several shards from one worker process remains
+/// fully supported for *programmatic* placements (the loopback tests and
+/// benches do exactly that); operators who genuinely want it can run one
+/// worker process per listed port on the same host.
 pub fn parse_shard_hosts(spec: &str, shards: usize) -> Result<ShardPlacement> {
     let mut placement: ShardPlacement = Vec::with_capacity(shards);
     if !spec.trim().is_empty() {
@@ -410,6 +563,16 @@ pub fn parse_shard_hosts(spec: &str, shards: usize) -> Result<ShardPlacement> {
             let entry = if e.is_empty() || e == "local" || e == "-" {
                 None
             } else if e.contains(':') {
+                if let Some(prev) =
+                    placement.iter().position(|p| p.as_deref() == Some(e))
+                {
+                    anyhow::bail!(
+                        "--shard-hosts entry {i} duplicates {e:?} (already used for \
+                         shard {prev}): each shard needs its own worker address — \
+                         run one `polylut shard-worker` per listed shard, or mark \
+                         extra shards `local`"
+                    );
+                }
                 Some(e.to_string())
             } else {
                 anyhow::bail!("--shard-hosts entry {e:?} is not host:port / local / -");
@@ -439,18 +602,32 @@ pub struct WireStats {
     pub bytes: u64,
     /// Nanoseconds spent blocked waiting for a frame to arrive.
     pub wait_ns: u64,
-    /// Connection attempts beyond each link's first (retries at connect).
+    /// Connection attempts beyond each link's first (retries at connect and
+    /// every reconnect-and-resume dial).
     pub reconnects: u64,
+    /// Successful reconnect-and-resume handshakes (the open epoch was
+    /// replayed from its boundary, or an idle link was re-established).
+    pub resumes: u64,
+    /// Link incidents whose reconnect budget ([`WireConfig::retries`]) was
+    /// exhausted — each one faulted its engine and degraded routing.
+    pub retry_exhausted: u64,
+    /// High-water mark of in-flight needs flights (the `--wire-window`
+    /// unit: one flight per layer boundary) observed on any link.
+    pub inflight_hwm: u64,
 }
 
 impl WireStats {
-    /// Element-wise sum of two counter sets.
+    /// Merge two counter sets: element-wise sums, except the in-flight
+    /// high-water mark, which takes the max.
     pub fn merged(self, o: WireStats) -> WireStats {
         WireStats {
             frames: self.frames + o.frames,
             bytes: self.bytes + o.bytes,
             wait_ns: self.wait_ns + o.wait_ns,
             reconnects: self.reconnects + o.reconnects,
+            resumes: self.resumes + o.resumes,
+            retry_exhausted: self.retry_exhausted + o.retry_exhausted,
+            inflight_hwm: self.inflight_hwm.max(o.inflight_hwm),
         }
     }
 }
@@ -462,6 +639,9 @@ pub(crate) struct LinkStats {
     bytes: AtomicU64,
     wait_ns: AtomicU64,
     reconnects: AtomicU64,
+    resumes: AtomicU64,
+    retry_exhausted: AtomicU64,
+    inflight_hwm: AtomicU64,
 }
 
 impl LinkStats {
@@ -476,6 +656,9 @@ impl LinkStats {
             bytes: self.bytes.load(Ordering::Relaxed),
             wait_ns: self.wait_ns.load(Ordering::Relaxed),
             reconnects: self.reconnects.load(Ordering::Relaxed),
+            resumes: self.resumes.load(Ordering::Relaxed),
+            retry_exhausted: self.retry_exhausted.load(Ordering::Relaxed),
+            inflight_hwm: self.inflight_hwm.load(Ordering::Relaxed),
         }
     }
 }
@@ -512,10 +695,10 @@ impl EngineKind {
 /// - `result[l]` — the boundary l+1 positions the worker ships back.
 /// - `deps[l]` — the worker-side `(shard, threshold)` waits; satisfied by
 ///   frame arrival (see `RemoteHandoff`).  Only *producer*-class waits
-///   appear: the worker's buffers are private, written solely by in-order
-///   frame application and its own strictly sequential cells, so the
-///   reader-blocker / writer-ordering hazards of the shared-memory path
-///   cannot arise.
+///   appear: the worker's buffers are private **and per-boundary**, so
+///   frame application in any arrival order aliases nothing and the
+///   reader-blocker / writer-ordering hazards of the shared parity
+///   buffers cannot arise.
 /// - `counts[l]` — `(producer, frames)` expected per boundary, used to
 ///   advance a producer's level once its last frame lands.
 pub(crate) struct WirePlan {
@@ -574,188 +757,618 @@ pub(crate) fn wire_plan<K: ShardKernel>(k: &K, s: usize) -> WirePlan {
     WirePlan { needs, result, deps, counts }
 }
 
+/// Frames the coordinator ships per epoch for this plan (needs runs + the
+/// Start frame) — sizes the worker's bounded pending buffer under the
+/// windowed stream.
+fn frames_per_epoch(plan: &WirePlan) -> usize {
+    plan.needs.iter().map(|runs| runs.len()).sum::<usize>() + 1
+}
+
 // ---------------------------------------------------------------------------
-// Coordinator side: RemoteLink
+// Coordinator side: WireLink (windowed sender + demuxing receiver)
 // ---------------------------------------------------------------------------
 
-/// How long the coordinator waits for one frame from a worker before the
-/// link is declared dead (a hung worker must become a clean engine error,
-/// not a hung server).
+/// How long one blocking read waits before waking to re-check liveness (a
+/// hung worker must become a clean engine error, not a hung server; see
+/// [`LIVENESS_STRIKES`] for the mid-epoch bound).
 const RECV_TIMEOUT: Duration = Duration::from_secs(30);
-/// Connection attempts per link at compile time (retries count into
-/// `WireStats::reconnects`).
+/// Connection attempts for the *initial* compile-time connect (a dead
+/// address at compile time is a config error — fail fast; reconnects after
+/// an outage use [`WireConfig::retries`]).
 const CONNECT_ATTEMPTS: u32 = 3;
+/// Per-attempt dial bound: a black-holing host must cost one dial attempt
+/// seconds, not the kernel's multi-minute SYN timeout — shutdown (and the
+/// retry budget) stays responsive during an outage.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
 
-/// Coordinator end of one (engine, shard) link, used by the shard runner's
-/// proxy threads.  All sends/recvs are whole frames; `recv` time funds
-/// `wait_ns`.
-pub(crate) struct RemoteLink {
-    stream: TcpStream,
-    peer: String,
+/// The error every blocked link call returns once the runner shuts down.
+fn shutdown_error() -> WireError {
+    WireError::Io(std::io::Error::new(std::io::ErrorKind::Interrupted, "link shut down"))
+}
+
+/// Mutable link state, guarded by [`WireLink::core`].
+struct LinkCore {
+    /// Live stream (`None` after an idle drop, until the next epoch's
+    /// first ship redials).
+    stream: Option<TcpStream>,
+    /// Bumped on every successful (re)connect; a failed IO call whose
+    /// observed generation is stale was already recovered by the peer
+    /// thread and needs no action of its own.
+    generation: u64,
+    /// A reconnect-and-resume is in progress (single-flight guard).
+    reconnecting: bool,
+    /// Sticky link death (retry budget exhausted / protocol violation).
+    dead: Option<String>,
+    /// Epoch currently (or last) streamed on this link.
+    epoch: u64,
+    /// `Start` shipped, final result not yet applied.
+    epoch_open: bool,
+    /// Needs flights shipped this epoch (only boundaries with cross-shard
+    /// needs ship a flight).
+    shipped: u32,
+    /// Shipped flights whose boundary's result has been applied — the
+    /// window credit.  Counted in *flight* units (not raw boundary
+    /// numbers: boundaries without a flight must neither consume nor
+    /// grant window room, or `--wire-window` would not bind).
+    acked: u32,
+    /// Boundaries of the shipped flights, in ship order, not yet acked.
+    flight_bounds: VecDeque<u32>,
+    /// Result boundaries applied this epoch (contiguous prefix; drives
+    /// the completion-table dedupe).
+    applied: u32,
+    /// Replay log of the open epoch (`Start` + every needs frame): a
+    /// reconnect replays it from the epoch boundary, so a link death
+    /// mid-epoch costs a round of recomputation, not the batch.
+    replay: Vec<Frame>,
+    /// Completion table for result frames that arrived ahead of the next
+    /// contiguous boundary (keyed by boundary; epoch-checked on insert) —
+    /// completion no longer assumes TCP delivery order.
+    pending: BTreeMap<u32, Frame>,
+}
+
+/// Coordinator end of one (engine, shard) link.  Two runner threads share
+/// it: the *sender* replays the shard's hazard schedule and ships needs
+/// flights up to [`WireConfig::window`] boundaries ahead, the *receiver*
+/// demultiplexes result frames through the completion table, applies them
+/// to the shared buffers and advances `done[s]`.  Either thread recovers a
+/// failed stream via [`WireLink::recover`] (reconnect, re-handshake with a
+/// resume-epoch header, replay the open epoch); the other thread observes
+/// the bumped generation and retries transparently.
+pub(crate) struct WireLink {
+    addr: String,
+    engine: EngineKind,
+    shards: usize,
+    shard: usize,
+    fingerprint: u64,
+    cfg: WireConfig,
+    n_layers: usize,
+    core: Mutex<LinkCore>,
+    cv: Condvar,
+    shutdown: AtomicBool,
     stats: Arc<LinkStats>,
 }
 
-impl RemoteLink {
-    /// Connect to a shard worker and run the handshake.  Returns the link
-    /// plus a second stream handle the runner keeps for shutdown wakeups.
+impl WireLink {
+    /// Connect to a shard worker and run the handshake (fail-fast initial
+    /// budget — see [`CONNECT_ATTEMPTS`]).
     pub(crate) fn connect(
         addr: &str,
         engine: EngineKind,
         shards: usize,
         shard: usize,
         fingerprint: u64,
-    ) -> Result<(RemoteLink, TcpStream), WireError> {
-        let stats = Arc::new(LinkStats::default());
-        let mut last: Option<std::io::Error> = None;
-        let mut stream = None;
-        for attempt in 0..CONNECT_ATTEMPTS {
-            if attempt > 0 {
-                stats.reconnects.fetch_add(1, Ordering::Relaxed);
-                std::thread::sleep(Duration::from_millis(50 << attempt));
-            }
-            match TcpStream::connect(addr) {
-                Ok(s) => {
-                    stream = Some(s);
-                    break;
-                }
-                Err(e) => last = Some(e),
-            }
-        }
-        let stream = match stream {
-            Some(s) => s,
-            None => {
-                return Err(WireError::Io(last.unwrap_or_else(|| {
-                    std::io::Error::new(std::io::ErrorKind::Other, "connect failed")
-                })))
-            }
-        };
+        n_layers: usize,
+        cfg: WireConfig,
+    ) -> Result<Arc<WireLink>, WireError> {
+        let link = Arc::new(WireLink {
+            addr: addr.to_string(),
+            engine,
+            shards,
+            shard,
+            fingerprint,
+            cfg,
+            n_layers,
+            core: Mutex::new(LinkCore {
+                stream: None,
+                generation: 0,
+                reconnecting: false,
+                dead: None,
+                epoch: 0,
+                epoch_open: false,
+                shipped: 0,
+                acked: 0,
+                flight_bounds: VecDeque::new(),
+                applied: 0,
+                replay: Vec::new(),
+                pending: BTreeMap::new(),
+            }),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            stats: Arc::new(LinkStats::default()),
+        });
+        let stream = link.dial(0, CONNECT_ATTEMPTS, false)?;
+        link.lock().stream = Some(stream);
+        Ok(link)
+    }
+
+    fn lock(&self) -> MutexGuard<'_, LinkCore> {
+        self.core.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub(crate) fn peer(&self) -> &str {
+        &self.addr
+    }
+
+    pub(crate) fn stats(&self) -> Arc<LinkStats> {
+        self.stats.clone()
+    }
+
+    pub(crate) fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::Relaxed)
+    }
+
+    /// One dial + handshake attempt (bounded by [`CONNECT_TIMEOUT`]).
+    fn try_dial(&self, resume_epoch: u64) -> Result<TcpStream, WireError> {
+        let sockaddr = self.addr.to_socket_addrs()?.next().ok_or_else(|| {
+            WireError::Io(std::io::Error::new(
+                std::io::ErrorKind::AddrNotAvailable,
+                format!("{} resolves to no address", self.addr),
+            ))
+        })?;
+        let mut stream = TcpStream::connect_timeout(&sockaddr, CONNECT_TIMEOUT)?;
         stream.set_nodelay(true)?;
         stream.set_read_timeout(Some(RECV_TIMEOUT))?;
-        let wake = stream.try_clone()?;
-        let mut link = RemoteLink { stream, peer: addr.to_string(), stats };
         let hello = Frame {
             kind: FrameKind::Hello,
             parity: 0,
-            epoch: 0,
+            epoch: resume_epoch,
             boundary: 0,
-            shard: shard as u32,
+            shard: self.shard as u32,
             start: 0,
-            words: vec![engine as u64, shards as u64, fingerprint],
+            words: vec![
+                self.engine as u64,
+                self.shards as u64,
+                self.fingerprint,
+                resume_epoch,
+                self.cfg.window.max(1) as u64,
+            ],
         };
-        link.send(&hello)?;
-        let ack = link.recv()?;
+        write_frame(&mut stream, &hello)?;
+        self.stats.count_frame(hello.words.len());
+        let ack = read_frame(&mut stream)?;
+        self.stats.count_frame(ack.words.len());
         match ack.kind {
             FrameKind::HelloAck => {
-                if ack.words.first().copied() != Some(fingerprint) {
+                if ack.words.first().copied() != Some(self.fingerprint) {
                     return Err(WireError::Protocol(format!(
-                        "{addr}: model fingerprint mismatch (worker {:#018x}, \
-                         coordinator {fingerprint:#018x}) — same weights, shard \
-                         count and build required",
-                        ack.words.first().copied().unwrap_or(0)
+                        "{}: model fingerprint mismatch (worker {:#018x}, \
+                         coordinator {:#018x}) — same weights, shard count and \
+                         build required",
+                        self.addr,
+                        ack.words.first().copied().unwrap_or(0),
+                        self.fingerprint,
                     )));
                 }
             }
             FrameKind::Fault => {
                 return Err(WireError::Protocol(format!(
-                    "{addr} rejected handshake: {}",
+                    "{} rejected handshake: {}",
+                    self.addr,
                     fault_message(&ack)
                 )))
             }
             k => {
                 return Err(WireError::Protocol(format!(
-                    "{addr}: expected HelloAck, got {k:?}"
+                    "{}: expected HelloAck, got {k:?}",
+                    self.addr
                 )))
             }
         }
-        Ok((link, wake))
+        Ok(stream)
     }
 
-    fn send(&mut self, f: &Frame) -> Result<(), WireError> {
-        write_frame(&mut self.stream, f)?;
-        self.stats.count_frame(f.words.len());
-        Ok(())
-    }
-
-    fn recv(&mut self) -> Result<Frame, WireError> {
-        let t0 = Instant::now();
-        let f = read_frame(&mut self.stream);
-        self.stats.wait_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        let f = f?;
-        self.stats.count_frame(f.words.len());
-        if f.kind == FrameKind::Fault {
-            return Err(WireError::Protocol(format!(
-                "{} faulted: {}",
-                self.peer,
-                fault_message(&f)
-            )));
+    /// Dial with a bounded retry budget and exponential backoff.  Handshake
+    /// rejections (fingerprint / shard count) are permanent and end the
+    /// loop immediately; only transport errors are retried.  `count_all`
+    /// counts every attempt into `reconnects` (resume dials); otherwise
+    /// only attempts beyond the link's first are counted.
+    fn dial(
+        &self,
+        resume_epoch: u64,
+        attempts: u32,
+        count_all: bool,
+    ) -> Result<TcpStream, WireError> {
+        let mut last: Option<WireError> = None;
+        for attempt in 0..attempts.max(1) {
+            if self.is_shutdown() {
+                return Err(shutdown_error());
+            }
+            if attempt > 0 {
+                // Shutdown-aware backoff: sleep in short slices so a
+                // runner being dropped mid-outage never waits out the
+                // whole exponential schedule.
+                let mut left = 50u64 << attempt.min(5);
+                while left > 0 && !self.is_shutdown() {
+                    let step = left.min(50);
+                    std::thread::sleep(Duration::from_millis(step));
+                    left -= step;
+                }
+                if self.is_shutdown() {
+                    return Err(shutdown_error());
+                }
+            }
+            if attempt > 0 || count_all {
+                self.stats.reconnects.fetch_add(1, Ordering::Relaxed);
+            }
+            match self.try_dial(resume_epoch) {
+                Ok(s) => return Ok(s),
+                Err(e @ WireError::Protocol(_)) => return Err(e),
+                Err(e) => last = Some(e),
+            }
         }
-        Ok(f)
+        Err(last.unwrap_or_else(|| WireError::Protocol("no connect attempts".into())))
     }
 
-    /// Announce a new epoch to the worker.
-    pub(crate) fn start_epoch(&mut self, epoch: u64) -> Result<(), WireError> {
-        self.send(&Frame::control(FrameKind::Start, epoch))
-    }
-
-    /// Ship one needs run: boundary words the remote cell will read.
-    pub(crate) fn send_need(
-        &mut self,
-        epoch: u64,
-        boundary: u32,
-        producer: u32,
-        start: u32,
-        words: Vec<u64>,
-    ) -> Result<(), WireError> {
-        self.send(&Frame::data(epoch, boundary, producer, start, words))
-    }
-
-    /// Receive and validate the result frame for `boundary` covering
-    /// exactly `expect` (the remote shard's published slice).
-    pub(crate) fn recv_result(
-        &mut self,
-        epoch: u64,
-        boundary: u32,
-        shard: u32,
-        expect: &Range<usize>,
-    ) -> Result<Vec<u64>, WireError> {
-        let f = self.recv()?;
-        if f.kind != FrameKind::Data {
-            return Err(WireError::Protocol(format!("expected Data, got {:?}", f.kind)));
+    /// Recover a failed stream: single-flight reconnect + re-handshake with
+    /// the resume-epoch header + replay of the open epoch from its
+    /// boundary.  An idle link (no epoch open) defers the redial to the
+    /// next epoch's first ship.  `Ok(())` means the link is usable again
+    /// (or was already recovered by the other thread — stale `seen`
+    /// generation); `Err` is the sticky death after the retry budget.
+    fn recover(&self, seen: u64, why: &WireError) -> Result<(), WireError> {
+        let (resume_epoch, replay) = {
+            let mut core = self.lock();
+            loop {
+                if self.is_shutdown() {
+                    return Err(shutdown_error());
+                }
+                if let Some(m) = &core.dead {
+                    return Err(WireError::Protocol(m.clone()));
+                }
+                if core.generation != seen {
+                    return Ok(());
+                }
+                if core.reconnecting {
+                    core = self.cv.wait(core).unwrap_or_else(|p| p.into_inner());
+                    continue;
+                }
+                break;
+            }
+            if let Some(s) = core.stream.take() {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+            if !core.epoch_open {
+                // Idle link: nothing to replay — reconnect lazily when the
+                // next epoch ships its Start.
+                core.generation = core.generation.wrapping_add(1);
+                self.cv.notify_all();
+                log::info!(
+                    "[wire] {}: link dropped while idle ({why}); reconnecting at \
+                     the next epoch",
+                    self.addr
+                );
+                return Ok(());
+            }
+            core.reconnecting = true;
+            (core.epoch, core.replay.clone())
+        };
+        log::warn!(
+            "[wire] {}: link failed mid-epoch ({why}); reconnect-and-resume at \
+             epoch {resume_epoch}",
+            self.addr
+        );
+        let dialed = self.dial(resume_epoch, self.cfg.retries, true).and_then(|mut s| {
+            let mut bytes = Vec::new();
+            for f in &replay {
+                bytes.extend_from_slice(&encode_frame(f)?);
+            }
+            s.write_all(&bytes)?;
+            s.flush()?;
+            // Replayed traffic is counted here, once it left — ship()
+            // skips counting on a failed write precisely so an incident
+            // accounts its frames exactly once.
+            for f in &replay {
+                self.stats.count_frame(f.words.len());
+            }
+            Ok(s)
+        });
+        let mut core = self.lock();
+        core.reconnecting = false;
+        match dialed {
+            Ok(s) => {
+                core.stream = Some(s);
+                core.generation = core.generation.wrapping_add(1);
+                self.stats.resumes.fetch_add(1, Ordering::Relaxed);
+                self.cv.notify_all();
+                log::info!(
+                    "[wire] {}: resumed epoch {resume_epoch} ({} frames replayed)",
+                    self.addr,
+                    replay.len()
+                );
+                Ok(())
+            }
+            Err(e) => {
+                self.stats.retry_exhausted.fetch_add(1, Ordering::Relaxed);
+                let msg = format!(
+                    "{}: reconnect failed after {} attempts: {e} (link originally \
+                     failed: {why})",
+                    self.addr,
+                    self.cfg.retries.max(1)
+                );
+                core.dead = Some(msg.clone());
+                self.cv.notify_all();
+                Err(WireError::Protocol(msg))
+            }
         }
-        if f.epoch != epoch
-            || f.boundary != boundary
-            || f.shard != shard
-            || f.start as usize != expect.start
-            || f.words.len() != expect.len()
+    }
+
+    /// Wait until the link accepts new frames: not reconnecting, not dead,
+    /// and (for needs flights) the in-flight window has room.
+    fn lock_gate(&self, flight: bool) -> Result<MutexGuard<'_, LinkCore>, WireError> {
+        let mut core = self.lock();
+        loop {
+            if self.is_shutdown() {
+                return Err(shutdown_error());
+            }
+            if let Some(m) = &core.dead {
+                return Err(WireError::Protocol(m.clone()));
+            }
+            let window_full = flight
+                && core.shipped.saturating_sub(core.acked) as usize
+                    >= self.cfg.window.max(1);
+            if core.reconnecting || window_full {
+                core = self.cv.wait(core).unwrap_or_else(|p| p.into_inner());
+                continue;
+            }
+            return Ok(core);
+        }
+    }
+
+    /// Append frames to the replay log and ship them in **one flight** (one
+    /// write + flush — frames of one boundary, or of adjacent epochs when
+    /// the queue drains across a `Start`, share a TCP send).  `flight`
+    /// counts the batch against the in-flight window.  Delivery is
+    /// guaranteed once this returns: a write failure recovers the link and
+    /// the replay log carries the frames.
+    fn ship(&self, frames: &[Frame], flight: Option<u32>) -> Result<(), WireError> {
+        // Encode (copy + checksum) outside the lock: a wide boundary's
+        // frames must not serialize the receiver's bookkeeping — the
+        // window credit that unblocks pipelining — against the sender.
+        let mut bytes = Vec::new();
+        for f in frames {
+            bytes.extend_from_slice(&encode_frame(f)?);
+        }
+        let (gen, stream) = {
+            let mut core = self.lock_gate(flight.is_some())?;
+            core.replay.extend(frames.iter().cloned());
+            if let Some(boundary) = flight {
+                core.shipped += 1;
+                core.flight_bounds.push_back(boundary);
+                let inflight = core.shipped.saturating_sub(core.acked) as u64;
+                self.stats.inflight_hwm.fetch_max(inflight, Ordering::Relaxed);
+            }
+            let stream = match &core.stream {
+                Some(s) => Some(s.try_clone().map_err(WireError::Io)?),
+                None => None,
+            };
+            (core.generation, stream)
+        };
+        match stream {
+            // Idle-dropped link: the recover path redials with the
+            // resume-epoch header and replays the log (which now includes
+            // these frames).
+            None => self.recover(
+                gen,
+                &WireError::Protocol("re-establishing idle link".into()),
+            ),
+            Some(mut s) => match s.write_all(&bytes).and_then(|_| s.flush()) {
+                Ok(()) => {
+                    // Count traffic only once it actually left: failed or
+                    // skipped writes are accounted by the replay instead
+                    // (no double counting per link incident).
+                    for f in frames {
+                        self.stats.count_frame(f.words.len());
+                    }
+                    Ok(())
+                }
+                // Replay delivers the frames (or the link dies cleanly).
+                Err(e) => self.recover(gen, &WireError::Io(e)),
+            },
+        }
+    }
+
+    /// Open epoch `epoch` on this link: reset the per-epoch window/replay
+    /// state and ship the `Start` frame.  The previous epoch is complete by
+    /// construction (the runner serializes epochs on the handoff levels).
+    pub(crate) fn begin_epoch(&self, epoch: u64) -> Result<(), WireError> {
         {
-            return Err(WireError::Protocol(format!(
-                "result frame mismatch: got (epoch {}, boundary {}, shard {}, \
-                 {}+{}), want (epoch {epoch}, boundary {boundary}, shard {shard}, \
-                 {}+{})",
-                f.epoch,
-                f.boundary,
-                f.shard,
-                f.start,
-                f.words.len(),
-                expect.start,
-                expect.len(),
-            )));
+            let mut core = self.lock_gate(false)?;
+            core.epoch = epoch;
+            core.epoch_open = true;
+            core.shipped = 0;
+            core.acked = 0;
+            core.flight_bounds.clear();
+            core.applied = 0;
+            core.replay.clear();
+            core.pending.clear();
         }
-        Ok(f.words)
+        self.ship(&[Frame::control(FrameKind::Start, epoch)], None)
     }
 
-    /// Best-effort clean shutdown (Bye frame + FIN).
-    pub(crate) fn close(&mut self) {
-        let _ = write_frame(&mut self.stream, &Frame::control(FrameKind::Bye, 0));
-        let _ = self.stream.shutdown(Shutdown::Both);
+    /// Ship the needs flight for `boundary` (window-gated).  Only
+    /// boundaries with cross-shard needs are shipped (the sender skips
+    /// empty ones — see `send_epoch`), and the window counts in *flight*
+    /// units on both sides (a flight is acked when its boundary's result
+    /// is applied), so `window == 1` lock-steps exactly the flights that
+    /// exist even when flightless boundaries sit between them.
+    pub(crate) fn ship_flight(
+        &self,
+        boundary: u32,
+        frames: &[Frame],
+    ) -> Result<(), WireError> {
+        self.ship(frames, Some(boundary))
     }
 
-    pub(crate) fn peer(&self) -> &str {
-        &self.peer
+    /// Receiver side: block until the next **in-order, not yet applied**
+    /// result frame of the open epoch is available.  Duplicates (resume
+    /// replays recompute boundaries the coordinator already applied) are
+    /// dropped by the completion table; frames arriving ahead of the
+    /// contiguous prefix are parked in it.  `Ok(None)` = shutdown.
+    pub(crate) fn recv_applied(&self) -> Result<Option<Frame>, WireError> {
+        loop {
+            let (mut stream, gen, idle) = {
+                let mut core = self.lock();
+                loop {
+                    if self.is_shutdown() {
+                        return Ok(None);
+                    }
+                    if let Some(m) = &core.dead {
+                        return Err(WireError::Protocol(m.clone()));
+                    }
+                    let next = core.applied + 1;
+                    if let Some(f) = core.pending.remove(&next) {
+                        return Ok(Some(f));
+                    }
+                    if core.reconnecting || core.stream.is_none() {
+                        core = self.cv.wait(core).unwrap_or_else(|p| p.into_inner());
+                        continue;
+                    }
+                    break;
+                }
+                let s = core
+                    .stream
+                    .as_ref()
+                    .expect("stream checked above")
+                    .try_clone()
+                    .map_err(WireError::Io)?;
+                (s, core.generation, !core.epoch_open)
+            };
+            let t0 = Instant::now();
+            let res = read_frame_patient(&mut stream, idle);
+            // Idle timeouts between epochs are not "blocked waiting for a
+            // frame" — funding wait_ns from them would swamp the metric on
+            // an idle server.
+            if !matches!(res, Ok(None)) {
+                self.stats
+                    .wait_ns
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            match res {
+                Ok(None) => continue, // idle timeout between epochs — benign
+                Ok(Some(f)) => {
+                    self.stats.count_frame(f.words.len());
+                    match f.kind {
+                        FrameKind::Data => {
+                            let mut core = self.lock();
+                            if f.epoch < core.epoch
+                                || (f.epoch == core.epoch && f.boundary <= core.applied)
+                            {
+                                // Stale duplicate from a resume replay.
+                                continue;
+                            }
+                            if f.epoch > core.epoch
+                                || f.boundary as usize > self.n_layers
+                                || f.shard as usize != self.shard
+                            {
+                                let msg = format!(
+                                    "{}: unexpected result frame (epoch {}, boundary \
+                                     {}, shard {}) during epoch {}",
+                                    self.addr, f.epoch, f.boundary, f.shard, core.epoch
+                                );
+                                core.dead = Some(msg.clone());
+                                self.cv.notify_all();
+                                return Err(WireError::Protocol(msg));
+                            }
+                            if f.boundary == core.applied + 1 {
+                                return Ok(Some(f));
+                            }
+                            core.pending.insert(f.boundary, f);
+                            continue;
+                        }
+                        FrameKind::Fault => {
+                            let msg = format!(
+                                "{} faulted: {}",
+                                self.addr,
+                                fault_message(&f)
+                            );
+                            let mut core = self.lock();
+                            core.dead = Some(msg.clone());
+                            self.cv.notify_all();
+                            return Err(WireError::Protocol(msg));
+                        }
+                        FrameKind::Bye => {
+                            self.recover(
+                                gen,
+                                &WireError::Protocol("worker sent Bye".into()),
+                            )?;
+                            continue;
+                        }
+                        k => {
+                            let msg = format!(
+                                "{}: unexpected {k:?} frame on the result path",
+                                self.addr
+                            );
+                            let mut core = self.lock();
+                            core.dead = Some(msg.clone());
+                            self.cv.notify_all();
+                            return Err(WireError::Protocol(msg));
+                        }
+                    }
+                }
+                Err(e) => {
+                    if self.is_shutdown() {
+                        return Ok(None);
+                    }
+                    self.recover(gen, &e)?;
+                    continue;
+                }
+            }
+        }
     }
 
-    pub(crate) fn stats(&self) -> Arc<LinkStats> {
-        self.stats.clone()
+    /// Record that the result for `boundary` has been applied to the shared
+    /// buffers (window credit + epoch-completion bookkeeping).
+    pub(crate) fn mark_applied(&self, boundary: u32) {
+        let mut core = self.lock();
+        if boundary > core.applied {
+            core.applied = boundary;
+        }
+        // Ack every shipped flight whose boundary's result (boundary
+        // l + 1 for a flight at boundary l) is now covered — flight-unit
+        // credit for the window gate.
+        while core.flight_bounds.front().is_some_and(|&l| l + 1 <= boundary) {
+            core.flight_bounds.pop_front();
+            core.acked += 1;
+        }
+        if boundary as usize == self.n_layers {
+            core.epoch_open = false;
+        }
+        self.cv.notify_all();
+    }
+
+    /// Mark the link dead with a protocol-level message (receiver-side
+    /// validation failures — not transport errors, which go through
+    /// [`WireLink::recover`]).
+    pub(crate) fn kill(&self, msg: &str) {
+        let mut core = self.lock();
+        if core.dead.is_none() {
+            core.dead = Some(msg.to_string());
+        }
+        self.cv.notify_all();
+    }
+
+    /// Best-effort clean shutdown (Bye frame + FIN) and wake every blocked
+    /// link call.
+    pub(crate) fn close(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        let mut core = self.lock();
+        if let Some(s) = core.stream.take() {
+            if let Ok(mut c) = s.try_clone() {
+                let _ = write_frame(&mut c, &Frame::control(FrameKind::Bye, 0));
+            }
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        self.cv.notify_all();
     }
 }
 
@@ -765,12 +1378,18 @@ impl RemoteLink {
 
 /// Worker-side [`Handoff`]: the per-cell `(shard, threshold)` dependency
 /// waits of the generic cell loop are satisfied by **frame arrival**.
-/// `wait(d, thr)` pulls frames off the socket (in TCP order) and applies
-/// them to the worker's private buffers until producer `d`'s level — the
-/// highest boundary for which *all* of `d`'s expected frames have landed —
-/// reaches `thr`; `publish(s, level)` ships the shard's boundary-`level`
-/// slice back to the coordinator.  The coordinator's pseudo-shard
-/// (`shards`) produces boundary 0 (input staging) at level 1.
+/// `wait(d, thr)` pulls frames off the socket and applies them through a
+/// per-`(epoch, boundary, producer)` completion table until producer `d`'s
+/// level reaches `thr`; `publish(s, level)` ships the shard's
+/// boundary-`level` slice back to the coordinator.  The coordinator's
+/// pseudo-shard (`shards`) produces boundary 0 (input staging) at level 1.
+///
+/// v2 drops the TCP-order assumption: the worker's buffers are
+/// **per-boundary** (no parity aliasing), so a current-epoch frame is
+/// applied the moment it arrives regardless of arrival order, levels
+/// advance via `fetch_max`, and frames for a *future* epoch (the windowed
+/// sender may start streaming epoch e+1 while e's tail is still being
+/// read) park in a bounded pending buffer that `begin_epoch` drains.
 struct RemoteHandoff {
     stream: Mutex<TcpStream>,
     bufs: Arc<BufSet>,
@@ -782,6 +1401,9 @@ struct RemoteHandoff {
     levels: Vec<AtomicU32>,
     /// Frames still expected per boundary, per producer (epoch-local).
     remaining: Mutex<Vec<Vec<(u32, u32)>>>,
+    /// Future-epoch frames (incl. `Start`), bounded by `pending_cap`.
+    pending: Mutex<Vec<Frame>>,
+    pending_cap: usize,
     epoch: AtomicU64,
     stats: Arc<LinkStats>,
     fault: Mutex<Option<String>>,
@@ -795,8 +1417,10 @@ impl RemoteHandoff {
         n_layers: usize,
         shards: usize,
         shard: u32,
+        window: usize,
     ) -> RemoteHandoff {
         let remaining = plan.counts.clone();
+        let pending_cap = window.max(1) * frames_per_epoch(&plan) + 4;
         RemoteHandoff {
             stream: Mutex::new(stream),
             bufs,
@@ -806,6 +1430,8 @@ impl RemoteHandoff {
             shard,
             levels: (0..=shards).map(|_| AtomicU32::new(0)).collect(),
             remaining: Mutex::new(remaining),
+            pending: Mutex::new(Vec::new()),
+            pending_cap,
             epoch: AtomicU64::new(0),
             stats: Arc::new(LinkStats::default()),
             fault: Mutex::new(None),
@@ -836,13 +1462,18 @@ impl RemoteHandoff {
         }
     }
 
-    /// Blocking read of the next frame (any kind).
+    /// Blocking read of the next frame (any kind), with the progress-aware
+    /// liveness bound: a slow wide frame trickling in never times out as
+    /// long as bytes keep arriving; only [`LIVENESS_STRIKES`] consecutive
+    /// zero-progress windows declare the peer dead (the epoch-aware fix
+    /// for the v1 whole-frame 30 s bound, which could drop a live peer
+    /// mid-epoch under the windowed stream).
     fn recv_frame(&self) -> Result<Frame, WireError> {
         let mut stream = self.stream.lock().unwrap_or_else(|p| p.into_inner());
         let t0 = Instant::now();
-        let f = read_frame(&mut *stream);
+        let f = read_frame_patient(&mut stream, false);
         self.stats.wait_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        let f = f?;
+        let f = f?.expect("idle_ok=false never yields None");
         self.stats.count_frame(f.words.len());
         Ok(f)
     }
@@ -854,7 +1485,8 @@ impl RemoteHandoff {
         Ok(())
     }
 
-    /// Reset per-epoch state on a Start frame.
+    /// Reset per-epoch state on a Start frame, then drain any pending
+    /// frames the windowed sender shipped ahead for this epoch.
     fn begin_epoch(&self, epoch: u64) -> Result<(), WireError> {
         let last = self.epoch.swap(epoch, Ordering::Relaxed);
         if epoch <= last {
@@ -866,19 +1498,69 @@ impl RemoteHandoff {
             l.store(0, Ordering::Relaxed);
         }
         *self.remaining.lock().unwrap_or_else(|p| p.into_inner()) = self.plan.counts.clone();
+        let ready: Vec<Frame> = {
+            let mut pending = self.pending.lock().unwrap_or_else(|p| p.into_inner());
+            let mut keep = Vec::new();
+            let mut ready = Vec::new();
+            for f in pending.drain(..) {
+                if f.kind == FrameKind::Data && f.epoch == epoch {
+                    ready.push(f);
+                } else if f.epoch > epoch {
+                    keep.push(f);
+                }
+                // Older frames are stale leftovers — drop.
+            }
+            *pending = keep;
+            ready
+        };
+        for f in ready {
+            self.apply_now(f)?;
+        }
         Ok(())
     }
 
-    /// Apply one incoming Data frame to the private buffers and advance the
-    /// producer's level when its boundary is complete.
-    fn apply(&self, f: Frame) -> Result<(), WireError> {
-        let epoch = self.epoch.load(Ordering::Relaxed);
-        if f.epoch != epoch {
+    /// Park a future-epoch frame in the bounded pending buffer.
+    fn pend(&self, f: Frame) -> Result<(), WireError> {
+        let mut pending = self.pending.lock().unwrap_or_else(|p| p.into_inner());
+        if pending.len() >= self.pending_cap {
             return Err(WireError::Protocol(format!(
-                "data frame for epoch {} during epoch {epoch}",
-                f.epoch
+                "pending frame buffer overflow ({} frames for future epochs)",
+                pending.len()
             )));
         }
+        pending.push(f);
+        Ok(())
+    }
+
+    /// Pop the earliest pending `Start` frame, if any.
+    fn take_pending_start(&self) -> Option<Frame> {
+        let mut pending = self.pending.lock().unwrap_or_else(|p| p.into_inner());
+        let idx = pending
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| f.kind == FrameKind::Start)
+            .min_by_key(|(_, f)| f.epoch)
+            .map(|(i, _)| i)?;
+        Some(pending.remove(idx))
+    }
+
+    /// Route one incoming Data frame through the epoch completion table:
+    /// current epoch → apply immediately (per-boundary buffers make any
+    /// arrival order safe), future epoch → pend, past epoch → drop.
+    fn apply(&self, f: Frame) -> Result<(), WireError> {
+        let epoch = self.epoch.load(Ordering::Relaxed);
+        if f.epoch > epoch {
+            return self.pend(f);
+        }
+        if f.epoch < epoch {
+            return Ok(());
+        }
+        self.apply_now(f)
+    }
+
+    /// Apply one current-epoch Data frame to the private buffers and
+    /// advance the producer's level when its boundary is complete.
+    fn apply_now(&self, f: Frame) -> Result<(), WireError> {
         let b = f.boundary as usize;
         if b >= self.n_layers {
             return Err(WireError::Protocol(format!(
@@ -917,7 +1599,10 @@ impl RemoteHandoff {
                 *n -= 1;
                 if *n == 0 {
                     let level = if q as usize == self.shards { 1 } else { f.boundary };
-                    self.levels[q as usize].store(level, Ordering::Release);
+                    // fetch_max, not store: completion is tracked per
+                    // (epoch, boundary, producer), so a level can never
+                    // regress whatever order boundaries complete in.
+                    self.levels[q as usize].fetch_max(level, Ordering::Release);
                 }
             }
             None => {
@@ -939,6 +1624,9 @@ impl Handoff for RemoteHandoff {
             let f = self.recv_frame().map_err(HandoffError::from)?;
             match f.kind {
                 FrameKind::Data => self.apply(f).map_err(HandoffError::from)?,
+                // The windowed sender may open the next epoch while this
+                // one finishes — park its Start for the serve loop.
+                FrameKind::Start => self.pend(f).map_err(HandoffError::from)?,
                 FrameKind::Fault => {
                     return Err(HandoffError(format!(
                         "coordinator faulted: {}",
@@ -1000,17 +1688,33 @@ pub struct ShardWorkerHost {
     bits: Arc<BitsliceKernel>,
     shards: usize,
     fingerprint: u64,
+    /// In-flight window this worker sizes its pending buffers for
+    /// (`polylut shard-worker --wire-window`; a session uses the larger of
+    /// this and the coordinator's Hello-advertised window).
+    window: usize,
 }
 
 impl ShardWorkerHost {
     /// Compile both shard kernels for `shards` shards (identical to the
     /// coordinator-side compilation: cache-aware reorder, permute, plan +
-    /// bitslice partitioning).
+    /// bitslice partitioning), with the default in-flight window.
     pub fn compile(
         net: &Network,
         tables: &NetworkTables,
         shards: usize,
         workers: usize,
+    ) -> ShardWorkerHost {
+        Self::compile_windowed(net, tables, shards, workers, DEFAULT_WIRE_WINDOW)
+    }
+
+    /// [`ShardWorkerHost::compile`] with an explicit in-flight window
+    /// (sizes the per-session bounded pending-frame buffer).
+    pub fn compile_windowed(
+        net: &Network,
+        tables: &NetworkTables,
+        shards: usize,
+        workers: usize,
+        window: usize,
     ) -> ShardWorkerHost {
         let shards = shards.max(1);
         let (pnet, ptables) = permuted_for_shards(net, tables);
@@ -1020,6 +1724,7 @@ impl ShardWorkerHost {
             bits: Arc::new(bits_kernel_of(&pnet, &ptables, shards, workers)),
             shards,
             fingerprint,
+            window: window.max(1),
         }
     }
 
@@ -1083,7 +1788,10 @@ impl ShardWorkerHost {
         // Liveness bound on the worker side too: a half-open link (peer
         // died without FIN) must not pin a session thread in a blocking
         // read forever.  Between epochs a timeout is benign (idle server)
-        // and the serve loop retries; mid-epoch it tears the session down.
+        // and the serve loop retries; mid-epoch the progress-aware bound
+        // applies — only `LIVENESS_STRIKES` consecutive zero-progress
+        // windows tear the session down, so a slow wide frame trickling
+        // in under the windowed stream is never dropped mid-epoch.
         stream.set_read_timeout(Some(RECV_TIMEOUT))?;
         let hello = read_frame(stream)?;
         if hello.kind != FrameKind::Hello {
@@ -1100,7 +1808,18 @@ impl ShardWorkerHost {
             .ok_or_else(|| WireError::Protocol("Hello names no engine".into()))?;
         let shards = hello.words.get(1).copied().unwrap_or(0) as usize;
         let fp = hello.words.get(2).copied().unwrap_or(0);
+        // v2 resume handshake: the Hello carries the epoch the coordinator
+        // will (re)start from and its in-flight window.  The worker is
+        // stateless across sessions, so resuming just means accepting the
+        // next Start at that epoch; the window sizes the pending buffer.
+        let resume_epoch = hello.words.get(3).copied().unwrap_or(0);
+        let peer_window = hello.words.get(4).copied().unwrap_or(1) as usize;
         let shard = hello.shard as usize;
+        if resume_epoch > 0 {
+            log::info!(
+                "[shard-worker] resume handshake: shard {shard} from epoch {resume_epoch}"
+            );
+        }
         if shards != self.shards {
             let msg = format!(
                 "shard count mismatch: coordinator {shards}, worker {}",
@@ -1135,21 +1854,25 @@ impl ShardWorkerHost {
             },
         )?;
         let stream = stream.try_clone()?;
+        let window = self.window.max(peer_window);
         match engine {
-            EngineKind::Plan => serve_shard(&*self.plan, shard, stream),
-            EngineKind::Bitslice => serve_shard(&*self.bits, shard, stream),
+            EngineKind::Plan => serve_shard(&*self.plan, shard, stream, window),
+            EngineKind::Bitslice => serve_shard(&*self.bits, shard, stream, window),
         }
     }
 }
 
 /// Serve one (engine, shard) link: per Start frame, run the generic cell
-/// loop for this shard over private buffers with the `RemoteHandoff`.
+/// loop for this shard over private **per-boundary** buffers with the
+/// `RemoteHandoff` (per-boundary staging is what lets the windowed stream
+/// apply frames in any arrival order — no parity aliasing to protect).
 fn serve_shard<K: ShardKernel>(
     kernel: &K,
     shard: usize,
     stream: TcpStream,
+    window: usize,
 ) -> Result<(), WireError> {
-    let bufs = Arc::new(BufSet::for_kernel(kernel));
+    let bufs = Arc::new(BufSet::per_boundary(kernel));
     let plan = wire_plan(kernel, shard);
     let deps_owned = plan.deps.clone();
     let handoff = RemoteHandoff::new(
@@ -1159,34 +1882,48 @@ fn serve_shard<K: ShardKernel>(
         kernel.n_layers(),
         kernel.n_shards(),
         shard as u32,
+        window,
     );
     let deps: Vec<&[(u32, u32)]> = deps_owned.iter().map(|v| v.as_slice()).collect();
     let mut scratch = kernel.make_scratch();
     let cells = AtomicU64::new(0);
     let waits = AtomicU64::new(0);
     loop {
-        // Between epochs, wait via a 1-byte peek: a read timeout there just
-        // means the coordinator is idle — keep waiting (but an EOF/RST is a
-        // dead link and ends the session, so half-open peers cannot pin
-        // this thread forever once TCP notices).  Only start `read_frame`
-        // once a byte is pending, so an idle-probe timeout can never fire
-        // mid-frame and desynchronize the stream; mid-epoch timeouts
-        // (inside run_cells' waits) still propagate — there a silent peer
-        // is a hung epoch, not an idle one.
-        if !handoff.peek_ready()? {
-            continue;
-        }
-        let f = handoff.recv_frame()?;
+        // The windowed sender may have streamed the next epoch's Start
+        // while the previous epoch's tail was still being read — serve it
+        // from the pending buffer before touching the socket.
+        let next = handoff.take_pending_start();
+        let f = match next {
+            Some(f) => f,
+            None => {
+                // Between epochs, wait via a 1-byte peek: a read timeout
+                // there just means the coordinator is idle — keep waiting
+                // (but an EOF/RST is a dead link and ends the session, so
+                // half-open peers cannot pin this thread forever once TCP
+                // notices).  Only start a frame read once a byte is
+                // pending; mid-frame and mid-epoch reads then use the
+                // progress-aware liveness bound (`read_frame_patient`), so
+                // neither an idle probe nor a slow wide frame can
+                // desynchronize or tear down a live session.
+                if !handoff.peek_ready()? {
+                    continue;
+                }
+                handoff.recv_frame()?
+            }
+        };
         match f.kind {
             FrameKind::Start => {
                 handoff.begin_epoch(f.epoch)?;
                 run_cells(kernel, &handoff, &bufs, shard, &deps, &cells, &waits, &mut scratch)
                     .map_err(|e| WireError::Protocol(e.0))?;
             }
+            // Stale or early Data frames between epochs route through the
+            // epoch completion table (stale → dropped, future → pended).
+            FrameKind::Data => handoff.apply(f)?,
             FrameKind::Bye => return Ok(()),
             k => {
                 return Err(WireError::Protocol(format!(
-                    "expected Start/Bye between epochs, got {k:?}"
+                    "expected Start/Data/Bye between epochs, got {k:?}"
                 )))
             }
         }
@@ -1351,6 +2088,15 @@ mod tests {
         );
         assert!(parse_shard_hosts("a:1,b:2,c:3", 2).is_err(), "too many hosts");
         assert!(parse_shard_hosts("no-port", 2).is_err(), "not host:port");
+        // Duplicate host:port entries are rejected at parse time with a
+        // message naming both shards (previously accepted and failing
+        // late, deep in the per-link handshake).
+        let dup = parse_shard_hosts("h:1,h:1", 2).expect_err("duplicate host");
+        let msg = format!("{dup:#}");
+        assert!(msg.contains("duplicates") && msg.contains("shard 0"), "{msg}");
+        assert!(parse_shard_hosts("a:1,local,a:1", 3).is_err(), "dup past local");
+        // Distinct ports on one host are distinct workers — fine.
+        assert!(parse_shard_hosts("h:1,h:2", 2).is_ok());
         // Trailing comma / trailing local entries are the documented no-op.
         assert_eq!(
             parse_shard_hosts("a:1,b:2,", 2).unwrap(),
@@ -1540,5 +2286,408 @@ mod tests {
                 }
             }
         }
+    }
+
+    // -- patient (progress-aware) reads ------------------------------------
+
+    /// A frame trickling in with per-chunk gaps *longer than the read
+    /// timeout* must still decode: each timeout window with zero progress
+    /// is one strike, progress resets the count, and the gaps stay under
+    /// `LIVENESS_STRIKES` windows — the epoch-aware fix for slow wide
+    /// frames being misclassified as half-open peers.
+    #[test]
+    fn patient_read_survives_slow_wide_frame() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let writer = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let bytes = encode_frame(&Frame::data(3, 2, 1, 0, vec![7; 40])).unwrap();
+            let chunk = bytes.len() / 3 + 1;
+            for part in bytes.chunks(chunk) {
+                s.write_all(part).unwrap();
+                s.flush().unwrap();
+                // Longer than one read-timeout window, well under two.
+                std::thread::sleep(Duration::from_millis(300));
+            }
+            s
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_millis(250))).unwrap();
+        let f = read_frame_patient(&mut stream, false).expect("slow frame decodes");
+        let f = f.expect("idle_ok=false never yields None");
+        assert_eq!(f.words, vec![7; 40]);
+        drop(writer.join().unwrap());
+    }
+
+    /// A peer that goes completely silent mid-frame is still declared dead
+    /// after the strike budget (half-open links cannot pin a session), and
+    /// an idle probe (`idle_ok`) returns cleanly without striking.
+    #[test]
+    fn patient_read_still_bounds_dead_peers() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let holder = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            // Half a length prefix, then silence (socket held open).
+            s.write_all(&[9u8, 0]).unwrap();
+            s.flush().unwrap();
+            std::thread::sleep(Duration::from_millis(500));
+            s
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_millis(30))).unwrap();
+        let t0 = Instant::now();
+        assert!(
+            read_frame_patient(&mut stream, false).is_err(),
+            "silent mid-frame peer must fail"
+        );
+        assert!(t0.elapsed() < Duration::from_millis(400), "bounded, not hung");
+        drop(holder.join().unwrap());
+
+        // Idle probe: a quiet (but alive) socket is Ok(None), not an error.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let quiet = std::thread::spawn(move || listener.accept().unwrap().0);
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_millis(20))).unwrap();
+        assert!(matches!(read_frame_patient(&mut stream, true), Ok(None)));
+        drop(quiet.join().unwrap());
+    }
+
+    // -- wire_plan run compression ------------------------------------------
+
+    /// Synthetic kernel with hand-written position-space read/write sets —
+    /// lets the run-compression edge cases be stated exactly.
+    struct TestKernel {
+        bounds: Vec<usize>,
+        write: Vec<Vec<Range<usize>>>,
+        reads: Vec<Vec<Vec<usize>>>,
+    }
+
+    impl crate::sim::shard::ShardKernel for TestKernel {
+        type Scratch = ();
+
+        fn n_layers(&self) -> usize {
+            self.write.len()
+        }
+
+        fn n_shards(&self) -> usize {
+            self.write[0].len()
+        }
+
+        fn in_len(&self) -> usize {
+            self.bounds[0]
+        }
+
+        fn out_len(&self) -> usize {
+            *self.bounds.last().unwrap()
+        }
+
+        fn buf_len(&self) -> usize {
+            self.bounds[1..self.bounds.len() - 1].iter().copied().max().unwrap_or(0)
+        }
+
+        fn deps(&self, _l: usize, _s: usize) -> &[(u32, u32)] {
+            &[]
+        }
+
+        fn reads(&self, l: usize, s: usize) -> &[usize] {
+            &self.reads[l][s]
+        }
+
+        fn write_range(&self, l: usize, s: usize) -> Range<usize> {
+            self.write[l][s].clone()
+        }
+
+        fn make_scratch(&self) -> Self::Scratch {}
+
+        fn run_cell(
+            &self,
+            _l: usize,
+            _s: usize,
+            _src: &[std::sync::atomic::AtomicU64],
+            _dst: &[std::sync::atomic::AtomicU64],
+            _scratch: &mut Self::Scratch,
+        ) {
+        }
+    }
+
+    /// Run-compression edge cases: adjacent single positions owned by
+    /// *different* producers stay separate single-position runs; adjacent
+    /// same-producer positions merge into one run; a shard with zero
+    /// cross-shard reads ships nothing and waits on nothing.
+    #[test]
+    fn wire_plan_run_compression_edge_cases() {
+        let k = TestKernel {
+            bounds: vec![4, 6, 6],
+            // Boundary 1 owners: s0 = 0..2, s1 = 2..4, s2 = 4..6.
+            write: vec![vec![0..2, 2..4, 4..6], vec![0..2, 2..4, 4..6]],
+            reads: vec![
+                // Layer 0 (boundary 0 = coordinator): s0 reads nothing at
+                // all, s1 reads adjacent 1,2 (one merged run from the
+                // coordinator), s2 reads 0 and 2 (two runs, gap between).
+                vec![vec![], vec![1, 2], vec![0, 2]],
+                // Layer 1 (boundary 1): s0 reads only its own range (zero
+                // cross-shard needs); s1 reads 1 and 4 (two producers);
+                // s2 reads adjacent 1,2 — position 1 owned by s0 and
+                // position 2 by s1, so the adjacency must NOT merge.
+                vec![vec![0, 1], vec![1, 4], vec![1, 2]],
+            ],
+        };
+        // Shard 0: no needs at either layer, no deps at all.
+        let wp0 = wire_plan(&k, 0);
+        assert!(wp0.needs[0].is_empty() && wp0.needs[1].is_empty(), "zero cross-shard reads");
+        assert!(wp0.deps[0].is_empty() && wp0.deps[1].is_empty());
+        assert!(wp0.counts[0].is_empty() && wp0.counts[1].is_empty());
+        assert_eq!(wp0.result, vec![0..2, 0..2]);
+
+        // Shard 1: one merged coordinator run at layer 0; at layer 1 its
+        // own position 2..4 read (none listed) — reads 1 (s0) and 4 (s2).
+        let wp1 = wire_plan(&k, 1);
+        assert_eq!(wp1.needs[0], vec![(3, 1..3)], "adjacent same-producer positions merge");
+        assert_eq!(wp1.needs[1], vec![(0, 1..2), (2, 4..5)]);
+        assert_eq!(wp1.deps[0], vec![(3, 1)], "coordinator wait");
+        assert_eq!(wp1.deps[1], vec![(0, 1), (2, 1)], "producer waits at threshold l");
+        assert_eq!(wp1.counts[1], vec![(0, 1), (2, 1)]);
+
+        // Shard 2: two gap-separated runs at layer 0; at layer 1 the
+        // adjacent pair 1,2 splits into two single-position runs because
+        // the producers differ.
+        let wp2 = wire_plan(&k, 2);
+        assert_eq!(wp2.needs[0], vec![(3, 0..1), (3, 2..3)], "gap keeps runs apart");
+        assert_eq!(wp2.counts[0], vec![(3, 2)], "two frames from the coordinator");
+        assert_eq!(
+            wp2.needs[1],
+            vec![(0, 1..2), (1, 2..3)],
+            "adjacent positions with distinct producers must not merge"
+        );
+    }
+
+    /// The PR 3 widest-boundary-skips-parity shape (non-monotonic bounds
+    /// `[8, 8, 11, 2, 9]`): wire_plan's needs must still cover exactly the
+    /// cross-shard reads and its results the write ranges, including reads
+    /// at positions wider than every later boundary.
+    #[test]
+    fn wire_plan_on_skips_parity_bounds() {
+        let bounds = vec![8usize, 8, 11, 2, 9];
+        let shards = 3usize;
+        let write: Vec<Vec<Range<usize>>> = (0..4)
+            .map(|l| {
+                let n = bounds[l + 1];
+                let cut1 = n / 3;
+                let cut2 = 2 * n / 3;
+                vec![0..cut1, cut1..cut2, cut2..n]
+            })
+            .collect();
+        // Every shard reads a spread of the previous boundary, including
+        // its widest positions.
+        let reads: Vec<Vec<Vec<usize>>> = (0..4)
+            .map(|l| {
+                (0..shards)
+                    .map(|s| {
+                        let w = bounds[l];
+                        let mut v = vec![0, w / 2, w - 1, (s * 3) % w];
+                        v.sort_unstable();
+                        v.dedup();
+                        v
+                    })
+                    .collect()
+            })
+            .collect();
+        let k = TestKernel { bounds, write: write.clone(), reads: reads.clone() };
+        for s in 0..shards {
+            let wp = wire_plan(&k, s);
+            for l in 0..4 {
+                assert_eq!(wp.result[l], write[l][s], "layer {l} shard {s}");
+                let own: Range<usize> = if l >= 1 { write[l - 1][s].clone() } else { 0..0 };
+                let mut shipped: Vec<usize> =
+                    wp.needs[l].iter().flat_map(|(_, r)| r.clone()).collect();
+                shipped.sort_unstable();
+                let expect: Vec<usize> = reads[l][s]
+                    .iter()
+                    .copied()
+                    .filter(|x| l == 0 || !own.contains(x))
+                    .collect();
+                assert_eq!(shipped, expect, "layer {l} shard {s}");
+                let runs_per_producer: usize = wp.counts[l].iter().map(|(_, n)| *n as usize).sum();
+                assert_eq!(runs_per_producer, wp.needs[l].len(), "counts match runs");
+            }
+        }
+    }
+
+    // -- windowed stream vs lock-step, and reconnect-and-resume -------------
+
+    /// Both pacings are bit-exact over loopback on a deep geometry whose
+    /// boundary widths are non-monotonic (the PR 3 skips-parity shape),
+    /// S ∈ {2, 3}: W=1 reproduces the v1 lock-step conversation (pinned by
+    /// the in-flight high-water mark), W>1 streams ahead.
+    #[test]
+    fn windowed_and_lockstep_loopback_bit_exact() {
+        let cfg = config::uniform("wire-deep", &[8, 10, 8, 6, 3], 2, 2, 3, 3, 3, 1, 2, 3);
+        let net = Network::random(&cfg, &mut Rng::new(0x51EE));
+        let tables = compile_network(&net, 1);
+        let plan = EvalPlan::compile(&net, &tables);
+        let mut scratch = Scratch::for_plan(&plan);
+        let xs = random_codes(&net, crate::sim::WORD + 5, 23);
+        let want = plan.forward_batch(&xs, &mut scratch);
+        for shards in [2usize, 3] {
+            let addr = spawn_host(&net, &tables, shards);
+            for window in [1usize, 4, 16] {
+                let placement: ShardPlacement =
+                    (0..shards).map(|s| (s > 0).then(|| addr.clone())).collect();
+                let wire = WireConfig { window, retries: 3 };
+                let model = ShardedModel::compile_placed_wire(
+                    &net, &tables, shards, 1, &placement, None, wire,
+                )
+                .expect("loopback placement");
+                assert_eq!(
+                    model.plan.forward_batch(&xs).unwrap(),
+                    want,
+                    "plan S={shards} W={window}"
+                );
+                assert_eq!(
+                    model.bits.forward_batch(&xs).unwrap(),
+                    want,
+                    "bits S={shards} W={window}"
+                );
+                let ws = model.wire_stats().expect("remote links present");
+                assert!(
+                    ws.inflight_hwm <= window as u64,
+                    "window must bound the in-flight flights: {ws:?} (W={window})"
+                );
+                if window == 1 {
+                    assert_eq!(ws.inflight_hwm, 1, "W=1 is lock-step: {ws:?}");
+                }
+                assert_eq!(ws.retry_exhausted, 0, "{ws:?}");
+            }
+        }
+    }
+
+    /// TCP proxy used to inject deterministic link failures: forwards every
+    /// accepted connection to `upstream`; the *first* connection is severed
+    /// once `kill_after` client→upstream bytes have passed, and `max_conns`
+    /// (when set) bounds how many connections are accepted before the
+    /// listener drops (so later dials see connection-refused).
+    fn flaky_proxy(upstream: String, kill_after: usize, max_conns: Option<usize>) -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind proxy");
+        let addr = listener.local_addr().expect("proxy addr").to_string();
+        std::thread::spawn(move || {
+            for idx in 0usize.. {
+                if let Some(m) = max_conns {
+                    if idx >= m {
+                        break;
+                    }
+                }
+                let (client, _) = match listener.accept() {
+                    Ok(c) => c,
+                    Err(_) => break,
+                };
+                let up = match TcpStream::connect(&upstream) {
+                    Ok(u) => u,
+                    Err(_) => break,
+                };
+                let kill = if idx == 0 { Some(kill_after) } else { None };
+                let (mut c_in, mut u_out) = (
+                    client.try_clone().expect("clone client"),
+                    up.try_clone().expect("clone upstream"),
+                );
+                std::thread::spawn(move || {
+                    let mut total = 0usize;
+                    let mut buf = [0u8; 1024];
+                    loop {
+                        let n = match c_in.read(&mut buf) {
+                            Ok(0) | Err(_) => break,
+                            Ok(n) => n,
+                        };
+                        if u_out.write_all(&buf[..n]).is_err() {
+                            break;
+                        }
+                        total += n;
+                        if kill.is_some_and(|k| total >= k) {
+                            break;
+                        }
+                    }
+                    let _ = c_in.shutdown(Shutdown::Both);
+                    let _ = u_out.shutdown(Shutdown::Both);
+                });
+                let (mut u_in, mut c_out) = (up, client);
+                std::thread::spawn(move || {
+                    let mut buf = [0u8; 1024];
+                    loop {
+                        let n = match u_in.read(&mut buf) {
+                            Ok(0) | Err(_) => break,
+                            Ok(n) => n,
+                        };
+                        if c_out.write_all(&buf[..n]).is_err() {
+                            break;
+                        }
+                    }
+                    let _ = u_in.shutdown(Shutdown::Both);
+                    let _ = c_out.shutdown(Shutdown::Both);
+                });
+            }
+        });
+        addr
+    }
+
+    /// Mid-stream link cut → reconnect-and-resume: the proxy severs the
+    /// plan engine's link a few hundred bytes in (mid-epoch or at an epoch
+    /// boundary, whichever the cut lands on); the link must re-handshake
+    /// through the proxy, replay the open epoch, and keep every output
+    /// bit-exact — `wire_resumes` counted, no sticky fault, zero degraded
+    /// batches.
+    #[test]
+    fn midstream_cut_reconnects_and_resumes() {
+        let (net, tables) = grid_net(2, 1);
+        let upstream = spawn_host(&net, &tables, 2);
+        let proxy = flaky_proxy(upstream, 300, None);
+        let placement: ShardPlacement = vec![None, Some(proxy)];
+        let wire = WireConfig { window: 4, retries: 8 };
+        let model =
+            ShardedModel::compile_placed_wire(&net, &tables, 2, 1, &placement, None, wire)
+                .expect("placement through proxy");
+        let xs = random_codes(&net, 24, 99);
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(
+                model.plan.forward_codes(x).expect("resume keeps serving"),
+                net.forward_codes(x),
+                "sample {i} must stay bit-exact across the cut"
+            );
+        }
+        let ws = model.wire_stats().expect("remote link present");
+        assert!(ws.resumes >= 1, "the severed link must resume: {ws:?}");
+        assert_eq!(ws.retry_exhausted, 0, "{ws:?}");
+        assert!(!model.faulted(), "no degraded batches");
+    }
+
+    /// Exhausted retry budget → clean sticky fault (never a hang): the
+    /// proxy kills the first link and then refuses further connections, so
+    /// the bounded reconnect budget runs dry, the engine faults, and every
+    /// later call errors fast (`Backend::route` degrade is pinned by the
+    /// coordinator tests).
+    #[test]
+    fn retry_exhaustion_is_clean_sticky_fault() {
+        let (net, tables) = grid_net(1, 1);
+        let upstream = spawn_host(&net, &tables, 2);
+        // Two conns = the plan + bitslice links; nothing after.
+        let proxy = flaky_proxy(upstream, 250, Some(2));
+        let placement: ShardPlacement = vec![None, Some(proxy)];
+        let wire = WireConfig { window: 4, retries: 2 };
+        let model =
+            ShardedModel::compile_placed_wire(&net, &tables, 2, 1, &placement, None, wire)
+                .expect("placement through proxy");
+        let xs = random_codes(&net, 40, 5);
+        let mut failed = false;
+        for x in &xs {
+            if model.plan.forward_codes(x).is_err() {
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed, "a severed link with no reconnect path must fault");
+        assert!(model.faulted());
+        assert!(model.plan.forward_codes(&xs[0]).is_err(), "fault is sticky");
+        let ws = model.wire_stats().expect("remote link present");
+        assert!(ws.retry_exhausted >= 1, "{ws:?}");
     }
 }

@@ -11,7 +11,7 @@ use std::process::{Child, Command, Stdio};
 
 use polylut_add::nn::config;
 use polylut_add::nn::network::Network;
-use polylut_add::sim::{ShardPlacement, ShardedModel, WORD};
+use polylut_add::sim::{ShardPlacement, ShardedModel, WireConfig, WORD};
 use polylut_add::util::rng::Rng;
 
 /// Model geometry shared between the test and the worker CLI args — any
@@ -34,12 +34,18 @@ impl Worker {
     /// Spawn `polylut shard-worker` on a free loopback port and parse the
     /// bound address from its first stdout line.
     fn spawn(a: usize, degree: u32, shards: usize) -> Worker {
+        Self::spawn_at("127.0.0.1:0", a, degree, shards)
+    }
+
+    /// Spawn on an explicit address (the kill-and-restart test rebinds the
+    /// dead worker's port).
+    fn spawn_at(listen: &str, a: usize, degree: u32, shards: usize) -> Worker {
         let widths: Vec<String> = WIDTHS.iter().map(|w| w.to_string()).collect();
         let mut child = Command::new(env!("CARGO_BIN_EXE_polylut"))
             .args([
                 "shard-worker",
                 "--listen",
-                "127.0.0.1:0",
+                listen,
                 "--shards",
                 &shards.to_string(),
                 "--widths",
@@ -58,7 +64,7 @@ impl Worker {
         let stdout = child.stdout.take().expect("piped stdout");
         let mut line = String::new();
         BufReader::new(stdout).read_line(&mut line).expect("worker banner");
-        // "[shard-worker] listening on 127.0.0.1:PORT shards=S fingerprint=…"
+        // "[shard-worker] listening on 127.0.0.1:PORT shards=S …"
         let addr = line
             .split_whitespace()
             .skip_while(|w| *w != "on")
@@ -66,6 +72,13 @@ impl Worker {
             .unwrap_or_else(|| panic!("unparsable worker banner: {line:?}"))
             .to_string();
         Worker { child, addr }
+    }
+
+    /// SIGKILL the worker process and reap it (no FIN — the coordinator
+    /// sees a dead link, not a clean shutdown).
+    fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
     }
 }
 
@@ -124,4 +137,63 @@ fn three_shards_two_remote_processes() {
     let w1 = Worker::spawn(a, degree, 3);
     let w2 = Worker::spawn(a, degree, 3);
     assert_wire_bit_exact(a, degree, 3, &[&w1, &w2]);
+}
+
+/// Kill-and-restart regression for reconnect-and-resume: SIGKILL the
+/// worker process mid-batch, restart it on the same port, and the placed
+/// model must resume bit-exactly — `wire_resumes` incremented, the retry
+/// budget never exhausted, zero degraded batches (no sticky fault, every
+/// forward call keeps succeeding on both engine routes).
+#[test]
+fn kill_and_restart_resumes_bit_exact() {
+    let (a, degree) = (2, 1);
+    let mut w = Worker::spawn(a, degree, 2);
+    let addr = w.addr.clone();
+    let net = test_net(a, degree);
+    let tables = polylut_add::lut::compile_network(&net, 1);
+    let placement: ShardPlacement = vec![None, Some(addr.clone())];
+    // Generous retry budget: the restarted process needs a moment to
+    // recompile the model before it listens again.
+    let wire = WireConfig { window: 4, retries: 12 };
+    let model =
+        ShardedModel::compile_placed_wire(&net, &tables, 2, 1, &placement, None, wire)
+            .expect("placed compile against worker process");
+    let mut rng = Rng::new(0xDEAD);
+    let xs: Vec<Vec<i32>> = (0..WORD + 7)
+        .map(|_| {
+            let x: Vec<f32> = (0..WIDTHS[0]).map(|_| rng.f32()).collect();
+            net.quantize_input(&x)
+        })
+        .collect();
+    let want: Vec<Vec<i32>> = xs.iter().map(|x| net.forward_codes(x)).collect();
+
+    // First third of the batch against the original worker.
+    let cut = xs.len() / 3;
+    for (i, x) in xs[..cut].iter().enumerate() {
+        assert_eq!(model.plan.forward_codes(x).unwrap(), want[i], "pre-kill sample {i}");
+    }
+
+    // SIGKILL mid-batch, restart on the same port (std listeners set
+    // SO_REUSEADDR, so the rebind succeeds immediately).
+    w.kill();
+    let w2 = Worker::spawn_at(&addr, a, degree, 2);
+    assert_eq!(w2.addr, addr, "restart must rebind the same address");
+
+    // Remainder of the batch: the first post-kill call finds the dead
+    // link, reconnects with the resume handshake, and keeps serving.
+    for (i, x) in xs[cut..].iter().enumerate() {
+        assert_eq!(
+            model.plan.forward_codes(x).expect("resume keeps serving"),
+            want[cut + i],
+            "post-restart sample {}",
+            cut + i
+        );
+    }
+    // The bitslice route's links resume on their first post-kill use too.
+    assert_eq!(model.bits.forward_batch(&xs).unwrap(), want, "bitslice route");
+
+    assert!(!model.faulted(), "zero degraded batches");
+    let ws = model.wire_stats().expect("remote links present");
+    assert!(ws.resumes >= 1, "kill+restart must count a resume: {ws:?}");
+    assert_eq!(ws.retry_exhausted, 0, "retry budget must not exhaust: {ws:?}");
 }
