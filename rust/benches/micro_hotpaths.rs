@@ -12,6 +12,10 @@
 //! numbers, including the plan-vs-naive comparison the acceptance criteria
 //! track, are unaffected.
 
+// Benches are a separate crate: clippy's allow-unwrap-in-tests doesn't
+// reach them, so the workspace unwrap_used deny is lifted per-file.
+#![allow(clippy::unwrap_used)]
+
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -23,8 +27,8 @@ use polylut_add::nn::config;
 use polylut_add::nn::network::Network;
 use polylut_add::runtime::Engine;
 use polylut_add::sim::{
-    BitsliceNet, EvalPlan, LutSim, Scratch, ShardPlacement, ShardWorkerHost, ShardedModel,
-    WireConfig, DEFAULT_WIRE_WINDOW,
+    verify, BitsliceNet, EvalPlan, LutSim, Scratch, ShardPlacement, ShardWorkerHost,
+    ShardedModel, WireConfig, DEFAULT_WIRE_WINDOW,
 };
 use polylut_add::util::bench::Bench;
 use polylut_add::util::pool::default_workers;
@@ -174,6 +178,22 @@ fn main() {
     println!(
         "  sharded engines: S={shard_n}, bitslice cone replication {:.2}x",
         sharded4.bits.replication()
+    );
+
+    // Static-verification pass cost on the same geometry — the price of the
+    // always-on debug / POLYLUT_VERIFY release compile gate, one timing
+    // line per artifact kind (see ARCHITECTURE.md §8).
+    let arts4 = verify::compile_sharded_artifacts(&net4, &tables4, shard_n, default_workers());
+    b.measure("verify/plan (nid-t4)", || verify::verify_plan(&plan4).len());
+    b.measure("verify/op-streams (nid-t4)", || {
+        verify::verify_bitslice(&bits4).len() + verify::verify_shard_streams(&arts4).len()
+    });
+    b.measure("verify/hazard-schedules (nid-t4)", || verify::verify_hazards(&arts4).len());
+    b.measure("verify/wire-plans (nid-t4)", || verify::verify_wire_plans(&arts4).len());
+    assert!(
+        verify::verify_frozen(&plan4, &bits4).is_clean()
+            && verify::verify_sharded(&arts4).is_clean(),
+        "nid-t4 artifacts fail static verification"
     );
     let single = rows4[0].clone();
     let st_plan_1 = b.measure("plan/forward (1 sample, nid-t4)", || {

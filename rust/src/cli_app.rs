@@ -30,6 +30,7 @@ pub fn cli_main() -> Result<()> {
         "rtl" => cmd_rtl(&args),
         "serve" => cmd_serve(&args),
         "shard-worker" => cmd_shard_worker(&args),
+        "verify" => cmd_verify(&args),
         "report" => cmd_report(&args),
         other => bail!("unknown subcommand {other:?} (try --help)"),
     }
@@ -86,6 +87,14 @@ fn print_help() {
                     or --widths 8,6,3 [--net-seed N] [--beta-in B] [--beta B]\n\
                     [--beta-out B] [--fan-in F] [--fan F] [--degree D] [--a A]\n\
                     [--classes C] for a random-weight geometry (tests/benches)\n\
+           verify   (--id <artifact> | --widths w0,w1,…)   compile every\n\
+                    artifact kind and run the static checkers: plan layout,\n\
+                    bitslice + per-shard op streams, hazard schedules and\n\
+                    wire plans.  [--shards N] (default 2) sets the sharded\n\
+                    geometry; the same --widths model knobs as shard-worker\n\
+                    apply.  Prints a per-artifact report; exits nonzero on\n\
+                    any violation.  (The same checkers gate every compile in\n\
+                    debug builds, and in release when POLYLUT_VERIFY=1.)\n\
            report   --id <artifact>      full markdown report (synth + cubes)\n\n\
          COMMON\n\
            --artifacts <dir>             artifact directory (default: artifacts)"
@@ -249,38 +258,7 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
     let listen = args.require("listen")?;
     let shards = args.get_usize("shards", 2)?.max(1);
     let workers = crate::util::pool::default_workers();
-    let net = if let Some(id) = args.get("id") {
-        let man = crate::meta::load_id(&artifacts_dir(args), id)?;
-        let state = crate::train::load_state(&man, &man.dir)
-            .context("no trained weights — run `polylut train` first")?;
-        man.network_from_state(&state)?
-    } else if let Some(widths_csv) = args.get("widths") {
-        let widths: Vec<usize> = widths_csv
-            .split(',')
-            .map(|w| {
-                w.trim()
-                    .parse::<usize>()
-                    .map_err(|_| anyhow::anyhow!("--widths entry {w:?} is not a number"))
-            })
-            .collect::<Result<_>>()?;
-        let cfg = crate::nn::config::uniform(
-            "shard-worker",
-            &widths,
-            args.get_usize("beta-in", 2)? as u32,
-            args.get_usize("beta", 2)? as u32,
-            args.get_usize("beta-out", 3)? as u32,
-            args.get_usize("fan-in", 3)?,
-            args.get_usize("fan", 3)?,
-            args.get_usize("degree", 1)? as u32,
-            args.get_usize("a", 2)?,
-            args.get_usize("classes", 3)?,
-        );
-        cfg.validate()?;
-        let seed = args.get_usize("net-seed", 0)? as u64;
-        crate::nn::network::Network::random(&cfg, &mut crate::util::rng::Rng::new(seed))
-    } else {
-        bail!("shard-worker needs a model: --id <artifact> or --widths w0,w1,…");
-    };
+    let net = network_from_args(args, "shard-worker")?;
     let tables = crate::lut::tables::compile_network(&net, workers);
     let window = args.get_usize("wire-window", crate::sim::DEFAULT_WIRE_WINDOW)?.max(1);
     let host = std::sync::Arc::new(crate::sim::ShardWorkerHost::compile_windowed(
@@ -297,4 +275,76 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
     std::io::stdout().flush()?;
     host.serve(listener);
     Ok(())
+}
+
+/// Model sourcing shared by `shard-worker` and `verify`: trained weights
+/// via `--id <artifact>`, or a random-weight geometry via
+/// `--widths w0,w1,… [--net-seed N] [--beta-in B] [--beta B] [--beta-out B]
+/// [--fan-in F] [--fan F] [--degree D] [--a A] [--classes C]`.
+fn network_from_args(args: &Args, name: &str) -> Result<crate::nn::network::Network> {
+    if let Some(id) = args.get("id") {
+        let man = crate::meta::load_id(&artifacts_dir(args), id)?;
+        let state = crate::train::load_state(&man, &man.dir)
+            .context("no trained weights — run `polylut train` first")?;
+        man.network_from_state(&state)
+    } else if let Some(widths_csv) = args.get("widths") {
+        let widths: Vec<usize> = widths_csv
+            .split(',')
+            .map(|w| {
+                w.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("--widths entry {w:?} is not a number"))
+            })
+            .collect::<Result<_>>()?;
+        let cfg = crate::nn::config::uniform(
+            name,
+            &widths,
+            args.get_usize("beta-in", 2)? as u32,
+            args.get_usize("beta", 2)? as u32,
+            args.get_usize("beta-out", 3)? as u32,
+            args.get_usize("fan-in", 3)?,
+            args.get_usize("fan", 3)?,
+            args.get_usize("degree", 1)? as u32,
+            args.get_usize("a", 2)?,
+            args.get_usize("classes", 3)?,
+        );
+        cfg.validate()?;
+        let seed = args.get_usize("net-seed", 0)? as u64;
+        Ok(crate::nn::network::Network::random(&cfg, &mut crate::util::rng::Rng::new(seed)))
+    } else {
+        bail!("{name} needs a model: --id <artifact> or --widths w0,w1,…");
+    }
+}
+
+/// `polylut verify (--id X | --widths …) [--shards N]` — compile every
+/// artifact kind for the model and run the static checkers offline: the
+/// decoded-table plan, the whole-model bitslice op streams, and — at the
+/// requested shard count — the per-shard cone streams, both hazard
+/// schedules and every shard's wire plan.  Prints one line per artifact
+/// (`OK` or the violation list) and exits nonzero when anything is
+/// violated, so it can anchor CI jobs and bug reports.
+fn cmd_verify(args: &Args) -> Result<()> {
+    let workers = crate::util::pool::default_workers();
+    let shards = args.get_usize("shards", 2)?.max(1);
+    let net = network_from_args(args, "verify")?;
+    let t0 = std::time::Instant::now();
+    let tables = crate::lut::tables::compile_network(&net, workers);
+    let plan = crate::sim::EvalPlan::compile(&net, &tables);
+    let bits = crate::sim::BitsliceNet::compile(&net, &tables, workers);
+    let arts = crate::sim::verify::compile_sharded_artifacts(&net, &tables, shards, workers);
+    let t_compile = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let mut report = crate::sim::verify::verify_frozen(&plan, &bits);
+    for (label, vs) in crate::sim::verify::verify_sharded(&arts).into_sections() {
+        report.section(&format!("{label} (shards={shards})"), vs);
+    }
+    let t_verify = t1.elapsed().as_secs_f64();
+    print!("{}", report.render());
+    println!(
+        "[polylut] verify: {} violation(s) across {} artifact section(s) \
+         (compile {t_compile:.2}s, verify {t_verify:.3}s)",
+        report.total(),
+        report.sections_len(),
+    );
+    report.gate()
 }

@@ -51,6 +51,9 @@ pub struct Metrics {
     /// Resolved shard-worker spin budget in µs (`u64::MAX` = not recorded:
     /// sharding off).
     shard_spin_us: AtomicU64,
+    /// Violations found by the `sim::verify` pass over the served
+    /// artifacts (`u64::MAX` = no verify pass recorded).
+    verify_violations: AtomicU64,
     hist: [AtomicU64; BUCKETS],
 }
 
@@ -75,6 +78,7 @@ impl Default for Metrics {
             wire_retry_exhausted: AtomicU64::new(0),
             wire_active: AtomicU64::new(0),
             shard_spin_us: AtomicU64::new(u64::MAX),
+            verify_violations: AtomicU64::new(u64::MAX),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -115,14 +119,14 @@ impl Metrics {
     /// the batcher after a sharded batch; values are monotonic, so the last
     /// write always reflects the engine's lifetime totals).
     pub fn record_shard_stats(&self, stats: &[ShardStats]) {
-        let mut guard = self.shard.lock().unwrap();
+        let mut guard = crate::sim::shard::lock_ignore_poison(&self.shard);
         guard.clear();
         guard.extend_from_slice(stats);
     }
 
     /// Latest per-shard counters (empty when sharding is off).
     pub fn shard_stats(&self) -> Vec<ShardStats> {
-        self.shard.lock().unwrap().clone()
+        crate::sim::shard::lock_ignore_poison(&self.shard).clone()
     }
 
     /// Mirror the sharded engines' cumulative wire-link counters (called
@@ -143,6 +147,12 @@ impl Metrics {
     /// snapshot shows which value `POLYLUT_SHARD_SPIN_US` / config chose.
     pub fn set_shard_spin_us(&self, spin_us: u64) {
         self.shard_spin_us.store(spin_us, Ordering::Relaxed);
+    }
+
+    /// Record the outcome of a `sim::verify` pass over the served
+    /// artifacts (total violation count; 0 = verified clean).
+    pub fn record_verify(&self, violations: u64) {
+        self.verify_violations.store(violations, Ordering::Relaxed);
     }
 
     /// Approximate quantile from the histogram (upper bucket bound).
@@ -188,7 +198,7 @@ impl Metrics {
             self.latency_quantile_us(0.95),
             self.latency_quantile_us(0.99),
         );
-        let shard = self.shard.lock().unwrap();
+        let shard = crate::sim::shard::lock_ignore_poison(&self.shard);
         if !shard.is_empty() {
             let cells: Vec<String> = shard.iter().map(|st| st.cells.to_string()).collect();
             let waits: Vec<String> = shard.iter().map(|st| st.waits.to_string()).collect();
@@ -201,6 +211,10 @@ impl Metrics {
         let spin = self.shard_spin_us.load(Ordering::Relaxed);
         if spin != u64::MAX {
             s.push_str(&format!(" shard_spin_us={spin}"));
+        }
+        let verify = self.verify_violations.load(Ordering::Relaxed);
+        if verify != u64::MAX {
+            s.push_str(&format!(" verify_violations={verify}"));
         }
         if self.wire_active.load(Ordering::Relaxed) != 0 {
             s.push_str(&format!(
@@ -288,6 +302,16 @@ mod tests {
             snap.contains("wire_inflight_epochs=4 wire_resumes=2 wire_retry_exhausted=0"),
             "{snap}"
         );
+    }
+
+    #[test]
+    fn verify_counter_surfaces_in_snapshot() {
+        let m = Metrics::new();
+        assert!(!m.snapshot().contains("verify_violations"), "hidden until recorded");
+        m.record_verify(0);
+        assert!(m.snapshot().contains("verify_violations=0"));
+        m.record_verify(3);
+        assert!(m.snapshot().contains("verify_violations=3"));
     }
 
     #[test]

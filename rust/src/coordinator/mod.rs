@@ -105,6 +105,9 @@ impl FrozenModel {
         let tables = crate::lut::tables::compile_network(&net, workers);
         let plan = EvalPlan::compile(&net, &tables);
         let bitslice = BitsliceNet::compile(&net, &tables, workers);
+        if crate::sim::verify::gate_enabled() {
+            crate::sim::verify::verify_frozen(&plan, &bitslice).gate()?;
+        }
         let sharded = if shards > 1 {
             Some(ShardedModel::compile_placed_wire(
                 &net, &tables, shards, workers, placement, spin_us, wire,
@@ -464,7 +467,7 @@ fn batcher_loop(
         // Collect a batch under the window.
         let mut batch: Vec<Request> = Vec::with_capacity(cfg.max_batch);
         {
-            let rx = rx.lock().unwrap();
+            let rx = crate::sim::shard::lock_ignore_poison(&rx);
             match rx.recv_timeout(Duration::from_millis(20)) {
                 Ok(first) => batch.push(first),
                 Err(_) => continue,
@@ -595,6 +598,13 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
     let server = Server::start(backend, man.config.n_classes, cfg);
     if let Some(sharded) = frozen.as_ref().and_then(|m| m.sharded.as_ref()) {
         server.metrics.set_shard_spin_us(sharded.spin_us());
+    }
+    if let Some(model) = frozen.as_ref() {
+        // Mirror the static-verification outcome of the served artifacts
+        // (the compile gate already rejected hard violations when enabled;
+        // this records the count even on release builds with the gate off).
+        let report = crate::sim::verify::verify_frozen(&model.plan, &model.bitslice);
+        server.metrics.record_verify(report.total() as u64);
     }
 
     if backend_name == "lut" {

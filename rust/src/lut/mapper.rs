@@ -230,7 +230,7 @@ pub fn map_layer(
         match &neuron.adder {
             None => {
                 // A == 1: poly table output bits are the neuron outputs.
-                roots.push(sub_bits_nodes.pop().unwrap());
+                roots.push(sub_bits_nodes.pop().expect("A >= 1: one poly table per neuron"));
                 poly_roots_all.push(Vec::new());
             }
             Some(adder) => {

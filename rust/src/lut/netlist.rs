@@ -98,7 +98,7 @@ impl Netlist {
                     .iter()
                     .map(|&i| self.depth[i as usize])
                     .max()
-                    .unwrap();
+                    .expect("three operands, never empty");
                 base + if *free { 0 } else { 1 }
             }
         };

@@ -184,11 +184,11 @@ pub fn deeper(cfg: &ModelConfig, factor: usize) -> ModelConfig {
         cfg.widths[1..cfg.widths.len() - 1].iter().flat_map(|&w| vec![w; factor]).collect();
     let mut widths = vec![cfg.widths[0]];
     widths.extend(hidden);
-    widths.push(*cfg.widths.last().unwrap());
+    widths.push(*cfg.widths.last().expect("validated config has >= 2 widths"));
     let n_layers = widths.len() - 1;
     let mut beta = vec![cfg.beta[0]];
     beta.extend(std::iter::repeat(cfg.beta[1]).take(n_layers - 1));
-    beta.push(*cfg.beta.last().unwrap());
+    beta.push(*cfg.beta.last().expect("validated config has per-boundary beta"));
     let mut fan = vec![cfg.fan[0]];
     let hidden_fan = if cfg.n_layers() > 1 { cfg.fan[1] } else { cfg.fan[0] };
     fan.extend(std::iter::repeat(hidden_fan).take(n_layers - 1));

@@ -115,13 +115,13 @@ pub(crate) struct OpStream {
 }
 
 /// One compiled layer: the op stream plus the output roots.
-struct LayerOps {
-    stream: OpStream,
+pub(crate) struct LayerOps {
+    pub(crate) stream: OpStream,
     /// Output node (local slot) of bit `b` of neuron `j` at `j·out_bits + b`.
-    roots: Vec<u32>,
-    n_out: usize,
-    out_bits: u32,
-    signed_out: bool,
+    pub(crate) roots: Vec<u32>,
+    pub(crate) n_out: usize,
+    pub(crate) out_bits: u32,
+    pub(crate) signed_out: bool,
 }
 
 /// Engine shape statistics (for benches and logs).
@@ -144,11 +144,11 @@ pub struct BitsliceStats {
 /// A frozen network compiled for bit-parallel word-level execution.
 /// Self-contained (owns its op streams) — `Send + Sync`, share behind `Arc`.
 pub struct BitsliceNet {
-    layers: Vec<LayerOps>,
-    n_features: usize,
+    pub(crate) layers: Vec<LayerOps>,
+    pub(crate) n_features: usize,
     n_outputs: usize,
     /// Input quantizer width (β of layer 0).
-    in_bits: u32,
+    pub(crate) in_bits: u32,
     /// Dequantization step of the output codes.
     out_step: f32,
     /// Bit-planes needed at the widest layer boundary.
@@ -513,14 +513,44 @@ pub(crate) fn flatten_cone(nl: &Netlist, keep: &[bool]) -> (OpStream, Vec<u32>) 
     (stream, map)
 }
 
-/// Flatten one whole mapped layer into an op stream (every node kept).
+/// Mark the backward cone of `roots` in `keep` (closed under node inputs).
+pub(crate) fn mark_cone(nl: &Netlist, roots: &[u32], keep: &mut [bool]) {
+    let mut stack: Vec<u32> = roots.iter().copied().filter(|&r| !keep[r as usize]).collect();
+    while let Some(id) = stack.pop() {
+        if keep[id as usize] {
+            continue;
+        }
+        keep[id as usize] = true;
+        match &nl.nodes[id as usize] {
+            Node::Input { .. } | Node::Const(_) => {}
+            Node::Lut { inputs, .. } => {
+                stack.extend(inputs.iter().copied().filter(|&i| !keep[i as usize]));
+            }
+            Node::Mux { sel, lo, hi, .. } => {
+                for c in [*sel, *lo, *hi] {
+                    if !keep[c as usize] {
+                        stack.push(c);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Flatten one whole mapped layer into an op stream.  Only the backward
+/// cone of the layer's output roots is kept: the mapper's adder-stage
+/// support reduction can orphan poly sub-bit nodes the adder ignores
+/// (A > 1), and keeping them would execute dead word-ops every pass.
 fn flatten_layer(
     ml: &crate::lut::mapper::MappedLayer,
     lt: &LayerTables,
     stats: &mut BitsliceStats,
 ) -> LayerOps {
     let nl = &ml.netlist;
-    let keep = vec![true; nl.nodes.len()];
+    let mut keep = vec![false; nl.nodes.len()];
+    for bits in &ml.roots {
+        mark_cone(nl, bits, &mut keep);
+    }
     let (stream, map) = flatten_cone(nl, &keep);
     stats.nodes += stream.n_nodes;
     stats.grouped_luts += stream.lut_nodes.len();

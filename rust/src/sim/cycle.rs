@@ -93,7 +93,11 @@ impl<'a> PipelineSim<'a> {
                 (0..n_out)
                     .map(|j| {
                         let subs = &input[j * a..(j + 1) * a];
-                        lt.neurons[j].adder.as_ref().unwrap().code_at(pack_adder_addr(
+                        lt.neurons[j]
+                            .adder
+                            .as_ref()
+                            .expect("Adder stages are only scheduled when A > 1")
+                            .code_at(pack_adder_addr(
                             subs,
                             lt.sub_bits,
                         ))

@@ -44,6 +44,7 @@ pub mod cycle;
 pub mod lutsim;
 pub mod plan;
 pub mod shard;
+pub mod verify;
 pub mod wire;
 
 pub use bitslice::{lane_mask, BitsliceNet, BitsliceScratch, BitsliceStats, WORD};
@@ -53,6 +54,7 @@ pub use plan::{EvalPlan, Scratch};
 pub use shard::{
     resolve_spin_us, ShardStats, ShardedBitslice, ShardedModel, ShardedPlan, DEFAULT_SPIN_US,
 };
+pub use verify::{ArtifactKind, Report, Violation};
 pub use wire::{
     parse_shard_hosts, ShardPlacement, ShardWorkerHost, WireConfig, WireStats,
     DEFAULT_WIRE_RETRIES, DEFAULT_WIRE_WINDOW,

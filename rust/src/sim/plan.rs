@@ -79,7 +79,7 @@ pub(crate) struct LayerPlan {
 pub struct EvalPlan {
     pub(crate) layers: Vec<LayerPlan>,
     pub(crate) widths: Vec<usize>,
-    max_width: usize,
+    pub(crate) max_width: usize,
     pub(crate) a_factor: usize,
     /// Input quantizer width (β of layer 0).
     pub(crate) in_bits: u32,

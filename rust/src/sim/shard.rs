@@ -107,11 +107,10 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::lut::mapper::{map_network_of, MappedNetwork};
-use crate::lut::netlist::{Netlist, Node};
 use crate::lut::tables::NetworkTables;
 use crate::nn::network::Network;
 use crate::nn::quant::unsigned_code;
-use crate::sim::bitslice::{exec_ops, flatten_cone, pack_word, unpack_word, OpStream, WORD};
+use crate::sim::bitslice::{exec_ops, flatten_cone, mark_cone, pack_word, unpack_word, OpStream, WORD};
 use crate::sim::plan::EvalPlan;
 use crate::sim::wire::{EngineKind, Fnv, Frame, LinkStats, WireConfig, WireLink, WireStats};
 
@@ -1194,7 +1193,7 @@ pub(crate) struct PlanKernel {
     plan: EvalPlan,
     parts: Vec<Vec<Range<usize>>>,
     spec: DepSpec,
-    deps: Vec<Vec<Vec<(u32, u32)>>>,
+    pub(crate) deps: Vec<Vec<Vec<(u32, u32)>>>,
     shards: usize,
 }
 
@@ -1518,18 +1517,18 @@ impl ShardedPlan {
 
 /// One shard's slice of one layer: the op stream over its root cone plus
 /// the (global plane, local node) publication list.
-struct ShardStream {
-    stream: OpStream,
-    roots: Vec<(u32, u32)>,
+pub(crate) struct ShardStream {
+    pub(crate) stream: OpStream,
+    pub(crate) roots: Vec<(u32, u32)>,
 }
 
 /// Plane-range sharding of the bitslice op streams (see
 /// [`ShardedBitslice`]).  Carries the network-edge metadata so engines can
 /// be built from the kernel alone (both here and in a remote worker).
 pub(crate) struct BitsliceKernel {
-    layers: Vec<Vec<ShardStream>>,
+    pub(crate) layers: Vec<Vec<ShardStream>>,
     spec: DepSpec,
-    deps: Vec<Vec<Vec<(u32, u32)>>>,
+    pub(crate) deps: Vec<Vec<Vec<(u32, u32)>>>,
     shards: usize,
     in_planes: usize,
     out_planes: usize,
@@ -1542,30 +1541,6 @@ pub(crate) struct BitsliceKernel {
     signed_out: bool,
     out_step: f32,
     replication: f64,
-}
-
-/// Mark the backward cone of `roots` in `keep` (closed under node inputs).
-fn mark_cone(nl: &Netlist, roots: &[u32], keep: &mut [bool]) {
-    let mut stack: Vec<u32> = roots.iter().copied().filter(|&r| !keep[r as usize]).collect();
-    while let Some(id) = stack.pop() {
-        if keep[id as usize] {
-            continue;
-        }
-        keep[id as usize] = true;
-        match &nl.nodes[id as usize] {
-            Node::Input { .. } | Node::Const(_) => {}
-            Node::Lut { inputs, .. } => {
-                stack.extend(inputs.iter().copied().filter(|&i| !keep[i as usize]));
-            }
-            Node::Mux { sel, lo, hi, .. } => {
-                for c in [*sel, *lo, *hi] {
-                    if !keep[c as usize] {
-                        stack.push(c);
-                    }
-                }
-            }
-        }
-    }
 }
 
 /// Dependency spec of a plane-range bitslice partition: positions are
@@ -1982,20 +1957,15 @@ impl ShardedModel {
         let spin_us = resolve_spin_us(spin_us, has_remote);
         let (pnet, ptables) = permuted_for_shards(net, tables);
         let fingerprint = shard_fingerprint(&pnet, &ptables, shards);
-        let plan = ShardedPlan::from_kernel(
-            plan_kernel_of(&pnet, &ptables, shards),
-            spin_us,
-            fingerprint,
-            placement,
-            wire,
-        )?;
-        let bits = ShardedBitslice::from_kernel(
-            bits_kernel_of(&pnet, &ptables, shards, workers),
-            spin_us,
-            fingerprint,
-            placement,
-            wire,
-        )?;
+        let plan_kernel = plan_kernel_of(&pnet, &ptables, shards);
+        let bits_kernel = bits_kernel_of(&pnet, &ptables, shards, workers);
+        if crate::sim::verify::gate_enabled() {
+            crate::sim::verify::report_for_kernels(&plan_kernel, &bits_kernel).gate()?;
+        }
+        let plan =
+            ShardedPlan::from_kernel(plan_kernel, spin_us, fingerprint, placement, wire)?;
+        let bits =
+            ShardedBitslice::from_kernel(bits_kernel, spin_us, fingerprint, placement, wire)?;
         Ok(ShardedModel { plan, bits, shards, spin_us })
     }
 

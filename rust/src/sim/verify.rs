@@ -1,0 +1,1514 @@
+//! Static verification of compiled artifacts.
+//!
+//! Every engine in this crate executes a *compiled artifact* — the
+//! [`EvalPlan`] gather tables, the [`BitsliceNet`] op streams, the sharded
+//! kernels' `(shard, threshold)` hazard schedules, and the `wire_plan`
+//! needs/result schedules.  Their correctness was previously pinned only by
+//! runtime bit-exactness tests and a randomized interleaving simulation of
+//! the handoff protocol.  PolyLUT-Add's core premise is that the LUT
+//! network is a *statically known* dataflow graph, so the structural
+//! invariants of every artifact can be **proved by static analysis at
+//! compile time** instead of sampled at run time.
+//!
+//! Four checkers, one per artifact kind (full invariant tables in
+//! `ARCHITECTURE.md` §8):
+//!
+//! - **plan** ([`verify_plan`]): every gather index in-bounds for its
+//!   source layer width, per-sub-neuron strides consistent with the
+//!   decoded table sizes, scratch sizing sufficient for the widest layer.
+//! - **op-stream** ([`verify_bitslice`], [`verify_shard_streams`]):
+//!   operands defined before use (topological order), operand/plane
+//!   indices in-bounds, `Group` membership consistent with its mask store,
+//!   no dead writes, and full coverage of each layer's output planes —
+//!   both for the whole-layer streams and the sharded `flatten_cone`
+//!   re-flattened streams.
+//! - **hazard schedule** ([`verify_hazards`]): recompute the per-boundary
+//!   read/write sets from the kernels' retained specs and check that the
+//!   three hazard classes (producer, previous-generation reader,
+//!   generation writer) are each dominated by a stored `(shard,
+//!   threshold)` dependency, and that the cross-cell dependency graph is
+//!   acyclic — a static proof alongside the randomized interleaving test.
+//! - **wire-plan** ([`verify_wire_plans`]): per-shard needs runs cover
+//!   every cross-shard read exactly once (no gap, no overlap), runs are
+//!   sorted and maximally merged, producers and `(deps, counts)` match,
+//!   and flightless boundaries ship nothing.
+//!
+//! Violations are reported as structured [`Violation`] diagnostics
+//! (artifact kind, layer/boundary, offending index, invariant name) —
+//! never panics.  The compile paths (`FrozenModel::from_network*`,
+//! `ShardedModel::compile_placed*`) run the relevant checkers behind
+//! [`gate_enabled`]: always on in debug builds, opt-in for release via
+//! `POLYLUT_VERIFY=1`.  The `polylut verify` CLI subcommand prints the
+//! per-artifact [`Report`] for a model config.
+
+use std::fmt;
+use std::ops::Range;
+
+use anyhow::Result;
+
+use crate::lut::tables::NetworkTables;
+use crate::nn::network::Network;
+
+use super::bitslice::{BitsliceNet, Op, OpStream};
+use super::plan::EvalPlan;
+use super::shard::{
+    bits_kernel_of, permuted_for_shards, plan_kernel_of, BitsliceKernel, PlanKernel, ShardKernel,
+};
+use super::wire::{wire_plan, WirePlan};
+
+// ---------------------------------------------------------------------------
+// Diagnostics
+// ---------------------------------------------------------------------------
+
+/// Which compiled artifact a [`Violation`] was found in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// [`EvalPlan`] gather/table layout.
+    Plan,
+    /// A bitslice op stream (whole-layer or per-shard re-flattened cone).
+    OpStream,
+    /// A sharded kernel's `(shard, threshold)` hazard schedule.
+    Hazard,
+    /// A remote shard's `wire_plan` needs/result schedule.
+    Wire,
+}
+
+impl fmt::Display for ArtifactKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ArtifactKind::Plan => "plan",
+            ArtifactKind::OpStream => "op-stream",
+            ArtifactKind::Hazard => "hazard-schedule",
+            ArtifactKind::Wire => "wire-plan",
+        })
+    }
+}
+
+/// One structural invariant violation, reported as data — the checkers
+/// never panic on a corrupt artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Artifact kind the violation was found in.
+    pub artifact: ArtifactKind,
+    /// Stable machine-readable name of the invariant that failed
+    /// (e.g. `"gather-bounds"`, `"undef-operand"`, `"producer-dep"`).
+    pub invariant: &'static str,
+    /// Layer (or boundary) the violation is anchored at.
+    pub layer: usize,
+    /// Offending index within the layer: a gather/op/run index, buffer
+    /// position, or shard — see `detail` for the interpretation.
+    pub index: usize,
+    /// Human-readable description of the failure.
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} L{}[{}] {}: {}",
+            self.artifact, self.layer, self.index, self.invariant, self.detail
+        )
+    }
+}
+
+fn v(
+    artifact: ArtifactKind,
+    invariant: &'static str,
+    layer: usize,
+    index: usize,
+    detail: String,
+) -> Violation {
+    Violation { artifact, invariant, layer, index, detail }
+}
+
+/// Aggregated verification outcome over one or more artifacts, grouped
+/// into labelled sections for per-artifact reporting.
+#[derive(Debug, Default)]
+pub struct Report {
+    sections: Vec<(String, Vec<Violation>)>,
+}
+
+impl Report {
+    /// Append a labelled section of checker output.
+    pub fn section(&mut self, label: &str, violations: Vec<Violation>) {
+        self.sections.push((label.to_string(), violations));
+    }
+
+    /// Whether no checker reported a violation.
+    pub fn is_clean(&self) -> bool {
+        self.sections.iter().all(|(_, vs)| vs.is_empty())
+    }
+
+    /// Total violation count across all sections.
+    pub fn total(&self) -> usize {
+        self.sections.iter().map(|(_, vs)| vs.len()).sum()
+    }
+
+    /// All violations, in section order.
+    pub fn violations(&self) -> Vec<&Violation> {
+        self.sections.iter().flat_map(|(_, vs)| vs).collect()
+    }
+
+    /// Number of labelled sections recorded so far.
+    pub fn sections_len(&self) -> usize {
+        self.sections.len()
+    }
+
+    /// Consume the report, yielding its labelled sections — for callers
+    /// that relabel or merge sections into another report (the CLI).
+    pub fn into_sections(self) -> Vec<(String, Vec<Violation>)> {
+        self.sections
+    }
+
+    /// Render one line per section (`OK` or the violation list).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for (label, vs) in &self.sections {
+            if vs.is_empty() {
+                s.push_str(&format!("{label}: OK\n"));
+            } else {
+                s.push_str(&format!("{label}: {} violation(s)\n", vs.len()));
+                for viol in vs {
+                    s.push_str(&format!("  {viol}\n"));
+                }
+            }
+        }
+        s
+    }
+
+    /// Turn the report into a compile error when any violation is present.
+    pub fn gate(&self) -> Result<()> {
+        anyhow::ensure!(self.is_clean(), "artifact verification failed:\n{}", self.render());
+        Ok(())
+    }
+}
+
+/// Whether the compile-time verification gate is active: always in debug
+/// builds; opt-in for release builds via the `POLYLUT_VERIFY` environment
+/// variable (any non-empty value other than `0`).
+pub fn gate_enabled() -> bool {
+    if cfg!(debug_assertions) {
+        return true;
+    }
+    matches!(std::env::var("POLYLUT_VERIFY"), Ok(val) if !val.is_empty() && val != "0")
+}
+
+// ---------------------------------------------------------------------------
+// Checker 1: EvalPlan gather/table layout
+// ---------------------------------------------------------------------------
+
+/// `stride == 2^bits`, without overflowing when `bits` is corrupt.
+fn pow2_matches(stride: usize, bits: u64) -> bool {
+    bits < usize::BITS as u64 && stride == 1usize << bits
+}
+
+/// Check an [`EvalPlan`]: gather indices in-bounds for their source layer
+/// width, strides consistent with decoded table sizes, scratch sizing
+/// sufficient for the widest layer.
+pub fn verify_plan(plan: &EvalPlan) -> Vec<Violation> {
+    let art = ArtifactKind::Plan;
+    let mut out = Vec::new();
+    if plan.widths.len() != plan.layers.len() + 1 {
+        out.push(v(
+            art,
+            "layer-count",
+            0,
+            plan.widths.len(),
+            format!("{} boundary widths for {} layers", plan.widths.len(), plan.layers.len()),
+        ));
+        return out; // the layout below is uninterpretable
+    }
+    let widest = plan.widths.iter().copied().max().unwrap_or(0);
+    if plan.max_width < widest {
+        out.push(v(
+            art,
+            "scratch-width",
+            0,
+            plan.max_width,
+            format!("scratch sized for width {} but the widest boundary is {widest}", plan.max_width),
+        ));
+    }
+    for (l, lp) in plan.layers.iter().enumerate() {
+        let w_in = plan.widths[l];
+        if lp.n_out != plan.widths[l + 1] {
+            out.push(v(
+                art,
+                "layer-width",
+                l,
+                lp.n_out,
+                format!("layer emits {} neurons but boundary {} is {} wide", lp.n_out, l + 1, plan.widths[l + 1]),
+            ));
+        }
+        if !pow2_matches(lp.poly_stride, lp.in_bits as u64 * lp.fan as u64) {
+            out.push(v(
+                art,
+                "poly-stride",
+                l,
+                lp.poly_stride,
+                format!("poly stride {} != 2^(β·F) = 2^({}·{})", lp.poly_stride, lp.in_bits, lp.fan),
+            ));
+        }
+        let adder_ok = if lp.a > 1 {
+            pow2_matches(lp.adder_stride, lp.a as u64 * lp.sub_bits as u64)
+        } else {
+            lp.adder_stride == 0
+        };
+        if !adder_ok {
+            out.push(v(
+                art,
+                "adder-stride",
+                l,
+                lp.adder_stride,
+                format!("adder stride {} inconsistent with A={} sub_bits={}", lp.adder_stride, lp.a, lp.sub_bits),
+            ));
+        }
+        if lp.gather.len() != lp.n_out * lp.a * lp.fan {
+            out.push(v(
+                art,
+                "gather-len",
+                l,
+                lp.gather.len(),
+                format!("{} gather slots for {}·{}·{} sub-neuron inputs", lp.gather.len(), lp.n_out, lp.a, lp.fan),
+            ));
+        }
+        if lp.poly.len() != lp.n_out * lp.a * lp.poly_stride {
+            out.push(v(
+                art,
+                "poly-len",
+                l,
+                lp.poly.len(),
+                format!("{} poly words, expected {}·{}·{}", lp.poly.len(), lp.n_out, lp.a, lp.poly_stride),
+            ));
+        }
+        let want_adder = if lp.a > 1 { lp.n_out * lp.adder_stride } else { 0 };
+        if lp.adder.len() != want_adder {
+            out.push(v(
+                art,
+                "adder-len",
+                l,
+                lp.adder.len(),
+                format!("{} adder words, expected {want_adder}", lp.adder.len()),
+            ));
+        }
+        for (i, &g) in lp.gather.iter().enumerate() {
+            if g as usize >= w_in {
+                out.push(v(
+                    art,
+                    "gather-bounds",
+                    l,
+                    i,
+                    format!("gather slot {i} reads source {g} but layer {l} is only {w_in} wide"),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Checker 2: op streams (whole-layer and per-shard cones)
+// ---------------------------------------------------------------------------
+
+fn use_operand(
+    layer: usize,
+    i: usize,
+    slot: u32,
+    defined: &[bool],
+    used: &mut [bool],
+    out: &mut Vec<Violation>,
+) {
+    let art = ArtifactKind::OpStream;
+    let n = defined.len();
+    if slot as usize >= n {
+        out.push(v(art, "slot-bounds", layer, i, format!("op {i} reads slot {slot} of {n} nodes")));
+    } else if !defined[slot as usize] {
+        out.push(v(
+            art,
+            "undef-operand",
+            layer,
+            i,
+            format!("op {i} reads slot {slot} before it is defined"),
+        ));
+    } else {
+        used[slot as usize] = true;
+    }
+}
+
+fn define_slot(layer: usize, i: usize, slot: u32, defined: &mut [bool], out: &mut Vec<Violation>) {
+    let art = ArtifactKind::OpStream;
+    let n = defined.len();
+    if slot as usize >= n {
+        out.push(v(art, "slot-bounds", layer, i, format!("op {i} writes slot {slot} of {n} nodes")));
+    } else if defined[slot as usize] {
+        out.push(v(art, "multi-def", layer, i, format!("op {i} redefines slot {slot}")));
+    } else {
+        defined[slot as usize] = true;
+    }
+}
+
+/// Walk one op stream in emission order, checking define-before-use,
+/// index bounds, and `Group` consistency.  Returns the per-slot
+/// `(defined, used)` flags so the caller can fold in roots before the
+/// dead-write / coverage pass ([`finish_stream`]).
+fn check_stream_core(
+    layer: usize,
+    stream: &OpStream,
+    in_planes: usize,
+    out: &mut Vec<Violation>,
+) -> (Vec<bool>, Vec<bool>) {
+    let art = ArtifactKind::OpStream;
+    let n = stream.n_nodes;
+    let mut defined = vec![false; n];
+    let mut used = vec![false; n];
+    if stream.lut_masks.len() != stream.lut_nodes.len() {
+        out.push(v(
+            art,
+            "group-store",
+            layer,
+            stream.lut_nodes.len(),
+            format!("{} group member slots but {} masks", stream.lut_nodes.len(), stream.lut_masks.len()),
+        ));
+    }
+    // Bound input planes are defined before any op executes.
+    for (i, &(slot, wire)) in stream.bind.iter().enumerate() {
+        if wire as usize >= in_planes {
+            out.push(v(
+                art,
+                "bind-wire-bounds",
+                layer,
+                i,
+                format!("bind {i} reads input plane {wire} of {in_planes}"),
+            ));
+        }
+        define_slot(layer, i, slot, &mut defined, out);
+    }
+    for (i, op) in stream.ops.iter().enumerate() {
+        match op {
+            Op::Const { out: o, .. } => define_slot(layer, i, *o, &mut defined, out),
+            Op::Lut { out: o, n_in, ins, .. } => {
+                if *n_in as usize > ins.len() {
+                    out.push(v(art, "fanin-bounds", layer, i, format!("LUT op {i} claims {n_in} inputs")));
+                }
+                for &s in ins.iter().take((*n_in as usize).min(ins.len())) {
+                    use_operand(layer, i, s, &defined, &mut used, out);
+                }
+                define_slot(layer, i, *o, &mut defined, out);
+            }
+            Op::Mux { out: o, sel, lo, hi } => {
+                for &s in &[*sel, *lo, *hi] {
+                    use_operand(layer, i, s, &defined, &mut used, out);
+                }
+                define_slot(layer, i, *o, &mut defined, out);
+            }
+            Op::Group { n_in, ins, start, len } => {
+                if *n_in as usize > ins.len() {
+                    out.push(v(art, "fanin-bounds", layer, i, format!("group op {i} claims {n_in} inputs")));
+                }
+                for &s in ins.iter().take((*n_in as usize).min(ins.len())) {
+                    use_operand(layer, i, s, &defined, &mut used, out);
+                }
+                if *len < 2 {
+                    out.push(v(
+                        art,
+                        "group-size",
+                        layer,
+                        i,
+                        format!("group op {i} has {len} members (singletons must be plain LUT ops)"),
+                    ));
+                }
+                let (g0, g1) = (*start as usize, *start as usize + *len as usize);
+                if g1 > stream.lut_nodes.len() {
+                    out.push(v(
+                        art,
+                        "group-range",
+                        layer,
+                        i,
+                        format!("group op {i} spans members {g0}..{g1} of {}", stream.lut_nodes.len()),
+                    ));
+                } else {
+                    for m in g0..g1 {
+                        define_slot(layer, i, stream.lut_nodes[m], &mut defined, out);
+                    }
+                }
+            }
+        }
+    }
+    (defined, used)
+}
+
+/// Coverage pass after roots are folded into `used`: every local slot must
+/// be defined exactly once, and every defined slot must be consumed by an
+/// op or exported as a root (no dead writes).
+fn finish_stream(
+    layer: usize,
+    stream: &OpStream,
+    defined: &[bool],
+    used: &[bool],
+    out: &mut Vec<Violation>,
+) {
+    let art = ArtifactKind::OpStream;
+    for slot in 0..stream.n_nodes {
+        if !defined[slot] {
+            out.push(v(art, "undefined-slot", layer, slot, format!("slot {slot} is never written")));
+        } else if !used[slot] {
+            out.push(v(
+                art,
+                "dead-write",
+                layer,
+                slot,
+                format!("slot {slot} is written but never read and is not a root"),
+            ));
+        }
+    }
+}
+
+/// Check the whole-layer op streams of a [`BitsliceNet`]: per-layer
+/// define-before-use, bounds, group consistency, no dead writes, and full
+/// coverage of each layer's `n_out · out_bits` output planes.
+pub fn verify_bitslice(net: &BitsliceNet) -> Vec<Violation> {
+    let art = ArtifactKind::OpStream;
+    let mut out = Vec::new();
+    let mut in_planes = net.n_features * net.in_bits as usize;
+    for (l, lo) in net.layers.iter().enumerate() {
+        let (defined, mut used) = check_stream_core(l, &lo.stream, in_planes, &mut out);
+        let want = lo.n_out * lo.out_bits as usize;
+        if lo.roots.len() != want {
+            out.push(v(
+                art,
+                "root-coverage",
+                l,
+                lo.roots.len(),
+                format!("{} root planes for {} output planes", lo.roots.len(), want),
+            ));
+        }
+        for (i, &r) in lo.roots.iter().enumerate() {
+            if (r as usize) < defined.len() && defined[r as usize] {
+                used[r as usize] = true;
+            } else {
+                out.push(v(art, "root-undef", l, i, format!("root plane {i} maps to undefined slot {r}")));
+            }
+        }
+        finish_stream(l, &lo.stream, &defined, &used, &mut out);
+        in_planes = lo.roots.len();
+    }
+    out
+}
+
+/// Check every per-shard re-flattened cone stream of a [`BitsliceKernel`]:
+/// the core stream invariants plus exact coverage of the shard's write
+/// range — each owned plane produced exactly once, none outside the range.
+pub(crate) fn check_kernel_streams(k: &BitsliceKernel) -> Vec<Violation> {
+    let art = ArtifactKind::OpStream;
+    let mut out = Vec::new();
+    let shards = k.n_shards();
+    for l in 0..k.n_layers() {
+        let in_planes = if l == 0 {
+            k.in_len()
+        } else {
+            (0..shards).map(|q| k.write_range(l - 1, q).end).max().unwrap_or(0)
+        };
+        for (s, ss) in k.layers[l].iter().enumerate() {
+            let (defined, mut used) = check_stream_core(l, &ss.stream, in_planes, &mut out);
+            let wr = k.write_range(l, s);
+            let mut seen = vec![false; wr.len()];
+            for (i, &(plane, node)) in ss.roots.iter().enumerate() {
+                let p = plane as usize;
+                if !wr.contains(&p) {
+                    out.push(v(
+                        art,
+                        "plane-range",
+                        l,
+                        s,
+                        format!("shard {s} root {i} targets plane {p} outside its write range {wr:?}"),
+                    ));
+                } else if seen[p - wr.start] {
+                    out.push(v(art, "plane-dup", l, s, format!("shard {s} produces plane {p} twice")));
+                } else {
+                    seen[p - wr.start] = true;
+                }
+                if (node as usize) < defined.len() && defined[node as usize] {
+                    used[node as usize] = true;
+                } else {
+                    out.push(v(
+                        art,
+                        "root-undef",
+                        l,
+                        s,
+                        format!("shard {s} root {i} maps to undefined slot {node}"),
+                    ));
+                }
+            }
+            let covered = seen.iter().filter(|&&x| x).count();
+            if covered != wr.len() {
+                out.push(v(
+                    art,
+                    "plane-coverage",
+                    l,
+                    s,
+                    format!("shard {s} produces {covered}/{} planes of {wr:?}", wr.len()),
+                ));
+            }
+            finish_stream(l, &ss.stream, &defined, &used, &mut out);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Checker 3: hazard schedules
+// ---------------------------------------------------------------------------
+
+/// Check a sharded kernel's `(shard, threshold)` schedule against the
+/// read/write sets it retains: write ranges tile every boundary, reads are
+/// sorted and in-bounds, the three hazard classes (producer,
+/// previous-generation reader, generation writer) are each dominated by a
+/// stored dependency, and the cross-cell dependency graph is acyclic.
+pub(crate) fn check_hazards<K: ShardKernel>(k: &K) -> Vec<Violation> {
+    let art = ArtifactKind::Hazard;
+    let mut out = Vec::new();
+    let l_count = k.n_layers();
+    let shards = k.n_shards();
+
+    // Recompute boundary widths; write ranges must tile each boundary in
+    // shard order (no gap, no overlap — position ownership is unambiguous).
+    let mut bounds = vec![0usize; l_count + 1];
+    bounds[0] = k.in_len();
+    for b in 1..=l_count {
+        let mut pos = 0usize;
+        for s in 0..shards {
+            let r = k.write_range(b - 1, s);
+            if r.start != pos {
+                out.push(v(
+                    art,
+                    "write-tiling",
+                    b - 1,
+                    s,
+                    format!("shard {s} writes {r:?} at boundary {b}, expected start {pos}"),
+                ));
+            }
+            pos = pos.max(r.end);
+        }
+        bounds[b] = pos;
+    }
+    if k.out_len() < bounds[l_count] {
+        out.push(v(
+            art,
+            "out-len",
+            l_count,
+            k.out_len(),
+            format!("output staging holds {} slots, boundary {} needs {}", k.out_len(), l_count, bounds[l_count]),
+        ));
+    }
+    let interior = (1..l_count).map(|b| bounds[b]).max().unwrap_or(0);
+    if l_count > 1 && k.buf_len() < interior {
+        out.push(v(
+            art,
+            "buf-len",
+            0,
+            k.buf_len(),
+            format!("shared buffers hold {} slots, widest interior boundary needs {interior}", k.buf_len()),
+        ));
+    }
+
+    // Previous generation of position x under destination boundary d: the
+    // nearest lower same-parity boundary wide enough to cover x (widths
+    // are not monotonic, so generations can skip a parity level).
+    let prev_gen = |d: usize, x: usize| -> Option<usize> {
+        let mut bb = d as isize - 2;
+        while bb >= 1 {
+            if bounds[bb as usize] > x {
+                return Some(bb as usize);
+            }
+            bb -= 2;
+        }
+        None
+    };
+    let owner = |b: usize, x: usize| -> Option<u32> {
+        (0..shards).find(|&q| k.write_range(b - 1, q).contains(&x)).map(|q| q as u32)
+    };
+    let dominated =
+        |deps: &[(u32, u32)], q: u32, thr: u32| deps.iter().any(|&(dq, dt)| dq == q && dt >= thr);
+
+    for l in 0..l_count {
+        for s in 0..shards {
+            let deps = k.deps(l, s);
+            for (i, &(q, thr)) in deps.iter().enumerate() {
+                if q as usize >= shards {
+                    out.push(v(art, "dep-target", l, i, format!("cell ({l},{s}) waits on shard {q} of {shards}")));
+                }
+                if q as usize == s {
+                    out.push(v(art, "dep-self", l, i, format!("cell ({l},{s}) waits on itself")));
+                }
+                if thr as usize > l {
+                    out.push(v(
+                        art,
+                        "dep-threshold",
+                        l,
+                        i,
+                        format!("cell ({l},{s}) waits for done[{q}] ≥ {thr} > its own layer"),
+                    ));
+                }
+            }
+            let reads = k.reads(l, s);
+            if reads.windows(2).any(|w| w[0] >= w[1]) {
+                out.push(v(art, "reads-sorted", l, s, format!("cell ({l},{s}) read set is not sorted/deduped")));
+            }
+            for &x in reads {
+                if x >= bounds[l] {
+                    out.push(v(
+                        art,
+                        "read-bounds",
+                        l,
+                        x,
+                        format!("cell ({l},{s}) reads position {x} but boundary {l} is {} wide", bounds[l]),
+                    ));
+                }
+            }
+            // Dedup per (shard, class) so a single dropped edge does not
+            // flood the report with one violation per position.
+            let mut reported: Vec<(u32, &'static str)> = Vec::new();
+            // Class 1: producers of every cross-shard gather.
+            if l >= 1 {
+                for &x in reads {
+                    if x >= bounds[l] {
+                        continue;
+                    }
+                    if let Some(q) = owner(l, x) {
+                        if q as usize != s
+                            && !dominated(deps, q, l as u32)
+                            && !reported.contains(&(q, "producer-dep"))
+                        {
+                            reported.push((q, "producer-dep"));
+                            out.push(v(
+                                art,
+                                "producer-dep",
+                                l,
+                                x,
+                                format!("cell ({l},{s}) reads position {x} from shard {q} with no (shard {q}, ≥{l}) wait"),
+                            ));
+                        }
+                    }
+                }
+            }
+            // Classes 2 and 3: before overwriting an interior parity-buffer
+            // position, its previous generation's readers and writer must
+            // have landed.
+            if l + 1 <= l_count.saturating_sub(1) {
+                for x in k.write_range(l, s) {
+                    let Some(bb) = prev_gen(l + 1, x) else { continue };
+                    if let Some(q) = owner(bb, x) {
+                        if q as usize != s
+                            && !dominated(deps, q, bb as u32)
+                            && !reported.contains(&(q, "writer-dep"))
+                        {
+                            reported.push((q, "writer-dep"));
+                            out.push(v(
+                                art,
+                                "writer-dep",
+                                l,
+                                x,
+                                format!("cell ({l},{s}) overwrites position {x} (gen boundary {bb}) with no (shard {q}, ≥{bb}) writer wait"),
+                            ));
+                        }
+                    }
+                    for q in 0..shards {
+                        if q == s {
+                            continue;
+                        }
+                        if k.reads(bb, q).binary_search(&x).is_ok()
+                            && !dominated(deps, q as u32, bb as u32 + 1)
+                            && !reported.contains(&(q as u32, "reader-dep"))
+                        {
+                            reported.push((q as u32, "reader-dep"));
+                            out.push(v(
+                                art,
+                                "reader-dep",
+                                l,
+                                x,
+                                format!("cell ({l},{s}) overwrites position {x} still readable by shard {q} at layer {bb} with no (shard {q}, ≥{}) wait", bb + 1),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Explicit acyclicity proof over the cross-cell dependency graph: a
+    // wait for done[q] ≥ thr is an edge from cell (thr-1, q).
+    let idx = |l: usize, s: usize| l * shards + s;
+    let n_cells = l_count * shards;
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n_cells];
+    let mut indeg = vec![0usize; n_cells];
+    for l in 0..l_count {
+        for s in 0..shards {
+            for &(q, thr) in k.deps(l, s) {
+                if (q as usize) < shards && thr >= 1 && (thr as usize) <= l_count {
+                    adj[idx(thr as usize - 1, q as usize)].push(idx(l, s));
+                    indeg[idx(l, s)] += 1;
+                }
+            }
+        }
+    }
+    let mut queue: Vec<usize> = (0..n_cells).filter(|&c| indeg[c] == 0).collect();
+    let mut done = 0usize;
+    while let Some(c) = queue.pop() {
+        done += 1;
+        for &d in &adj[c] {
+            indeg[d] -= 1;
+            if indeg[d] == 0 {
+                queue.push(d);
+            }
+        }
+    }
+    if done != n_cells {
+        out.push(v(
+            art,
+            "dep-cycle",
+            0,
+            n_cells - done,
+            format!("{} cells form a dependency cycle", n_cells - done),
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Checker 4: wire plans
+// ---------------------------------------------------------------------------
+
+/// Check one shard's [`WirePlan`] against the kernel it was derived from.
+pub(crate) fn check_wire_plan<K: ShardKernel>(k: &K, s: usize, wp: &WirePlan) -> Vec<Violation> {
+    let art = ArtifactKind::Wire;
+    let mut out = Vec::new();
+    let l_count = k.n_layers();
+    let coord = k.n_shards() as u32;
+    if wp.needs.len() != l_count
+        || wp.result.len() != l_count
+        || wp.deps.len() != l_count
+        || wp.counts.len() != l_count
+    {
+        out.push(v(art, "wire-len", 0, s, format!("shard {s} plan does not cover all {l_count} layers")));
+        return out;
+    }
+    let owner = |l: usize, x: usize| -> u32 {
+        if l == 0 {
+            return coord;
+        }
+        (0..k.n_shards())
+            .find(|&q| k.write_range(l - 1, q).contains(&x))
+            .map(|q| q as u32)
+            .unwrap_or(coord)
+    };
+    for l in 0..l_count {
+        let own: Range<usize> = if l == 0 { 0..0 } else { k.write_range(l - 1, s) };
+        let expected: Vec<usize> =
+            k.reads(l, s).iter().copied().filter(|x| !own.contains(x)).collect();
+        let runs = &wp.needs[l];
+        if expected.is_empty() && !runs.is_empty() {
+            out.push(v(
+                art,
+                "wire-flightless",
+                l,
+                runs.len(),
+                format!("shard {s} ships {} run(s) at flightless boundary {l}", runs.len()),
+            ));
+        }
+        // Canonical shape: non-empty runs, sorted, maximally merged.
+        let mut prev: Option<(u32, usize)> = None;
+        let mut got: Vec<(u32, usize)> = Vec::new();
+        for (i, (q, r)) in runs.iter().enumerate() {
+            if r.start >= r.end {
+                out.push(v(art, "wire-empty-run", l, i, format!("shard {s} run {i} is empty ({r:?})")));
+            }
+            if let Some((pq, pe)) = prev {
+                if r.start < pe {
+                    out.push(v(
+                        art,
+                        "wire-unsorted",
+                        l,
+                        i,
+                        format!("shard {s} run {i} ({r:?}) starts before the previous run ends ({pe})"),
+                    ));
+                } else if r.start == pe && *q == pq {
+                    out.push(v(
+                        art,
+                        "wire-unmerged",
+                        l,
+                        i,
+                        format!("shard {s} run {i} ({r:?}) is adjacent to the previous run from the same producer"),
+                    ));
+                }
+            }
+            prev = Some((*q, r.end));
+            for x in r.clone() {
+                got.push((*q, x));
+            }
+        }
+        // Exact cover of the cross-shard read set: no gap, no overlap.
+        let mut gs: Vec<usize> = got.iter().map(|&(_, x)| x).collect();
+        gs.sort_unstable();
+        if gs.windows(2).any(|w| w[0] == w[1]) {
+            out.push(v(art, "wire-overlap", l, s, format!("shard {s} ships a position more than once")));
+        }
+        gs.dedup();
+        let missing = expected.iter().filter(|x| gs.binary_search(x).is_err()).count();
+        if missing > 0 {
+            out.push(v(
+                art,
+                "wire-gap",
+                l,
+                missing,
+                format!("shard {s}: {missing} cross-shard read(s) not covered by any run"),
+            ));
+        }
+        let extra = gs.iter().filter(|x| expected.binary_search(x).is_err()).count();
+        if extra > 0 {
+            out.push(v(
+                art,
+                "wire-extra",
+                l,
+                extra,
+                format!("shard {s}: {extra} shipped position(s) it never reads"),
+            ));
+        }
+        for &(q, x) in &got {
+            let want = owner(l, x);
+            if q != want {
+                out.push(v(
+                    art,
+                    "wire-producer",
+                    l,
+                    x,
+                    format!("shard {s} expects position {x} from {q} but it is produced by {want}"),
+                ));
+                break; // one per boundary is enough to localize
+            }
+        }
+        // result / deps / counts must match the canonical derivation.
+        if wp.result[l] != k.write_range(l, s) {
+            out.push(v(
+                art,
+                "wire-result",
+                l,
+                s,
+                format!("shard {s} result {:?} != its write range {:?}", wp.result[l], k.write_range(l, s)),
+            ));
+        }
+        let mut exp_runs: Vec<(u32, Range<usize>)> = Vec::new();
+        for &x in &expected {
+            match exp_runs.last_mut() {
+                Some((lq, r)) if *lq == owner(l, x) && r.end == x => r.end = x + 1,
+                _ => exp_runs.push((owner(l, x), x..x + 1)),
+            }
+        }
+        let mut exp_counts: Vec<(u32, u32)> = Vec::new();
+        for (q, _) in &exp_runs {
+            match exp_counts.iter_mut().find(|(p, _)| p == q) {
+                Some((_, c)) => *c += 1,
+                None => exp_counts.push((*q, 1)),
+            }
+        }
+        let exp_deps: Vec<(u32, u32)> = exp_counts
+            .iter()
+            .map(|&(q, _)| (q, if q == coord { 1 } else { l as u32 }))
+            .collect();
+        if wp.deps[l] != exp_deps {
+            out.push(v(
+                art,
+                "wire-deps",
+                l,
+                s,
+                format!("shard {s} deps {:?} != expected {exp_deps:?}", wp.deps[l]),
+            ));
+        }
+        if wp.counts[l] != exp_counts {
+            out.push(v(
+                art,
+                "wire-counts",
+                l,
+                s,
+                format!("shard {s} counts {:?} != expected {exp_counts:?}", wp.counts[l]),
+            ));
+        }
+    }
+    out
+}
+
+/// Derive and check the wire plan of every shard of a kernel.
+pub(crate) fn check_wire_plans<K: ShardKernel>(k: &K) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for s in 0..k.n_shards() {
+        let wp = wire_plan(k, s);
+        out.extend(check_wire_plan(k, s, &wp));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Aggregate entry points
+// ---------------------------------------------------------------------------
+
+/// The sharded kernels of a model at a given shard count, retained for
+/// inspection instead of being consumed by runner threads — the handle the
+/// CLI and benches use to verify hazard schedules and wire plans.
+pub struct ShardedArtifacts {
+    pub(crate) plan: PlanKernel,
+    pub(crate) bits: BitsliceKernel,
+    shards: usize,
+}
+
+impl ShardedArtifacts {
+    /// Shard count the kernels were compiled for.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+}
+
+/// Compile the sharded kernels of `net` exactly as
+/// `ShardedModel::compile` would (cache-aware permutation included),
+/// keeping them inspectable.
+pub fn compile_sharded_artifacts(
+    net: &Network,
+    tables: &NetworkTables,
+    shards: usize,
+    workers: usize,
+) -> ShardedArtifacts {
+    let shards = shards.max(1);
+    let (pnet, ptables) = permuted_for_shards(net, tables);
+    ShardedArtifacts {
+        plan: plan_kernel_of(&pnet, &ptables, shards),
+        bits: bits_kernel_of(&pnet, &ptables, shards, workers),
+        shards,
+    }
+}
+
+/// Hazard-schedule violations of both sharded kernels.
+pub fn verify_hazards(a: &ShardedArtifacts) -> Vec<Violation> {
+    let mut out = check_hazards(&a.plan);
+    out.extend(check_hazards(&a.bits));
+    out
+}
+
+/// Wire-plan violations across every shard of both kernels.
+pub fn verify_wire_plans(a: &ShardedArtifacts) -> Vec<Violation> {
+    let mut out = check_wire_plans(&a.plan);
+    out.extend(check_wire_plans(&a.bits));
+    out
+}
+
+/// Op-stream violations of the per-shard re-flattened cone streams.
+pub fn verify_shard_streams(a: &ShardedArtifacts) -> Vec<Violation> {
+    check_kernel_streams(&a.bits)
+}
+
+/// Verify the two whole-model artifacts every `FrozenModel` carries.
+pub fn verify_frozen(plan: &EvalPlan, bits: &BitsliceNet) -> Report {
+    let mut r = Report::default();
+    r.section("plan", verify_plan(plan));
+    r.section("bitslice op-streams", verify_bitslice(bits));
+    r
+}
+
+/// Verify a compiled pair of sharded kernels: per-shard op streams, both
+/// hazard schedules, and every shard's wire plan.
+pub(crate) fn report_for_kernels(pk: &PlanKernel, bk: &BitsliceKernel) -> Report {
+    let mut r = Report::default();
+    r.section("shard op-streams", check_kernel_streams(bk));
+    let mut hz = check_hazards(pk);
+    hz.extend(check_hazards(bk));
+    r.section("hazard schedules", hz);
+    let mut wires = check_wire_plans(pk);
+    wires.extend(check_wire_plans(bk));
+    r.section("wire plans", wires);
+    r
+}
+
+/// [`report_for_kernels`] over a retained [`ShardedArtifacts`] pair.
+pub fn verify_sharded(a: &ShardedArtifacts) -> Report {
+    report_for_kernels(&a.plan, &a.bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::tables::compile_network;
+    use crate::nn::config;
+    use crate::util::rng::Rng;
+    use std::sync::atomic::AtomicU64;
+
+    fn grid_net(a: usize, d: u32) -> (Network, NetworkTables) {
+        let cfg = config::uniform("verify-t", &[8, 6, 3], 2, 2, 3, 3, 3, d, a, 3);
+        let net = Network::random(&cfg, &mut Rng::new(a as u64 * 100 + d as u64));
+        let tables = compile_network(&net, 2);
+        (net, tables)
+    }
+
+    // ---- positive: every clean compile passes the gate ----
+
+    #[test]
+    fn clean_compiles_pass_all_checkers() {
+        for (a, d) in [(1usize, 1u32), (2, 1), (1, 2), (2, 2)] {
+            let (net, tables) = grid_net(a, d);
+            let plan = EvalPlan::compile(&net, &tables);
+            let bits = BitsliceNet::compile(&net, &tables, 1);
+            let r = verify_frozen(&plan, &bits);
+            assert!(r.is_clean(), "frozen a={a} d={d}:\n{}", r.render());
+            let art = compile_sharded_artifacts(&net, &tables, 2, 2);
+            let r = verify_sharded(&art);
+            assert!(r.is_clean(), "sharded a={a} d={d}:\n{}", r.render());
+        }
+    }
+
+    #[test]
+    fn clean_deep_nonmonotonic_passes() {
+        let cfg = config::uniform("verify-deep", &[8, 6, 5, 7, 3], 2, 2, 3, 3, 3, 1, 2, 3);
+        let net = Network::random(&cfg, &mut Rng::new(11));
+        let tables = compile_network(&net, 2);
+        let plan = EvalPlan::compile(&net, &tables);
+        let bits = BitsliceNet::compile(&net, &tables, 2);
+        assert!(verify_frozen(&plan, &bits).is_clean());
+        for shards in [2usize, 3] {
+            let art = compile_sharded_artifacts(&net, &tables, shards, 2);
+            let r = verify_sharded(&art);
+            assert!(r.is_clean(), "shards={shards}:\n{}", r.render());
+        }
+    }
+
+    fn has(vs: &[Violation], invariant: &str) -> bool {
+        vs.iter().any(|x| x.invariant == invariant)
+    }
+
+    // ---- checker 1: plan mutations ----
+
+    fn plan_of() -> EvalPlan {
+        let (net, tables) = grid_net(2, 1);
+        EvalPlan::compile(&net, &tables)
+    }
+
+    #[test]
+    fn plan_rejects_oob_gather() {
+        let mut p = plan_of();
+        p.layers[1].gather[0] = p.widths[1] as u32;
+        let vs = verify_plan(&p);
+        assert!(
+            vs.iter().any(|x| x.invariant == "gather-bounds"
+                && x.artifact == ArtifactKind::Plan
+                && x.layer == 1
+                && x.index == 0),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn plan_rejects_truncated_table() {
+        let mut p = plan_of();
+        p.layers[0].poly.pop();
+        assert!(has(&verify_plan(&p), "poly-len"));
+        let mut p = plan_of();
+        p.layers[0].adder.pop();
+        assert!(has(&verify_plan(&p), "adder-len"));
+    }
+
+    #[test]
+    fn plan_rejects_bad_stride() {
+        let mut p = plan_of();
+        p.layers[0].poly_stride *= 2;
+        assert!(has(&verify_plan(&p), "poly-stride"));
+        let mut p = plan_of();
+        p.layers[0].adder_stride /= 2;
+        assert!(has(&verify_plan(&p), "adder-stride"));
+    }
+
+    #[test]
+    fn plan_rejects_undersized_scratch() {
+        let mut p = plan_of();
+        p.max_width = 0;
+        assert!(has(&verify_plan(&p), "scratch-width"));
+    }
+
+    // ---- checker 2: op-stream mutations ----
+
+    fn bits_of() -> BitsliceNet {
+        let (net, tables) = grid_net(2, 1);
+        BitsliceNet::compile(&net, &tables, 1)
+    }
+
+    #[test]
+    fn opstream_rejects_dropped_root() {
+        let mut b = bits_of();
+        b.layers[0].roots.pop();
+        assert!(has(&verify_bitslice(&b), "root-coverage"));
+    }
+
+    #[test]
+    fn opstream_rejects_dead_write() {
+        let mut b = bits_of();
+        let lo = &mut b.layers[0];
+        let slot = lo.stream.n_nodes as u32;
+        lo.stream.n_nodes += 1;
+        lo.stream.ops.push(Op::Const { out: slot, ones: false });
+        assert!(has(&verify_bitslice(&b), "dead-write"));
+    }
+
+    #[test]
+    fn opstream_rejects_oob_bind_wire() {
+        let mut b = bits_of();
+        b.layers[0].stream.bind[0].1 = u32::MAX;
+        assert!(has(&verify_bitslice(&b), "bind-wire-bounds"));
+    }
+
+    #[test]
+    fn opstream_rejects_degenerate_group() {
+        let mut b = bits_of();
+        let mut found = false;
+        'outer: for lo in &mut b.layers {
+            for op in &mut lo.stream.ops {
+                if let Op::Group { len, .. } = op {
+                    *len = 1;
+                    found = true;
+                    break 'outer;
+                }
+            }
+        }
+        assert!(found, "A=2 grid net must contain a shared-input group");
+        let vs = verify_bitslice(&b);
+        assert!(has(&vs, "group-size"), "{vs:?}");
+    }
+
+    #[test]
+    fn opstream_rejects_reordered_op() {
+        // Hand-built stream: op 0 consumes slot 2 before op 1 defines it.
+        let stream = OpStream {
+            bind: vec![(0, 0), (1, 1)],
+            ops: vec![
+                Op::Lut { out: 3, mask: 0b0110, n_in: 2, ins: [0, 2, 0, 0, 0, 0] },
+                Op::Lut { out: 2, mask: 0b0110, n_in: 2, ins: [0, 1, 0, 0, 0, 0] },
+            ],
+            lut_nodes: vec![],
+            lut_masks: vec![],
+            n_nodes: 4,
+        };
+        let mut vs = Vec::new();
+        check_stream_core(0, &stream, 2, &mut vs);
+        assert!(has(&vs, "undef-operand"), "{vs:?}");
+    }
+
+    #[test]
+    fn opstream_rejects_double_definition() {
+        let stream = OpStream {
+            bind: vec![(0, 0)],
+            ops: vec![
+                Op::Const { out: 1, ones: true },
+                Op::Const { out: 1, ones: false },
+            ],
+            lut_nodes: vec![],
+            lut_masks: vec![],
+            n_nodes: 2,
+        };
+        let mut vs = Vec::new();
+        check_stream_core(0, &stream, 1, &mut vs);
+        assert!(has(&vs, "multi-def"), "{vs:?}");
+    }
+
+    #[test]
+    fn opstream_rejects_bad_group_range() {
+        let stream = OpStream {
+            bind: vec![(0, 0)],
+            ops: vec![Op::Group { n_in: 1, ins: [0; 6], start: 0, len: 2 }],
+            lut_nodes: vec![1],
+            lut_masks: vec![0],
+            n_nodes: 2,
+        };
+        let mut vs = Vec::new();
+        check_stream_core(0, &stream, 1, &mut vs);
+        assert!(has(&vs, "group-range") && has(&vs, "group-store"), "{vs:?}");
+    }
+
+    // ---- checker 3: hazard mutations (real kernels) ----
+
+    fn kernels(shards: usize) -> (PlanKernel, BitsliceKernel) {
+        let cfg = config::uniform("verify-k", &[8, 6, 5, 7, 3], 2, 2, 3, 3, 3, 1, 2, 3);
+        let net = Network::random(&cfg, &mut Rng::new(23));
+        let tables = compile_network(&net, 2);
+        let (pnet, ptables) = permuted_for_shards(&net, &tables);
+        (plan_kernel_of(&pnet, &ptables, shards), bits_kernel_of(&pnet, &ptables, shards, 2))
+    }
+
+    #[test]
+    fn hazard_rejects_dropped_dependency_edge() {
+        let (mut pk, _) = kernels(2);
+        let (mut l0, mut s0) = (usize::MAX, 0);
+        'outer: for l in 0..pk.deps.len() {
+            for s in 0..pk.deps[l].len() {
+                if !pk.deps[l][s].is_empty() {
+                    (l0, s0) = (l, s);
+                    break 'outer;
+                }
+            }
+        }
+        assert_ne!(l0, usize::MAX, "kernel has no dependencies at all");
+        pk.deps[l0][s0].clear();
+        let vs = check_hazards(&pk);
+        assert!(
+            has(&vs, "producer-dep") || has(&vs, "reader-dep") || has(&vs, "writer-dep"),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn hazard_rejects_lowered_threshold() {
+        // Every stored threshold is the exact max over its hazard classes,
+        // so lowering any one of them must break a class.
+        let (_, mut bk) = kernels(2);
+        let (mut l0, mut s0) = (usize::MAX, 0);
+        'outer: for l in 0..bk.deps.len() {
+            for s in 0..bk.deps[l].len() {
+                if !bk.deps[l][s].is_empty() {
+                    (l0, s0) = (l, s);
+                    break 'outer;
+                }
+            }
+        }
+        assert_ne!(l0, usize::MAX);
+        bk.deps[l0][s0][0].1 -= 1;
+        let vs = check_hazards(&bk);
+        assert!(
+            has(&vs, "producer-dep") || has(&vs, "reader-dep") || has(&vs, "writer-dep"),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn hazard_rejects_cycle() {
+        let (mut pk, _) = kernels(2);
+        pk.deps[1][0] = vec![(1, 2)];
+        pk.deps[1][1] = vec![(0, 2)];
+        let vs = check_hazards(&pk);
+        assert!(has(&vs, "dep-cycle"), "{vs:?}");
+        assert!(has(&vs, "dep-threshold"), "{vs:?}");
+    }
+
+    // ---- checker 3/4: synthetic kernel for class isolation ----
+
+    struct TestKernel {
+        bounds: Vec<usize>,
+        write: Vec<Vec<Range<usize>>>,
+        reads: Vec<Vec<Vec<usize>>>,
+        deps: Vec<Vec<Vec<(u32, u32)>>>,
+    }
+
+    impl ShardKernel for TestKernel {
+        type Scratch = ();
+        fn n_layers(&self) -> usize {
+            self.write.len()
+        }
+        fn n_shards(&self) -> usize {
+            self.write[0].len()
+        }
+        fn in_len(&self) -> usize {
+            self.bounds[0]
+        }
+        fn out_len(&self) -> usize {
+            *self.bounds.last().unwrap()
+        }
+        fn buf_len(&self) -> usize {
+            self.bounds[1..self.bounds.len() - 1].iter().copied().max().unwrap_or(0)
+        }
+        fn deps(&self, l: usize, s: usize) -> &[(u32, u32)] {
+            &self.deps[l][s]
+        }
+        fn reads(&self, l: usize, s: usize) -> &[usize] {
+            &self.reads[l][s]
+        }
+        fn write_range(&self, l: usize, s: usize) -> Range<usize> {
+            self.write[l][s].clone()
+        }
+        fn make_scratch(&self) -> Self::Scratch {}
+        fn run_cell(
+            &self,
+            _l: usize,
+            _s: usize,
+            _src: &[AtomicU64],
+            _dst: &[AtomicU64],
+            _scratch: &mut Self::Scratch,
+        ) {
+        }
+    }
+
+    /// 4 layers × 2 shards, every boundary 4 wide in halves, every cell
+    /// reading the full previous boundary.  `deps` below is hand-derived
+    /// and pinned clean by `hazard_accepts_uniform_kernel`.
+    fn uniform_kernel() -> TestKernel {
+        TestKernel {
+            bounds: vec![4; 5],
+            write: vec![vec![0..2, 2..4]; 4],
+            reads: vec![vec![vec![0, 1, 2, 3]; 2]; 4],
+            deps: vec![
+                vec![vec![], vec![]],
+                vec![vec![(1, 1)], vec![(0, 1)]],
+                vec![vec![(1, 2)], vec![(0, 2)]],
+                vec![vec![(1, 3)], vec![(0, 3)]],
+            ],
+        }
+    }
+
+    #[test]
+    fn hazard_accepts_uniform_kernel() {
+        let vs = check_hazards(&uniform_kernel());
+        assert!(vs.is_empty(), "{vs:?}");
+    }
+
+    #[test]
+    fn hazard_rejects_missing_reader_block() {
+        let mut k = uniform_kernel();
+        // Cell (2,0) reads only its own half: no producer wait required,
+        // but shard 1 still reads [0,2) at layer 1 — (1, ≥2) is mandatory.
+        k.reads[2][0] = vec![0, 1];
+        k.deps[2][0] = vec![(1, 1)];
+        let vs = check_hazards(&k);
+        assert!(has(&vs, "reader-dep"), "{vs:?}");
+        assert!(!has(&vs, "producer-dep"), "{vs:?}");
+    }
+
+    #[test]
+    fn hazard_rejects_missing_writer_order() {
+        let mut k = uniform_kernel();
+        // Boundary-1 ownership differs from boundary-3's: position 1 is
+        // written by shard 1 at layer 0 but overwritten by shard 0 at
+        // layer 2, so cell (2,0) needs a (1, ≥1) writer-ordering wait —
+        // and with these read sets, *only* that wait.
+        k.write[0] = vec![0..1, 1..4];
+        k.reads[1][0] = vec![0];
+        k.reads[1][1] = vec![2, 3];
+        k.reads[2][0] = vec![0, 1];
+        k.reads[2][1] = vec![2, 3];
+        k.reads[3][0] = vec![0, 1];
+        k.reads[3][1] = vec![2, 3];
+        k.deps = vec![vec![vec![], vec![]]; 4];
+        k.deps[2][0] = vec![(1, 1)];
+        let baseline = check_hazards(&k);
+        assert!(baseline.is_empty(), "{baseline:?}");
+        k.deps[2][0].clear();
+        let vs = check_hazards(&k);
+        assert!(!vs.is_empty() && vs.iter().all(|x| x.invariant == "writer-dep"), "{vs:?}");
+    }
+
+    #[test]
+    fn hazard_rejects_broken_write_tiling() {
+        let mut k = uniform_kernel();
+        k.write[1] = vec![0..3, 2..4];
+        assert!(has(&check_hazards(&k), "write-tiling"));
+    }
+
+    #[test]
+    fn hazard_rejects_oob_read() {
+        let mut k = uniform_kernel();
+        k.reads[1][0] = vec![0, 4];
+        assert!(has(&check_hazards(&k), "read-bounds"));
+    }
+
+    // ---- checker 4: wire-plan mutations ----
+
+    #[test]
+    fn wire_accepts_clean_plan() {
+        let k = uniform_kernel();
+        for s in 0..2 {
+            let wp = wire_plan(&k, s);
+            let vs = check_wire_plan(&k, s, &wp);
+            assert!(vs.is_empty(), "shard {s}: {vs:?}");
+        }
+    }
+
+    #[test]
+    fn wire_rejects_gap() {
+        let k = uniform_kernel();
+        let mut wp = wire_plan(&k, 0);
+        wp.needs[1].clear();
+        assert!(has(&check_wire_plan(&k, 0, &wp), "wire-gap"));
+    }
+
+    #[test]
+    fn wire_rejects_overlap() {
+        let k = uniform_kernel();
+        let mut wp = wire_plan(&k, 0);
+        let run = wp.needs[1][0].clone();
+        wp.needs[1].push(run);
+        assert!(has(&check_wire_plan(&k, 0, &wp), "wire-overlap"));
+    }
+
+    #[test]
+    fn wire_rejects_unmerged_runs() {
+        let k = uniform_kernel();
+        let mut wp = wire_plan(&k, 0);
+        wp.needs[1] = vec![(1, 2..3), (1, 3..4)];
+        assert!(has(&check_wire_plan(&k, 0, &wp), "wire-unmerged"));
+    }
+
+    #[test]
+    fn wire_rejects_unsorted_runs() {
+        let k = uniform_kernel();
+        let mut wp = wire_plan(&k, 0);
+        wp.needs[1] = vec![(1, 3..4), (1, 2..3)];
+        assert!(has(&check_wire_plan(&k, 0, &wp), "wire-unsorted"));
+    }
+
+    #[test]
+    fn wire_rejects_wrong_producer() {
+        let k = uniform_kernel();
+        let mut wp = wire_plan(&k, 0);
+        wp.needs[1] = vec![(0, 2..4)];
+        assert!(has(&check_wire_plan(&k, 0, &wp), "wire-producer"));
+    }
+
+    #[test]
+    fn wire_rejects_wrong_result_range() {
+        let k = uniform_kernel();
+        let mut wp = wire_plan(&k, 0);
+        wp.result[1] = 0..3;
+        assert!(has(&check_wire_plan(&k, 0, &wp), "wire-result"));
+    }
+
+    #[test]
+    fn wire_rejects_stale_deps_and_counts() {
+        let k = uniform_kernel();
+        let mut wp = wire_plan(&k, 0);
+        wp.counts[1] = vec![(1, 2)];
+        assert!(has(&check_wire_plan(&k, 0, &wp), "wire-counts"));
+        let mut wp = wire_plan(&k, 0);
+        wp.deps[1] = vec![(1, 0)];
+        assert!(has(&check_wire_plan(&k, 0, &wp), "wire-deps"));
+    }
+
+    #[test]
+    fn wire_rejects_flightless_shipment() {
+        let mut k = uniform_kernel();
+        k.reads[1][0] = vec![0, 1]; // own slice only: boundary 1 is flightless
+        let mut wp = wire_plan(&k, 0);
+        assert!(wp.needs[1].is_empty());
+        wp.needs[1].push((1, 2..3));
+        assert!(has(&check_wire_plan(&k, 0, &wp), "wire-flightless"));
+    }
+
+    // ---- diagnostics are data, and the gate renders them ----
+
+    #[test]
+    fn report_renders_and_gates() {
+        let mut p = plan_of();
+        p.layers[0].gather[0] = 10_000;
+        let bits = bits_of();
+        let r = verify_frozen(&p, &bits);
+        assert!(!r.is_clean());
+        assert_eq!(r.total(), 1);
+        let rendered = r.render();
+        assert!(rendered.contains("gather-bounds"), "{rendered}");
+        assert!(rendered.contains("bitslice op-streams: OK"), "{rendered}");
+        assert!(r.gate().is_err());
+        let err = format!("{:#}", r.gate().unwrap_err());
+        assert!(err.contains("gather-bounds"), "{err}");
+        // Display carries artifact, layer, index, and invariant.
+        let one = format!("{}", r.violations()[0]);
+        assert!(one.starts_with("plan L0[0] gather-bounds"), "{one}");
+    }
+}

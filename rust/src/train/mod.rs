@@ -81,9 +81,8 @@ fn reinit_state(man: &Manifest, rng: &mut Rng) -> Vec<Vec<f32>> {
             match (spec.role, kind) {
                 (Role::Train, "w") => {
                     // l{i}.w — shape [A, n_out, M]; He-style on M.
-                    let layer: usize = spec.name[1..spec.name.find('.').unwrap()]
-                        .parse()
-                        .unwrap_or(0);
+                    let dot = spec.name.find('.').unwrap_or(spec.name.len());
+                    let layer: usize = spec.name[1..dot].parse().unwrap_or(0);
                     let m = monomial_count(cfg.fan[layer], cfg.degree);
                     let std = 1.0 / (m as f64).sqrt();
                     init.iter().map(|_| rng.normal_ms(0.0, std) as f32).collect()
@@ -147,8 +146,8 @@ fn run_once(
             bail!("train_step returned {} outputs, expected {}", outs.len(), n_state + 2);
         }
         let mut outs = outs;
-        let acc_l = outs.pop().unwrap();
-        let loss_l = outs.pop().unwrap();
+        let acc_l = outs.pop().expect("length checked above: n_state + 2 outputs");
+        let loss_l = outs.pop().expect("length checked above: n_state + 2 outputs");
         state = outs;
         let loss = to_f32_vec(&loss_l)?[0];
         let acc = to_f32_vec(&acc_l)?[0];

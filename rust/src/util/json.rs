@@ -425,7 +425,10 @@ impl<'a> Parser<'a> {
                     } else {
                         self.i -= 1;
                         let rest = std::str::from_utf8(&self.b[self.i..])?;
-                        let ch = rest.chars().next().unwrap();
+                        let ch = rest
+                            .chars()
+                            .next()
+                            .expect("rest starts at a non-ASCII byte, so it is non-empty");
                         s.push(ch);
                         self.i += ch.len_utf8();
                     }

@@ -37,11 +37,19 @@ pub fn parallel_map<T: Sync, R: Send>(
                     break;
                 }
                 let r = f(i, &items[i]);
-                *out[i].lock().unwrap() = Some(r);
+                // Each slot is written by exactly one worker; a poisoned
+                // mutex here means `f` panicked, which the scope re-raises.
+                *out[i].lock().unwrap_or_else(|p| p.into_inner()) = Some(r);
             });
         }
     });
-    out.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect()
+    out.into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap_or_else(|p| p.into_inner())
+                .expect("parallel_map: every index claimed exactly once")
+        })
+        .collect()
 }
 
 /// Parallel for over a range with dynamic scheduling; `f(i)` for i in 0..n.

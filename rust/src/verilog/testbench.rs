@@ -104,7 +104,7 @@ fn pack_hex(codes: &[i32], bits: u32, total_bits: u32) -> String {
         let bitpos = i * 4;
         let (w, off) = (bitpos / 64, bitpos % 64);
         let nib = (words[w] >> off) & 0xF;
-        s.push(char::from_digit(nib as u32, 16).unwrap());
+        s.push(char::from_digit(nib as u32, 16).expect("nib masked to 0..=15"));
     }
     s
 }

@@ -1,6 +1,10 @@
 //! CLI smoke tests — run the `polylut` binary end to end (requires
 //! quickstart artifacts; skips otherwise).
 
+// Integration tests are a separate crate: clippy's allow-unwrap-in-tests
+// doesn't reach them, so the workspace unwrap_used deny is lifted per-file.
+#![allow(clippy::unwrap_used)]
+
 use std::path::Path;
 use std::process::Command;
 
@@ -36,9 +40,33 @@ fn run_in(dir: &Path, args: &[&str]) -> (bool, String) {
 fn help_lists_subcommands() {
     let (ok, text) = run(&["--help"]);
     assert!(ok);
-    for sub in ["train", "compile", "synth", "rtl", "serve", "list"] {
+    for sub in ["train", "compile", "synth", "rtl", "serve", "list", "verify"] {
         assert!(text.contains(sub), "missing {sub} in help");
     }
+}
+
+/// `polylut verify` end to end on a random-weight geometry: needs no
+/// artifacts, checks all four artifact kinds, exits zero with every
+/// section OK.
+#[test]
+fn verify_runs_clean_on_random_geometry() {
+    let (ok, text) = run(&[
+        "verify", "--widths", "8,6,5,3", "--net-seed", "11", "--a", "2", "--shards", "3",
+    ]);
+    assert!(ok, "{text}");
+    for section in ["plan", "bitslice op-streams", "shard op-streams", "hazard schedules", "wire plans"]
+    {
+        assert!(text.contains(section), "missing section {section:?} in:\n{text}");
+    }
+    assert!(text.contains("0 violation(s)"), "{text}");
+    assert!(!text.to_lowercase().contains("panicked"), "{text}");
+}
+
+#[test]
+fn verify_without_model_fails_with_usage() {
+    let (ok, text) = run(&["verify"]);
+    assert!(!ok);
+    assert!(text.contains("--id") && text.contains("--widths"), "{text}");
 }
 
 #[test]

@@ -1,5 +1,10 @@
 //! Cross-language integration tests: the Rust hardware-functional model must
 //! agree with the JAX eval graph (via PJRT) on trained weights.
+
+// Integration tests are a separate crate: clippy's allow-unwrap-in-tests
+// doesn't reach them, so the workspace unwrap_used deny is lifted per-file.
+#![allow(clippy::unwrap_used)]
+
 use std::path::Path;
 
 use polylut_add::{data, meta, runtime, train};

@@ -1,6 +1,10 @@
 //! Integration: the full toolflow on a tiny config, plus the serving stack
 //! (no artifacts required — everything from a random-weight network).
 
+// Integration tests are a separate crate: clippy's allow-unwrap-in-tests
+// doesn't reach them, so the workspace unwrap_used deny is lifted per-file.
+#![allow(clippy::unwrap_used)]
+
 use std::sync::Arc;
 use std::time::Duration;
 

@@ -6,6 +6,10 @@
 //! must be bit-exact against `Network::forward_codes` on both the plan and
 //! bitslice routes.
 
+// Integration tests are a separate crate: clippy's allow-unwrap-in-tests
+// doesn't reach them, so the workspace unwrap_used deny is lifted per-file.
+#![allow(clippy::unwrap_used)]
+
 use std::io::{BufRead, BufReader};
 use std::process::{Child, Command, Stdio};
 
