@@ -30,12 +30,37 @@ use polylut_add::sim::{
     verify, BitsliceNet, EvalPlan, LutSim, Scratch, ShardPlacement, ShardWorkerHost,
     ShardedModel, WireConfig, DEFAULT_WIRE_WINDOW,
 };
-use polylut_add::util::bench::Bench;
+use polylut_add::simd::{self, KernelPath, LanePlan, SimdLevel};
+use polylut_add::util::bench::{Bench, BenchJournal};
 use polylut_add::util::pool::default_workers;
 use polylut_add::util::rng::Rng;
 
+/// The SIMD-width bench ladder: every portable block width plus whatever
+/// accelerated paths [`simd::plan_for`] selects on this host (deduplicated
+/// by kernel path, so an AVX-less host doesn't measure Blocks4 twice).
+fn width_ladder() -> Vec<LanePlan> {
+    let mut plans = vec![
+        LanePlan { lanes: 128, path: KernelPath::Blocks2, level: SimdLevel::Portable },
+        LanePlan { lanes: 256, path: KernelPath::Blocks4, level: SimdLevel::Portable },
+        LanePlan { lanes: 512, path: KernelPath::Blocks8, level: SimdLevel::Portable },
+    ];
+    for lanes in [128usize, 256, 512] {
+        let p = simd::plan_for(lanes);
+        if plans.iter().all(|q| q.path != p.path) {
+            plans.push(p);
+        }
+    }
+    plans
+}
+
 fn main() {
     let b = Bench::default();
+    let mut journal = BenchJournal::new();
+    println!(
+        "[micro] simd: detected {} (widest {} lanes)",
+        simd::detect_level().as_str(),
+        simd::widest_lanes()
+    );
     let engine = Engine::cpu().ok();
     let prepared = engine.as_ref().and_then(|e| {
         harness::prepare(e, "jsc-m-lite-d1-a2")
@@ -130,6 +155,29 @@ fn main() {
         net.cfg.name,
         st_batch.median_ns / st_bits.median_ns
     );
+    journal.record(&net.cfg.name, "bitslice/scalar", 64, code_rows.len(), &st_bits);
+    // One widest-lane point on the deep-table geometry (the full width
+    // ladder runs on nid-t4 below, where the bitslice engine is the
+    // design-point winner).
+    let wplan = simd::plan_for(simd::widest_lanes());
+    let bits_w = BitsliceNet::from_mapped(&net, &tables, &mapped).with_lane_plan(wplan);
+    let st_bits_w = b.measure(
+        &format!("bitslice/forward_batch x1000 ({}-lane {})", wplan.lanes, wplan.path.as_str()),
+        || bits_w.forward_batch_codes(&code_rows).len(),
+    );
+    assert_eq!(
+        bits_w.forward_batch_codes(&code_rows),
+        bits.forward_batch(&code_rows, &mut bscratch),
+        "wide bitslice disagrees with 64-lane on {}",
+        net.cfg.name
+    );
+    journal.record(
+        &net.cfg.name,
+        &format!("bitslice/{}", wplan.path.as_str()),
+        wplan.lanes,
+        code_rows.len(),
+        &st_bits_w,
+    );
 
     // The acceptance comparison for the bitsliced engine: the paper's
     // Table IV Add2 geometry (small fan-in, βF = 6 → every table bit is a
@@ -166,6 +214,57 @@ fn main() {
         st_plan4.median_ns / st_bits4.median_ns,
         st_bits4.throughput(1024.0),
         st_plan4.throughput(1024.0)
+    );
+    journal.record("nid-t4", "plan", 0, rows4.len(), &st_plan4);
+    journal.record("nid-t4", "bitslice/scalar", 64, rows4.len(), &st_bits4);
+
+    // SIMD width ladder on nid-t4 — the tentpole acceptance sweep: one
+    // op-stream walk retiring 128/256/512 samples via portable blocks and
+    // the detected target_feature paths, each pinned bit-exact against the
+    // 64-lane engine on the same batch.  1024 samples = 2 full 512-lane
+    // words, so even the widest path runs full.
+    let reference4 = bits4.forward_batch(&rows4, &mut bscratch4);
+    let widest = simd::widest_lanes();
+    let mut widest_ns = st_bits4.median_ns;
+    for lp in width_ladder() {
+        let wide = BitsliceNet::compile(&net4, &tables4, default_workers()).with_lane_plan(lp);
+        let st = b.measure(
+            &format!(
+                "bitslice/forward_batch x1024 (nid-t4, {}-lane {})",
+                lp.lanes,
+                lp.path.as_str()
+            ),
+            || wide.forward_batch_codes(&rows4).len(),
+        );
+        assert_eq!(
+            wide.forward_batch_codes(&rows4),
+            reference4,
+            "{}-lane {} path disagrees with 64-lane on nid-t4",
+            lp.lanes,
+            lp.path.as_str()
+        );
+        journal.record(
+            "nid-t4",
+            &format!("bitslice/{}", lp.path.as_str()),
+            lp.lanes,
+            rows4.len(),
+            &st,
+        );
+        println!(
+            "  -> {}-lane {} vs 64-lane scalar (nid-t4): {:.2}x ({:.0} samples/s)",
+            lp.lanes,
+            lp.path.as_str(),
+            st_bits4.median_ns / st.median_ns,
+            st.throughput(rows4.len() as f64)
+        );
+        if lp == simd::plan_for(widest) {
+            widest_ns = st.median_ns;
+        }
+    }
+    println!(
+        "  -> widest path ({} lanes) vs 64-lane baseline on nid-t4: {:.2}x samples/s",
+        widest,
+        st_bits4.median_ns / widest_ns
     );
 
     // Sharded intra-sample execution on the same Table IV geometry: the
@@ -395,4 +494,8 @@ fn main() {
     b.measure("fpga/synthesize (tables+map+report)", || {
         polylut_add::fpga::synthesize(&net, Strategy::Merged).unwrap()
     });
+
+    // Machine-readable throughput records (BENCH_bitslice.json in CI) —
+    // written only when POLYLUT_BENCH_JSON names a path.
+    journal.write_if_requested();
 }

@@ -51,9 +51,15 @@ fn print_help() {
            serve    --id <artifact>      batching inference server (self-driving load test)\n\
                     [--backend lut|pjrt] [--batch-window-us N] [--max-batch N]\n\
                     [--requests N] [--clients N]\n\
+                    [--lanes N|widest]  bitslice lane width: samples retired\n\
+                    per op-stream walk (64/128/256/512; default: widest the\n\
+                    host supports — avx512f→512, avx2→256, else 128; env\n\
+                    POLYLUT_LANES).  64 forces the canonical scalar engine;\n\
+                    the wire/shard handoff stays 64-bit planes regardless.\n\
                     [--bitslice-threshold N]  batch size from which the LUT\n\
-                    backend runs bitsliced (0 = always; default: two 64-lane\n\
-                    words).  Smaller batches use the plan engine — or, with\n\
+                    backend runs bitsliced (0 = always; default: two full\n\
+                    words at the active lane width, so e.g. 512 at --lanes\n\
+                    256).  Smaller batches use the plan engine — or, with\n\
                     [--shards N]  (default 1), the intra-sample sharded\n\
                     engines: each request's forward pass itself runs across\n\
                     N cores with bit-plane handoff (see ARCHITECTURE.md §4).\n\
@@ -75,7 +81,8 @@ fn print_help() {
                     per engine; shard_cells/shard_waits = per-shard occupancy\n\
                     and handoff-wait counters (cumulative); shard_spin_us and\n\
                     wire_frames/bytes/wait_ns/reconnects plus\n\
-                    wire_inflight_epochs/resumes/retry_exhausted when active\n\
+                    wire_inflight_epochs/resumes/retry_exhausted when active;\n\
+                    simd/lanes = detected kernel level + active lane width\n\
            shard-worker --listen H:P --shards S   host shards of a model for\n\
                     a remote coordinator (each connection claims one\n\
                     (engine, shard) after a model-fingerprint + resume-epoch\n\

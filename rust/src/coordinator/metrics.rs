@@ -21,7 +21,8 @@ pub struct Metrics {
     pub batch_samples: AtomicU64,
     pub queue_rejects: AtomicU64,
     /// Batches the LUT backend served through the evaluation plan vs the
-    /// bitsliced 64-lane engine vs the intra-sample sharded engines (all
+    /// bitsliced wide-lane engine (64–512 samples per op-stream walk; see
+    /// `simd=`/`lanes=` below) vs the intra-sample sharded engines (all
     /// zero under the PJRT backend).
     pub plan_batches: AtomicU64,
     pub bitslice_batches: AtomicU64,
@@ -54,6 +55,12 @@ pub struct Metrics {
     /// Violations found by the `sim::verify` pass over the served
     /// artifacts (`u64::MAX` = no verify pass recorded).
     verify_violations: AtomicU64,
+    /// Ordinal of the detected [`crate::simd::SimdLevel`] the bitslice
+    /// engine compiled against (`u64::MAX` = not recorded: no LUT backend).
+    simd_level: AtomicU64,
+    /// Active bitslice lane width — samples retired per op-stream walk
+    /// (`u64::MAX` = not recorded).
+    simd_lanes: AtomicU64,
     hist: [AtomicU64; BUCKETS],
 }
 
@@ -79,6 +86,8 @@ impl Default for Metrics {
             wire_active: AtomicU64::new(0),
             shard_spin_us: AtomicU64::new(u64::MAX),
             verify_violations: AtomicU64::new(u64::MAX),
+            simd_level: AtomicU64::new(u64::MAX),
+            simd_lanes: AtomicU64::new(u64::MAX),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -155,6 +164,14 @@ impl Metrics {
         self.verify_violations.store(violations, Ordering::Relaxed);
     }
 
+    /// Record the SIMD dispatch level and lane width the served bitslice
+    /// engine compiled against, so the snapshot shows which kernel path
+    /// (`--lanes` / `POLYLUT_LANES` / auto-detect) is live.
+    pub fn set_simd(&self, level: crate::simd::SimdLevel, lanes: u64) {
+        self.simd_level.store(level.ordinal(), Ordering::Relaxed);
+        self.simd_lanes.store(lanes, Ordering::Relaxed);
+    }
+
     /// Approximate quantile from the histogram (upper bucket bound).
     pub fn latency_quantile_us(&self, q: f64) -> f64 {
         let counts: Vec<u64> =
@@ -215,6 +232,16 @@ impl Metrics {
         let verify = self.verify_violations.load(Ordering::Relaxed);
         if verify != u64::MAX {
             s.push_str(&format!(" verify_violations={verify}"));
+        }
+        let level = self.simd_level.load(Ordering::Relaxed);
+        if level != u64::MAX {
+            let name = crate::simd::SimdLevel::from_ordinal(level)
+                .map(|l| l.as_str())
+                .unwrap_or("unknown");
+            s.push_str(&format!(
+                " simd={name} lanes={}",
+                self.simd_lanes.load(Ordering::Relaxed)
+            ));
         }
         if self.wire_active.load(Ordering::Relaxed) != 0 {
             s.push_str(&format!(
@@ -312,6 +339,19 @@ mod tests {
         assert!(m.snapshot().contains("verify_violations=0"));
         m.record_verify(3);
         assert!(m.snapshot().contains("verify_violations=3"));
+    }
+
+    #[test]
+    fn simd_fields_surface_in_snapshot() {
+        let m = Metrics::new();
+        let snap = m.snapshot();
+        assert!(!snap.contains("simd="), "hidden until a LUT backend records");
+        assert!(!snap.contains("lanes="), "{snap}");
+        m.set_simd(crate::simd::SimdLevel::Avx2, 256);
+        let snap = m.snapshot();
+        assert!(snap.contains("simd=avx2 lanes=256"), "{snap}");
+        m.set_simd(crate::simd::SimdLevel::Scalar, 64);
+        assert!(m.snapshot().contains("simd=scalar lanes=64"));
     }
 
     #[test]

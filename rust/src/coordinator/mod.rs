@@ -41,9 +41,11 @@ use metrics::Metrics;
 
 /// A frozen deployable model: trained network + its compiled tables + the
 /// precompiled LUT execution engines — the per-sample evaluation plan
-/// (latency), the 64-sample-per-word bitsliced netlist engine
-/// (throughput), and optionally the intra-sample sharded engines
-/// (`shards > 1`).  `Backend::Lut` picks between them per batch.
+/// (latency), the bitsliced netlist engine compiled at the widest
+/// supported lane width (throughput; override with `serve --lanes` /
+/// `POLYLUT_LANES`), and optionally the intra-sample sharded engines
+/// (`shards > 1`, always canonical 64-bit planes on the handoff).
+/// `Backend::Lut` picks between them per batch.
 pub struct FrozenModel {
     pub net: Network,
     pub tables: NetworkTables,
@@ -88,12 +90,16 @@ impl FrozenModel {
             placement,
             spin_us,
             WireConfig::default(),
+            None,
         )
     }
 
     /// [`FrozenModel::from_network_placed`] with explicit wire knobs (the
     /// `serve --wire-window` / `--wire-retries` path): in-flight window per
-    /// link and the reconnect-and-resume retry budget.
+    /// link and the reconnect-and-resume retry budget.  `lanes` forces the
+    /// bitslice engine's lane width (the `serve --lanes` path, strict);
+    /// `None` resolves `POLYLUT_LANES` and falls back to the widest
+    /// detected width ([`crate::simd::resolve`]).
     pub fn from_network_placed_wire(
         net: Network,
         workers: usize,
@@ -101,10 +107,12 @@ impl FrozenModel {
         placement: &ShardPlacement,
         spin_us: Option<u64>,
         wire: WireConfig,
+        lanes: Option<usize>,
     ) -> Result<FrozenModel> {
+        let lane_plan = crate::simd::resolve(lanes)?;
         let tables = crate::lut::tables::compile_network(&net, workers);
         let plan = EvalPlan::compile(&net, &tables);
-        let bitslice = BitsliceNet::compile(&net, &tables, workers);
+        let bitslice = BitsliceNet::compile(&net, &tables, workers).with_lane_plan(lane_plan);
         if crate::sim::verify::gate_enabled() {
             crate::sim::verify::verify_frozen(&plan, &bitslice).gate()?;
         }
@@ -135,7 +143,10 @@ pub enum BackendSpec {
 
 impl BackendSpec {
     pub fn lut(model: Arc<FrozenModel>, workers: usize) -> BackendSpec {
-        BackendSpec::Lut { model, workers, select: EngineSelect::auto() }
+        // Crossover derives from the lane width the model actually compiled
+        // (widest detected unless forced), not the host-widest default.
+        let select = EngineSelect::auto_for_lanes(model.bitslice.lanes());
+        BackendSpec::Lut { model, workers, select }
     }
 
     /// LUT backend with an explicit plan-vs-bitslice crossover policy.
@@ -169,7 +180,8 @@ impl BackendSpec {
 pub enum Backend {
     /// Deployed-semantics LUT evaluation, parallel across the batch.
     /// `select` routes each batch to the evaluation plan (small /
-    /// latency-sensitive) or the bitsliced 64-lane engine (large).
+    /// latency-sensitive) or the bitsliced engine at its compiled lane
+    /// width (large; crossover scales with that width).
     Lut { model: Arc<FrozenModel>, workers: usize, select: EngineSelect },
     /// AOT-lowered JAX eval graph via PJRT (fixed batch, padded). Params
     /// stay resident as device buffers.
@@ -185,7 +197,8 @@ pub enum Backend {
 
 impl Backend {
     pub fn lut(model: Arc<FrozenModel>, workers: usize) -> Backend {
-        Backend::Lut { model, workers, select: EngineSelect::auto() }
+        let select = EngineSelect::auto_for_lanes(model.bitslice.lanes());
+        Backend::Lut { model, workers, select }
     }
 
     /// Which LUT engine a batch of `batch_len` samples would run on
@@ -275,8 +288,9 @@ impl Backend {
                     // Blocked, allocation-free batched execution over the
                     // precompiled plan (parallel across blocks).
                     LutEngine::Plan => plan.forward_batch_f32(xs, *workers),
-                    // Bit-parallel netlist evaluation, 64 samples per word
-                    // (parallel across words).
+                    // Bit-parallel netlist evaluation at the compiled lane
+                    // width, 64–512 samples per word (parallel across
+                    // words).
                     LutEngine::Bitslice => model.bitslice.forward_batch_f32(xs, *workers),
                     // Intra-sample sharded execution (route guarantees the
                     // engines exist when this arm is reached).  A faulted
@@ -531,16 +545,20 @@ fn batcher_loop(
 // ---------------------------------------------------------------------------
 
 /// `polylut serve --id <artifact> [--backend lut|pjrt] [--requests N]
-///  [--clients N] [--batch-window-us N] [--bitslice-threshold N]
-///  [--shards N] [--shard-hosts a:p,b:p,…] [--shard-spin-us N]
-///  [--wire-window N] [--wire-retries N]` — runs a self-driving load test
-/// against the server with dataset samples and prints metrics.
-/// `--bitslice-threshold` sets the batch crossover of the LUT backend
-/// above which the bitsliced engine takes over (0 = always bitsliced;
-/// default [`EngineSelect::DEFAULT_CROSSOVER`]); `--shards N` (default 1)
-/// compiles the intra-sample sharded engines and routes every
+///  [--clients N] [--batch-window-us N] [--lanes N|widest]
+///  [--bitslice-threshold N] [--shards N] [--shard-hosts a:p,b:p,…]
+///  [--shard-spin-us N] [--wire-window N] [--wire-retries N]` — runs a
+/// self-driving load test against the server with dataset samples and
+/// prints metrics.  `--lanes` forces the bitslice engine's lane width
+/// (64/128/256/512, or `widest` for the detected maximum — the default;
+/// also settable via `POLYLUT_LANES`).  `--bitslice-threshold` sets the
+/// batch crossover of the LUT backend above which the bitsliced engine
+/// takes over (0 = always bitsliced; default two full words of the active
+/// lane width, [`EngineSelect::default_crossover_for`]); `--shards N`
+/// (default 1) compiles the intra-sample sharded engines and routes every
 /// sub-crossover batch through them, so a single request's forward pass
-/// runs on N cores.  `--shard-hosts` places individual shards on remote
+/// runs on N cores (the shard handoff always carries canonical 64-bit
+/// planes, whatever the local lane width).  `--shard-hosts` places individual shards on remote
 /// `polylut shard-worker` processes (entry i = shard i; `local`/`-`/empty
 /// and unlisted shards stay local; duplicate addresses are rejected at
 /// parse time), `--shard-spin-us` overrides the worker epoch spin budget
@@ -554,7 +572,27 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
     let state = crate::train::load_state(&man, &man.dir)
         .context("no trained weights — run `polylut train` first")?;
     let backend_name = args.get_choice("backend", "lut", &["lut", "pjrt"])?.to_string();
-    let crossover = args.get_usize("bitslice-threshold", EngineSelect::DEFAULT_CROSSOVER)?;
+    let lanes = match args.get("lanes") {
+        Some(raw)
+            if raw.trim().eq_ignore_ascii_case("widest")
+                || raw.trim().eq_ignore_ascii_case("max")
+                || raw.trim() == "0" =>
+        {
+            Some(crate::simd::widest_lanes())
+        }
+        Some(raw) => Some(raw.trim().parse::<usize>().map_err(|_| {
+            anyhow::anyhow!("--lanes expects a lane count or `widest`, got {raw:?}")
+        })?),
+        None => None,
+    };
+    // Resolve the lane plan up front: the crossover default scales with the
+    // active lane width (two full words), and `--lanes` errors early on
+    // unsupported widths instead of inside the freeze.
+    let lane_plan = crate::simd::resolve(lanes)?;
+    let crossover = args.get_usize(
+        "bitslice-threshold",
+        EngineSelect::default_crossover_for(lane_plan.lanes),
+    )?;
     let shards = args.get_usize("shards", 1)?.max(1);
     let placement = parse_shard_hosts(args.get_or("shard-hosts", ""), shards)?;
     let n_remote = placement.iter().filter(|p| p.is_some()).count();
@@ -581,6 +619,7 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
                 &placement,
                 cfg.shard_spin_us,
                 cfg.wire(),
+                Some(lane_plan.lanes),
             )?);
             frozen = Some(model.clone());
             BackendSpec::lut_with_select(
@@ -605,6 +644,9 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
         // this records the count even on release builds with the gate off).
         let report = crate::sim::verify::verify_frozen(&model.plan, &model.bitslice);
         server.metrics.record_verify(report.total() as u64);
+        // Surface the active SIMD level / lane width in `snapshot()`.
+        let lp = model.bitslice.lane_plan();
+        server.metrics.set_simd(lp.level, lp.lanes as u64);
     }
 
     if backend_name == "lut" {
@@ -614,7 +656,9 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
             String::new()
         };
         println!(
-            "[serve] {id} backend=lut (bitslice-threshold={crossover} shards={shards} remote={n_remote}{wire_note}): {n_requests} requests from {n_clients} clients…"
+            "[serve] {id} backend=lut (lanes={} simd={} bitslice-threshold={crossover} shards={shards} remote={n_remote}{wire_note}): {n_requests} requests from {n_clients} clients…",
+            lane_plan.lanes,
+            lane_plan.level.as_str(),
         );
     } else {
         println!("[serve] {id} backend={backend_name}: {n_requests} requests from {n_clients} clients…");
@@ -847,13 +891,24 @@ mod tests {
         }
     }
 
-    /// The default policy keeps single-request batches on the plan engine.
+    /// The default policy keeps single-request batches on the plan engine,
+    /// with the crossover derived from the model's compiled lane width.
     #[test]
     fn small_batches_route_to_plan() {
         let m = model();
         let backend = Backend::lut(m.clone(), 2);
+        let crossover = match &backend {
+            Backend::Lut { select, .. } => select.crossover,
+            Backend::Pjrt { .. } => unreachable!("lut backend"),
+        };
+        assert_eq!(
+            crossover,
+            EngineSelect::default_crossover_for(m.bitslice.lanes()),
+            "crossover derives from the model's compiled lane width"
+        );
         assert_eq!(backend.route(1), Some(LutEngine::Plan));
-        assert_eq!(backend.route(EngineSelect::DEFAULT_CROSSOVER), Some(LutEngine::Bitslice));
+        assert_eq!(backend.route(crossover - 1), Some(LutEngine::Plan));
+        assert_eq!(backend.route(crossover), Some(LutEngine::Bitslice));
         // Route choice is bit-exact either way on a whole batch.
         let mut rng = Rng::new(6);
         let xs: Vec<Vec<f32>> =
@@ -865,6 +920,38 @@ mod tests {
         }
         let large = backend.infer(&xs).unwrap();
         for (x, got) in xs.iter().zip(&large) {
+            assert_eq!(got, &sim.forward(x));
+        }
+    }
+
+    /// A model frozen at the widest detected lane width (the `--lanes`
+    /// path) serves bit-exactly through the bitslice route.
+    #[test]
+    fn wide_frozen_model_serves_bit_exact() {
+        let cfg = config::uniform("srv-w", &[8, 6, 3], 2, 2, 3, 3, 3, 1, 2, 3);
+        let net = Network::random(&cfg, &mut Rng::new(4));
+        let widest = crate::simd::widest_lanes();
+        let m = Arc::new(
+            FrozenModel::from_network_placed_wire(
+                net,
+                2,
+                1,
+                &[],
+                None,
+                WireConfig::default(),
+                Some(widest),
+            )
+            .expect("wide all-local freeze"),
+        );
+        assert_eq!(m.bitslice.lanes(), widest);
+        let backend =
+            Backend::Lut { model: m.clone(), workers: 2, select: EngineSelect::bitslice_only() };
+        let mut rng = Rng::new(12);
+        let xs: Vec<Vec<f32>> =
+            (0..(widest + 9)).map(|_| (0..8).map(|_| rng.f32()).collect()).collect();
+        let out = backend.infer(&xs).expect("wide bitslice route serves");
+        let sim = m.sim();
+        for (x, got) in xs.iter().zip(&out) {
             assert_eq!(got, &sim.forward(x));
         }
     }

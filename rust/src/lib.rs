@@ -21,6 +21,7 @@ pub mod meta;
 pub mod nn;
 pub mod runtime;
 pub mod sim;
+pub mod simd;
 pub mod train;
 pub mod util;
 pub mod verilog;

@@ -24,21 +24,25 @@ pub enum Node {
     Mux { sel: NodeId, lo: NodeId, hi: NodeId, free: bool },
 }
 
-/// Word-level LUT evaluation — the shared mask-decomposition kernel.
+/// Word-level LUT evaluation — the shared mask-decomposition kernel,
+/// generic over the lane width ([`crate::simd::Word`]).
 ///
-/// `inputs[k]` holds 64 samples of address bit `k` (lane `s` = sample `s`);
-/// the result holds 64 samples of `mask[addr]`.  Instead of assembling a
-/// per-sample address (64 × fan shift/or operations), the mask itself is
-/// Shannon-decomposed top-down: splitting on the highest address bit halves
-/// the mask, and the two cofactor words are recombined with one word-wide
-/// mux (`lo ^ (x & (lo ^ hi))`, 3 ops for all 64 lanes).  Equal or constant
+/// `inputs[k]` holds `W::LANES` samples of address bit `k` (lane `s` =
+/// sample `s`); the result holds `W::LANES` samples of `mask[addr]`.  The
+/// truth-table `mask` itself stays a scalar `u64` at every width — only the
+/// data lanes widen.  Instead of assembling a per-sample address
+/// (lanes × fan shift/or operations), the mask is Shannon-decomposed
+/// top-down: splitting on the highest address bit halves the mask, and the
+/// two cofactor words are recombined with one word-wide mux
+/// (`lo ^ (x & (lo ^ hi))`, 3 ops for all lanes).  Equal or constant
 /// cofactors prune whole subtrees, so structured (trained) masks cost well
 /// under the 2^n−1 worst-case mux count.
 ///
-/// Both [`Netlist::eval64`] and the `sim::bitslice` op stream evaluate
-/// their LUT6 ops through this kernel.  Mask bits above `2^inputs.len()`
-/// are ignored.
-pub fn lut_word(mask: u64, inputs: &[u64]) -> u64 {
+/// Both [`Netlist::eval64`] (at `W = u64`) and the `sim::bitslice` op
+/// stream (at the engine's compiled lane width) evaluate their LUT6 ops
+/// through this kernel.  Mask bits above `2^inputs.len()` are ignored.
+#[inline]
+pub fn lut_word<W: crate::simd::Word>(mask: u64, inputs: &[W]) -> W {
     debug_assert!(inputs.len() <= 6, "physical LUTs have at most 6 inputs");
     let n = inputs.len();
     let m = if n == 6 { mask } else { mask & ((1u64 << (1u32 << n)) - 1) };
@@ -46,20 +50,20 @@ pub fn lut_word(mask: u64, inputs: &[u64]) -> u64 {
 }
 
 /// Invariant: only the low `2^inputs.len()` bits of `mask` may be set.
-fn lut_word_rec(mask: u64, inputs: &[u64]) -> u64 {
+fn lut_word_rec<W: crate::simd::Word>(mask: u64, inputs: &[W]) -> W {
     let (&x, rest) = match inputs.split_last() {
-        None => return if mask & 1 != 0 { !0 } else { 0 },
+        None => return if mask & 1 != 0 { W::ones() } else { W::zero() },
         Some(p) => p,
     };
     if mask == 0 {
-        return 0;
+        return W::zero();
     }
     // Cofactor width is 2^(n-1) <= 32 bits, so the splits below cannot shift
     // by 64.
     let half = 1u32 << rest.len();
     let full = (1u64 << half) - 1;
     if mask == full | (full << half) {
-        return !0;
+        return W::ones();
     }
     let lo = mask & full;
     let hi = mask >> half;

@@ -1,61 +1,78 @@
-//! Bitsliced 64-sample-per-word execution engine over the mapped netlist.
+//! Bitsliced word-level execution engine over the mapped netlist,
+//! lane-count generic (64–512 samples per op-stream walk).
 //!
 //! The paper's premise is that a neuron *is* a LUT network, and a LUT
-//! network evaluated in software is fastest word-level: one `u64` holds the
-//! same wire for **64 samples at once** (bit `s` = sample `s`), so every
-//! gate costs a handful of bitwise ops *for the whole word*.  This engine is
-//! the batched-serving counterpart of [`super::plan::EvalPlan`]: the plan
-//! gathers codes and reads decoded tables one sample at a time (lowest
-//! latency, cache-resident tables), the bitslice engine transposes a word of
-//! samples into bit-planes once and then streams a flat op list per layer
-//! (highest throughput when the mapped tables are shallow).
+//! network evaluated in software is fastest word-level: one machine word
+//! holds the same wire for **every lane at once** (lane `s` = sample `s`),
+//! so every gate costs a handful of bitwise ops *for the whole word*.  This
+//! engine is the batched-serving counterpart of [`super::plan::EvalPlan`]:
+//! the plan gathers codes and reads decoded tables one sample at a time
+//! (lowest latency, cache-resident tables), the bitslice engine transposes
+//! a word of samples into bit-planes once and then streams a flat op list
+//! per layer (highest throughput when the mapped tables are shallow).
+//!
+//! Since the SIMD widening, the word is a [`crate::simd::Word`]: the
+//! canonical `u64` (64 lanes), or a [`crate::simd::Blocks`] group of 2/4/8
+//! consecutive 64-bit plane blocks (128/256/512 lanes) that the compiler
+//! unrolls and — through the AVX2 `target_feature` wrappers selected by the
+//! engine's [`LanePlan`] — vectorizes.  All kernels (`exec_ops`, the
+//! Shannon [`lut_word`] kernel, `pack_word`/`unpack_word`) are generic over
+//! `W`; the op stream itself is width-agnostic and compiled once.
 //!
 //! # Bit-plane layout
 //!
-//! A layer boundary carrying β-bit codes for `W` neurons is `W·β` planes:
+//! A layer boundary carrying β-bit codes for `W` neurons is `W·β` planes;
+//! each plane is `lanes/64` 64-bit blocks, block `i` holding samples
+//! `64·i..64·(i+1)`:
 //!
 //! ```text
 //!                      lane 63        …        lane 1   lane 0
 //!                   ┌───────────┬───────────┬─────────┬─────────┐
-//!   planes[j·β + b] │ sample 63 │     …     │ sample 1│ sample 0│   (one u64)
-//!                   └───────────┴───────────┴─────────┴─────────┘
+//!   planes[j·β + b] │ sample 63 │     …     │ sample 1│ sample 0│  block 0
+//!                   ├───────────┼───────────┼─────────┼─────────┤
+//!                   │ sample 127│     …     │ s. 65   │ s. 64   │  block 1
+//!                   └───────────┴───────────┴─────────┴─────────┘  …
 //!                      bit b of neuron j's code, all samples
 //!
 //!   planes[0]      = neuron 0, code bit 0
-//!   planes[1]      = neuron 0, code bit 1
-//!   …
 //!   planes[j·β+b]  = neuron j, code bit b      (raw two's-complement bits)
 //! ```
 //!
 //! This is exactly the wire numbering the LUT6 mapper uses
 //! (`wire = src·in_bits + bit`), so a layer's **output planes are the next
 //! layer's input planes verbatim** — transposition happens only at the
-//! network edge.
+//! network edge.  Because block `i` of a wide plane is bit-for-bit the
+//! scalar `u64` plane of sample chunk `i`, the shard/wire handoff keeps
+//! shipping canonical 64-bit planes regardless of the local kernel width
+//! (PLW2 frames and the hazard arguments are untouched).
 //!
 //! # Transposition cost model
 //!
 //! - **Pack** (codes → planes, network input): `width·β` planes built from
-//!   ≤64 samples — `O(width·β·64)` bit ops per word, ~`width·β` ops per
-//!   sample.  **Unpack** (planes → codes, network output) is symmetric.
+//!   ≤lanes samples — `O(width·β·lanes)` bit ops per word, ~`width·β` ops
+//!   per sample.  **Unpack** (planes → codes, network output) is symmetric.
 //! - **Evaluate**: one LUT6 op costs at most 63 word-muxes (3 bit ops each)
-//!   for all 64 lanes — ~3 ops *per sample* versus the plan's per-sample
-//!   gather + address assembly + table read; shared-input LUT groups (the
-//!   bits of one table) drop further to one minterm expansion
-//!   (`2^{k+1}` ANDs) plus ~`2^{k-1}` ORs per mask.  A mux op is 3 ops for
-//!   the whole word.
+//!   for all lanes — ~3·(64/lanes) ops *per sample* versus the plan's
+//!   per-sample gather + address assembly + table read; shared-input LUT
+//!   groups (the bits of one table) drop further to one minterm expansion
+//!   (`2^{k+1}` ANDs) plus ~`2^{k-1}` ORs per mask.  Widening the word
+//!   divides the per-sample cost of *every* op — and amortizes the per-op
+//!   dispatch/recursion overhead — by `lanes/64`.
 //! - The engine therefore wins when the mapped netlist is shallow (βF ≤ ~8:
 //!   the paper's Table IV Add2 design point, where every table bit is a
 //!   single LUT6) and batches span full words; the plan stays ahead for
 //!   deep-table geometries (βF ≈ 12+) and tiny batches, which is why the
-//!   coordinator routes on batch size ([`super::EngineSelect`]).
+//!   coordinator routes on batch size ([`super::EngineSelect`], crossover
+//!   derived from the active lane width).
 //!
-//! Ragged tails (batches not divisible by 64) are handled with
-//! [`lane_mask`]: invalid lanes are packed as zero, evaluated like any other
-//! lane, and never unpacked.
+//! Ragged tails (batches not divisible by the lane count) are handled with
+//! [`lane_mask`]/[`Word::lane_mask`]: invalid lanes are packed as zero,
+//! evaluated like any other lane, and never unpacked.
 //!
-//! The bit-plane layout doubles as the shard handoff format of the
+//! The 64-bit bit-plane layout doubles as the shard handoff format of the
 //! intra-sample sharded engine ([`crate::sim::shard`]); the full engine map
-//! lives in `ARCHITECTURE.md` §3–§4 at the repository root.
+//! and the SIMD dispatch ladder live in `ARCHITECTURE.md` §3–§5 at the
+//! repository root.
 
 use std::collections::HashMap;
 
@@ -64,21 +81,21 @@ use crate::lut::netlist::{lut_word, Netlist, Node};
 use crate::lut::tables::{LayerTables, NetworkTables};
 use crate::nn::network::Network;
 use crate::nn::quant::{from_twos_complement, unsigned_code};
+use crate::simd::{self, Blocks, KernelPath, LanePlan, Word};
 use crate::util::pool::parallel_map;
 
-/// Samples per machine word (lanes of one `u64` bit-plane).
+/// Samples per canonical 64-bit plane block (lanes of one `u64`), the unit
+/// of the shard/wire handoff format.  Wide kernels run multiples of this.
 pub const WORD: usize = 64;
 
-/// Valid-lane mask for a word holding `n_valid` samples: lane `s` is set iff
-/// sample `s` exists.  Saturates at a full word (`n_valid >= 64`), so the
-/// remainder of any batch size can be passed directly.
+/// Valid-lane mask for one 64-bit plane block holding `n_valid` samples:
+/// lane `s` is set iff sample `s` exists.  Saturates at a full block
+/// (`n_valid >= 64`), so the remainder of any batch size can be passed
+/// directly.  Wide words use [`Word::lane_mask`], which applies this per
+/// block.
 #[inline]
 pub fn lane_mask(n_valid: usize) -> u64 {
-    if n_valid >= WORD {
-        !0
-    } else {
-        (1u64 << n_valid) - 1
-    }
+    simd::lane_mask64(n_valid)
 }
 
 /// One step of the flat, topologically-ordered per-layer op stream.  All
@@ -101,8 +118,9 @@ pub(crate) enum Op {
 
 /// A compiled, self-contained op stream over compact local node slots:
 /// input bindings, the ops, and the backing store for [`Op::Group`]
-/// members.  Built by [`flatten_cone`]; executed by [`exec_ops`] after the
-/// caller has bound the input planes.
+/// members.  Built by [`flatten_cone`]; executed by [`exec_ops`] (at any
+/// lane width — the stream itself is width-agnostic) after the caller has
+/// bound the input planes.
 pub(crate) struct OpStream {
     /// `(node slot, input wire)` — wire = `src·in_bits + bit`.
     pub(crate) bind: Vec<(u32, u32)>,
@@ -143,6 +161,13 @@ pub struct BitsliceStats {
 
 /// A frozen network compiled for bit-parallel word-level execution.
 /// Self-contained (owns its op streams) — `Send + Sync`, share behind `Arc`.
+///
+/// The op streams are lane-width agnostic; the carried [`LanePlan`] (see
+/// [`BitsliceNet::with_lane_plan`]) only selects which monomorphized kernel
+/// [`BitsliceNet::forward_batch_codes`] dispatches to.  [`compile`]
+/// defaults to the canonical 64-lane scalar plan.
+///
+/// [`compile`]: BitsliceNet::compile
 pub struct BitsliceNet {
     pub(crate) layers: Vec<LayerOps>,
     pub(crate) n_features: usize,
@@ -155,24 +180,50 @@ pub struct BitsliceNet {
     max_wires: usize,
     max_nodes: usize,
     stats: BitsliceStats,
+    /// Active lane width (`plan.lanes`, a supported multiple of 64).
+    /// Redundant with `plan` on purpose: `sim::verify` cross-checks it.
+    pub(crate) lanes: usize,
+    /// 64-bit plane blocks per scratch word (`lanes / 64`) — the size
+    /// contract `sim::verify`'s `scratch-blocks` invariant pins.
+    pub(crate) plane_blocks: usize,
+    pub(crate) plan: LanePlan,
 }
 
-/// Reusable per-thread scratch: double-buffered boundary planes plus the
-/// per-node value array.  A forward word performs zero heap allocation.
-pub struct BitsliceScratch {
-    planes: Vec<u64>,
-    next: Vec<u64>,
-    vals: Vec<u64>,
+/// Reusable per-word scratch at lane width `W::LANES`: double-buffered
+/// boundary planes plus the per-node value array.  A forward word performs
+/// zero heap allocation.
+pub struct WideScratch<W: Word> {
+    planes: Vec<W>,
+    next: Vec<W>,
+    vals: Vec<W>,
 }
+
+/// The canonical 64-lane scratch ([`BitsliceNet::forward_batch`], shard
+/// handoff staging).
+pub type BitsliceScratch = WideScratch<u64>;
 
 impl BitsliceNet {
-    /// Map `net` to LUT6 netlists and compile them into op streams.
+    /// Map `net` to LUT6 netlists and compile them into op streams, at the
+    /// canonical 64-lane scalar plan.
     pub fn compile(net: &Network, tables: &NetworkTables, workers: usize) -> BitsliceNet {
         let mapped = map_network_of(net, tables, workers);
         Self::from_mapped(net, tables, &mapped)
     }
 
-    /// Compile from an already-mapped network (no re-mapping).
+    /// [`BitsliceNet::compile`] with an explicit lane plan (see
+    /// [`crate::simd::resolve`]) — the op streams are identical, only the
+    /// kernel dispatch changes.
+    pub fn compile_wide(
+        net: &Network,
+        tables: &NetworkTables,
+        workers: usize,
+        plan: LanePlan,
+    ) -> BitsliceNet {
+        Self::compile(net, tables, workers).with_lane_plan(plan)
+    }
+
+    /// Compile from an already-mapped network (no re-mapping), at the
+    /// canonical 64-lane scalar plan.
     pub fn from_mapped(
         net: &Network,
         tables: &NetworkTables,
@@ -192,6 +243,7 @@ impl BitsliceNet {
             .max()
             .unwrap_or(0);
         let last = cfg.n_layers() - 1;
+        let plan = LanePlan::scalar();
         BitsliceNet {
             max_nodes: layers.iter().map(|l| l.stream.n_nodes).max().unwrap_or(0),
             layers,
@@ -201,7 +253,29 @@ impl BitsliceNet {
             out_step: net.out_step(last),
             max_wires,
             stats,
+            lanes: plan.lanes,
+            plane_blocks: plan.blocks(),
+            plan,
         }
+    }
+
+    /// Re-plan the engine's lane width without recompiling the op streams
+    /// (they are width-agnostic).  Cheap — metadata only.
+    pub fn with_lane_plan(mut self, plan: LanePlan) -> BitsliceNet {
+        self.lanes = plan.lanes;
+        self.plane_blocks = plan.blocks();
+        self.plan = plan;
+        self
+    }
+
+    /// The active lane plan (width + kernel path).
+    pub fn lane_plan(&self) -> LanePlan {
+        self.plan
+    }
+
+    /// Active sample lanes per op-stream walk.
+    pub fn lanes(&self) -> usize {
+        self.lanes
     }
 
     /// Input feature count (width of layer 0).
@@ -219,19 +293,27 @@ impl BitsliceNet {
         self.stats
     }
 
-    /// Allocate scratch sized for this engine (reusable across words; one
-    /// per thread).
+    /// Allocate canonical 64-lane scratch (reusable across words; one per
+    /// thread).  Wide kernels size their own scratch internally.
     pub fn scratch(&self) -> BitsliceScratch {
-        BitsliceScratch {
-            planes: vec![0; self.max_wires],
-            next: vec![0; self.max_wires],
-            vals: vec![0; self.max_nodes],
+        self.wide_scratch::<u64>()
+    }
+
+    /// Allocate scratch sized for this engine at lane width `W::LANES`.
+    fn wide_scratch<W: Word>(&self) -> WideScratch<W> {
+        WideScratch {
+            planes: vec![W::zero(); self.max_wires],
+            next: vec![W::zero(); self.max_wires],
+            vals: vec![W::zero(); self.max_nodes],
         }
     }
 
-    /// Batched code-level forward pass, 64 samples per internal word, ragged
-    /// tail masked.  Bit-exact with `EvalPlan::forward_batch` and
-    /// `Network::forward_codes`.
+    /// Batched code-level forward pass over the canonical 64-lane path,
+    /// ragged tail masked.  Bit-exact with `EvalPlan::forward_batch` and
+    /// `Network::forward_codes` — and, by the width-grid tests, with
+    /// [`BitsliceNet::forward_batch_codes`] at every lane plan.  The shard
+    /// engine and handoff staging build on this path, so it stays 64-lane
+    /// regardless of the compiled plan.
     pub fn forward_batch(
         &self,
         xs: &[Vec<i32>],
@@ -239,47 +321,117 @@ impl BitsliceNet {
     ) -> Vec<Vec<i32>> {
         let mut out = Vec::with_capacity(xs.len());
         for word in xs.chunks(WORD) {
-            self.forward_word(word, scratch, &mut out);
+            self.forward_chunk(word, scratch, &mut out);
         }
         out
     }
 
-    /// Batched feature-level forward pass: quantize, run words in parallel
-    /// (one scratch per word), dequantize.  Output order matches `xs`.
+    /// Batched code-level forward pass at the engine's compiled lane width:
+    /// one op-stream walk retires `lanes` samples.  Scratch is allocated
+    /// once per call and reused across chunks.  Bit-exact with
+    /// [`BitsliceNet::forward_batch`].
+    pub fn forward_batch_codes(&self, xs: &[Vec<i32>]) -> Vec<Vec<i32>> {
+        match self.plan.path {
+            KernelPath::Scalar => self.run_codes::<u64>(xs),
+            KernelPath::Blocks2 => self.run_codes::<Blocks<2>>(xs),
+            KernelPath::Blocks4 => self.run_codes::<Blocks<4>>(xs),
+            KernelPath::Blocks8 => self.run_codes::<Blocks<8>>(xs),
+            KernelPath::Avx2 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    if std::arch::is_x86_feature_detected!("avx2") {
+                        // SAFETY: AVX2 support re-verified on this CPU on
+                        // the line above; the wrapper only enables avx2.
+                        return unsafe { self.run_codes_avx2(xs) };
+                    }
+                }
+                self.run_codes::<Blocks<4>>(xs)
+            }
+            KernelPath::Avx512 => {
+                #[cfg(target_arch = "x86_64")]
+                {
+                    if std::arch::is_x86_feature_detected!("avx2") {
+                        // SAFETY: AVX2 support re-verified on this CPU on
+                        // the line above; the wrapper only enables avx2
+                        // (512-lane blocks run as 2× ymm per op — see
+                        // `crate::simd` module docs).
+                        return unsafe { self.run_codes_avx512(xs) };
+                    }
+                }
+                self.run_codes::<Blocks<8>>(xs)
+            }
+        }
+    }
+
+    /// Monomorphized batch loop: chunk by `W::LANES`, one reused scratch.
+    fn run_codes<W: Word>(&self, xs: &[Vec<i32>]) -> Vec<Vec<i32>> {
+        let mut out = Vec::with_capacity(xs.len());
+        let mut scratch = self.wide_scratch::<W>();
+        for chunk in xs.chunks(W::LANES) {
+            self.forward_chunk(chunk, &mut scratch, &mut out);
+        }
+        out
+    }
+
+    /// [`run_codes`](Self::run_codes) at `Blocks<4>` compiled with the avx2
+    /// feature set, so LLVM lowers the 4-block ops to ymm instructions.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (`is_x86_feature_detected!("avx2")`).
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn run_codes_avx2(&self, xs: &[Vec<i32>]) -> Vec<Vec<i32>> {
+        self.run_codes::<Blocks<4>>(xs)
+    }
+
+    /// [`run_codes`](Self::run_codes) at `Blocks<8>` compiled with the avx2
+    /// feature set (2× ymm per block op on stable; full zmm under
+    /// `-C target-cpu=native`).
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 (`is_x86_feature_detected!("avx2")`).
+    #[cfg(target_arch = "x86_64")]
+    #[target_feature(enable = "avx2")]
+    unsafe fn run_codes_avx512(&self, xs: &[Vec<i32>]) -> Vec<Vec<i32>> {
+        self.run_codes::<Blocks<8>>(xs)
+    }
+
+    /// Batched feature-level forward pass: quantize, run lane-width chunks
+    /// in parallel (one scratch per chunk), dequantize.  Output order
+    /// matches `xs`.  Runs at the compiled lane plan.
     pub fn forward_batch_f32(&self, xs: &[Vec<f32>], workers: usize) -> Vec<Vec<f32>> {
         if xs.is_empty() {
             return Vec::new();
         }
-        let words: Vec<&[Vec<f32>]> = xs.chunks(WORD).collect();
-        let per_word: Vec<Vec<Vec<f32>>> = parallel_map(&words, workers, |_, word| {
-            let codes: Vec<Vec<i32>> = word
+        let chunks: Vec<&[Vec<f32>]> = xs.chunks(self.lanes).collect();
+        let per_chunk: Vec<Vec<Vec<f32>>> = parallel_map(&chunks, workers, |_, chunk| {
+            let codes: Vec<Vec<i32>> = chunk
                 .iter()
                 .map(|x| {
                     assert_eq!(x.len(), self.n_features, "feature width mismatch");
                     x.iter().map(|&v| unsigned_code(v, self.in_bits, 1.0)).collect()
                 })
                 .collect();
-            let mut scratch = self.scratch();
-            let mut rows = Vec::with_capacity(word.len());
-            self.forward_word(&codes, &mut scratch, &mut rows);
-            rows.into_iter()
+            self.forward_batch_codes(&codes)
+                .into_iter()
                 .map(|row| row.iter().map(|&c| c as f32 * self.out_step).collect())
                 .collect()
         });
-        per_word.into_iter().flatten().collect()
+        per_chunk.into_iter().flatten().collect()
     }
 
-    /// One ≤64-sample word: pack → per-layer op streams → unpack.
-    fn forward_word(
+    /// One ≤`W::LANES`-sample word: pack → per-layer op streams → unpack.
+    #[inline]
+    fn forward_chunk<W: Word>(
         &self,
         word: &[Vec<i32>],
-        scratch: &mut BitsliceScratch,
+        scratch: &mut WideScratch<W>,
         out: &mut Vec<Vec<i32>>,
     ) {
         if word.is_empty() {
             return;
         }
-        debug_assert!(word.len() <= WORD);
+        debug_assert!(word.len() <= W::LANES);
         for row in word {
             assert_eq!(row.len(), self.n_features, "input width mismatch");
         }
@@ -303,25 +455,36 @@ impl BitsliceNet {
     }
 }
 
-/// Transpose ≤64 samples of unsigned input codes into bit-planes
-/// (`planes[f·bits + b]`, lane `s` = sample `s`); invalid lanes of a ragged
-/// word are left zero (see [`lane_mask`]).  Shared with the sharded engine
+/// Transpose ≤`W::LANES` samples of unsigned input codes into bit-planes
+/// (`planes[f·bits + b]`, lane `s` = sample `s`, block `s/64` holding
+/// sample chunk `s/64`); invalid lanes of a ragged word are left zero (see
+/// [`lane_mask`]).  Block `i` of a wide plane is bit-for-bit the scalar
+/// 64-lane pack of sample chunk `i` — the identity that keeps the
+/// shard/wire handoff format canonical.  Shared with the sharded engine
 /// ([`crate::sim::shard`]), whose staging differs only in buffer type.
-pub(crate) fn pack_word(word: &[Vec<i32>], bits: u32, planes: &mut [u64]) {
+pub(crate) fn pack_word<W: Word>(word: &[Vec<i32>], bits: u32, planes: &mut [W]) {
     let bits = bits as usize;
     let n_planes = word[0].len() * bits;
-    planes[..n_planes].fill(0);
-    for (s, row) in word.iter().enumerate() {
-        for (f, &c) in row.iter().enumerate() {
-            let c = c as u32 as u64;
-            for (b, p) in planes[f * bits..(f + 1) * bits].iter_mut().enumerate() {
-                *p |= ((c >> b) & 1) << s;
+    planes[..n_planes].fill(W::zero());
+    for (blk, chunk) in word.chunks(WORD).enumerate() {
+        for (s, row) in chunk.iter().enumerate() {
+            for (f, &c) in row.iter().enumerate() {
+                let c = c as u32 as u64;
+                for (b, p) in planes[f * bits..(f + 1) * bits].iter_mut().enumerate() {
+                    let cur = p.block(blk);
+                    p.set_block(blk, cur | (((c >> b) & 1) << s));
+                }
             }
         }
     }
-    // Ragged-tail invariant: lanes beyond the word hold zero (the fill above
-    // plus the bounded OR loop guarantee it; unpack never reads them).
-    debug_assert!(planes[..n_planes].iter().all(|&p| p & !lane_mask(word.len()) == 0));
+    // Ragged-tail invariant: lanes beyond the word hold zero (the clear
+    // above plus the bounded OR loop guarantee it; unpack never reads them).
+    debug_assert!({
+        let m = W::lane_mask(word.len());
+        planes[..n_planes]
+            .iter()
+            .all(|p| (0..W::BLOCKS).all(|i| p.block(i) & !m.block(i) == 0))
+    });
 }
 
 /// Inverse of [`pack_word`] at the network edge: decode the first
@@ -329,8 +492,8 @@ pub(crate) fn pack_word(word: &[Vec<i32>], bits: u32, planes: &mut [u64]) {
 /// code rows (two's-complement when `signed_out`), appending to `out`.
 /// Shared between [`BitsliceNet::forward_batch`] and the sharded engine so
 /// the bit-plane layout lives in exactly one pack/unpack pair.
-pub(crate) fn unpack_word(
-    planes: &[u64],
+pub(crate) fn unpack_word<W: Word>(
+    planes: &[W],
     n_out: usize,
     out_bits: u32,
     signed_out: bool,
@@ -339,11 +502,12 @@ pub(crate) fn unpack_word(
 ) {
     let ob = out_bits as usize;
     for s in 0..n_valid {
+        let (blk, lane) = (s / WORD, s % WORD);
         let mut row = Vec::with_capacity(n_out);
         for j in 0..n_out {
             let mut raw = 0u32;
             for (b, plane) in planes[j * ob..(j + 1) * ob].iter().enumerate() {
-                raw |= (((plane >> s) & 1) as u32) << b;
+                raw |= (((plane.block(blk) >> lane) & 1) as u32) << b;
             }
             row.push(if signed_out {
                 from_twos_complement(raw, out_bits)
@@ -358,7 +522,8 @@ pub(crate) fn unpack_word(
 impl LayerOps {
     /// Execute the op stream for one word.  `planes` are this layer's input
     /// bit-planes; node values land in `vals`.
-    fn run(&self, planes: &[u64], vals: &mut [u64]) {
+    #[inline]
+    fn run<W: Word>(&self, planes: &[W], vals: &mut [W]) {
         for &(node, wire) in &self.stream.bind {
             vals[node as usize] = planes[wire as usize];
         }
@@ -366,17 +531,20 @@ impl LayerOps {
     }
 }
 
-/// Execute an [`OpStream`]'s ops over one word.  The caller must have
-/// bound the stream's input slots (`stream.bind`) into `vals` first — the
-/// binding source differs between the whole-layer engine (plain plane
-/// slices) and the sharded engine (atomic handoff buffers), which is why
-/// binding is not part of this function.
-pub(crate) fn exec_ops(stream: &OpStream, vals: &mut [u64]) {
+/// Execute an [`OpStream`]'s ops over one word of lane width `W::LANES`.
+/// The caller must have bound the stream's input slots (`stream.bind`) into
+/// `vals` first — the binding source differs between the whole-layer engine
+/// (plain plane slices) and the sharded engine (atomic handoff buffers),
+/// which is why binding is not part of this function.
+#[inline]
+pub(crate) fn exec_ops<W: Word>(stream: &OpStream, vals: &mut [W]) {
     for op in &stream.ops {
         match *op {
-            Op::Const { out, ones } => vals[out as usize] = if ones { !0 } else { 0 },
+            Op::Const { out, ones } => {
+                vals[out as usize] = if ones { W::ones() } else { W::zero() }
+            }
             Op::Lut { out, mask, n_in, ins } => {
-                let mut a = [0u64; 6];
+                let mut a = [W::zero(); 6];
                 for (slot, &i) in a.iter_mut().zip(&ins[..n_in as usize]) {
                     *slot = vals[i as usize];
                 }
@@ -390,8 +558,8 @@ pub(crate) fn exec_ops(stream: &OpStream, vals: &mut [u64]) {
                 // Shared minterm expansion: buf[a] = word where lane s is
                 // set iff the k inputs of sample s spell address a.
                 let k = n_in as usize;
-                let mut buf = [0u64; 64];
-                buf[0] = !0u64;
+                let mut buf = [W::zero(); 64];
+                buf[0] = W::ones();
                 let mut cur = 1usize;
                 for &i in &ins[..k] {
                     let x = vals[i as usize];
@@ -409,17 +577,18 @@ pub(crate) fn exec_ops(stream: &OpStream, vals: &mut [u64]) {
                     stream.lut_nodes[lo..hi].iter().zip(&stream.lut_masks[lo..hi])
                 {
                     let mask = raw_mask & full;
-                    // The 2^k minterms partition all 64 lanes, so
+                    // The 2^k minterms partition all lanes, so
                     // OR(set minterms) == !OR(clear minterms): reduce
-                    // whichever polarity has fewer terms.
+                    // whichever polarity has fewer terms.  (`mask` indexes
+                    // minterms, not lanes — it stays a scalar u64.)
                     let (mut rem, invert) = if (mask.count_ones() as usize) * 2 <= cur {
                         (mask, false)
                     } else {
                         (!mask & full, true)
                     };
-                    let mut acc = 0u64;
+                    let mut acc = W::zero();
                     while rem != 0 {
-                        acc |= buf[rem.trailing_zeros() as usize];
+                        acc = acc | buf[rem.trailing_zeros() as usize];
                         rem &= rem - 1;
                     }
                     vals[node as usize] = if invert { !acc } else { acc };
@@ -577,6 +746,7 @@ mod tests {
     use crate::lut::tables::compile_network;
     use crate::nn::config;
     use crate::sim::plan::{EvalPlan, Scratch};
+    use crate::simd::SimdLevel;
     use crate::util::rng::Rng;
 
     #[test]
@@ -678,5 +848,112 @@ mod tests {
         assert!(st.grouped_luts >= 2 * st.groups);
         assert_eq!(st.layers, 2);
         assert!(st.nodes > 0);
+    }
+
+    /// The default compile is the canonical 64-lane scalar plan, and its
+    /// wide dispatcher is the same path as `forward_batch`.
+    #[test]
+    fn default_compile_is_canonical_64_lane() {
+        let (net, tables) = grid_net(1, 1);
+        let bits = BitsliceNet::compile(&net, &tables, 1);
+        assert_eq!(bits.lane_plan(), LanePlan::scalar());
+        assert_eq!(bits.lanes(), 64);
+        assert_eq!(bits.plane_blocks, 1);
+        let mut rng = Rng::new(3);
+        let xs: Vec<Vec<i32>> = (0..70)
+            .map(|_| {
+                let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+                net.quantize_input(&x)
+            })
+            .collect();
+        let mut scratch = bits.scratch();
+        assert_eq!(bits.forward_batch_codes(&xs), bits.forward_batch(&xs, &mut scratch));
+    }
+
+    /// Tentpole gate: every wide kernel path (portable blocks and the
+    /// CPUID-detected std::arch paths) is bit-exact with the 64-lane
+    /// reference over the full (A, degree) grid, at every block-boundary
+    /// batch size.
+    #[test]
+    fn wide_paths_match_64_lane_reference_on_grid() {
+        const SIZES: [usize; 14] =
+            [0, 1, 63, 64, 65, 127, 128, 129, 255, 256, 257, 511, 512, 513];
+        for (a, d) in GRID {
+            let (net, tables) = grid_net(a, d);
+            let mut bits = BitsliceNet::compile(&net, &tables, 1);
+            let mut rng = Rng::new(a as u64 * 7 + d as u64);
+            let xs: Vec<Vec<i32>> = (0..513)
+                .map(|_| {
+                    let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+                    net.quantize_input(&x)
+                })
+                .collect();
+            let mut scratch = bits.scratch();
+            let reference = bits.forward_batch(&xs, &mut scratch);
+            let portable = |lanes, path| LanePlan { lanes, path, level: SimdLevel::Portable };
+            let plans = [
+                portable(128, KernelPath::Blocks2),
+                portable(256, KernelPath::Blocks4),
+                portable(512, KernelPath::Blocks8),
+                simd::plan_for(128),
+                simd::plan_for(256),
+                simd::plan_for(512),
+            ];
+            for plan in plans {
+                bits = bits.with_lane_plan(plan);
+                assert_eq!(bits.lanes(), plan.lanes);
+                assert_eq!(bits.plane_blocks, plan.lanes / 64);
+                for n in SIZES {
+                    let got = bits.forward_batch_codes(&xs[..n]);
+                    assert_eq!(got, &reference[..n], "A={a} D={d} plan={plan:?} n={n}");
+                }
+            }
+        }
+    }
+
+    /// The shard/wire handoff argument: block `i` of a wide pack is
+    /// bit-for-bit the scalar 64-lane pack of sample chunk `i`, so wide
+    /// local kernels never change the canonical 64-bit plane format.
+    #[test]
+    fn wide_pack_blocks_are_byte_identical_to_scalar_planes() {
+        let mut rng = Rng::new(77);
+        let bits = 3u32;
+        let word: Vec<Vec<i32>> =
+            (0..130).map(|_| (0..8).map(|_| rng.below(8) as i32).collect()).collect();
+        let n_planes = 8 * bits as usize;
+        let mut wide = vec![<Blocks<4>>::zero(); n_planes];
+        pack_word(&word, bits, &mut wide);
+        for (i, chunk) in word.chunks(64).enumerate() {
+            let mut scalar = vec![0u64; n_planes];
+            pack_word(chunk, bits, &mut scalar);
+            for (w, s) in wide.iter().zip(&scalar) {
+                assert_eq!(w.block(i), *s, "chunk {i}");
+            }
+        }
+        for w in &wide {
+            assert_eq!(w.block(3), 0, "blocks past the batch stay zero");
+        }
+    }
+
+    /// The f32 entry point at the widest detected plan matches the plan
+    /// engine, sequentially and fanned out over workers.
+    #[test]
+    fn wide_f32_entry_matches_plan() {
+        let (net, tables) = grid_net(2, 2);
+        let plan = EvalPlan::compile(&net, &tables);
+        let widest = simd::plan_for(simd::widest_lanes());
+        let bits = BitsliceNet::compile_wide(&net, &tables, 1, widest);
+        assert_eq!(bits.lanes(), widest.lanes);
+        let mut rng = Rng::new(15);
+        let xs: Vec<Vec<f32>> =
+            (0..300).map(|_| (0..8).map(|_| rng.f32()).collect()).collect();
+        for workers in [1usize, 3] {
+            assert_eq!(
+                bits.forward_batch_f32(&xs, workers),
+                plan.forward_batch_f32(&xs, 1),
+                "workers={workers} plan={widest:?}"
+            );
+        }
+        let _ = net;
     }
 }

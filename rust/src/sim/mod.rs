@@ -47,7 +47,7 @@ pub mod shard;
 pub mod verify;
 pub mod wire;
 
-pub use bitslice::{lane_mask, BitsliceNet, BitsliceScratch, BitsliceStats, WORD};
+pub use bitslice::{lane_mask, BitsliceNet, BitsliceScratch, BitsliceStats, WideScratch, WORD};
 pub use cycle::PipelineSim;
 pub use lutsim::LutSim;
 pub use plan::{EvalPlan, Scratch};
@@ -65,7 +65,8 @@ pub use wire::{
 pub enum LutEngine {
     /// Gather + decoded-table lookup per sample ([`EvalPlan`]).
     Plan,
-    /// 64-sample-per-word bit-parallel netlist evaluation ([`BitsliceNet`]).
+    /// Bit-parallel netlist evaluation, 64–512 samples per word at the
+    /// compiled lane width ([`BitsliceNet`], [`crate::simd::LanePlan`]).
     Bitslice,
     /// Intra-sample sharded execution ([`ShardedModel`]): the batch is
     /// below the bitslice crossover but S > 1 shards can parallelize each
@@ -89,13 +90,31 @@ pub struct EngineSelect {
 }
 
 impl EngineSelect {
-    /// Default crossover: two full 64-sample words — below that the
-    /// transposition overhead and partially-filled lanes eat the win.
+    /// The historical 64-lane default crossover (two full 64-sample
+    /// words — below that the transposition overhead and partially-filled
+    /// lanes eat the win).  Kept as the floor of
+    /// [`EngineSelect::default_crossover_for`]; the live default scales
+    /// with the detected lane width.
     pub const DEFAULT_CROSSOVER: usize = 2 * WORD;
 
-    /// The default policy: crossover at two words, sharding disabled.
+    /// Default crossover for an engine running `lanes` samples per word:
+    /// two full words.  Wider words raise the bar — a 256-lane batch walk
+    /// wastes 3/4 of its lanes on a 64-sample batch, so the plan (or the
+    /// sharded engine) keeps sub-crossover traffic.
+    pub fn default_crossover_for(lanes: usize) -> usize {
+        2 * lanes.max(WORD)
+    }
+
+    /// The default policy: crossover derived from the widest detected lane
+    /// width ([`crate::simd::widest_lanes`]), sharding disabled.
     pub fn auto() -> EngineSelect {
-        EngineSelect { crossover: Self::DEFAULT_CROSSOVER, shards: 1 }
+        Self::auto_for_lanes(crate::simd::widest_lanes())
+    }
+
+    /// The default policy for an engine compiled at `lanes` samples per
+    /// word: crossover at two full words, sharding disabled.
+    pub fn auto_for_lanes(lanes: usize) -> EngineSelect {
+        EngineSelect { crossover: Self::default_crossover_for(lanes), shards: 1 }
     }
 
     /// Never route to the bitsliced engine.
@@ -108,10 +127,13 @@ impl EngineSelect {
         EngineSelect { crossover: 0, shards: 1 }
     }
 
-    /// The default crossover with intra-sample sharding over `shards`
-    /// shards for sub-crossover batches.
+    /// The width-derived default crossover with intra-sample sharding over
+    /// `shards` shards for sub-crossover batches.
     pub fn with_shards(shards: usize) -> EngineSelect {
-        EngineSelect { crossover: Self::DEFAULT_CROSSOVER, shards: shards.max(1) }
+        EngineSelect {
+            crossover: Self::default_crossover_for(crate::simd::widest_lanes()),
+            shards: shards.max(1),
+        }
     }
 
     /// Route a batch of `batch_len` samples to an engine.
@@ -140,8 +162,8 @@ mod tests {
     fn engine_select_routes_on_batch_size() {
         let sel = EngineSelect::auto();
         assert_eq!(sel.pick(1), LutEngine::Plan);
-        assert_eq!(sel.pick(EngineSelect::DEFAULT_CROSSOVER - 1), LutEngine::Plan);
-        assert_eq!(sel.pick(EngineSelect::DEFAULT_CROSSOVER), LutEngine::Bitslice);
+        assert_eq!(sel.pick(sel.crossover - 1), LutEngine::Plan);
+        assert_eq!(sel.pick(sel.crossover), LutEngine::Bitslice);
         assert_eq!(EngineSelect::plan_only().pick(1 << 20), LutEngine::Plan);
         assert_eq!(EngineSelect::bitslice_only().pick(0), LutEngine::Bitslice);
     }
@@ -151,10 +173,25 @@ mod tests {
         let sel = EngineSelect::with_shards(4);
         assert_eq!(sel.shards, 4);
         assert_eq!(sel.pick(1), LutEngine::Sharded);
-        assert_eq!(sel.pick(EngineSelect::DEFAULT_CROSSOVER - 1), LutEngine::Sharded);
+        assert_eq!(sel.pick(sel.crossover - 1), LutEngine::Sharded);
         // At and above the crossover, batch-parallel bitslice still wins.
-        assert_eq!(sel.pick(EngineSelect::DEFAULT_CROSSOVER), LutEngine::Bitslice);
+        assert_eq!(sel.pick(sel.crossover), LutEngine::Bitslice);
         // shards = 1 degrades to the plain policy.
         assert_eq!(EngineSelect::with_shards(1).pick(1), LutEngine::Plan);
+    }
+
+    #[test]
+    fn default_crossover_scales_with_lane_width() {
+        assert_eq!(EngineSelect::default_crossover_for(64), EngineSelect::DEFAULT_CROSSOVER);
+        assert_eq!(EngineSelect::default_crossover_for(128), 256);
+        assert_eq!(EngineSelect::default_crossover_for(512), 1024);
+        // Degenerate widths floor at one 64-lane word.
+        assert_eq!(EngineSelect::default_crossover_for(0), 128);
+        let auto = EngineSelect::auto();
+        assert_eq!(
+            auto.crossover,
+            EngineSelect::default_crossover_for(crate::simd::widest_lanes())
+        );
+        assert_eq!(EngineSelect::auto_for_lanes(64).crossover, 128);
     }
 }

@@ -40,6 +40,16 @@
 //! layout of the boundary (`planes[j·β + b]`) — contiguous `u64` words, no
 //! per-sample marshalling, as anticipated by the ROADMAP.
 //!
+//! The handoff unit is **deliberately pinned to canonical 64-bit plane
+//! words** even though the local batch engine now compiles lane-generic
+//! kernels up to 512 lanes wide (`crate::simd`): the sharded engines run
+//! the scalar `u64` monomorphization of the same generic kernels
+//! ([`exec_ops`]`::<u64>`, [`pack_word`]`::<u64>`), and the wide
+//! `Blocks<N>` layout stores block i's plane word exactly where the i-th
+//! scalar pack of the same 64-sample chunk puts it — so shared buffers,
+//! PLW2 wire frames and the PR 3–6 hazard/verify arguments are all
+//! untouched by lane width (`ARCHITECTURE.md` §3).
+//!
 //! Shard s may start layer l as soon as its precomputed dependency set is
 //! satisfied — **fan-in-aware early start**, not a global layer barrier.
 //! Each cell carries a flat list of `(shard, threshold)` pairs, satisfied
@@ -2231,6 +2241,31 @@ mod tests {
             let want = plan.forward_batch(&xs, &mut scratch);
             assert_eq!(model.plan.forward_batch(&xs).unwrap(), want, "plan batch {n}");
             assert_eq!(model.bits.forward_batch(&xs).unwrap(), want, "bits batch {n}");
+        }
+    }
+
+    /// The sharded route's canonical 64-bit plane handoff stays bit-exact
+    /// when the *local* batch engine is compiled at a wide lane width: the
+    /// sharded bitslice (u64 monomorphization of the generic kernels,
+    /// planes over the handoff buffers) and a widest-lane
+    /// [`crate::sim::BitsliceNet`] must agree sample-for-sample, so a
+    /// coordinator mixing the two routes never changes answers with lane
+    /// width.  Batch sizes straddle both 64-lane and wide-word boundaries.
+    #[test]
+    fn sharded_handoff_matches_wide_local_engine() {
+        let (net, tables) = grid_net(2, 2);
+        let widest = crate::simd::widest_lanes();
+        let wide = crate::sim::BitsliceNet::compile(&net, &tables, 1)
+            .with_lane_plan(crate::simd::plan_for(widest));
+        let model = ShardedModel::compile(&net, &tables, 3, 1);
+        for n in [1usize, 63, 64, 65, widest - 1, widest, widest + 1] {
+            let xs = random_codes(&net, n, 77 + n as u64);
+            let want = wide.forward_batch_codes(&xs);
+            assert_eq!(
+                model.bits.forward_batch(&xs).unwrap(),
+                want,
+                "sharded vs wide({widest}) batch {n}"
+            );
         }
     }
 

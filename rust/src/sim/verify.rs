@@ -21,7 +21,11 @@
 //!   indices in-bounds, `Group` membership consistent with its mask store,
 //!   no dead writes, and full coverage of each layer's output planes —
 //!   both for the whole-layer streams and the sharded `flatten_cone`
-//!   re-flattened streams.
+//!   re-flattened streams.  Since the SIMD widening the checker also
+//!   validates the engine's lane-width metadata: the declared width is a
+//!   supported multiple of 64 consistent with the carried
+//!   [`crate::simd::LanePlan`] (`lane-width`), and the scratch plane-block
+//!   count matches it (`scratch-blocks`).
 //! - **hazard schedule** ([`verify_hazards`]): recompute the per-boundary
 //!   read/write sets from the kernels' retained specs and check that the
 //!   three hazard classes (producer, previous-generation reader,
@@ -469,6 +473,34 @@ fn finish_stream(
 pub fn verify_bitslice(net: &BitsliceNet) -> Vec<Violation> {
     let art = ArtifactKind::OpStream;
     let mut out = Vec::new();
+    if !crate::simd::SUPPORTED_LANES.contains(&net.lanes) || net.plan.lanes != net.lanes {
+        out.push(v(
+            art,
+            "lane-width",
+            0,
+            net.lanes,
+            format!(
+                "declared lane width {} must be one of {:?} and match the lane plan ({})",
+                net.lanes,
+                crate::simd::SUPPORTED_LANES,
+                net.plan.lanes
+            ),
+        ));
+    }
+    if net.plane_blocks != net.lanes / 64 {
+        out.push(v(
+            art,
+            "scratch-blocks",
+            0,
+            net.plane_blocks,
+            format!(
+                "scratch plane-block count {} does not match lane width {} (want {})",
+                net.plane_blocks,
+                net.lanes,
+                net.lanes / 64
+            ),
+        ));
+    }
     let mut in_planes = net.n_features * net.in_bits as usize;
     for (l, lo) in net.layers.iter().enumerate() {
         let (defined, mut used) = check_stream_core(l, &lo.stream, in_planes, &mut out);
@@ -1157,6 +1189,41 @@ mod tests {
         let mut b = bits_of();
         b.layers[0].stream.bind[0].1 = u32::MAX;
         assert!(has(&verify_bitslice(&b), "bind-wire-bounds"));
+    }
+
+    #[test]
+    fn opstream_accepts_every_supported_lane_plan() {
+        for lanes in crate::simd::SUPPORTED_LANES {
+            let b = bits_of().with_lane_plan(crate::simd::plan_for(lanes));
+            let vs = verify_bitslice(&b);
+            assert!(vs.is_empty(), "lanes={lanes}: {vs:?}");
+        }
+    }
+
+    #[test]
+    fn opstream_rejects_unsupported_lane_width() {
+        // 96 is not a supported multiple of 64; plane_blocks (96/64 = 1)
+        // still matches, so only the lane-width invariant must fire.
+        let mut b = bits_of();
+        b.lanes = 96;
+        let vs = verify_bitslice(&b);
+        assert!(has(&vs, "lane-width"), "{vs:?}");
+        assert!(!has(&vs, "scratch-blocks"), "{vs:?}");
+        // A supported width that disagrees with the carried plan is also a
+        // lane-width violation (metadata drifted from the dispatch path).
+        let mut b = bits_of();
+        b.lanes = 128;
+        b.plane_blocks = 2;
+        assert!(has(&verify_bitslice(&b), "lane-width"));
+    }
+
+    #[test]
+    fn opstream_rejects_mis_sized_scratch_blocks() {
+        let mut b = bits_of();
+        b.plane_blocks = 3;
+        let vs = verify_bitslice(&b);
+        assert!(has(&vs, "scratch-blocks"), "{vs:?}");
+        assert!(!has(&vs, "lane-width"), "{vs:?}");
     }
 
     #[test]

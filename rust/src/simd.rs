@@ -1,0 +1,513 @@
+//! Lane-count-generic machine words for the bitslice engine.
+//!
+//! The bitslice engine's premise — one bitwise op retires every lane of a
+//! machine word — is only as strong as the word is wide.  This module
+//! abstracts the word: [`Word`] is implemented by the scalar `u64` baseline
+//! (64 lanes) and by [`Blocks<N>`], an `N`-block `[u64; N]` plane group
+//! (128/256/512 lanes) whose lane-wise ops are plain per-block bitwise ops
+//! the compiler unrolls and, under the right target features, vectorizes to
+//! ymm/zmm registers.
+//!
+//! # Dispatch ladder
+//!
+//! Kernel selection is a [`LanePlan`] resolved once at engine-compile time
+//! (`CLI --lanes` > `POLYLUT_LANES` env > widest supported) and dispatched
+//! per batch in `sim::bitslice::forward_batch_codes`:
+//!
+//! ```text
+//!   lanes  path              codegen
+//!   ─────  ────────────────  ──────────────────────────────────────────────
+//!     64   Scalar            the original u64 kernel (always correct)
+//!    128   Blocks2           portable [u64; 2] unrolled blocks
+//!    256   Blocks4 / Avx2    [u64; 4]; Avx2 re-checks CPUID, then enters a
+//!                            `#[target_feature(enable = "avx2")]` wrapper so
+//!                            LLVM lowers the block ops to 256-bit ymm ops
+//!    512   Blocks8 / Avx512  [u64; 8]; the Avx512 path is selected when
+//!                            `avx512f` is detected but compiles under the
+//!                            avx2 feature set (2× ymm per op) so it builds
+//!                            on every stable toolchain — full zmm codegen
+//!                            comes from a `-C target-cpu=native` build
+//! ```
+//!
+//! Every `std::arch`-flavoured path re-verifies
+//! `is_x86_feature_detected!` at the dispatch site before entering the
+//! `unsafe` target-feature wrapper, and falls back to the portable
+//! [`Blocks<N>`] kernel otherwise — constructing any [`LanePlan`] from safe
+//! code is therefore always sound, and non-x86 hosts get the portable
+//! blocks unconditionally.
+//!
+//! The wire/shard handoff format is *not* widened: remote shards always
+//! exchange canonical 64-bit planes (`Blocks<N>` is layout-transparent over
+//! `[u64; N]`, block `i` = samples `64·i..64·(i+1)`), so PLW2 frames and
+//! the hazard/verify arguments are untouched.  See ARCHITECTURE.md §3.
+
+use std::ops::{BitAnd, BitOr, BitXor, Not};
+
+/// Lane widths the engine can compile for: 64-bit plane blocks only.
+pub const SUPPORTED_LANES: [usize; 4] = [64, 128, 256, 512];
+
+/// Environment variable overriding the lane width (`64|128|256|512`, or
+/// `widest`/`max`/`0` for the detected maximum).  CLI `--lanes` wins over it.
+pub const LANES_ENV: &str = "POLYLUT_LANES";
+
+/// Valid-lane mask for one 64-lane block holding `n_valid` samples: lane
+/// `s` is set iff sample `s` exists.  Saturates at a full block
+/// (`n_valid >= 64`), so the remainder of any batch size can be passed
+/// directly.  This is the single source of truth `sim::bitslice::lane_mask`
+/// re-exports.
+#[inline]
+pub fn lane_mask64(n_valid: usize) -> u64 {
+    if n_valid >= 64 {
+        !0
+    } else {
+        (1u64 << n_valid) - 1
+    }
+}
+
+/// A machine word of `LANES = BLOCKS·64` bit-parallel sample lanes,
+/// physically `BLOCKS` consecutive 64-bit plane blocks (block `i` holds
+/// samples `64·i..64·(i+1)` — the canonical wire layout).
+///
+/// Implementors are plain-old-data (`Copy`) and support the four lane-wise
+/// bitwise ops the op-stream kernels are written in, so the generic kernels
+/// keep exactly the scalar code shape (`l ^ (s & (l ^ h))`, `v & x`,
+/// `v & !x`, …) and monomorphize to straight-line block-unrolled code.
+pub trait Word:
+    Copy
+    + Send
+    + Sync
+    + Sized
+    + 'static
+    + BitAnd<Output = Self>
+    + BitOr<Output = Self>
+    + BitXor<Output = Self>
+    + Not<Output = Self>
+{
+    /// Number of 64-bit plane blocks in this word.
+    const BLOCKS: usize;
+    /// Sample lanes per word (`BLOCKS * 64`).
+    const LANES: usize = Self::BLOCKS * 64;
+
+    /// The all-zero word.
+    fn zero() -> Self;
+    /// The all-ones word.
+    fn ones() -> Self;
+    /// Valid-lane mask for `n_valid` samples, saturating at `LANES`.
+    fn lane_mask(n_valid: usize) -> Self;
+    /// Read 64-bit plane block `i` (samples `64·i..64·(i+1)`).
+    fn block(&self, i: usize) -> u64;
+    /// Overwrite 64-bit plane block `i`.
+    fn set_block(&mut self, i: usize, v: u64);
+
+    /// Lane-wise 2:1 mux: lane `s` of the result is `hi[s]` where `sel[s]`
+    /// is set, else `lo[s]` — the 3-op word-mux every kernel recombines
+    /// cofactors with.
+    #[inline(always)]
+    fn mux(sel: Self, lo: Self, hi: Self) -> Self {
+        lo ^ (sel & (lo ^ hi))
+    }
+}
+
+impl Word for u64 {
+    const BLOCKS: usize = 1;
+
+    #[inline(always)]
+    fn zero() -> Self {
+        0
+    }
+
+    #[inline(always)]
+    fn ones() -> Self {
+        !0
+    }
+
+    #[inline(always)]
+    fn lane_mask(n_valid: usize) -> Self {
+        lane_mask64(n_valid)
+    }
+
+    #[inline(always)]
+    fn block(&self, _i: usize) -> u64 {
+        *self
+    }
+
+    #[inline(always)]
+    fn set_block(&mut self, _i: usize, v: u64) {
+        *self = v;
+    }
+}
+
+/// `N` consecutive 64-bit plane blocks treated as one `64·N`-lane word.
+///
+/// `#[repr(transparent)]` over `[u64; N]`: block `i` of the wide word is
+/// bit-for-bit the scalar plane of sample chunk `i`, which is what keeps
+/// the 64-bit wire/shard handoff format byte-identical under wide local
+/// kernels (asserted by `sim::bitslice` tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(transparent)]
+pub struct Blocks<const N: usize>(pub [u64; N]);
+
+impl<const N: usize> BitAnd for Blocks<N> {
+    type Output = Self;
+
+    #[inline(always)]
+    fn bitand(self, rhs: Self) -> Self {
+        Blocks(std::array::from_fn(|i| self.0[i] & rhs.0[i]))
+    }
+}
+
+impl<const N: usize> BitOr for Blocks<N> {
+    type Output = Self;
+
+    #[inline(always)]
+    fn bitor(self, rhs: Self) -> Self {
+        Blocks(std::array::from_fn(|i| self.0[i] | rhs.0[i]))
+    }
+}
+
+impl<const N: usize> BitXor for Blocks<N> {
+    type Output = Self;
+
+    #[inline(always)]
+    fn bitxor(self, rhs: Self) -> Self {
+        Blocks(std::array::from_fn(|i| self.0[i] ^ rhs.0[i]))
+    }
+}
+
+impl<const N: usize> Not for Blocks<N> {
+    type Output = Self;
+
+    #[inline(always)]
+    fn not(self) -> Self {
+        Blocks(std::array::from_fn(|i| !self.0[i]))
+    }
+}
+
+impl<const N: usize> Word for Blocks<N> {
+    const BLOCKS: usize = N;
+
+    #[inline(always)]
+    fn zero() -> Self {
+        Blocks([0; N])
+    }
+
+    #[inline(always)]
+    fn ones() -> Self {
+        Blocks([!0; N])
+    }
+
+    #[inline(always)]
+    fn lane_mask(n_valid: usize) -> Self {
+        Blocks(std::array::from_fn(|i| lane_mask64(n_valid.saturating_sub(i * 64))))
+    }
+
+    #[inline(always)]
+    fn block(&self, i: usize) -> u64 {
+        self.0[i]
+    }
+
+    #[inline(always)]
+    fn set_block(&mut self, i: usize, v: u64) {
+        self.0[i] = v;
+    }
+}
+
+/// Best SIMD capability detected on the host (ordered: wider is greater).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SimdLevel {
+    /// Forced 64-lane scalar `u64` kernels.
+    Scalar = 0,
+    /// Portable unrolled `[u64; N]` blocks (any architecture).
+    Portable = 1,
+    /// 256-bit AVX2 available (`is_x86_feature_detected!("avx2")`).
+    Avx2 = 2,
+    /// 512-bit AVX-512F available (`is_x86_feature_detected!("avx512f")`).
+    Avx512 = 3,
+}
+
+impl SimdLevel {
+    /// Snapshot / log label.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Portable => "portable",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Avx512 => "avx512",
+        }
+    }
+
+    /// Stable ordinal for atomic metrics storage.
+    pub fn ordinal(self) -> u64 {
+        self as u64
+    }
+
+    /// Inverse of [`SimdLevel::ordinal`].
+    pub fn from_ordinal(v: u64) -> Option<SimdLevel> {
+        match v {
+            0 => Some(SimdLevel::Scalar),
+            1 => Some(SimdLevel::Portable),
+            2 => Some(SimdLevel::Avx2),
+            3 => Some(SimdLevel::Avx512),
+            _ => None,
+        }
+    }
+}
+
+/// Which monomorphized kernel executes the op stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    /// `u64` — 64 lanes, the always-correct baseline.
+    Scalar,
+    /// Portable `Blocks<2>` — 128 lanes.
+    Blocks2,
+    /// Portable `Blocks<4>` — 256 lanes.
+    Blocks4,
+    /// Portable `Blocks<8>` — 512 lanes.
+    Blocks8,
+    /// `Blocks<4>` under `#[target_feature(enable = "avx2")]` — 256 lanes
+    /// in ymm registers.  Falls back to [`KernelPath::Blocks4`] at dispatch
+    /// time if CPUID disagrees.
+    Avx2,
+    /// `Blocks<8>` under the avx2 feature set (selected when `avx512f` is
+    /// detected) — 512 lanes, two ymm ops per block op on a stable
+    /// toolchain, full zmm under `-C target-cpu=native`.  Falls back to
+    /// [`KernelPath::Blocks8`] at dispatch time if CPUID disagrees.
+    Avx512,
+}
+
+impl KernelPath {
+    /// Snapshot / bench label.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Blocks2 => "blocks2",
+            KernelPath::Blocks4 => "blocks4",
+            KernelPath::Blocks8 => "blocks8",
+            KernelPath::Avx2 => "avx2",
+            KernelPath::Avx512 => "avx512",
+        }
+    }
+}
+
+/// A resolved lane plan: how wide the engine's words are and which kernel
+/// path executes them.  Carried by every compiled `BitsliceNet`; validated
+/// by `sim::verify` (`lane-width` / `scratch-blocks` invariants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LanePlan {
+    /// Sample lanes per op-stream walk (a supported multiple of 64).
+    pub lanes: usize,
+    /// Kernel monomorphization dispatched per batch.
+    pub path: KernelPath,
+    /// SIMD capability the path assumes (for metrics/logs).
+    pub level: SimdLevel,
+}
+
+impl LanePlan {
+    /// The canonical 64-lane scalar plan (wire format, shard handoff, and
+    /// the back-compat `BitsliceNet::compile` default).
+    pub fn scalar() -> LanePlan {
+        LanePlan { lanes: 64, path: KernelPath::Scalar, level: SimdLevel::Scalar }
+    }
+
+    /// 64-bit plane blocks per word (`lanes / 64`).
+    pub fn blocks(&self) -> usize {
+        self.lanes / 64
+    }
+}
+
+/// Detect the host's best SIMD capability.  Portable blocks are available
+/// everywhere; AVX levels only on x86-64 and only when CPUID confirms them.
+pub fn detect_level() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            return SimdLevel::Avx512;
+        }
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return SimdLevel::Avx2;
+        }
+    }
+    SimdLevel::Portable
+}
+
+/// Widest lane count worth compiling for on this host: 512 with AVX-512F,
+/// 256 with AVX2, otherwise 128 (portable 2× blocks still amortize per-op
+/// overhead and dual-issue on any 64-bit core).
+pub fn widest_lanes() -> usize {
+    match detect_level() {
+        SimdLevel::Avx512 => 512,
+        SimdLevel::Avx2 => 256,
+        SimdLevel::Scalar | SimdLevel::Portable => 128,
+    }
+}
+
+/// Build the lane plan for a supported lane count, picking the best kernel
+/// path the host verifiably supports at that width (portable blocks when
+/// CPUID comes up short — e.g. a forced `--lanes 512` on an AVX2-only
+/// host runs portable `Blocks<8>`).
+///
+/// `lanes` must be one of [`SUPPORTED_LANES`]; use [`resolve`] for
+/// validated user input.
+pub fn plan_for(lanes: usize) -> LanePlan {
+    assert!(
+        SUPPORTED_LANES.contains(&lanes),
+        "unsupported lane count {lanes} (supported: {SUPPORTED_LANES:?})"
+    );
+    let level = detect_level();
+    match lanes {
+        64 => LanePlan::scalar(),
+        128 => LanePlan { lanes, path: KernelPath::Blocks2, level: SimdLevel::Portable },
+        256 if level >= SimdLevel::Avx2 => {
+            LanePlan { lanes, path: KernelPath::Avx2, level: SimdLevel::Avx2 }
+        }
+        256 => LanePlan { lanes, path: KernelPath::Blocks4, level: SimdLevel::Portable },
+        512 if level >= SimdLevel::Avx512 => {
+            LanePlan { lanes, path: KernelPath::Avx512, level: SimdLevel::Avx512 }
+        }
+        512 if level >= SimdLevel::Avx2 => {
+            // Forced past the detected width: still profitable as ymm-backed
+            // 8-block words, so keep the avx2-wrapped Blocks<8> kernel.
+            LanePlan { lanes, path: KernelPath::Avx512, level: SimdLevel::Avx2 }
+        }
+        _ => LanePlan { lanes, path: KernelPath::Blocks8, level: SimdLevel::Portable },
+    }
+}
+
+/// Resolve the active lane plan.  Precedence: explicit caller choice
+/// (CLI `--lanes`, strict — unsupported values error) over the
+/// [`LANES_ENV`] environment variable (lenient — malformed values log a
+/// warning and fall back) over the detected widest width.
+pub fn resolve(cli: Option<usize>) -> anyhow::Result<LanePlan> {
+    if let Some(lanes) = cli {
+        if !SUPPORTED_LANES.contains(&lanes) {
+            anyhow::bail!(
+                "--lanes {lanes} is not supported (choose one of {SUPPORTED_LANES:?}, \
+                 or `widest`)"
+            );
+        }
+        return Ok(plan_for(lanes));
+    }
+    let lanes = match std::env::var(LANES_ENV) {
+        Ok(raw) => {
+            let raw = raw.trim();
+            if raw.is_empty() || raw.eq_ignore_ascii_case("widest") || raw == "0"
+                || raw.eq_ignore_ascii_case("max")
+            {
+                widest_lanes()
+            } else {
+                match raw.parse::<usize>() {
+                    Ok(n) if SUPPORTED_LANES.contains(&n) => n,
+                    _ => {
+                        log::warn!(
+                            "{LANES_ENV}={raw:?} is not a supported lane count \
+                             ({SUPPORTED_LANES:?}); using widest"
+                        );
+                        widest_lanes()
+                    }
+                }
+            }
+        }
+        Err(_) => widest_lanes(),
+    };
+    Ok(plan_for(lanes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_mask64_saturates() {
+        assert_eq!(lane_mask64(0), 0);
+        assert_eq!(lane_mask64(1), 1);
+        assert_eq!(lane_mask64(63), u64::MAX >> 1);
+        assert_eq!(lane_mask64(64), u64::MAX);
+        assert_eq!(lane_mask64(1000), u64::MAX);
+    }
+
+    #[test]
+    fn blocks_ops_are_lane_wise() {
+        let a = Blocks([0b1100u64, !0]);
+        let b = Blocks([0b1010u64, 0]);
+        assert_eq!((a & b).0, [0b1000, 0]);
+        assert_eq!((a | b).0, [0b1110, !0]);
+        assert_eq!((a ^ b).0, [0b0110, !0]);
+        assert_eq!((!b).0, [!0b1010u64, !0]);
+    }
+
+    #[test]
+    fn blocks_lane_mask_spans_block_boundaries() {
+        assert_eq!(<Blocks<4>>::lane_mask(0).0, [0, 0, 0, 0]);
+        assert_eq!(<Blocks<4>>::lane_mask(64).0, [!0, 0, 0, 0]);
+        assert_eq!(<Blocks<4>>::lane_mask(65).0, [!0, 1, 0, 0]);
+        assert_eq!(<Blocks<4>>::lane_mask(129).0, [!0, !0, 1, 0]);
+        assert_eq!(<Blocks<4>>::lane_mask(256).0, [!0, !0, !0, !0]);
+        assert_eq!(<Blocks<4>>::lane_mask(1000).0, [!0, !0, !0, !0]);
+    }
+
+    #[test]
+    fn word_mux_selects_per_lane() {
+        let sel = 0b1010u64;
+        let lo = 0b0011u64;
+        let hi = 0b0101u64;
+        let want = (lo & !sel) | (hi & sel);
+        assert_eq!(<u64 as Word>::mux(sel, lo, hi), want);
+        let w = <Blocks<2>>::mux(Blocks([sel, 0]), Blocks([lo, 7]), Blocks([hi, 9]));
+        assert_eq!(w.0[0], want);
+        assert_eq!(w.0[1], 7, "all-clear select keeps lo");
+    }
+
+    #[test]
+    fn block_accessors_round_trip() {
+        let mut w = <Blocks<8>>::zero();
+        for i in 0..8 {
+            w.set_block(i, i as u64 + 1);
+        }
+        for i in 0..8 {
+            assert_eq!(w.block(i), i as u64 + 1);
+        }
+        let mut s = 0u64;
+        s.set_block(0, 42);
+        assert_eq!(s.block(0), 42);
+        assert_eq!(<u64 as Word>::BLOCKS, 1);
+        assert_eq!(<u64 as Word>::LANES, 64);
+        assert_eq!(<Blocks<8> as Word>::LANES, 512);
+    }
+
+    #[test]
+    fn plan_for_supported_widths_is_consistent() {
+        for lanes in SUPPORTED_LANES {
+            let plan = plan_for(lanes);
+            assert_eq!(plan.lanes, lanes);
+            assert_eq!(plan.blocks(), lanes / 64);
+        }
+        assert_eq!(plan_for(64).path, KernelPath::Scalar);
+        assert_eq!(plan_for(128).path, KernelPath::Blocks2);
+    }
+
+    #[test]
+    fn widest_is_supported_and_at_least_two_blocks() {
+        let w = widest_lanes();
+        assert!(SUPPORTED_LANES.contains(&w));
+        assert!(w >= 128, "portable blocks are always available");
+    }
+
+    #[test]
+    fn resolve_rejects_bad_cli_widths() {
+        assert!(resolve(Some(96)).is_err());
+        assert!(resolve(Some(1024)).is_err());
+        let plan = resolve(Some(64)).expect("64 is always supported");
+        assert_eq!(plan.path, KernelPath::Scalar);
+        assert_eq!(plan.level, SimdLevel::Scalar);
+    }
+
+    #[test]
+    fn simd_level_ordinals_round_trip() {
+        for lvl in [SimdLevel::Scalar, SimdLevel::Portable, SimdLevel::Avx2, SimdLevel::Avx512] {
+            assert_eq!(SimdLevel::from_ordinal(lvl.ordinal()), Some(lvl));
+        }
+        assert_eq!(SimdLevel::from_ordinal(17), None);
+        assert!(SimdLevel::Avx512 > SimdLevel::Avx2);
+        assert!(SimdLevel::Avx2 > SimdLevel::Portable);
+    }
+}

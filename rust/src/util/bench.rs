@@ -5,9 +5,14 @@
 //! samples until a time budget or sample count is reached and reports
 //! median / mean / p95 with a simple MAD-based spread, in criterion-like
 //! one-line format.  `table` renders paper-style rows (used by the
-//! fig6/table2/table3/table5 benches).
+//! fig6/table2/table3/table5 benches).  [`BenchJournal`] accumulates
+//! machine-readable records and, when `POLYLUT_BENCH_JSON=<path>` is set,
+//! writes them as a JSON document (the micro_hotpaths bench uses it to
+//! emit `BENCH_bitslice.json` for the CI bench-smoke leg).
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::{Json, JsonObj};
 
 #[derive(Debug, Clone)]
 pub struct Stats {
@@ -94,6 +99,107 @@ impl Bench {
     }
 }
 
+/// Environment variable naming the file [`BenchJournal::write_if_requested`]
+/// writes (unset = no file is written).
+pub const BENCH_JSON_ENV: &str = "POLYLUT_BENCH_JSON";
+
+/// One machine-readable throughput record: a (geometry, engine, lane-width)
+/// point with its samples-per-second figure derived from [`Stats`].
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    /// Model geometry the measurement ran on (e.g. `"nid-t4"`).
+    pub geometry: String,
+    /// Engine / kernel path label (e.g. `"bitslice/avx2"`, `"plan"`).
+    pub engine: String,
+    /// Active lane width (samples per op-stream walk; 0 = not lane-based).
+    pub lanes: usize,
+    /// Batch size the throughput figure is normalized over.
+    pub batch: usize,
+    /// Samples retired per second at the median time.
+    pub samples_per_sec: f64,
+    /// Median wall-clock time per measured call, nanoseconds.
+    pub median_ns: f64,
+}
+
+/// Accumulator for [`BenchRecord`]s with a JSON emitter, env-gated via
+/// [`BENCH_JSON_ENV`] so normal bench runs stay file-free.
+#[derive(Debug, Default)]
+pub struct BenchJournal {
+    records: Vec<BenchRecord>,
+}
+
+impl BenchJournal {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one throughput point; `batch` is the items-per-call figure
+    /// fed to [`Stats::throughput`].
+    pub fn record(&mut self, geometry: &str, engine: &str, lanes: usize, batch: usize, st: &Stats) {
+        self.records.push(BenchRecord {
+            geometry: geometry.to_string(),
+            engine: engine.to_string(),
+            lanes,
+            batch,
+            samples_per_sec: st.throughput(batch as f64),
+            median_ns: st.median_ns,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// The journal as a JSON document:
+    /// `{"schema": "polylut-bench-v1", "records": [{...}, ...]}`.
+    pub fn to_json(&self) -> Json {
+        let mut root = JsonObj::new();
+        root.insert("schema", "polylut-bench-v1");
+        let records: Vec<Json> = self
+            .records
+            .iter()
+            .map(|r| {
+                let mut o = JsonObj::new();
+                o.insert("geometry", r.geometry.as_str());
+                o.insert("engine", r.engine.as_str());
+                o.insert("lanes", r.lanes);
+                o.insert("batch", r.batch);
+                o.insert("samples_per_sec", r.samples_per_sec);
+                o.insert("median_ns", r.median_ns);
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("records", Json::Arr(records));
+        Json::Obj(root)
+    }
+
+    /// Write the journal to the path named by [`BENCH_JSON_ENV`], if set.
+    /// Returns the path written to, `None` when the env var is unset or
+    /// empty.  IO failures are reported, not fatal — a bench run should
+    /// still print its numbers when the journal path is unwritable.
+    pub fn write_if_requested(&self) -> Option<std::path::PathBuf> {
+        let path = match std::env::var(BENCH_JSON_ENV) {
+            Ok(p) if !p.is_empty() => std::path::PathBuf::from(p),
+            _ => return None,
+        };
+        let text = self.to_json().to_string_pretty();
+        match std::fs::write(&path, text) {
+            Ok(()) => {
+                println!("[bench] wrote {} records to {}", self.records.len(), path.display());
+                Some(path)
+            }
+            Err(e) => {
+                eprintln!("[bench] could not write {}: {e}", path.display());
+                None
+            }
+        }
+    }
+}
+
 /// Render an aligned text table (paper-style rows) to stdout.
 pub fn table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
     println!("\n=== {title} ===");
@@ -135,6 +241,35 @@ mod tests {
         let st = b.measure("noop", || 1 + 1);
         assert!(st.samples >= 5);
         assert!(st.median_ns >= 0.0);
+    }
+
+    #[test]
+    fn journal_to_json_round_trips() {
+        let mut j = BenchJournal::new();
+        assert!(j.is_empty());
+        let st = Stats {
+            samples: 10,
+            median_ns: 2_000.0,
+            mean_ns: 2_100.0,
+            p95_ns: 2_500.0,
+            mad_ns: 50.0,
+        };
+        j.record("nid-t4", "bitslice/avx2", 256, 1024, &st);
+        j.record("jsc-m-lite", "bitslice/scalar", 64, 512, &st);
+        assert_eq!(j.len(), 2);
+        // Serialize and re-parse through the crate's own JSON layer so the
+        // emitted document is pinned to be well-formed.
+        let doc = Json::parse(&j.to_json().to_string_pretty()).expect("well-formed journal");
+        let root = doc.as_obj().expect("object root");
+        assert_eq!(root.get("schema").unwrap().as_str().unwrap(), "polylut-bench-v1");
+        let recs = root.get("records").unwrap().as_arr().expect("records array");
+        assert_eq!(recs.len(), 2);
+        let r0 = recs[0].as_obj().unwrap();
+        assert_eq!(r0.get("geometry").unwrap().as_str().unwrap(), "nid-t4");
+        assert_eq!(r0.get("lanes").unwrap().as_usize().unwrap(), 256);
+        // 1024 samples at 2 µs/call = 512e6 samples/s.
+        let sps = r0.get("samples_per_sec").unwrap().as_f64().unwrap();
+        assert!((sps - 512e6).abs() < 1.0, "{sps}");
     }
 
     #[test]

@@ -11,6 +11,7 @@ use polylut_add::nn::network::Network;
 use polylut_add::nn::{config, quant};
 use polylut_add::prop_assert;
 use polylut_add::sim::{BitsliceNet, EvalPlan, LutSim, PipelineSim, Scratch, WORD};
+use polylut_add::simd;
 use polylut_add::util::prop::{check, Gen, Outcome};
 use polylut_add::util::rng::Rng;
 
@@ -139,6 +140,35 @@ fn bitslice_engine_equals_plan_on_random_configs() {
         prop_assert!(
             bits.forward_batch(&xs, &mut bs) == plan.forward_batch(&xs, &mut ps),
             "cfg {cfg:?}"
+        );
+        Outcome::Pass
+    });
+}
+
+#[test]
+fn wide_lane_engine_equals_forced_scalar_on_random_configs() {
+    check("forced-widest lane plan == forced-scalar 64-lane plan", 10, |g| {
+        let cfg = random_config(g);
+        if cfg.validate().is_err() {
+            return Outcome::Pass;
+        }
+        let mut rng = g.rng.fork(6);
+        let net = Network::random(&cfg, &mut rng);
+        let tables = compile_network(&net, 1);
+        let widest = simd::widest_lanes();
+        let scalar = BitsliceNet::compile(&net, &tables, 1).with_lane_plan(simd::plan_for(WORD));
+        let wide = BitsliceNet::compile(&net, &tables, 1).with_lane_plan(simd::plan_for(widest));
+        // A ragged draw around the wide word boundary: whole batch sizes
+        // are part of the random geometry.
+        let n = g.usize_in(1, widest + widest / 2);
+        let xs: Vec<Vec<i32>> = (0..n)
+            .map(|_| {
+                (0..cfg.widths[0]).map(|_| rng.below(1usize << cfg.beta[0]) as i32).collect()
+            })
+            .collect();
+        prop_assert!(
+            wide.forward_batch_codes(&xs) == scalar.forward_batch_codes(&xs),
+            "cfg {cfg:?} batch {n} lanes {widest}"
         );
         Outcome::Pass
     });
