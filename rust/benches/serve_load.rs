@@ -1,0 +1,154 @@
+//! Serve-path load tests: the replica fleet under closed- and open-loop
+//! traffic (ARCHITECTURE.md §9), sweeping replica count × batch deadline
+//! and emitting the `BENCH_serve.json` trajectory.
+//!
+//!   cargo bench --bench serve_load
+//!
+//! POLYLUT_BENCH_QUICK=1 trims request counts for the CI load-test leg;
+//! POLYLUT_BENCH_JSON=<path> writes the machine-readable records.  Every
+//! sampled response is asserted bit-exact against the plan engine, so the
+//! sweep doubles as an end-to-end correctness pass over the fleet.
+
+// Benches are a separate crate: clippy's allow-unwrap-in-tests doesn't
+// reach them, so the workspace unwrap_used deny is lifted per-file.
+#![allow(clippy::unwrap_used)]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use polylut_add::coordinator::fleet::{Fleet, FleetConfig, FleetError};
+use polylut_add::coordinator::FrozenModel;
+use polylut_add::nn::config;
+use polylut_add::nn::network::Network;
+use polylut_add::sim::EngineSelect;
+use polylut_add::util::bench::{
+    closed_loop_load, open_loop_load, BenchJournal, LoadOutcome, LoadReport, ServeRecord,
+};
+use polylut_add::util::pool::default_workers;
+use polylut_add::util::rng::Rng;
+
+fn serve_record(
+    rep: &LoadReport,
+    replicas: usize,
+    target_batch: usize,
+    deadline_us: u64,
+    offered_rps: f64,
+    clients: usize,
+) -> ServeRecord {
+    ServeRecord {
+        geometry: "nid-t4".into(),
+        mode: rep.mode.into(),
+        replicas,
+        target_batch,
+        deadline_us,
+        offered_rps,
+        clients,
+        requests: rep.sent,
+        ok: rep.ok,
+        shed: rep.shed,
+        throughput_rps: rep.throughput_rps,
+        p50_us: rep.p50_us,
+        p99_us: rep.p99_us,
+    }
+}
+
+fn main() {
+    let quick = std::env::var("POLYLUT_BENCH_QUICK").is_ok();
+    // The paper's Table IV Add2 geometry (random weights — serve-path
+    // timing and bit-exactness do not depend on training).
+    let cfg = config::nid_add2();
+    let net = Network::random(&cfg, &mut Rng::new(0x5EED));
+    let n_classes = cfg.n_classes;
+    let model = Arc::new(FrozenModel::from_network(net, default_workers()));
+    let lanes = model.bitslice.lanes();
+
+    // Request pool with expected logits precomputed once via the plan
+    // engine — the oracle every sampled fleet response is checked against.
+    let sim = model.sim();
+    let mut rng = Rng::new(77);
+    let pool: Vec<Vec<f32>> =
+        (0..256).map(|_| (0..cfg.widths[0]).map(|_| rng.f32()).collect()).collect();
+    let expected: Vec<Vec<f32>> = pool.iter().map(|x| sim.forward(x)).collect();
+
+    let mut journal = BenchJournal::new();
+    let clients = 8usize;
+    let per_client = if quick { 50 } else { 400 };
+    let open_total = if quick { 400 } else { 4_000 };
+
+    println!(
+        "[serve] nid-t4 replica-fleet load sweep: lanes={lanes}, \
+         replicas x deadline grid, {clients} clients"
+    );
+    for &replicas in &[1usize, 2] {
+        for &deadline_us in &[100u64, 1_000] {
+            let fleet = Fleet::start(
+                model.clone(),
+                default_workers(),
+                EngineSelect::auto_for_lanes(lanes),
+                n_classes,
+                FleetConfig {
+                    replicas,
+                    target_batch: 0, // pack toward the active lane width
+                    batch_deadline: Duration::from_micros(deadline_us),
+                    queue_depth: 4_096,
+                    shed_after: None,
+                },
+            );
+            let client = fleet.client();
+            let run = |i: usize| {
+                let k = i % pool.len();
+                match client.infer(pool[k].clone()) {
+                    Ok(resp) => {
+                        assert_eq!(
+                            resp.logits, expected[k],
+                            "fleet response must be bit-exact vs the plan engine"
+                        );
+                        LoadOutcome::Ok
+                    }
+                    Err(FleetError::Shed { .. } | FleetError::QueueFull { .. }) => {
+                        LoadOutcome::Shed
+                    }
+                    Err(e) => {
+                        eprintln!("[serve] request failed: {e}");
+                        LoadOutcome::Error
+                    }
+                }
+            };
+            let closed = closed_loop_load(clients, per_client, &run);
+            println!("[serve] replicas={replicas} deadline={deadline_us}µs {}", closed.line());
+            journal.record_serve(serve_record(
+                &closed,
+                replicas,
+                lanes,
+                deadline_us,
+                0.0,
+                clients,
+            ));
+            // Offer ~60% of the measured closed-loop capacity: the open
+            // loop probes queueing latency under real load without being
+            // pinned into permanent overload on a slow host.
+            let offered = (closed.throughput_rps * 0.6).max(500.0);
+            let open = open_loop_load(offered, open_total, clients, &run);
+            println!("[serve] replicas={replicas} deadline={deadline_us}µs {}", open.line());
+            journal.record_serve(serve_record(
+                &open,
+                replicas,
+                lanes,
+                deadline_us,
+                offered,
+                clients,
+            ));
+            println!("  {}", fleet.metrics.snapshot());
+            assert_eq!(
+                closed.errors + open.errors,
+                0,
+                "in-process fleet must not produce replica errors"
+            );
+            fleet.shutdown();
+        }
+    }
+
+    // Machine-readable serve records (BENCH_serve.json in CI) — written
+    // only when POLYLUT_BENCH_JSON names a path.
+    journal.write_if_requested();
+}

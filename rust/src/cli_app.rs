@@ -77,11 +77,22 @@ fn print_help() {
                     [--wire-retries N]  reconnect-and-resume attempts per\n\
                     link incident (default 6) before the engine faults and\n\
                     routing degrades to the in-process plan.\n\
+                    [--replicas N]  serve through the replica fleet: N\n\
+                    in-process workers share the compiled model behind a\n\
+                    deadline-aware batch former (requires --backend lut;\n\
+                    --max-batch sets the pack target, 0/unset = the active\n\
+                    lane width; see ARCHITECTURE.md §9).\n\
+                    [--batch-deadline-us N]  oldest-request budget before a\n\
+                    partial batch dispatches (default 200; fleet only).\n\
+                    [--queue-depth N]  bounded admission queue (default 4096);\n\
+                    admission beyond it fails fast, aged-out requests shed.\n\
                     Metrics snapshot: plan/bitslice/sharded = batches served\n\
                     per engine; shard_cells/shard_waits = per-shard occupancy\n\
                     and handoff-wait counters (cumulative); shard_spin_us and\n\
                     wire_frames/bytes/wait_ns/reconnects plus\n\
                     wire_inflight_epochs/resumes/retry_exhausted when active;\n\
+                    fleet_replicas/formed/batch_hist/queue_hwm/shed/\n\
+                    replica_faults when the fleet is active;\n\
                     simd/lanes = detected kernel level + active lane width\n\
            shard-worker --listen H:P --shards S   host shards of a model for\n\
                     a remote coordinator (each connection claims one\n\

@@ -1,0 +1,1019 @@
+//! Replica fleet: the data-parallel serving front-end (ARCHITECTURE.md §9).
+//!
+//! Everything below the coordinator parallelizes *one* batch (bitslice
+//! lanes) or *one* sample (sharding); this module adds the third axis —
+//! data-parallel over **independent requests**.  A compiled
+//! [`FrozenModel`](crate::coordinator::FrozenModel) is shared by N
+//! in-process worker *replicas* (the plan and bitslice engines are
+//! immutable and lock-free, so replicas run truly concurrently; a sharded
+//! engine serializes on its internal call lock and is shared, not
+//! duplicated), fronted by an **admission queue with deadline-aware
+//! adaptive batch forming**:
+//!
+//! - arrivals are packed toward the active bitslice lane width (the word a
+//!   single op-stream walk retires, 64–512 lanes), and a batch dispatches
+//!   the moment the word fills;
+//! - a partially filled word dispatches when the *oldest* queued request's
+//!   deadline budget ([`FleetConfig::batch_deadline`]) expires — latency is
+//!   bounded by the deadline, not by traffic;
+//! - formed batches go to the **least-loaded live replica** (fewest
+//!   in-flight batches, capped at [`REPLICA_PIPELINE`] so one slow replica
+//!   cannot hoard work);
+//! - the queue is bounded ([`FleetConfig::queue_depth`]): admission beyond
+//!   the bound fails fast ([`FleetError::QueueFull`] — backpressure), and
+//!   requests that age past [`FleetConfig::shed_after`] while queued are
+//!   **shed** with [`FleetError::Shed`] instead of stalling the line;
+//! - a replica that panics mid-batch is marked dead and its batch is
+//!   re-dispatched through the queue to the survivors (or shed if it has
+//!   aged out); the fleet keeps serving on the remaining replicas.
+//!
+//! The batch former itself ([`BatchFormer`]) is a pure state machine driven
+//! by explicit microsecond timestamps, so its dispatch/shed decisions are
+//! unit-tested with a mock clock — no real sleeps, no timing-flaky
+//! assertions.  Every admitted request is answered **exactly once**: with a
+//! [`Response`], or with a clean [`FleetError`].
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use super::metrics::Metrics;
+use super::{Backend, FrozenModel, Response};
+use crate::sim::shard::lock_ignore_poison;
+use crate::sim::EngineSelect;
+
+/// Formed batches a replica may have queued + running before the former
+/// stops feeding it (2 = one running, one on deck — enough to hide the
+/// dispatch hop without letting a slow replica hoard the queue).
+pub const REPLICA_PIPELINE: usize = 2;
+
+/// Default shed budget as a multiple of the batch deadline when
+/// [`FleetConfig::shed_after`] is `None`.
+pub const DEFAULT_SHED_MULTIPLE: u32 = 16;
+
+// ---------------------------------------------------------------------------
+// Batch former: a pure, mock-clock-friendly state machine
+// ---------------------------------------------------------------------------
+
+/// Why a batch left the former.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchReason {
+    /// The batch reached the target width (a full bitslice word).
+    Fill,
+    /// The oldest queued request's deadline budget expired.
+    Deadline,
+}
+
+/// Static policy of a [`BatchFormer`].
+#[derive(Debug, Clone, Copy)]
+pub struct FormerPolicy {
+    /// Pack target: batches never exceed this many requests (the active
+    /// bitslice lane width in the fleet).
+    pub target: usize,
+    /// Oldest-request age at which a partial batch dispatches, µs.
+    pub deadline_us: u64,
+    /// Queued age at which a request is shed instead of served, µs.
+    pub shed_after_us: u64,
+    /// Admission bound: `admit` fails once this many requests are queued.
+    pub depth: usize,
+}
+
+/// Deadline-aware adaptive batch former.  Generic over the queued payload
+/// and driven by explicit `now_us` timestamps: the fleet feeds it real
+/// (monotonic) time, tests feed it a mock clock.  All methods are O(1) or
+/// O(batch); the former never blocks and never reads a clock itself.
+pub struct BatchFormer<T> {
+    policy: FormerPolicy,
+    queue: VecDeque<(u64, T)>,
+}
+
+impl<T> BatchFormer<T> {
+    /// New former; `target` and `depth` are clamped to ≥ 1.
+    pub fn new(mut policy: FormerPolicy) -> BatchFormer<T> {
+        policy.target = policy.target.max(1);
+        policy.depth = policy.depth.max(1);
+        BatchFormer { policy, queue: VecDeque::new() }
+    }
+
+    /// The active policy.
+    pub fn policy(&self) -> &FormerPolicy {
+        &self.policy
+    }
+
+    /// Queued request count.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Whether the queue is empty.
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Admit one request at `now_us`.  `Err(item)` when the queue is at
+    /// [`FormerPolicy::depth`] — the caller turns that into a backpressure
+    /// error, the former never buffers beyond its bound.
+    pub fn admit(&mut self, item: T, now_us: u64) -> Result<(), T> {
+        if self.queue.len() >= self.policy.depth {
+            return Err(item);
+        }
+        self.queue.push_back((now_us, item));
+        Ok(())
+    }
+
+    /// Re-queue items at the *front* (replica-death re-dispatch): admit
+    /// stamps are preserved so age keeps accruing toward the shed bound,
+    /// and the depth bound is deliberately not enforced — these requests
+    /// were already admitted once and must not be silently dropped.
+    pub fn requeue_front(&mut self, items: Vec<(u64, T)>) {
+        for it in items.into_iter().rev() {
+            self.queue.push_front(it);
+        }
+    }
+
+    /// Remove and return every request whose queued age reached
+    /// [`FormerPolicy::shed_after_us`] at `now_us` (paired with its admit
+    /// stamp).  Called before forming, so a shed request can never ride
+    /// along in a dispatched batch.
+    pub fn shed_expired(&mut self, now_us: u64) -> Vec<(u64, T)> {
+        let shed_after = self.policy.shed_after_us;
+        let mut out = Vec::new();
+        // Admit stamps are not monotonic after `requeue_front`, so scan —
+        // the queue is bounded by `depth` + one in-flight batch.
+        let mut keep = VecDeque::with_capacity(self.queue.len());
+        for (adm, item) in self.queue.drain(..) {
+            if now_us.saturating_sub(adm) >= shed_after {
+                out.push((adm, item));
+            } else {
+                keep.push_back((adm, item));
+            }
+        }
+        self.queue = keep;
+        out
+    }
+
+    /// Form the next batch at `now_us`, if the dispatch condition holds:
+    /// the word is full ([`DispatchReason::Fill`], takes precedence in the
+    /// fill-vs-deadline race — a full word is never split), or the oldest
+    /// queued request's deadline expired ([`DispatchReason::Deadline`] —
+    /// ships the partial word).  `None` = keep packing.
+    pub fn form(&mut self, now_us: u64) -> Option<(Vec<(u64, T)>, DispatchReason)> {
+        if self.queue.len() >= self.policy.target {
+            let batch = self.queue.drain(..self.policy.target).collect();
+            return Some((batch, DispatchReason::Fill));
+        }
+        let oldest = self.oldest_admit_us()?;
+        if now_us.saturating_sub(oldest) >= self.policy.deadline_us {
+            let batch = self.queue.drain(..).collect();
+            return Some((batch, DispatchReason::Deadline));
+        }
+        None
+    }
+
+    /// Drain everything unconditionally (shutdown / no-live-replica shed).
+    pub fn drain_all(&mut self) -> Vec<(u64, T)> {
+        self.queue.drain(..).collect()
+    }
+
+    /// Earliest admit stamp in the queue (`None` when empty).  Not simply
+    /// the front element: `requeue_front` can break FIFO age order.
+    fn oldest_admit_us(&self) -> Option<u64> {
+        self.queue.iter().map(|(adm, _)| *adm).min()
+    }
+
+    /// Timestamp at which [`BatchFormer::form`] next fires on its own
+    /// (oldest admit + deadline; `None` when empty or already full — a full
+    /// word dispatches immediately, there is nothing to wait for).
+    pub fn next_deadline_us(&self) -> Option<u64> {
+        if self.queue.len() >= self.policy.target {
+            return Some(0);
+        }
+        self.oldest_admit_us().map(|adm| adm + self.policy.deadline_us)
+    }
+
+    /// Timestamp at which [`BatchFormer::shed_expired`] next sheds
+    /// (`None` when empty).  The former loop sleeps toward this when no
+    /// replica can accept a dispatch, so aging out never needs a poll spin.
+    pub fn next_shed_us(&self) -> Option<u64> {
+        self.oldest_admit_us().map(|adm| adm + self.policy.shed_after_us)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fleet
+// ---------------------------------------------------------------------------
+
+/// How the serving fleet is laid out and how it forms batches.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// In-process worker replicas sharing the compiled model
+    /// (`serve --replicas`).
+    pub replicas: usize,
+    /// Pack target per formed batch; `0` = the model's active bitslice
+    /// lane width (the word one op-stream walk retires).
+    pub target_batch: usize,
+    /// Oldest-request deadline budget before a partial batch dispatches
+    /// (`serve --batch-deadline-us`).
+    pub batch_deadline: Duration,
+    /// Bounded admission queue depth (`serve --queue-depth`); admission
+    /// beyond it fails fast with [`FleetError::QueueFull`].
+    pub queue_depth: usize,
+    /// Queued age at which a request is shed ([`FleetError::Shed`]);
+    /// `None` = [`DEFAULT_SHED_MULTIPLE`] × the batch deadline, floored at
+    /// 1 ms.
+    pub shed_after: Option<Duration>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            replicas: 2,
+            target_batch: 0,
+            batch_deadline: Duration::from_micros(200),
+            queue_depth: 4096,
+            shed_after: None,
+        }
+    }
+}
+
+impl FleetConfig {
+    /// The resolved shed budget (see [`FleetConfig::shed_after`]).
+    pub fn shed_budget(&self) -> Duration {
+        self.shed_after.unwrap_or_else(|| {
+            (self.batch_deadline * DEFAULT_SHED_MULTIPLE).max(Duration::from_millis(1))
+        })
+    }
+}
+
+/// Why a fleet request was not answered with a [`Response`].  Every
+/// admitted request gets exactly one outcome: `Ok(Response)` or one of
+/// these, never silence.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FleetError {
+    /// The admission queue was at `--queue-depth` (backpressure): the
+    /// request was **not** admitted; retry later.
+    QueueFull {
+        /// The configured bound that was hit.
+        depth: usize,
+    },
+    /// The request aged past the shed budget while queued (overload) and
+    /// was dropped cleanly instead of stalling younger traffic.
+    Shed {
+        /// How long it had been queued when shed, µs.
+        waited_us: u64,
+    },
+    /// A replica failed the batch (backend error, or no live replica
+    /// remains to re-dispatch to).
+    Replica(String),
+    /// The fleet was shut down while the request was queued.
+    Stopped,
+}
+
+impl std::fmt::Display for FleetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetError::QueueFull { depth } => {
+                write!(f, "fleet queue full (depth {depth}, backpressure)")
+            }
+            FleetError::Shed { waited_us } => {
+                write!(f, "request shed after {waited_us}µs queued (overload)")
+            }
+            FleetError::Replica(msg) => write!(f, "replica failure: {msg}"),
+            FleetError::Stopped => write!(f, "fleet stopped"),
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
+
+/// One queued request: feature row + wall-clock admit instant (for the
+/// client-visible latency) + the response slot.
+struct FleetRequest {
+    features: Vec<f32>,
+    enqueued: Instant,
+    resp: SyncSender<Result<Response, FleetError>>,
+}
+
+/// A formed batch on its way to a replica: `(admit_us, request)` pairs.
+type Formed = Vec<(u64, FleetRequest)>;
+
+/// State under the fleet's one lock: the batch former plus the stop flag.
+struct FormerState {
+    former: BatchFormer<FleetRequest>,
+    stopping: bool,
+}
+
+/// Shared fleet state: the locked former, per-replica liveness/in-flight
+/// tracking, fault injection hooks, and the metrics sink.
+struct FleetShared {
+    state: Mutex<FormerState>,
+    /// Signaled on admit, replica completion, replica death and stop.
+    cv: Condvar,
+    start: Instant,
+    live: Vec<AtomicBool>,
+    /// Formed batches queued + running per replica (the least-loaded key).
+    inflight: Vec<AtomicU64>,
+    /// Test hook: make replica i panic on its next batch (exercises the
+    /// real catch_unwind → re-dispatch path).
+    panic_next: Vec<AtomicBool>,
+    metrics: Arc<Metrics>,
+}
+
+impl FleetShared {
+    /// Monotonic µs since fleet start — the former's clock.
+    fn now_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    fn lock(&self) -> MutexGuard<'_, FormerState> {
+        lock_ignore_poison(&self.state)
+    }
+
+    /// Least-loaded live replica with pipeline room, `None` when every
+    /// live replica is saturated (or none is live).
+    fn pick_replica(&self) -> Option<usize> {
+        let mut best: Option<(usize, u64)> = None;
+        for (i, (live, inflight)) in self.live.iter().zip(&self.inflight).enumerate() {
+            if !live.load(Ordering::Relaxed) {
+                continue;
+            }
+            let load = inflight.load(Ordering::Relaxed);
+            if load >= REPLICA_PIPELINE as u64 {
+                continue;
+            }
+            if best.map_or(true, |(_, b)| load < b) {
+                best = Some((i, load));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    fn live_replicas(&self) -> usize {
+        self.live.iter().filter(|l| l.load(Ordering::Relaxed)).count()
+    }
+}
+
+/// Handle for submitting requests to the fleet (clonable across client
+/// threads).
+#[derive(Clone)]
+pub struct FleetClient {
+    shared: Arc<FleetShared>,
+    n_classes: usize,
+}
+
+impl FleetClient {
+    /// Submit one request and block for its outcome.  The typed error
+    /// distinguishes backpressure ([`FleetError::QueueFull`] — the request
+    /// was never admitted) from shed/replica/stop outcomes of admitted
+    /// requests.
+    pub fn infer(&self, features: Vec<f32>) -> Result<Response, FleetError> {
+        let (tx, rx) = sync_channel(1);
+        let m = &self.shared.metrics;
+        m.requests.fetch_add(1, Ordering::Relaxed);
+        let req = FleetRequest { features, enqueued: Instant::now(), resp: tx };
+        {
+            let mut st = self.shared.lock();
+            if st.stopping {
+                return Err(FleetError::Stopped);
+            }
+            let now = self.shared.now_us();
+            let depth = st.former.policy().depth;
+            if st.former.admit(req, now).is_err() {
+                m.queue_rejects.fetch_add(1, Ordering::Relaxed);
+                return Err(FleetError::QueueFull { depth });
+            }
+            m.note_queue_depth(st.former.len() as u64);
+        }
+        self.shared.cv.notify_all();
+        match rx.recv() {
+            Ok(outcome) => outcome,
+            // The fleet never drops a responder without answering; a closed
+            // channel can only mean teardown raced the request.
+            Err(_) => Err(FleetError::Stopped),
+        }
+    }
+
+    /// Output classes of the served model (1 = binary threshold on the
+    /// single logit).
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+}
+
+/// The running replica fleet: a batch-former thread and N replica worker
+/// threads around one shared [`FrozenModel`].
+pub struct Fleet {
+    /// Serving metrics (same sink the single-server path uses, plus the
+    /// `fleet_*` group — see `metrics::snapshot()`).
+    pub metrics: Arc<Metrics>,
+    shared: Arc<FleetShared>,
+    former: Option<std::thread::JoinHandle<()>>,
+    replicas: Vec<std::thread::JoinHandle<()>>,
+    client: FleetClient,
+}
+
+impl Fleet {
+    /// Start `cfg.replicas` worker replicas over `model` plus the batch
+    /// former.  Replicas share the compiled engines (plan/bitslice are
+    /// immutable; a sharded engine serializes on its internal call lock),
+    /// so memory cost is per-scratch, not per-model-copy.
+    pub fn start(
+        model: Arc<FrozenModel>,
+        workers: usize,
+        select: EngineSelect,
+        n_classes: usize,
+        cfg: FleetConfig,
+    ) -> Fleet {
+        let n = cfg.replicas.max(1);
+        let target = if cfg.target_batch == 0 {
+            model.bitslice.lanes()
+        } else {
+            cfg.target_batch
+        };
+        let policy = FormerPolicy {
+            target,
+            deadline_us: cfg.batch_deadline.as_micros() as u64,
+            shed_after_us: cfg.shed_budget().as_micros() as u64,
+            depth: cfg.queue_depth,
+        };
+        let metrics = Arc::new(Metrics::new());
+        metrics.set_fleet(n as u64, target as u64, policy.deadline_us);
+        let shared = Arc::new(FleetShared {
+            state: Mutex::new(FormerState { former: BatchFormer::new(policy), stopping: false }),
+            cv: Condvar::new(),
+            start: Instant::now(),
+            live: (0..n).map(|_| AtomicBool::new(true)).collect(),
+            inflight: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            panic_next: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            metrics: metrics.clone(),
+        });
+        let mut txs = Vec::with_capacity(n);
+        let mut replicas = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = sync_channel::<Formed>(REPLICA_PIPELINE);
+            txs.push(tx);
+            let sh = shared.clone();
+            let m = model.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("polylut-replica-{i}"))
+                .spawn(move || replica_loop(i, sh, rx, m, workers, select, n_classes))
+                .expect("spawn replica");
+            replicas.push(handle);
+        }
+        let sh = shared.clone();
+        let former = std::thread::Builder::new()
+            .name("polylut-former".into())
+            .spawn(move || former_loop(sh, txs))
+            .expect("spawn batch former");
+        let client = FleetClient { shared: shared.clone(), n_classes };
+        Fleet { metrics, shared, former: Some(former), replicas, client }
+    }
+
+    /// A clonable request handle.
+    pub fn client(&self) -> FleetClient {
+        self.client.clone()
+    }
+
+    /// Replicas still alive (a panicked replica is dead until restart).
+    pub fn live_replicas(&self) -> usize {
+        self.shared.live_replicas()
+    }
+
+    /// Test hook: make replica `i` panic on its next batch, exercising the
+    /// mark-dead + re-dispatch path end to end (mirrors the sharded
+    /// engines' `inject_fault`).
+    pub fn inject_replica_panic(&self, i: usize) {
+        self.shared.panic_next[i].store(true, Ordering::SeqCst);
+    }
+
+    /// Stop the fleet: queued requests get [`FleetError::Stopped`],
+    /// in-flight batches finish normally, every thread is joined.
+    pub fn shutdown(mut self) {
+        {
+            let mut st = self.shared.lock();
+            st.stopping = true;
+        }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.former.take() {
+            let _ = h.join();
+        }
+        for h in self.replicas.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The former thread: shed → dispatch → sleep-until-next-event loop.  All
+/// decisions go through the pure [`BatchFormer`]; this loop only supplies
+/// real time, replica placement and the condvar plumbing.
+fn former_loop(shared: Arc<FleetShared>, replica_tx: Vec<SyncSender<Formed>>) {
+    let metrics = shared.metrics.clone();
+    let mut st = shared.lock();
+    loop {
+        if st.stopping {
+            for (_, req) in st.former.drain_all() {
+                let _ = req.resp.send(Err(FleetError::Stopped));
+            }
+            // Dropping `replica_tx` (this frame) closes every replica's
+            // receive loop once its in-flight batches are done.
+            return;
+        }
+        let now = shared.now_us();
+        // Shed ladder rung 1: age-out.  Runs before forming so a shed
+        // request can never ride along in a dispatched batch.
+        for (adm, req) in st.former.shed_expired(now) {
+            metrics.fleet_shed.fetch_add(1, Ordering::Relaxed);
+            let _ = req
+                .resp
+                .send(Err(FleetError::Shed { waited_us: now.saturating_sub(adm) }));
+        }
+        // Shed ladder rung 2: no live replica can ever serve the queue.
+        if shared.live_replicas() == 0 && !st.former.is_empty() {
+            for (_, req) in st.former.drain_all() {
+                metrics.fleet_shed.fetch_add(1, Ordering::Relaxed);
+                let _ = req.resp.send(Err(FleetError::Replica(
+                    "no live replicas (all workers failed)".into(),
+                )));
+            }
+        }
+        // Dispatch while a replica has pipeline room and a batch is due.
+        let mut progressed = false;
+        while let Some(i) = shared.pick_replica() {
+            let Some((batch, reason)) = st.former.form(shared.now_us()) else {
+                break;
+            };
+            metrics.record_formed_batch(batch.len() as u64, reason);
+            shared.inflight[i].fetch_add(1, Ordering::Relaxed);
+            match replica_tx[i].try_send(batch) {
+                Ok(()) => progressed = true,
+                Err(TrySendError::Full(batch)) => {
+                    // Can't happen while inflight < REPLICA_PIPELINE gates
+                    // dispatch, but stay safe: put the batch back and stop
+                    // dispatching this pass.
+                    shared.inflight[i].fetch_sub(1, Ordering::Relaxed);
+                    st.former.requeue_front(batch);
+                    break;
+                }
+                Err(TrySendError::Disconnected(batch)) => {
+                    // Replica thread is gone (panicked out): mark dead and
+                    // re-dispatch through the queue.
+                    shared.live[i].store(false, Ordering::Relaxed);
+                    shared.inflight[i].fetch_sub(1, Ordering::Relaxed);
+                    metrics
+                        .fleet_redispatched
+                        .fetch_add(batch.len() as u64, Ordering::Relaxed);
+                    st.former.requeue_front(batch);
+                }
+            }
+        }
+        if progressed {
+            continue;
+        }
+        // Nothing dispatchable: sleep until the next former event — the
+        // oldest request's dispatch deadline when a replica could take a
+        // batch, its shed deadline when all replicas are saturated — or a
+        // notify (admit / replica completion / stop).  The 20 ms cap is a
+        // liveness backstop, not a poll loop: every state change notifies.
+        let now = shared.now_us();
+        let wake = if shared.pick_replica().is_some() {
+            st.former.next_deadline_us()
+        } else {
+            st.former.next_shed_us()
+        };
+        if wake.is_some_and(|t| t <= now) {
+            continue;
+        }
+        let timeout = match wake {
+            Some(t) => Duration::from_micros(t - now).min(Duration::from_millis(20)),
+            None => Duration::from_millis(20),
+        };
+        let (guard, _) = shared
+            .cv
+            .wait_timeout(st, timeout)
+            .unwrap_or_else(|p| p.into_inner());
+        st = guard;
+    }
+}
+
+/// One replica worker: builds its backend view over the shared model and
+/// serves formed batches until its channel closes (fleet shutdown) or it
+/// dies (panic → batch re-dispatched, replica marked dead).
+fn replica_loop(
+    i: usize,
+    shared: Arc<FleetShared>,
+    rx: Receiver<Formed>,
+    model: Arc<FrozenModel>,
+    workers: usize,
+    select: EngineSelect,
+    n_classes: usize,
+) {
+    let metrics = shared.metrics.clone();
+    let backend = Backend::Lut { model, workers, select };
+    // After a panic the thread stays parked on `rx` as a dead husk instead
+    // of dropping the receiver: a dispatch that raced the death (the former
+    // read `live` just before the store) lands here and is re-queued
+    // instead of vanishing with a closed channel — the exactly-once
+    // guarantee must not depend on the former winning that race.  The husk
+    // exits when the former drops the senders at shutdown.
+    let mut dead = false;
+    while let Ok(batch) = rx.recv() {
+        if dead {
+            requeue(&shared, &metrics, i, batch);
+            continue;
+        }
+        let xs: Vec<Vec<f32>> = batch.iter().map(|(_, r)| r.features.clone()).collect();
+        let inject = shared.panic_next[i].swap(false, Ordering::SeqCst);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            assert!(!inject, "injected replica fault (test)");
+            backend.infer(&xs)
+        }));
+        match result {
+            Ok(Ok(all_logits)) => {
+                metrics.batches.fetch_add(1, Ordering::Relaxed);
+                metrics.batch_samples.fetch_add(xs.len() as u64, Ordering::Relaxed);
+                if let Some(engine) = backend.route(xs.len()) {
+                    metrics.record_engine(engine);
+                }
+                for ((_, req), logits) in batch.into_iter().zip(all_logits) {
+                    let pred = super::predict(n_classes, &logits);
+                    let latency = req.enqueued.elapsed();
+                    metrics.record_latency(latency.as_secs_f64() * 1e6);
+                    metrics.responses.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.resp.send(Ok(Response { logits, pred, latency }));
+                }
+            }
+            Ok(Err(e)) => {
+                // Backend-level error (e.g. a faulted sharded engine before
+                // its internal degrade kicks in): the batch fails cleanly,
+                // the replica lives on.
+                metrics.fleet_batch_errors.fetch_add(1, Ordering::Relaxed);
+                let msg = format!("replica {i}: {e:#}");
+                for (_, req) in batch {
+                    let _ = req.resp.send(Err(FleetError::Replica(msg.clone())));
+                }
+            }
+            Err(_) => {
+                // Replica death: mark dead and push the batch back through
+                // the former (admit stamps preserved — survivors serve it,
+                // or the shed ladder ages it out).
+                dead = true;
+                shared.live[i].store(false, Ordering::Relaxed);
+                metrics.fleet_replica_faults.fetch_add(1, Ordering::Relaxed);
+                log::error!("[fleet] replica {i} died mid-batch; re-dispatching");
+                requeue(&shared, &metrics, i, batch);
+                continue;
+            }
+        }
+        shared.inflight[i].fetch_sub(1, Ordering::Relaxed);
+        shared.cv.notify_all();
+    }
+}
+
+/// Push a batch a dead replica cannot serve back through the former and
+/// release the replica's in-flight slot.
+fn requeue(shared: &FleetShared, metrics: &Metrics, i: usize, batch: Formed) {
+    metrics.fleet_redispatched.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    {
+        let mut st = shared.lock();
+        st.former.requeue_front(batch);
+    }
+    shared.inflight[i].fetch_sub(1, Ordering::Relaxed);
+    shared.cv.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::config;
+    use crate::nn::network::Network;
+    use crate::util::rng::Rng;
+
+    // -- BatchFormer: deterministic mock-clock unit tests (no sleeps) -----
+
+    fn former(target: usize, deadline: u64, shed: u64, depth: usize) -> BatchFormer<usize> {
+        BatchFormer::new(FormerPolicy {
+            target,
+            deadline_us: deadline,
+            shed_after_us: shed,
+            depth,
+        })
+    }
+
+    #[test]
+    fn former_dispatches_on_word_fill() {
+        let mut f = former(4, 1_000, 10_000, 64);
+        for i in 0..3 {
+            f.admit(i, 100 + i as u64).unwrap();
+            assert!(f.form(100 + i as u64).is_none(), "below target and deadline");
+        }
+        f.admit(3, 103).unwrap();
+        let (batch, reason) = f.form(103).expect("word filled");
+        assert_eq!(reason, DispatchReason::Fill);
+        assert_eq!(batch.iter().map(|(_, v)| *v).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn former_dispatches_partial_word_on_deadline() {
+        let mut f = former(64, 1_000, 10_000, 64);
+        f.admit(7, 500).unwrap();
+        f.admit(8, 900).unwrap();
+        assert!(f.form(1_499).is_none(), "oldest is 999µs old — under deadline");
+        let (batch, reason) = f.form(1_500).expect("oldest hit its deadline");
+        assert_eq!(reason, DispatchReason::Deadline);
+        assert_eq!(batch.len(), 2, "partial word ships whole");
+        assert!(f.next_deadline_us().is_none(), "queue drained");
+    }
+
+    #[test]
+    fn former_fill_wins_the_fill_vs_deadline_race() {
+        // At the same tick the oldest request's deadline expires AND the
+        // word fills: the full word dispatches as Fill (never split, never
+        // double-dispatched).
+        let mut f = former(3, 1_000, 10_000, 64);
+        f.admit(0, 0).unwrap();
+        f.admit(1, 400).unwrap();
+        f.admit(2, 1_000).unwrap();
+        let (batch, reason) = f.form(1_000).expect("both conditions hold");
+        assert_eq!(reason, DispatchReason::Fill, "fill takes precedence");
+        assert_eq!(batch.len(), 3);
+        assert!(f.form(1_000).is_none(), "exactly one dispatch");
+    }
+
+    #[test]
+    fn former_never_exceeds_target_width() {
+        let mut f = former(4, 0, 10_000, 64);
+        for i in 0..11 {
+            f.admit(i, 50).unwrap();
+        }
+        // deadline_us = 0: everything is instantly dispatchable, but each
+        // formed batch still caps at the target word width.
+        let mut sizes = Vec::new();
+        while let Some((batch, _)) = f.form(50) {
+            sizes.push(batch.len());
+        }
+        assert_eq!(sizes, vec![4, 4, 3]);
+    }
+
+    #[test]
+    fn former_sheds_only_aged_requests() {
+        let mut f = former(64, 1_000, 5_000, 64);
+        f.admit(1, 0).unwrap();
+        f.admit(2, 4_000).unwrap();
+        assert!(f.shed_expired(4_999).is_empty(), "oldest is 4999µs — under bound");
+        let shed = f.shed_expired(5_000);
+        assert_eq!(shed.len(), 1, "only the aged request sheds");
+        assert_eq!(shed[0].1, 1);
+        assert_eq!(f.len(), 1, "young request stays queued");
+        assert_eq!(f.next_shed_us(), Some(9_000));
+    }
+
+    #[test]
+    fn former_backpressure_at_depth() {
+        let mut f = former(64, 1_000, 5_000, 2);
+        f.admit(1, 0).unwrap();
+        f.admit(2, 0).unwrap();
+        assert_eq!(f.admit(3, 0), Err(3), "depth bound rejects, payload returned");
+        // requeue_front bypasses the depth bound (re-dispatch must not drop)
+        f.requeue_front(vec![(0, 9)]);
+        assert_eq!(f.len(), 3);
+        let (batch, _) = f.form(1_000).expect("deadline dispatch");
+        assert_eq!(batch[0].1, 9, "requeued item is at the front");
+    }
+
+    #[test]
+    fn former_next_deadline_tracks_oldest() {
+        let mut f = former(8, 1_000, 5_000, 64);
+        assert!(f.next_deadline_us().is_none());
+        f.admit(1, 300).unwrap();
+        f.admit(2, 200).unwrap(); // requeue scenarios make stamps non-monotonic
+        assert_eq!(f.next_deadline_us(), Some(1_300), "oldest unqueued stamp + deadline");
+        for i in 0..6 {
+            f.admit(10 + i, 400).unwrap();
+        }
+        assert_eq!(f.next_deadline_us(), Some(0), "full word: dispatch now");
+    }
+
+    // -- Fleet integration (real threads, timing-robust assertions) -------
+
+    fn fleet_model() -> Arc<FrozenModel> {
+        let cfg = config::uniform("fleet", &[8, 6, 3], 2, 2, 3, 3, 3, 1, 2, 3);
+        let net = Network::random(&cfg, &mut Rng::new(11));
+        Arc::new(FrozenModel::from_network(net, 1))
+    }
+
+    fn start(model: &Arc<FrozenModel>, cfg: FleetConfig) -> Fleet {
+        Fleet::start(model.clone(), 1, EngineSelect::plan_only(), 3, cfg)
+    }
+
+    #[test]
+    fn fleet_roundtrip_bit_exact_across_replicas() {
+        let model = fleet_model();
+        let fleet = start(
+            &model,
+            FleetConfig {
+                replicas: 3,
+                target_batch: 4,
+                batch_deadline: Duration::from_micros(500),
+                queue_depth: 256,
+                shed_after: Some(Duration::from_secs(10)),
+            },
+        );
+        let sim = model.sim();
+        std::thread::scope(|scope| {
+            for c in 0..4 {
+                let client = fleet.client();
+                let sim = &sim;
+                scope.spawn(move || {
+                    let mut rng = Rng::new(40 + c);
+                    for _ in 0..25 {
+                        let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+                        let resp = client.infer(x.clone()).expect("fleet serves");
+                        assert_eq!(resp.logits, sim.forward(&x), "bit-exact via fleet");
+                        assert!(resp.pred < 3);
+                    }
+                });
+            }
+        });
+        assert_eq!(fleet.metrics.responses.load(Ordering::Relaxed), 100);
+        assert!(fleet.metrics.fleet_formed.load(Ordering::Relaxed) > 0);
+        assert!(fleet.metrics.max_formed_batch.load(Ordering::Relaxed) <= 4);
+        assert!(fleet.metrics.queue_depth_hwm.load(Ordering::Relaxed) >= 1);
+        let snap = fleet.metrics.snapshot();
+        assert!(snap.contains("fleet_replicas=3"), "{snap}");
+        assert!(snap.contains("queue_hwm="), "{snap}");
+        assert!(snap.contains("shed=0"), "{snap}");
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn fleet_sheds_aged_requests_cleanly() {
+        // shed_after = 0: every admitted request ages out at the former's
+        // first pass — deterministic shed path, no timing assertions.
+        let model = fleet_model();
+        let fleet = start(
+            &model,
+            FleetConfig {
+                replicas: 2,
+                target_batch: 64,
+                batch_deadline: Duration::from_secs(5),
+                queue_depth: 64,
+                shed_after: Some(Duration::ZERO),
+            },
+        );
+        let client = fleet.client();
+        for _ in 0..10 {
+            match client.infer(vec![0.1; 8]) {
+                Err(FleetError::Shed { .. }) => {}
+                other => panic!("expected shed, got {other:?}"),
+            }
+        }
+        assert_eq!(fleet.metrics.fleet_shed.load(Ordering::Relaxed), 10);
+        assert_eq!(fleet.metrics.responses.load(Ordering::Relaxed), 0);
+        assert!(fleet.metrics.snapshot().contains("shed=10"));
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn fleet_backpressure_rejects_at_queue_depth() {
+        let model = fleet_model();
+        let fleet = start(
+            &model,
+            FleetConfig {
+                replicas: 1,
+                target_batch: 64,
+                // Generous deadline: the probe request below must land
+                // while the first is still queued.
+                batch_deadline: Duration::from_millis(500),
+                queue_depth: 1,
+                shed_after: Some(Duration::from_secs(10)),
+            },
+        );
+        let client = fleet.client();
+        let model2 = model.clone();
+        let parked = std::thread::spawn({
+            let client = fleet.client();
+            move || {
+                let x = vec![0.5; 8];
+                let resp = client.infer(x.clone()).expect("eventually served");
+                assert_eq!(resp.logits, model2.sim().forward(&x));
+            }
+        });
+        // Wait until the parked request occupies the queue slot (the HWM
+        // only moves on admission, and no other client has run yet).
+        while fleet.metrics.queue_depth_hwm.load(Ordering::Relaxed) == 0 {
+            std::thread::yield_now();
+        }
+        // One probe: with depth 1 held by the parked request, admission
+        // must fail fast.  (The parked request leaving the queue first
+        // requires its 500 ms deadline to have fired — in that unlikely
+        // case the probe is served; the deterministic queue-full unit
+        // coverage lives in former_backpressure_at_depth.)
+        match client.infer(vec![0.25; 8]) {
+            Err(FleetError::QueueFull { depth }) => {
+                assert_eq!(depth, 1);
+                assert!(fleet.metrics.queue_rejects.load(Ordering::Relaxed) >= 1);
+            }
+            Ok(_) => {}
+            other => panic!("unexpected outcome {other:?}"),
+        }
+        parked.join().expect("parked client");
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn replica_death_degrades_to_survivors() {
+        let model = fleet_model();
+        let fleet = start(
+            &model,
+            FleetConfig {
+                replicas: 2,
+                target_batch: 2,
+                batch_deadline: Duration::from_micros(200),
+                queue_depth: 256,
+                shed_after: Some(Duration::from_secs(10)),
+            },
+        );
+        // Kill replica 0 on its next batch: the batch re-dispatches to the
+        // survivor, the client still gets a bit-exact answer.
+        fleet.inject_replica_panic(0);
+        let sim = model.sim();
+        let client = fleet.client();
+        let mut rng = Rng::new(5);
+        for _ in 0..40 {
+            let x: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+            let resp = client.infer(x.clone()).expect("fleet survives a replica death");
+            assert_eq!(resp.logits, sim.forward(&x), "bit-exact after fault");
+        }
+        assert_eq!(fleet.metrics.fleet_replica_faults.load(Ordering::Relaxed), 1);
+        assert!(fleet.metrics.fleet_redispatched.load(Ordering::Relaxed) >= 1);
+        assert_eq!(fleet.live_replicas(), 1, "one replica dead, one serving");
+        assert_eq!(fleet.metrics.responses.load(Ordering::Relaxed), 40);
+        let snap = fleet.metrics.snapshot();
+        assert!(snap.contains("replica_faults=1"), "{snap}");
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn all_replicas_dead_sheds_with_clean_error() {
+        let model = fleet_model();
+        let fleet = start(
+            &model,
+            FleetConfig {
+                replicas: 1,
+                target_batch: 1,
+                batch_deadline: Duration::ZERO,
+                queue_depth: 64,
+                shed_after: Some(Duration::from_secs(10)),
+            },
+        );
+        fleet.inject_replica_panic(0);
+        let client = fleet.client();
+        // First request kills the lone replica; it is re-dispatched, finds
+        // no live replica, and must come back as a clean error — then every
+        // later request fails fast the same way.  Nothing hangs.
+        for i in 0..5 {
+            match client.infer(vec![0.3; 8]) {
+                Err(FleetError::Replica(msg)) => {
+                    assert!(msg.contains("no live replicas"), "request {i}: {msg}")
+                }
+                other => panic!("request {i}: expected replica error, got {other:?}"),
+            }
+        }
+        assert_eq!(fleet.live_replicas(), 0);
+        assert_eq!(fleet.metrics.fleet_replica_faults.load(Ordering::Relaxed), 1);
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn shutdown_answers_queued_requests() {
+        let model = fleet_model();
+        let fleet = start(
+            &model,
+            FleetConfig {
+                replicas: 1,
+                target_batch: 64,
+                batch_deadline: Duration::from_secs(30),
+                queue_depth: 8,
+                shed_after: Some(Duration::from_secs(60)),
+            },
+        );
+        let client = fleet.client();
+        let waiter = std::thread::spawn(move || client.infer(vec![0.7; 8]));
+        // Give the request time to be admitted, then stop the fleet: the
+        // queued request must get a Stopped outcome, not silence.
+        while fleet.metrics.requests.load(Ordering::Relaxed) == 0 {
+            std::thread::yield_now();
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        fleet.shutdown();
+        match waiter.join().expect("client thread") {
+            Err(FleetError::Stopped) => {}
+            Ok(_) => {} // raced the deadline dispatch — also a valid answer
+            other => panic!("expected Stopped or served, got {other:?}"),
+        }
+    }
+}

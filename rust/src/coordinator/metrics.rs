@@ -9,9 +9,15 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use super::fleet::DispatchReason;
 use crate::sim::{LutEngine, ShardStats, WireStats};
 
 const BUCKETS: usize = 40;
+
+/// Formed-batch-size histogram buckets: bucket i counts batches of size
+/// `[2^i, 2^(i+1))`, with the last bucket open-ended (≥ 1024 — wider than
+/// any bitslice word, so the fleet's lane-width targets always resolve).
+const BATCH_BUCKETS: usize = 11;
 
 #[derive(Debug)]
 pub struct Metrics {
@@ -61,6 +67,35 @@ pub struct Metrics {
     /// Active bitslice lane width — samples retired per op-stream walk
     /// (`u64::MAX` = not recorded).
     simd_lanes: AtomicU64,
+    /// Replica-fleet group (`coordinator::fleet`): worker replica count
+    /// (`u64::MAX` = no fleet — hides the whole group in `snapshot()`).
+    fleet_replicas: AtomicU64,
+    /// Batch former's pack target (the active bitslice lane width unless
+    /// `--max-batch` overrides it) and deadline budget, for the snapshot.
+    fleet_target: AtomicU64,
+    fleet_deadline_us: AtomicU64,
+    /// Batches formed, split by dispatch reason: word filled to the target
+    /// vs the oldest request's deadline budget expiring on a partial word.
+    pub fleet_formed: AtomicU64,
+    pub fleet_fill: AtomicU64,
+    pub fleet_deadline: AtomicU64,
+    /// Requests shed (aged past the shed budget, or orphaned when no live
+    /// replica remains) — each got a clean error, never a stall.
+    pub fleet_shed: AtomicU64,
+    /// Replica worker threads that died (panicked) mid-stream.
+    pub fleet_replica_faults: AtomicU64,
+    /// Requests re-queued through the former after their replica died.
+    pub fleet_redispatched: AtomicU64,
+    /// Batches that failed with a backend error on a live replica.
+    pub fleet_batch_errors: AtomicU64,
+    /// High-water mark of the admission queue depth (`--queue-depth` unit).
+    pub queue_depth_hwm: AtomicU64,
+    /// Largest batch the former ever dispatched (≤ the pack target — the
+    /// fleet property test pins this bound).
+    pub max_formed_batch: AtomicU64,
+    /// Formed-batch-size histogram, power-of-two buckets (see
+    /// [`BATCH_BUCKETS`]).
+    batch_hist: [AtomicU64; BATCH_BUCKETS],
     hist: [AtomicU64; BUCKETS],
 }
 
@@ -88,6 +123,19 @@ impl Default for Metrics {
             verify_violations: AtomicU64::new(u64::MAX),
             simd_level: AtomicU64::new(u64::MAX),
             simd_lanes: AtomicU64::new(u64::MAX),
+            fleet_replicas: AtomicU64::new(u64::MAX),
+            fleet_target: AtomicU64::new(0),
+            fleet_deadline_us: AtomicU64::new(0),
+            fleet_formed: AtomicU64::new(0),
+            fleet_fill: AtomicU64::new(0),
+            fleet_deadline: AtomicU64::new(0),
+            fleet_shed: AtomicU64::new(0),
+            fleet_replica_faults: AtomicU64::new(0),
+            fleet_redispatched: AtomicU64::new(0),
+            fleet_batch_errors: AtomicU64::new(0),
+            queue_depth_hwm: AtomicU64::new(0),
+            max_formed_batch: AtomicU64::new(0),
+            batch_hist: std::array::from_fn(|_| AtomicU64::new(0)),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -172,6 +220,38 @@ impl Metrics {
         self.simd_lanes.store(lanes, Ordering::Relaxed);
     }
 
+    /// Activate the fleet metrics group (replica count, pack target and
+    /// deadline budget make the snapshot self-describing).
+    pub fn set_fleet(&self, replicas: u64, target: u64, deadline_us: u64) {
+        self.fleet_replicas.store(replicas, Ordering::Relaxed);
+        self.fleet_target.store(target, Ordering::Relaxed);
+        self.fleet_deadline_us.store(deadline_us, Ordering::Relaxed);
+    }
+
+    /// Count one formed batch: total + dispatch-reason split, the
+    /// power-of-two size histogram, and the max-size watermark.
+    pub fn record_formed_batch(&self, size: u64, reason: DispatchReason) {
+        self.fleet_formed.fetch_add(1, Ordering::Relaxed);
+        match reason {
+            DispatchReason::Fill => self.fleet_fill.fetch_add(1, Ordering::Relaxed),
+            DispatchReason::Deadline => self.fleet_deadline.fetch_add(1, Ordering::Relaxed),
+        };
+        let bucket = (63 - size.max(1).leading_zeros() as usize).min(BATCH_BUCKETS - 1);
+        self.batch_hist[bucket].fetch_add(1, Ordering::Relaxed);
+        self.max_formed_batch.fetch_max(size, Ordering::Relaxed);
+    }
+
+    /// Raise the admission-queue depth high-water mark.
+    pub fn note_queue_depth(&self, depth: u64) {
+        self.queue_depth_hwm.fetch_max(depth, Ordering::Relaxed);
+    }
+
+    /// Formed-batch-size histogram counts: entry i counts batches of size
+    /// `[2^i, 2^(i+1))` (last entry open-ended).
+    pub fn formed_batch_hist(&self) -> Vec<u64> {
+        self.batch_hist.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
     /// Approximate quantile from the histogram (upper bucket bound).
     pub fn latency_quantile_us(&self, q: f64) -> f64 {
         let counts: Vec<u64> =
@@ -241,6 +321,30 @@ impl Metrics {
             s.push_str(&format!(
                 " simd={name} lanes={}",
                 self.simd_lanes.load(Ordering::Relaxed)
+            ));
+        }
+        let replicas = self.fleet_replicas.load(Ordering::Relaxed);
+        if replicas != u64::MAX {
+            let hist = self.formed_batch_hist();
+            let top = hist.iter().rposition(|&c| c != 0).map_or(0, |i| i + 1);
+            let hist_s: Vec<String> =
+                hist[..top].iter().map(|c| c.to_string()).collect();
+            s.push_str(&format!(
+                " fleet_replicas={replicas} target_batch={} batch_deadline_us={} \
+                 formed={} (fill={} deadline={}) max_formed={} batch_hist=[{}] \
+                 queue_hwm={} shed={} replica_faults={} redispatched={} batch_errors={}",
+                self.fleet_target.load(Ordering::Relaxed),
+                self.fleet_deadline_us.load(Ordering::Relaxed),
+                self.fleet_formed.load(Ordering::Relaxed),
+                self.fleet_fill.load(Ordering::Relaxed),
+                self.fleet_deadline.load(Ordering::Relaxed),
+                self.max_formed_batch.load(Ordering::Relaxed),
+                hist_s.join(","),
+                self.queue_depth_hwm.load(Ordering::Relaxed),
+                self.fleet_shed.load(Ordering::Relaxed),
+                self.fleet_replica_faults.load(Ordering::Relaxed),
+                self.fleet_redispatched.load(Ordering::Relaxed),
+                self.fleet_batch_errors.load(Ordering::Relaxed),
             ));
         }
         if self.wire_active.load(Ordering::Relaxed) != 0 {
@@ -318,6 +422,7 @@ mod tests {
             resumes: 2,
             retry_exhausted: 0,
             inflight_hwm: 4,
+            handle_clones: 1,
         });
         let snap = m.snapshot();
         assert!(snap.contains("shard_spin_us=0"), "{snap}");
@@ -352,6 +457,54 @@ mod tests {
         assert!(snap.contains("simd=avx2 lanes=256"), "{snap}");
         m.set_simd(crate::simd::SimdLevel::Scalar, 64);
         assert!(m.snapshot().contains("simd=scalar lanes=64"));
+    }
+
+    #[test]
+    fn fleet_group_hidden_until_activated() {
+        let m = Metrics::new();
+        // Recording alone must not leak the group into the snapshot — only
+        // `set_fleet` (called by `Fleet::start`) activates it.
+        m.record_formed_batch(4, DispatchReason::Fill);
+        m.note_queue_depth(7);
+        let snap = m.snapshot();
+        assert!(!snap.contains("fleet_replicas"), "{snap}");
+        m.set_fleet(2, 64, 200);
+        let snap = m.snapshot();
+        assert!(snap.contains("fleet_replicas=2 target_batch=64 batch_deadline_us=200"), "{snap}");
+        assert!(snap.contains("queue_hwm=7"), "{snap}");
+    }
+
+    #[test]
+    fn formed_batch_histogram_buckets_by_power_of_two() {
+        let m = Metrics::new();
+        m.set_fleet(1, 64, 100);
+        for size in [1, 1, 2, 3, 4, 7, 8, 64, 5000] {
+            m.record_formed_batch(size, DispatchReason::Fill);
+        }
+        m.record_formed_batch(5, DispatchReason::Deadline);
+        let hist = m.formed_batch_hist();
+        assert_eq!(hist[0], 2, "size 1");
+        assert_eq!(hist[1], 2, "sizes 2..4");
+        assert_eq!(hist[2], 3, "sizes 4..8 (incl. the deadline batch)");
+        assert_eq!(hist[3], 1, "size 8");
+        assert_eq!(hist[6], 1, "size 64");
+        assert_eq!(hist[10], 1, "open-ended top bucket");
+        assert_eq!(m.fleet_formed.load(Ordering::Relaxed), 10);
+        assert_eq!(m.fleet_fill.load(Ordering::Relaxed), 9);
+        assert_eq!(m.fleet_deadline.load(Ordering::Relaxed), 1);
+        assert_eq!(m.max_formed_batch.load(Ordering::Relaxed), 5000);
+        let snap = m.snapshot();
+        assert!(snap.contains("formed=10 (fill=9 deadline=1) max_formed=5000"), "{snap}");
+        assert!(snap.contains("batch_hist=[2,2,3,1,0,0,1,0,0,0,1]"), "{snap}");
+    }
+
+    #[test]
+    fn queue_depth_hwm_is_monotonic() {
+        let m = Metrics::new();
+        m.note_queue_depth(3);
+        m.note_queue_depth(9);
+        m.note_queue_depth(5);
+        assert_eq!(m.queue_depth_hwm.load(Ordering::Relaxed), 9);
     }
 
     #[test]

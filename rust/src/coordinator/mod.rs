@@ -12,7 +12,13 @@
 //!   Python is *not* involved; the HLO was lowered at build time).
 //!
 //! Everything is std-thread based (tokio is not vendored).
+//!
+//! For sustained concurrent traffic the single batcher thread is the
+//! bottleneck; [`fleet`] adds the data-parallel axis — N worker replicas
+//! over one shared [`FrozenModel`] behind a deadline-aware batch former
+//! (`serve --replicas`).
 
+pub mod fleet;
 pub mod metrics;
 
 use std::path::Path;
@@ -37,6 +43,7 @@ use crate::sim::{
     EngineSelect, LutEngine, ShardStats, DEFAULT_WIRE_RETRIES, DEFAULT_WIRE_WINDOW,
 };
 use crate::util::cli::Args;
+use fleet::{Fleet, FleetConfig, FleetError};
 use metrics::Metrics;
 
 /// A frozen deployable model: trained network + its compiled tables + the
@@ -378,6 +385,17 @@ impl Default for ServerConfig {
     }
 }
 
+/// Logits → predicted class, shared by the single-server batcher and the
+/// fleet replicas.  NaN-safe: a poisoned logit must not panic a serving
+/// thread and drop every in-flight request.
+pub(crate) fn predict(n_classes: usize, logits: &[f32]) -> usize {
+    if n_classes == 1 {
+        (logits[0] > 0.0) as usize
+    } else {
+        crate::util::argmax_f32(logits)
+    }
+}
+
 struct Request {
     features: Vec<f32>,
     enqueued: Instant,
@@ -519,13 +537,7 @@ fn batcher_loop(
                     }
                 }
                 for (req, logits) in batch.into_iter().zip(all_logits) {
-                    let pred = if n_classes == 1 {
-                        (logits[0] > 0.0) as usize
-                    } else {
-                        // NaN-safe: a poisoned logit must not panic the
-                        // batcher thread and drop every in-flight request.
-                        crate::util::argmax_f32(&logits)
-                    };
+                    let pred = predict(n_classes, &logits);
                     let latency = req.enqueued.elapsed();
                     metrics.record_latency(latency.as_secs_f64() * 1e6);
                     metrics.responses.fetch_add(1, Ordering::Relaxed);
@@ -547,7 +559,8 @@ fn batcher_loop(
 /// `polylut serve --id <artifact> [--backend lut|pjrt] [--requests N]
 ///  [--clients N] [--batch-window-us N] [--lanes N|widest]
 ///  [--bitslice-threshold N] [--shards N] [--shard-hosts a:p,b:p,…]
-///  [--shard-spin-us N] [--wire-window N] [--wire-retries N]` — runs a
+///  [--shard-spin-us N] [--wire-window N] [--wire-retries N]
+///  [--replicas N] [--batch-deadline-us N] [--queue-depth N]` — runs a
 /// self-driving load test against the server with dataset samples and
 /// prints metrics.  `--lanes` forces the bitslice engine's lane width
 /// (64/128/256/512, or `widest` for the detected maximum — the default;
@@ -566,6 +579,14 @@ fn batcher_loop(
 /// in-flight needs-flight window (1 = v1 lock-step pacing) and
 /// `--wire-retries` bounds reconnect-and-resume attempts before routing
 /// degrades to the in-process plan.
+///
+/// `--replicas N` switches the serving front-end from the single batcher
+/// thread to the [`fleet`] — N in-process worker replicas over the shared
+/// frozen model behind a deadline-aware batch former that packs arrivals
+/// toward the active bitslice lane width (`--max-batch` overrides the pack
+/// target), dispatching when the word fills or the oldest request's
+/// `--batch-deadline-us` budget expires, with bounded `--queue-depth`
+/// admission and clean shed errors under overload (LUT backend only).
 pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
     let man = crate::meta::load_id(dir, id)?;
     let ds = crate::data::load(&man.dataset, 0)?;
@@ -633,6 +654,33 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
     };
     let n_requests = args.get_usize("requests", 10_000)?;
     let n_clients = args.get_usize("clients", 4)?;
+    if args.get("replicas").is_some() {
+        if backend_name != "lut" {
+            bail!("--replicas (replica fleet) requires --backend lut");
+        }
+        let model = frozen.clone().expect("lut backend froze a model");
+        let fcfg = FleetConfig {
+            replicas: args.get_usize("replicas", 2)?.max(1),
+            // 0 = pack toward the model's active bitslice lane width;
+            // --max-batch overrides the target explicitly.
+            target_batch: args.get_usize("max-batch", 0)?,
+            batch_deadline: Duration::from_micros(
+                args.get_usize("batch-deadline-us", 200)? as u64,
+            ),
+            queue_depth: args.get_usize("queue-depth", 4096)?.max(1),
+            shed_after: None,
+        };
+        return serve_fleet(
+            id,
+            &ds,
+            model,
+            EngineSelect { crossover, shards },
+            man.config.n_classes,
+            fcfg,
+            n_requests,
+            n_clients,
+        );
+    }
     let (wire_window, wire_retries) = (cfg.wire_window, cfg.wire_retries);
     let server = Server::start(backend, man.config.n_classes, cfg);
     if let Some(sharded) = frozen.as_ref().and_then(|m| m.sharded.as_ref()) {
@@ -696,6 +744,85 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
         wall.as_secs_f64()
     );
     server.shutdown();
+    Ok(())
+}
+
+/// The `serve --replicas` path: drive the dataset load test through the
+/// replica fleet instead of the single-batcher [`Server`], counting shed /
+/// backpressure outcomes separately from hard failures.
+#[allow(clippy::too_many_arguments)]
+fn serve_fleet(
+    id: &str,
+    ds: &crate::data::Dataset,
+    model: Arc<FrozenModel>,
+    select: EngineSelect,
+    n_classes: usize,
+    fcfg: FleetConfig,
+    n_requests: usize,
+    n_clients: usize,
+) -> Result<()> {
+    let workers = crate::util::pool::default_workers();
+    let replicas = fcfg.replicas.max(1);
+    let deadline_us = fcfg.batch_deadline.as_micros();
+    let queue_depth = fcfg.queue_depth;
+    let target = if fcfg.target_batch == 0 {
+        model.bitslice.lanes()
+    } else {
+        fcfg.target_batch
+    };
+    let fleet = Fleet::start(model.clone(), workers, select, n_classes, fcfg);
+    if let Some(sharded) = model.sharded.as_ref() {
+        fleet.metrics.set_shard_spin_us(sharded.spin_us());
+    }
+    // Same observability as the single-server path: verification outcome
+    // and the live SIMD kernel path of the served artifacts.
+    let report = crate::sim::verify::verify_frozen(&model.plan, &model.bitslice);
+    fleet.metrics.record_verify(report.total() as u64);
+    let lp = model.bitslice.lane_plan();
+    fleet.metrics.set_simd(lp.level, lp.lanes as u64);
+    println!(
+        "[serve] {id} fleet: replicas={replicas} target-batch={target} \
+         batch-deadline-us={deadline_us} queue-depth={queue_depth}: \
+         {n_requests} requests from {n_clients} clients…"
+    );
+    let t0 = Instant::now();
+    let correct = Arc::new(AtomicU64::new(0));
+    let shed = Arc::new(AtomicU64::new(0));
+    std::thread::scope(|scope| {
+        for c in 0..n_clients {
+            let client = fleet.client();
+            let correct = correct.clone();
+            let shed = shed.clone();
+            scope.spawn(move || {
+                let per = n_requests / n_clients;
+                for i in 0..per {
+                    let idx = (c * per + i) % ds.n_test();
+                    match client.infer(ds.test_row(idx).to_vec()) {
+                        Ok(resp) => {
+                            if resp.pred == ds.y_test[idx] {
+                                correct.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Err(FleetError::Shed { .. } | FleetError::QueueFull { .. }) => {
+                            shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => log::warn!("request failed: {e}"),
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let served = fleet.metrics.responses.load(Ordering::Relaxed);
+    println!("[serve] {}", fleet.metrics.snapshot());
+    println!(
+        "[serve] throughput {:.0} req/s, accuracy {:.4}, shed+rejected {}, wall {:.2}s",
+        served as f64 / wall.as_secs_f64(),
+        correct.load(Ordering::Relaxed) as f64 / served.max(1) as f64,
+        shed.load(Ordering::Relaxed),
+        wall.as_secs_f64()
+    );
+    fleet.shutdown();
     Ok(())
 }
 

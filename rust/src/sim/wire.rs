@@ -397,7 +397,7 @@ const LIVENESS_STRIKES: u32 = 2;
 /// is an idle coordinator, not a dead one.  Returns `Ok(true)` when the
 /// buffer is filled.
 fn read_full_patient(
-    stream: &mut TcpStream,
+    stream: &mut impl Read,
     buf: &mut [u8],
     idle_ok: bool,
 ) -> Result<bool, WireError> {
@@ -442,7 +442,7 @@ fn read_full_patient(
 /// length prefix and body are never desynchronized by a timeout landing
 /// mid-frame.
 fn read_frame_patient(
-    stream: &mut TcpStream,
+    stream: &mut impl Read,
     idle_ok: bool,
 ) -> Result<Option<Frame>, WireError> {
     let mut len4 = [0u8; 4];
@@ -614,6 +614,12 @@ pub struct WireStats {
     /// High-water mark of in-flight needs flights (the `--wire-window`
     /// unit: one flight per layer boundary) observed on any link.
     pub inflight_hwm: u64,
+    /// Cached socket handles installed — exactly one per link generation
+    /// (initial connect and each successful reconnect).  `ship` and
+    /// `recv_applied` share this per-generation handle; a regression back
+    /// to per-flight/per-frame `try_clone` dup syscalls would show up here
+    /// as this counter scaling with `frames`.
+    pub handle_clones: u64,
 }
 
 impl WireStats {
@@ -628,6 +634,7 @@ impl WireStats {
             resumes: self.resumes + o.resumes,
             retry_exhausted: self.retry_exhausted + o.retry_exhausted,
             inflight_hwm: self.inflight_hwm.max(o.inflight_hwm),
+            handle_clones: self.handle_clones + o.handle_clones,
         }
     }
 }
@@ -642,6 +649,7 @@ pub(crate) struct LinkStats {
     resumes: AtomicU64,
     retry_exhausted: AtomicU64,
     inflight_hwm: AtomicU64,
+    handle_clones: AtomicU64,
 }
 
 impl LinkStats {
@@ -659,6 +667,7 @@ impl LinkStats {
             resumes: self.resumes.load(Ordering::Relaxed),
             retry_exhausted: self.retry_exhausted.load(Ordering::Relaxed),
             inflight_hwm: self.inflight_hwm.load(Ordering::Relaxed),
+            handle_clones: self.handle_clones.load(Ordering::Relaxed),
         }
     }
 }
@@ -789,8 +798,12 @@ fn shutdown_error() -> WireError {
 /// Mutable link state, guarded by [`WireLink::core`].
 struct LinkCore {
     /// Live stream (`None` after an idle drop, until the next epoch's
-    /// first ship redials).
-    stream: Option<TcpStream>,
+    /// first ship redials).  Held behind an `Arc` so `ship` and
+    /// `recv_applied` can take a shared handle under the lock and do their
+    /// IO outside it **without** a `try_clone` dup syscall per
+    /// flight/frame — one handle is installed per link generation
+    /// (counted in [`WireStats::handle_clones`]).
+    stream: Option<Arc<TcpStream>>,
     /// Bumped on every successful (re)connect; a failed IO call whose
     /// observed generation is stale was already recovered by the peer
     /// thread and needs no action of its own.
@@ -887,7 +900,8 @@ impl WireLink {
             stats: Arc::new(LinkStats::default()),
         });
         let stream = link.dial(0, CONNECT_ATTEMPTS, false)?;
-        link.lock().stream = Some(stream);
+        link.stats.handle_clones.fetch_add(1, Ordering::Relaxed);
+        link.lock().stream = Some(Arc::new(stream));
         Ok(link)
     }
 
@@ -1076,7 +1090,8 @@ impl WireLink {
         core.reconnecting = false;
         match dialed {
             Ok(s) => {
-                core.stream = Some(s);
+                self.stats.handle_clones.fetch_add(1, Ordering::Relaxed);
+                core.stream = Some(Arc::new(s));
                 core.generation = core.generation.wrapping_add(1);
                 self.stats.resumes.fetch_add(1, Ordering::Relaxed);
                 self.cv.notify_all();
@@ -1147,11 +1162,9 @@ impl WireLink {
                 let inflight = core.shipped.saturating_sub(core.acked) as u64;
                 self.stats.inflight_hwm.fetch_max(inflight, Ordering::Relaxed);
             }
-            let stream = match &core.stream {
-                Some(s) => Some(s.try_clone().map_err(WireError::Io)?),
-                None => None,
-            };
-            (core.generation, stream)
+            // Shared per-generation handle (Arc bump, no dup syscall) so
+            // the write happens outside the lock.
+            (core.generation, core.stream.clone())
         };
         match stream {
             // Idle-dropped link: the recover path redials with the
@@ -1161,19 +1174,23 @@ impl WireLink {
                 gen,
                 &WireError::Protocol("re-establishing idle link".into()),
             ),
-            Some(mut s) => match s.write_all(&bytes).and_then(|_| s.flush()) {
-                Ok(()) => {
-                    // Count traffic only once it actually left: failed or
-                    // skipped writes are accounted by the replay instead
-                    // (no double counting per link incident).
-                    for f in frames {
-                        self.stats.count_frame(f.words.len());
+            Some(s) => {
+                let mut w: &TcpStream = &s;
+                match w.write_all(&bytes).and_then(|_| w.flush()) {
+                    Ok(()) => {
+                        // Count traffic only once it actually left: failed
+                        // or skipped writes are accounted by the replay
+                        // instead (no double counting per link incident).
+                        for f in frames {
+                            self.stats.count_frame(f.words.len());
+                        }
+                        Ok(())
                     }
-                    Ok(())
+                    // Replay delivers the frames (or the link dies
+                    // cleanly).
+                    Err(e) => self.recover(gen, &WireError::Io(e)),
                 }
-                // Replay delivers the frames (or the link dies cleanly).
-                Err(e) => self.recover(gen, &WireError::Io(e)),
-            },
+            }
         }
     }
 
@@ -1216,7 +1233,7 @@ impl WireLink {
     /// contiguous prefix are parked in it.  `Ok(None)` = shutdown.
     pub(crate) fn recv_applied(&self) -> Result<Option<Frame>, WireError> {
         loop {
-            let (mut stream, gen, idle) = {
+            let (stream, gen, idle) = {
                 let mut core = self.lock();
                 loop {
                     if self.is_shutdown() {
@@ -1235,16 +1252,14 @@ impl WireLink {
                     }
                     break;
                 }
-                let s = core
-                    .stream
-                    .as_ref()
-                    .expect("stream checked above")
-                    .try_clone()
-                    .map_err(WireError::Io)?;
+                // Shared per-generation handle (Arc bump, no dup syscall)
+                // so the blocking read happens outside the lock.
+                let s = Arc::clone(core.stream.as_ref().expect("stream checked above"));
                 (s, core.generation, !core.epoch_open)
             };
             let t0 = Instant::now();
-            let res = read_frame_patient(&mut stream, idle);
+            let mut r: &TcpStream = &stream;
+            let res = read_frame_patient(&mut r, idle);
             // Idle timeouts between epochs are not "blocked waiting for a
             // frame" — funding wait_ns from them would swamp the metric on
             // an idle server.
@@ -1363,9 +1378,7 @@ impl WireLink {
         self.shutdown.store(true, Ordering::Relaxed);
         let mut core = self.lock();
         if let Some(s) = core.stream.take() {
-            if let Ok(mut c) = s.try_clone() {
-                let _ = write_frame(&mut c, &Frame::control(FrameKind::Bye, 0));
-            }
+            let _ = write_frame(&mut (&*s), &Frame::control(FrameKind::Bye, 0));
             let _ = s.shutdown(Shutdown::Both);
         }
         self.cv.notify_all();
@@ -2658,6 +2671,18 @@ mod tests {
         assert!(ws.resumes >= 1, "the severed link must resume: {ws:?}");
         assert_eq!(ws.retry_exhausted, 0, "{ws:?}");
         assert!(!model.faulted(), "no degraded batches");
+        // Pin the cached-handle fix: exactly one socket handle is installed
+        // per link generation — the 2 initial connects (plan + bitslice
+        // links) plus one per resume — never one per flight/frame.
+        assert_eq!(
+            ws.handle_clones,
+            2 + ws.resumes,
+            "one cached handle per link generation: {ws:?}"
+        );
+        assert!(
+            ws.frames > ws.handle_clones,
+            "frame traffic must dwarf handle installs: {ws:?}"
+        );
     }
 
     /// Exhausted retry budget → clean sticky fault (never a hang): the

@@ -99,6 +99,233 @@ impl Bench {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Serve-path load generation (closed + open loop)
+// ---------------------------------------------------------------------------
+
+/// Outcome of one load-generated request, as classified by the caller's
+/// request closure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadOutcome {
+    /// Answered with a result.
+    Ok,
+    /// Cleanly rejected or aged out under load (backpressure / shed).
+    Shed,
+    /// Any other failure.
+    Error,
+}
+
+/// Aggregate report of one load-generator run.  Latency percentiles are
+/// exact (computed over every successful request, no reservoir), in
+/// microseconds; `throughput_rps` counts only successful answers.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// `"closed"` or `"open"`.
+    pub mode: &'static str,
+    /// Requests issued (= scheduled arrivals for the open loop).
+    pub sent: usize,
+    /// Requests answered with a result.
+    pub ok: usize,
+    /// Requests cleanly shed / rejected.
+    pub shed: usize,
+    /// Requests that failed any other way.
+    pub errors: usize,
+    /// Wall-clock seconds for the whole run.
+    pub wall_s: f64,
+    /// Successful answers per wall-clock second.
+    pub throughput_rps: f64,
+    /// Median latency, µs.
+    pub p50_us: f64,
+    /// 99th-percentile latency, µs.
+    pub p99_us: f64,
+    /// Mean latency, µs.
+    pub mean_us: f64,
+}
+
+impl LoadReport {
+    fn from_latencies(
+        mode: &'static str,
+        sent: usize,
+        shed: usize,
+        errors: usize,
+        wall_s: f64,
+        mut lat_ns: Vec<f64>,
+    ) -> LoadReport {
+        lat_ns.sort_by(f64::total_cmp);
+        let ok = lat_ns.len();
+        let pick = |q: f64| -> f64 {
+            if lat_ns.is_empty() {
+                return 0.0;
+            }
+            let i = ((lat_ns.len() as f64 - 1.0) * q).round() as usize;
+            lat_ns[i] / 1e3
+        };
+        let mean_us = if lat_ns.is_empty() {
+            0.0
+        } else {
+            lat_ns.iter().sum::<f64>() / ok as f64 / 1e3
+        };
+        LoadReport {
+            mode,
+            sent,
+            ok,
+            shed,
+            errors,
+            wall_s,
+            throughput_rps: ok as f64 / wall_s.max(1e-9),
+            p50_us: pick(0.50),
+            p99_us: pick(0.99),
+            mean_us,
+        }
+    }
+
+    /// One human-readable summary line.
+    pub fn line(&self) -> String {
+        format!(
+            "{}-loop: {} ok / {} shed / {} err of {} in {:.2}s — {:.0} req/s, \
+             p50 {:.0} µs, p99 {:.0} µs",
+            self.mode,
+            self.ok,
+            self.shed,
+            self.errors,
+            self.sent,
+            self.wall_s,
+            self.throughput_rps,
+            self.p50_us,
+            self.p99_us
+        )
+    }
+}
+
+/// Closed-loop load: `clients` threads each issue `per_client` requests
+/// back-to-back (a new request only after the previous answer) — the
+/// classic saturation measurement, where latency is pure service time and
+/// the arrival rate adapts to the server.  `f(i)` runs request `i` (a
+/// globally unique index) and classifies its outcome.
+pub fn closed_loop_load(
+    clients: usize,
+    per_client: usize,
+    f: impl Fn(usize) -> LoadOutcome + Sync,
+) -> LoadReport {
+    let clients = clients.max(1);
+    let t0 = Instant::now();
+    let mut lat_ns: Vec<f64> = Vec::new();
+    let mut shed = 0usize;
+    let mut errors = 0usize;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let f = &f;
+                s.spawn(move || {
+                    let mut lat = Vec::with_capacity(per_client);
+                    let (mut sh, mut er) = (0usize, 0usize);
+                    for k in 0..per_client {
+                        let t = Instant::now();
+                        match f(c * per_client + k) {
+                            LoadOutcome::Ok => lat.push(t.elapsed().as_nanos() as f64),
+                            LoadOutcome::Shed => sh += 1,
+                            LoadOutcome::Error => er += 1,
+                        }
+                    }
+                    (lat, sh, er)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (lat, sh, er) = h.join().expect("load client panicked");
+            lat_ns.extend(lat);
+            shed += sh;
+            errors += er;
+        }
+    });
+    LoadReport::from_latencies(
+        "closed",
+        clients * per_client,
+        shed,
+        errors,
+        t0.elapsed().as_secs_f64(),
+        lat_ns,
+    )
+}
+
+/// Open-loop load: a pacer schedules `total` arrivals at a fixed
+/// `rate_rps` **regardless of completions** (arrivals never wait for
+/// answers — the load an independent user population applies), and
+/// `workers` threads service them from an unbounded queue.  Latency is
+/// measured from each request's *scheduled* arrival instant, so queueing
+/// delay behind a saturated server is part of the figure — coordinated
+/// omission is not masked.
+pub fn open_loop_load(
+    rate_rps: f64,
+    total: usize,
+    workers: usize,
+    f: impl Fn(usize) -> LoadOutcome + Sync,
+) -> LoadReport {
+    let workers = workers.max(1);
+    let gap = Duration::from_secs_f64(1.0 / rate_rps.max(1.0));
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, Instant)>();
+    let rx = std::sync::Mutex::new(rx);
+    let t0 = Instant::now();
+    let mut lat_ns: Vec<f64> = Vec::new();
+    let mut shed = 0usize;
+    let mut errors = 0usize;
+    std::thread::scope(|s| {
+        // Pacer: unbounded sends, so a saturated server never slows the
+        // arrival process down (that would make it a closed loop again).
+        s.spawn(move || {
+            for i in 0..total {
+                let due = t0 + gap.mul_f64(i as f64);
+                let now = Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                if tx.send((i, due)).is_err() {
+                    break;
+                }
+            }
+            // Dropping `tx` here closes the queue: workers drain what is
+            // left and then see the disconnect.
+        });
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let (rx, f) = (&rx, &f);
+                s.spawn(move || {
+                    let mut lat = Vec::new();
+                    let (mut sh, mut er) = (0usize, 0usize);
+                    loop {
+                        // The guard is a temporary: the lock is released at
+                        // the end of the statement, before `f` runs.
+                        let job = rx.lock().unwrap_or_else(|p| p.into_inner()).recv();
+                        let Ok((i, due)) = job else { break };
+                        match f(i) {
+                            LoadOutcome::Ok => {
+                                lat.push(due.elapsed().as_nanos() as f64);
+                            }
+                            LoadOutcome::Shed => sh += 1,
+                            LoadOutcome::Error => er += 1,
+                        }
+                    }
+                    (lat, sh, er)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (lat, sh, er) = h.join().expect("load worker panicked");
+            lat_ns.extend(lat);
+            shed += sh;
+            errors += er;
+        }
+    });
+    LoadReport::from_latencies(
+        "open",
+        total,
+        shed,
+        errors,
+        t0.elapsed().as_secs_f64(),
+        lat_ns,
+    )
+}
+
 /// Environment variable naming the file [`BenchJournal::write_if_requested`]
 /// writes (unset = no file is written).
 pub const BENCH_JSON_ENV: &str = "POLYLUT_BENCH_JSON";
@@ -121,11 +348,47 @@ pub struct BenchRecord {
     pub median_ns: f64,
 }
 
-/// Accumulator for [`BenchRecord`]s with a JSON emitter, env-gated via
-/// [`BENCH_JSON_ENV`] so normal bench runs stay file-free.
+/// One serve-path load-test record: a (geometry, fleet-config, loop-mode)
+/// point from the closed+open-loop generator — the unit of the
+/// `BENCH_serve.json` trajectory.
+#[derive(Debug, Clone)]
+pub struct ServeRecord {
+    /// Model geometry the fleet served (e.g. `"nid-t4"`).
+    pub geometry: String,
+    /// `"closed"` or `"open"` (see [`closed_loop_load`] / [`open_loop_load`]).
+    pub mode: String,
+    /// Fleet replica count.
+    pub replicas: usize,
+    /// Batch-former target width (lanes).
+    pub target_batch: usize,
+    /// Batch-former deadline, µs.
+    pub deadline_us: u64,
+    /// Offered arrival rate, req/s (0 = closed loop: the arrival rate is
+    /// set by service completion, not by a pacer).
+    pub offered_rps: f64,
+    /// Concurrent clients (closed loop) or service workers (open loop).
+    pub clients: usize,
+    /// Requests issued.
+    pub requests: usize,
+    /// Requests answered with a result.
+    pub ok: usize,
+    /// Requests cleanly shed / rejected.
+    pub shed: usize,
+    /// Successful answers per wall-clock second.
+    pub throughput_rps: f64,
+    /// Median latency, µs.
+    pub p50_us: f64,
+    /// 99th-percentile latency, µs.
+    pub p99_us: f64,
+}
+
+/// Accumulator for [`BenchRecord`]s / [`ServeRecord`]s with a JSON
+/// emitter, env-gated via [`BENCH_JSON_ENV`] so normal bench runs stay
+/// file-free.
 #[derive(Debug, Default)]
 pub struct BenchJournal {
     records: Vec<BenchRecord>,
+    serve: Vec<ServeRecord>,
 }
 
 impl BenchJournal {
@@ -146,12 +409,18 @@ impl BenchJournal {
         });
     }
 
+    /// Record one serve-path load-test point (built by the caller from a
+    /// [`LoadReport`] plus the fleet configuration it ran against).
+    pub fn record_serve(&mut self, r: ServeRecord) {
+        self.serve.push(r);
+    }
+
     pub fn len(&self) -> usize {
-        self.records.len()
+        self.records.len() + self.serve.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.records.is_empty()
+        self.records.is_empty() && self.serve.is_empty()
     }
 
     /// The journal as a JSON document:
@@ -159,7 +428,7 @@ impl BenchJournal {
     pub fn to_json(&self) -> Json {
         let mut root = JsonObj::new();
         root.insert("schema", "polylut-bench-v1");
-        let records: Vec<Json> = self
+        let mut records: Vec<Json> = self
             .records
             .iter()
             .map(|r| {
@@ -173,6 +442,25 @@ impl BenchJournal {
                 Json::Obj(o)
             })
             .collect();
+        // Serve-path records share the array; the `mode` key marks them
+        // (throughput benches have `engine` instead).
+        records.extend(self.serve.iter().map(|r| {
+            let mut o = JsonObj::new();
+            o.insert("geometry", r.geometry.as_str());
+            o.insert("mode", r.mode.as_str());
+            o.insert("replicas", r.replicas);
+            o.insert("target_batch", r.target_batch);
+            o.insert("deadline_us", r.deadline_us as usize);
+            o.insert("offered_rps", r.offered_rps);
+            o.insert("clients", r.clients);
+            o.insert("requests", r.requests);
+            o.insert("ok", r.ok);
+            o.insert("shed", r.shed);
+            o.insert("throughput_rps", r.throughput_rps);
+            o.insert("p50_us", r.p50_us);
+            o.insert("p99_us", r.p99_us);
+            Json::Obj(o)
+        }));
         root.insert("records", Json::Arr(records));
         Json::Obj(root)
     }
@@ -189,7 +477,7 @@ impl BenchJournal {
         let text = self.to_json().to_string_pretty();
         match std::fs::write(&path, text) {
             Ok(()) => {
-                println!("[bench] wrote {} records to {}", self.records.len(), path.display());
+                println!("[bench] wrote {} records to {}", self.len(), path.display());
                 Some(path)
             }
             Err(e) => {
@@ -270,6 +558,76 @@ mod tests {
         // 1024 samples at 2 µs/call = 512e6 samples/s.
         let sps = r0.get("samples_per_sec").unwrap().as_f64().unwrap();
         assert!((sps - 512e6).abs() < 1.0, "{sps}");
+    }
+
+    #[test]
+    fn closed_loop_counts_every_outcome_exactly_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let calls = AtomicUsize::new(0);
+        let rep = closed_loop_load(3, 8, |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            match i % 3 {
+                0 => LoadOutcome::Ok,
+                1 => LoadOutcome::Shed,
+                _ => LoadOutcome::Error,
+            }
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 24);
+        assert_eq!(rep.sent, 24);
+        assert_eq!((rep.ok, rep.shed, rep.errors), (8, 8, 8));
+        assert_eq!(rep.mode, "closed");
+        assert!(rep.throughput_rps > 0.0);
+        assert!(rep.line().contains("req/s"), "{}", rep.line());
+    }
+
+    #[test]
+    fn open_loop_services_every_scheduled_arrival() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let calls = AtomicUsize::new(0);
+        // High rate + tiny total: the pacer finishes near-instantly and
+        // the run is bounded by service, so no timing assertions needed.
+        let rep = open_loop_load(1e6, 40, 4, |_| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            LoadOutcome::Ok
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 40, "each arrival serviced once");
+        assert_eq!(rep.sent, 40);
+        assert_eq!(rep.ok, 40);
+        assert_eq!((rep.shed, rep.errors), (0, 0));
+        assert_eq!(rep.mode, "open");
+        assert!(rep.p99_us >= rep.p50_us);
+    }
+
+    #[test]
+    fn serve_records_share_the_journal_schema() {
+        let mut j = BenchJournal::new();
+        j.record_serve(ServeRecord {
+            geometry: "nid-t4".into(),
+            mode: "open".into(),
+            replicas: 2,
+            target_batch: 64,
+            deadline_us: 200,
+            offered_rps: 5_000.0,
+            clients: 4,
+            requests: 1_000,
+            ok: 990,
+            shed: 10,
+            throughput_rps: 4_800.0,
+            p50_us: 120.0,
+            p99_us: 900.0,
+        });
+        assert_eq!(j.len(), 1);
+        assert!(!j.is_empty());
+        let doc = Json::parse(&j.to_json().to_string_pretty()).expect("well-formed journal");
+        let root = doc.as_obj().expect("object root");
+        assert_eq!(root.get("schema").unwrap().as_str().unwrap(), "polylut-bench-v1");
+        let recs = root.get("records").unwrap().as_arr().expect("records array");
+        let r0 = recs[0].as_obj().unwrap();
+        assert_eq!(r0.get("mode").unwrap().as_str().unwrap(), "open");
+        assert_eq!(r0.get("replicas").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(r0.get("deadline_us").unwrap().as_usize().unwrap(), 200);
+        assert_eq!(r0.get("shed").unwrap().as_usize().unwrap(), 10);
+        assert!(r0.get("p99_us").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -2,6 +2,12 @@
 //! the heart of the correctness story (uses the in-repo mini-proptest;
 //! reproduce failures with PROP_SEED=<seed>).
 
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use polylut_add::coordinator::fleet::{Fleet, FleetConfig, FleetError};
+use polylut_add::coordinator::FrozenModel;
 use polylut_add::fpga::Strategy;
 use polylut_add::lut::tables::{
     compile_network, pack_adder_addr, pack_poly_addr, unpack_adder_addr, unpack_poly_addr,
@@ -10,7 +16,7 @@ use polylut_add::lut::{boolfn::BoolFn, map_network_of};
 use polylut_add::nn::network::Network;
 use polylut_add::nn::{config, quant};
 use polylut_add::prop_assert;
-use polylut_add::sim::{BitsliceNet, EvalPlan, LutSim, PipelineSim, Scratch, WORD};
+use polylut_add::sim::{BitsliceNet, EngineSelect, EvalPlan, LutSim, PipelineSim, Scratch, WORD};
 use polylut_add::simd;
 use polylut_add::util::prop::{check, Gen, Outcome};
 use polylut_add::util::rng::Rng;
@@ -287,6 +293,109 @@ fn quantizer_codes_monotonic_in_input() {
                 "signed a={a} b={b}"
             );
         }
+        Outcome::Pass
+    });
+}
+
+#[test]
+fn fleet_answers_every_admitted_request_exactly_once() {
+    // Over random geometries, replica counts, batch-former widths,
+    // deadlines, queue depths and arrival patterns: every submitted
+    // request gets exactly one outcome (a response or a typed error —
+    // infer never hangs and never double-answers), every response is
+    // bit-exact against the plan engine, and no formed batch ever exceeds
+    // the configured width.
+    check("fleet: exactly-once, bit-exact, width-bounded", 6, |g| {
+        let cfg = random_config(g);
+        if cfg.validate().is_err() {
+            return Outcome::Pass;
+        }
+        let mut rng = g.rng.fork(8);
+        let net = Network::random(&cfg, &mut rng);
+        let model = Arc::new(FrozenModel::from_network(net, 1));
+        let replicas = g.usize_in(1, 3);
+        let target = g.usize_in(1, 8);
+        let deadline_us = [0u64, 100, 1_000][g.usize_in(0, 2)];
+        let depth = g.usize_in(4, 64);
+        let fleet = Fleet::start(
+            model.clone(),
+            1,
+            EngineSelect::plan_only(),
+            cfg.n_classes,
+            FleetConfig {
+                replicas,
+                target_batch: target,
+                batch_deadline: Duration::from_micros(deadline_us),
+                queue_depth: depth,
+                // Generous: a healthy in-process fleet must never age a
+                // request out in this test, so sheds count as failures.
+                shed_after: Some(Duration::from_secs(30)),
+            },
+        );
+        let n_clients = g.usize_in(1, 4);
+        let per_client = g.usize_in(5, 20);
+        let n_in = cfg.widths[0];
+        let sim = model.sim();
+        // (ok, rejected-at-admission, other-error, bit-mismatch) totals.
+        let mut totals = (0usize, 0usize, 0usize, 0usize);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for c in 0..n_clients {
+                let client = fleet.client();
+                let sim = &sim;
+                let mut crng = g.rng.fork(100 + c as u64);
+                let pace = g.bool();
+                handles.push(scope.spawn(move || {
+                    let (mut ok, mut rejected, mut other, mut mismatch) =
+                        (0usize, 0usize, 0usize, 0usize);
+                    for _ in 0..per_client {
+                        let x: Vec<f32> = (0..n_in).map(|_| crng.f32()).collect();
+                        match client.infer(x.clone()) {
+                            Ok(resp) => {
+                                ok += 1;
+                                if resp.logits != sim.forward(&x) {
+                                    mismatch += 1;
+                                }
+                            }
+                            Err(FleetError::QueueFull { .. }) => rejected += 1,
+                            Err(_) => other += 1,
+                        }
+                        if pace {
+                            std::thread::yield_now();
+                        }
+                    }
+                    (ok, rejected, other, mismatch)
+                }));
+            }
+            for h in handles {
+                let (ok, rej, oth, mis) = h.join().expect("fleet prop client");
+                totals.0 += ok;
+                totals.1 += rej;
+                totals.2 += oth;
+                totals.3 += mis;
+            }
+        });
+        let issued = n_clients * per_client;
+        let m = &fleet.metrics;
+        let responses = m.responses.load(Ordering::Relaxed) as usize;
+        let rejects = m.queue_rejects.load(Ordering::Relaxed) as usize;
+        let max_formed = m.max_formed_batch.load(Ordering::Relaxed) as usize;
+        fleet.shutdown();
+        prop_assert!(totals.3 == 0, "{} responses not bit-exact vs the plan", totals.3);
+        prop_assert!(
+            totals.0 + totals.1 + totals.2 == issued,
+            "outcomes {totals:?} != issued {issued}"
+        );
+        prop_assert!(totals.2 == 0, "unexpected shed/replica/stop outcomes: {totals:?}");
+        prop_assert!(
+            responses == totals.0 && rejects == totals.1,
+            "metrics (responses={responses}, rejects={rejects}) disagree with \
+             client outcomes {totals:?}"
+        );
+        prop_assert!(
+            max_formed <= target,
+            "formed batch of {max_formed} exceeds target width {target}"
+        );
         Outcome::Pass
     });
 }
