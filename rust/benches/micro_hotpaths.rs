@@ -218,6 +218,35 @@ fn main() {
     journal.record("nid-t4", "plan", 0, rows4.len(), &st_plan4);
     journal.record("nid-t4", "bitslice/scalar", 64, rows4.len(), &st_bits4);
 
+    // Netlist-opt acceptance line: the same engine on folded +
+    // DC-rewritten op streams (the default serving pipeline) vs the
+    // untouched compile above, pinned bit-exact on the same batch.
+    let opt4 = polylut_add::lut::optimize(
+        &net4,
+        tables4.clone(),
+        polylut_add::lut::OptLevel::FoldDc,
+        default_workers(),
+    );
+    let bits4o = BitsliceNet::from_mapped(&net4, &opt4.tables, &opt4.mapped);
+    let mut oscratch4 = bits4o.scratch();
+    let st_bits4o = b.measure("bitslice/forward_batch x1024 (nid-t4, fold+dc)", || {
+        bits4o.forward_batch(&rows4, &mut oscratch4).len()
+    });
+    assert_eq!(
+        bits4o.forward_batch(&rows4, &mut oscratch4),
+        plan4.forward_batch(&rows4, &mut pscratch4),
+        "fold+dc must stay bit-exact on nid-t4"
+    );
+    println!(
+        "  -> netlist-opt fold+dc (nid-t4): {} -> {} word-ops ({:.1}% saved), \
+         bitslice {:.2}x samples/s vs unoptimized",
+        opt4.report.ops_before(),
+        opt4.report.ops_after(),
+        opt4.report.reduction_pct(),
+        st_bits4.median_ns / st_bits4o.median_ns
+    );
+    journal.record("nid-t4", "bitslice/fold+dc", 64, rows4.len(), &st_bits4o);
+
     // SIMD width ladder on nid-t4 — the tentpole acceptance sweep: one
     // op-stream walk retiring 128/256/512 samples via portable blocks and
     // the detected target_feature paths, each pinned bit-exact against the

@@ -1,0 +1,75 @@
+//! Netlist-optimization pipeline bench (`lut::opt`): for each paper
+//! geometry, compile the bitslice engine at level `none` vs the default
+//! `fold+dc`, report the word-op delta and the measured samples/s at each
+//! level, and pin bit-exactness of the optimized streams on the bench
+//! batch.  With `POLYLUT_BENCH_JSON=BENCH_netlist.json` every point lands
+//! in the journal as a `NetlistRecord` (marked by its `level` key) for
+//! the CI asserts.
+//!
+//!   cargo bench --bench netlist_opt
+//!
+//! POLYLUT_BENCH_QUICK=1 trims budgets.  Random-weight networks — table
+//! structure, mapping, and op counts don't depend on training.
+
+#![allow(clippy::unwrap_used)]
+
+use polylut_add::lut::{optimize, OptLevel};
+use polylut_add::nn::config::{self, ModelConfig};
+use polylut_add::nn::network::Network;
+use polylut_add::sim::BitsliceNet;
+use polylut_add::util::bench::{Bench, BenchJournal, NetlistRecord};
+use polylut_add::util::pool::default_workers;
+use polylut_add::util::rng::Rng;
+
+const BATCH: usize = 1024;
+
+fn geometries() -> Vec<(&'static str, ModelConfig)> {
+    vec![("nid-t4", config::nid_add2()), ("jsc-m-lite-d1-a2", config::jsc_m_lite(1, 2))]
+}
+
+fn main() {
+    let b = Bench::default();
+    let mut journal = BenchJournal::new();
+    let workers = default_workers();
+    for (name, cfg) in geometries() {
+        let net = Network::random(&cfg, &mut Rng::new(0x0907));
+        let tables = polylut_add::lut::compile_network(&net, workers);
+        let mut rng = Rng::new(17);
+        let rows: Vec<Vec<i32>> = (0..BATCH)
+            .map(|_| {
+                let x: Vec<f32> = (0..cfg.widths[0]).map(|_| rng.f32()).collect();
+                net.quantize_input(&x)
+            })
+            .collect();
+        let mut reference: Option<Vec<Vec<i32>>> = None;
+        for level in [OptLevel::None, OptLevel::FoldDc] {
+            let opt = optimize(&net, tables.clone(), level, workers);
+            let bits = BitsliceNet::from_mapped(&net, &opt.tables, &opt.mapped);
+            let mut scratch = bits.scratch();
+            let out = bits.forward_batch(&rows, &mut scratch);
+            match &reference {
+                None => reference = Some(out),
+                Some(r) => assert_eq!(&out, r, "{name}: {level} must stay bit-exact"),
+            }
+            let st = b.measure(&format!("bitslice/forward_batch x{BATCH} ({name}, {level})"), || {
+                bits.forward_batch(&rows, &mut scratch).len()
+            });
+            println!(
+                "  -> {name} [{level}]: {} -> {} word-ops ({:.1}% saved), {:.0} samples/s",
+                opt.report.ops_before(),
+                opt.report.ops_after(),
+                opt.report.reduction_pct(),
+                st.throughput(BATCH as f64)
+            );
+            journal.record_netlist(NetlistRecord {
+                geometry: name.to_string(),
+                level: level.to_string(),
+                ops_before: opt.report.ops_before(),
+                ops_after: opt.report.ops_after(),
+                samples_per_sec: st.throughput(BATCH as f64),
+                median_ns: st.median_ns,
+            });
+        }
+    }
+    journal.write_if_requested();
+}

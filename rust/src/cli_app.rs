@@ -45,9 +45,19 @@ fn print_help() {
            train    --id <artifact>      run the PJRT training loop\n\
                     [--steps N] [--restarts N] [--seed N] [--verbose]\n\
            compile  --id <artifact>      generate truth tables + LUT6 netlist\n\
+                    [--netlist-opt none|fold|fold+dc|all]  optimization\n\
+                    pipeline between mapping and the engines (default\n\
+                    fold+dc; env POLYLUT_NETLIST_OPT): cross-LUT folding,\n\
+                    + don't-care propagation from unreachable quantizer\n\
+                    codes (both bit-exact), `all` adds structured\n\
+                    sub-neuron pruning (accuracy-affecting opt-in; its\n\
+                    agreement delta vs unpruned tables is printed).\n\
+                    Prints the per-layer ops-before/after table.\n\
            synth    --id <artifact>      area/timing/pipeline report\n\
                     [--strategy 1|2]\n\
            rtl      --id <artifact> --out <dir>   emit Verilog + testbench\n\
+                    [--netlist-opt LEVEL]  as for compile — the emitted RTL\n\
+                    executes the same optimized netlists as the engines\n\
            serve    --id <artifact>      batching inference server (self-driving load test)\n\
                     [--backend lut|pjrt] [--batch-window-us N] [--max-batch N]\n\
                     [--requests N] [--clients N]\n\
@@ -93,7 +103,12 @@ fn print_help() {
                     wire_inflight_epochs/resumes/retry_exhausted when active;\n\
                     fleet_replicas/formed/batch_hist/queue_hwm/shed/\n\
                     replica_faults when the fleet is active;\n\
-                    simd/lanes = detected kernel level + active lane width\n\
+                    simd/lanes = detected kernel level + active lane width;\n\
+                    netlist_opt + netlist_ops_before/after = optimization\n\
+                    level and word-op delta of the served model.\n\
+                    [--netlist-opt none|fold|fold+dc|all]  netlist\n\
+                    optimization level (default fold+dc, bit-exact; env\n\
+                    POLYLUT_NETLIST_OPT) — see compile\n\
            shard-worker --listen H:P --shards S   host shards of a model for\n\
                     a remote coordinator (each connection claims one\n\
                     (engine, shard) after a model-fingerprint + resume-epoch\n\
@@ -104,7 +119,9 @@ fn print_help() {
                     coordinator's window).  Model source: --id <artifact>,\n\
                     or --widths 8,6,3 [--net-seed N] [--beta-in B] [--beta B]\n\
                     [--beta-out B] [--fan-in F] [--fan F] [--degree D] [--a A]\n\
-                    [--classes C] for a random-weight geometry (tests/benches)\n\
+                    [--classes C] for a random-weight geometry (tests/benches).\n\
+                    [--netlist-opt LEVEL]  table-level rewrites must match\n\
+                    the coordinator's (the fingerprint handshake enforces it)\n\
            verify   (--id <artifact> | --widths w0,w1,…)   compile every\n\
                     artifact kind and run the static checkers: plan layout,\n\
                     bitslice + per-shard op streams, hazard schedules and\n\
@@ -113,6 +130,10 @@ fn print_help() {
                     apply.  Prints a per-artifact report; exits nonzero on\n\
                     any violation.  (The same checkers gate every compile in\n\
                     debug builds, and in release when POLYLUT_VERIFY=1.)\n\
+                    [--netlist-opt LEVEL]  also checks the folded netlists\n\
+                    against their unfolded baseline (random-vector\n\
+                    equivalence, reference-walk oracle) and prints the\n\
+                    per-layer ops-before/after table\n\
            report   --id <artifact>      full markdown report (synth + cubes)\n\n\
          COMMON\n\
            --artifacts <dir>             artifact directory (default: artifacts)"
@@ -177,18 +198,27 @@ fn cmd_compile(args: &Args) -> Result<()> {
         .context("no trained weights — run `polylut train` first")?;
     let net = man.network_from_state(&state)?;
     let workers = crate::util::pool::default_workers();
+    let level = crate::lut::OptLevel::resolve(crate::lut::opt::level_from_args(args)?);
     let t0 = std::time::Instant::now();
     let tables = crate::lut::tables::compile_network(&net, workers);
     let t_tables = t0.elapsed().as_secs_f64();
     let t1 = std::time::Instant::now();
-    let mapped = crate::lut::mapper::map_network_of(&net, &tables, workers);
+    let opt = crate::lut::optimize(&net, tables, level, workers);
     println!(
         "[polylut] {id}: {} tables ({} words) in {t_tables:.2}s; {} LUT6 / depth {} in {:.2}s",
-        tables.n_tables(),
-        tables.total_words,
-        mapped.total_luts(),
-        mapped.max_depth(),
+        opt.tables.n_tables(),
+        opt.tables.total_words,
+        opt.mapped.total_luts(),
+        opt.mapped.max_depth(),
         t1.elapsed().as_secs_f64()
+    );
+    print!("{}", opt.report.render_table());
+    println!(
+        "[polylut] netlist-opt [{}]: {} -> {} word-ops ({:.1}% saved)",
+        opt.report.level,
+        opt.report.ops_before(),
+        opt.report.ops_after(),
+        opt.report.reduction_pct()
     );
     Ok(())
 }
@@ -214,6 +244,9 @@ fn cmd_rtl(args: &Args) -> Result<()> {
     let state = crate::train::load_state(&man, &man.dir)
         .context("no trained weights — run `polylut train` first")?;
     let net = man.network_from_state(&state)?;
+    // Publish --netlist-opt before emission: the emitter resolves the
+    // level itself so RTL matches what the serving engines execute.
+    crate::lut::opt::level_from_args(args)?;
     let files = crate::verilog::emit_project(&net, &out)?;
     println!("[polylut] wrote {} Verilog files to {}", files.len(), out.display());
     Ok(())
@@ -277,7 +310,12 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
     let shards = args.get_usize("shards", 2)?.max(1);
     let workers = crate::util::pool::default_workers();
     let net = network_from_args(args, "shard-worker")?;
-    let tables = crate::lut::tables::compile_network(&net, workers);
+    // Apply the same table-level rewrites the coordinator compiled with
+    // (the fingerprint handshake hashes every table word, so a mismatch
+    // refuses the link instead of mis-evaluating).
+    let level = crate::lut::OptLevel::resolve(crate::lut::opt::level_from_args(args)?);
+    let mut tables = crate::lut::tables::compile_network(&net, workers);
+    crate::lut::opt::optimize_tables(&net, &mut tables, level);
     let window = args.get_usize("wire-window", crate::sim::DEFAULT_WIRE_WINDOW)?.max(1);
     let host = std::sync::Arc::new(crate::sim::ShardWorkerHost::compile_windowed(
         &net, &tables, shards, workers, window,
@@ -345,19 +383,28 @@ fn cmd_verify(args: &Args) -> Result<()> {
     let workers = crate::util::pool::default_workers();
     let shards = args.get_usize("shards", 2)?.max(1);
     let net = network_from_args(args, "verify")?;
+    let level = crate::lut::OptLevel::resolve(crate::lut::opt::level_from_args(args)?);
     let t0 = std::time::Instant::now();
     let tables = crate::lut::tables::compile_network(&net, workers);
-    let plan = crate::sim::EvalPlan::compile(&net, &tables);
-    let bits = crate::sim::BitsliceNet::compile(&net, &tables, workers);
-    let arts = crate::sim::verify::compile_sharded_artifacts(&net, &tables, shards, workers);
+    let opt = crate::lut::optimize(&net, tables, level, workers);
+    let plan = crate::sim::EvalPlan::compile(&net, &opt.tables);
+    let bits = crate::sim::BitsliceNet::from_mapped(&net, &opt.tables, &opt.mapped);
+    let arts = crate::sim::verify::compile_sharded_artifacts(&net, &opt.tables, shards, workers);
     let t_compile = t0.elapsed().as_secs_f64();
     let t1 = std::time::Instant::now();
     let mut report = crate::sim::verify::verify_frozen(&plan, &bits);
+    if let Some(base) = &opt.baseline {
+        report.section(
+            "netlist-opt equivalence",
+            crate::sim::verify::verify_opt(base, &opt.mapped, 0x0707_F01D),
+        );
+    }
     for (label, vs) in crate::sim::verify::verify_sharded(&arts).into_sections() {
         report.section(&format!("{label} (shards={shards})"), vs);
     }
     let t_verify = t1.elapsed().as_secs_f64();
     print!("{}", report.render());
+    print!("{}", opt.report.render_table());
     println!(
         "[polylut] verify: {} violation(s) across {} artifact section(s) \
          (compile {t_compile:.2}s, verify {t_verify:.3}s)",

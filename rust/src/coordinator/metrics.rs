@@ -67,6 +67,13 @@ pub struct Metrics {
     /// Active bitslice lane width — samples retired per op-stream walk
     /// (`u64::MAX` = not recorded).
     simd_lanes: AtomicU64,
+    /// Ordinal of the served model's [`crate::lut::OptLevel`]
+    /// (`u64::MAX` = not recorded — hides the netlist-opt group).
+    netlist_opt_level: AtomicU64,
+    /// Total word-ops of the mapped netlists before/after the
+    /// `lut::opt` pipeline (what the engines execute per sample word).
+    netlist_ops_before: AtomicU64,
+    netlist_ops_after: AtomicU64,
     /// Replica-fleet group (`coordinator::fleet`): worker replica count
     /// (`u64::MAX` = no fleet — hides the whole group in `snapshot()`).
     fleet_replicas: AtomicU64,
@@ -123,6 +130,9 @@ impl Default for Metrics {
             verify_violations: AtomicU64::new(u64::MAX),
             simd_level: AtomicU64::new(u64::MAX),
             simd_lanes: AtomicU64::new(u64::MAX),
+            netlist_opt_level: AtomicU64::new(u64::MAX),
+            netlist_ops_before: AtomicU64::new(0),
+            netlist_ops_after: AtomicU64::new(0),
             fleet_replicas: AtomicU64::new(u64::MAX),
             fleet_target: AtomicU64::new(0),
             fleet_deadline_us: AtomicU64::new(0),
@@ -218,6 +228,14 @@ impl Metrics {
     pub fn set_simd(&self, level: crate::simd::SimdLevel, lanes: u64) {
         self.simd_level.store(level.ordinal(), Ordering::Relaxed);
         self.simd_lanes.store(lanes, Ordering::Relaxed);
+    }
+
+    /// Record the served model's netlist-optimization outcome: resolved
+    /// level plus total word-ops before/after the `lut::opt` pipeline.
+    pub fn set_netlist_opt(&self, level: crate::lut::OptLevel, before: u64, after: u64) {
+        self.netlist_opt_level.store(level.ordinal(), Ordering::Relaxed);
+        self.netlist_ops_before.store(before, Ordering::Relaxed);
+        self.netlist_ops_after.store(after, Ordering::Relaxed);
     }
 
     /// Activate the fleet metrics group (replica count, pack target and
@@ -321,6 +339,17 @@ impl Metrics {
             s.push_str(&format!(
                 " simd={name} lanes={}",
                 self.simd_lanes.load(Ordering::Relaxed)
+            ));
+        }
+        let opt = self.netlist_opt_level.load(Ordering::Relaxed);
+        if opt != u64::MAX {
+            let name = crate::lut::OptLevel::from_ordinal(opt)
+                .map(|l| l.to_string())
+                .unwrap_or_else(|| "unknown".into());
+            s.push_str(&format!(
+                " netlist_opt={name} netlist_ops_before={} netlist_ops_after={}",
+                self.netlist_ops_before.load(Ordering::Relaxed),
+                self.netlist_ops_after.load(Ordering::Relaxed),
             ));
         }
         let replicas = self.fleet_replicas.load(Ordering::Relaxed);
@@ -457,6 +486,20 @@ mod tests {
         assert!(snap.contains("simd=avx2 lanes=256"), "{snap}");
         m.set_simd(crate::simd::SimdLevel::Scalar, 64);
         assert!(m.snapshot().contains("simd=scalar lanes=64"));
+    }
+
+    #[test]
+    fn netlist_opt_group_surfaces_in_snapshot() {
+        let m = Metrics::new();
+        assert!(!m.snapshot().contains("netlist_opt"), "hidden until recorded");
+        m.set_netlist_opt(crate::lut::OptLevel::FoldDc, 120, 90);
+        let snap = m.snapshot();
+        assert!(
+            snap.contains("netlist_opt=fold+dc netlist_ops_before=120 netlist_ops_after=90"),
+            "{snap}"
+        );
+        m.set_netlist_opt(crate::lut::OptLevel::None, 120, 120);
+        assert!(m.snapshot().contains("netlist_opt=none"));
     }
 
     #[test]

@@ -31,6 +31,7 @@ use anyhow::{bail, Context, Result};
 
 
 use crate::lut::tables::NetworkTables;
+use crate::lut::{OptLevel, OptReport};
 use crate::meta::{Manifest, Role};
 use crate::nn::network::Network;
 use crate::runtime::{f32_literal, to_f32_vec, Engine, Executable};
@@ -55,12 +56,18 @@ use metrics::Metrics;
 /// `Backend::Lut` picks between them per batch.
 pub struct FrozenModel {
     pub net: Network,
+    /// Compiled truth tables *after* the netlist-optimization table passes
+    /// (don't-care rewrite / pruning at the resolved [`OptLevel`]) — what
+    /// every engine executes.
     pub tables: NetworkTables,
     pub plan: EvalPlan,
     pub bitslice: BitsliceNet,
     /// Compiled when the model was built with `shards > 1`; required for
     /// backends whose `EngineSelect::shards > 1`.
     pub sharded: Option<ShardedModel>,
+    /// What the netlist-optimization pipeline did (per-layer op deltas,
+    /// pruning agreement) — surfaced by `polylut serve`/`verify` metrics.
+    pub opt_report: OptReport,
 }
 
 impl FrozenModel {
@@ -98,6 +105,7 @@ impl FrozenModel {
             spin_us,
             WireConfig::default(),
             None,
+            None,
         )
     }
 
@@ -106,7 +114,10 @@ impl FrozenModel {
     /// link and the reconnect-and-resume retry budget.  `lanes` forces the
     /// bitslice engine's lane width (the `serve --lanes` path, strict);
     /// `None` resolves `POLYLUT_LANES` and falls back to the widest
-    /// detected width ([`crate::simd::resolve`]).
+    /// detected width ([`crate::simd::resolve`]).  `opt` forces the
+    /// netlist-optimization level (the `--netlist-opt` path); `None`
+    /// resolves `POLYLUT_NETLIST_OPT` and falls back to `fold+dc`.
+    #[allow(clippy::too_many_arguments)]
     pub fn from_network_placed_wire(
         net: Network,
         workers: usize,
@@ -115,22 +126,50 @@ impl FrozenModel {
         spin_us: Option<u64>,
         wire: WireConfig,
         lanes: Option<usize>,
+        opt: Option<OptLevel>,
     ) -> Result<FrozenModel> {
         let lane_plan = crate::simd::resolve(lanes)?;
+        let level = OptLevel::resolve(opt);
+        if opt.is_some() {
+            // Publish the explicit choice so lazily-resolving consumers
+            // (the sharded kernels' fold gate, the wire fingerprints)
+            // agree with this compile.
+            std::env::set_var(crate::lut::opt::OPT_ENV, level.to_string());
+        }
         let tables = crate::lut::tables::compile_network(&net, workers);
-        let plan = EvalPlan::compile(&net, &tables);
-        let bitslice = BitsliceNet::compile(&net, &tables, workers).with_lane_plan(lane_plan);
+        // The netlist-optimization pipeline sits between table generation
+        // and engine compilation: every engine below compiles the rewritten
+        // tables, and the two netlist consumers (bitslice here, the sharded
+        // kernels inside `ShardedModel`) execute folded netlists.
+        let opt = crate::lut::optimize(&net, tables, level, workers);
+        let plan = EvalPlan::compile(&net, &opt.tables);
+        let bitslice =
+            BitsliceNet::from_mapped(&net, &opt.tables, &opt.mapped).with_lane_plan(lane_plan);
         if crate::sim::verify::gate_enabled() {
-            crate::sim::verify::verify_frozen(&plan, &bitslice).gate()?;
+            let mut report = crate::sim::verify::verify_frozen(&plan, &bitslice);
+            if let Some(base) = &opt.baseline {
+                report.section(
+                    "netlist-opt equivalence",
+                    crate::sim::verify::verify_opt(base, &opt.mapped, 0x0707_F01D),
+                );
+            }
+            report.gate()?;
         }
         let sharded = if shards > 1 {
             Some(ShardedModel::compile_placed_wire(
-                &net, &tables, shards, workers, placement, spin_us, wire,
+                &net, &opt.tables, shards, workers, placement, spin_us, wire,
             )?)
         } else {
             None
         };
-        Ok(FrozenModel { net, tables, plan, bitslice, sharded })
+        Ok(FrozenModel {
+            net,
+            tables: opt.tables,
+            plan,
+            bitslice,
+            sharded,
+            opt_report: opt.report,
+        })
     }
 
     pub fn sim(&self) -> LutSim<'_> {
@@ -610,6 +649,7 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
     // active lane width (two full words), and `--lanes` errors early on
     // unsupported widths instead of inside the freeze.
     let lane_plan = crate::simd::resolve(lanes)?;
+    let netlist_opt = crate::lut::opt::level_from_args(args)?;
     let crossover = args.get_usize(
         "bitslice-threshold",
         EngineSelect::default_crossover_for(lane_plan.lanes),
@@ -641,6 +681,7 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
                 cfg.shard_spin_us,
                 cfg.wire(),
                 Some(lane_plan.lanes),
+                netlist_opt,
             )?);
             frozen = Some(model.clone());
             BackendSpec::lut_with_select(
@@ -695,6 +736,13 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
         // Surface the active SIMD level / lane width in `snapshot()`.
         let lp = model.bitslice.lane_plan();
         server.metrics.set_simd(lp.level, lp.lanes as u64);
+        // And the netlist-optimization outcome (level + word-op delta).
+        let r = &model.opt_report;
+        server.metrics.set_netlist_opt(
+            r.level,
+            r.ops_before() as u64,
+            r.ops_after() as u64,
+        );
     }
 
     if backend_name == "lut" {
@@ -780,6 +828,8 @@ fn serve_fleet(
     fleet.metrics.record_verify(report.total() as u64);
     let lp = model.bitslice.lane_plan();
     fleet.metrics.set_simd(lp.level, lp.lanes as u64);
+    let r = &model.opt_report;
+    fleet.metrics.set_netlist_opt(r.level, r.ops_before() as u64, r.ops_after() as u64);
     println!(
         "[serve] {id} fleet: replicas={replicas} target-batch={target} \
          batch-deadline-us={deadline_us} queue-depth={queue_depth}: \
@@ -836,6 +886,40 @@ mod tests {
         let cfg = config::uniform("srv", &[8, 6, 3], 2, 2, 3, 3, 3, 1, 2, 3);
         let net = Network::random(&cfg, &mut Rng::new(4));
         Arc::new(FrozenModel::from_network(net, 2))
+    }
+
+    /// The default `fold+dc` pipeline is bit-exact vs the unoptimized
+    /// compile on both whole-model engine routes (decoded-table plan and
+    /// widest-lane bitslice), across the (A, degree) grid — the
+    /// engine-route face of the opt-equivalence contract (the sharded and
+    /// wire routes inherit it through `bits_kernel_of`'s env-resolved
+    /// fold, exercised by the existing sharded/loopback suites).
+    #[test]
+    fn netlist_opt_engines_bit_exact_across_grid() {
+        for (a, d) in [(1usize, 1u32), (2, 1), (1, 2), (2, 2), (2, 3)] {
+            let cfg = config::uniform("opt-grid", &[8, 6, 3], 2, 2, 3, 3, 3, d, a, 3);
+            let net = Network::random(&cfg, &mut Rng::new(40 + a as u64 * 7 + d as u64));
+            let workers = 2;
+            let tables = crate::lut::compile_network(&net, workers);
+            let plain_plan = EvalPlan::compile(&net, &tables);
+            let opt = crate::lut::optimize(&net, tables, OptLevel::FoldDc, workers);
+            let opt_plan = EvalPlan::compile(&net, &opt.tables);
+            let bits = BitsliceNet::from_mapped(&net, &opt.tables, &opt.mapped)
+                .with_lane_plan(crate::simd::plan_for(crate::simd::widest_lanes()));
+            let mut rng = Rng::new(9);
+            let rows: Vec<Vec<i32>> = (0..150)
+                .map(|_| {
+                    let x: Vec<f32> = (0..cfg.widths[0]).map(|_| rng.f32()).collect();
+                    net.quantize_input(&x)
+                })
+                .collect();
+            let mut s0 = crate::sim::Scratch::for_plan(&plain_plan);
+            let mut s1 = crate::sim::Scratch::for_plan(&opt_plan);
+            let expected = plain_plan.forward_batch(&rows, &mut s0);
+            assert_eq!(opt_plan.forward_batch(&rows, &mut s1), expected, "plan a={a} d={d}");
+            let mut bs = bits.scratch();
+            assert_eq!(bits.forward_batch(&rows, &mut bs), expected, "bitslice a={a} d={d}");
+        }
     }
 
     #[test]
@@ -1067,6 +1151,7 @@ mod tests {
                 None,
                 WireConfig::default(),
                 Some(widest),
+                None,
             )
             .expect("wide all-local freeze"),
         );

@@ -100,34 +100,59 @@ impl Cover {
 
 /// Minimize `f` into an irredundant prime-ish cover (Espresso EXPAND +
 /// IRREDUNDANT loop; exact containment checks against ON/OFF sets).
+///
+/// Deterministic: the whole loop runs over position-stable `Vec`s (no hash
+/// iteration anywhere) and the result is put into the canonical cube order,
+/// so identical inputs always produce identical covers.
 pub fn minimize(f: &BoolFn) -> Cover {
+    minimize_dc(f, &BoolFn::constant(f.n, true))
+}
+
+/// [`minimize`] with an explicit care set: `care.get(a) == false` marks
+/// address `a` as a don't-care the expansion may freely absorb.  The
+/// returned cover agrees with `f` on every care point; its value on
+/// don't-care points is whatever makes the cover smallest.
+///
+/// This is the hook the netlist optimizer ([`crate::lut::opt`]) uses to
+/// re-materialize truth tables under unreachable-code don't-cares.
+pub fn minimize_dc(f: &BoolFn, care: &BoolFn) -> Cover {
     let n = f.n;
     assert!(n <= 16, "espresso-lite is for table-sized functions");
+    assert_eq!(care.n, n, "care set arity mismatch");
     let size = 1usize << n;
 
-    // Start from the ON-set minterms.
-    let mut cubes: Vec<Cube> =
-        (0..size).filter(|&a| f.get(a)).map(|a| Cube::minterm(a, n)).collect();
+    // Start from the care ON-set minterms.
+    let mut cubes: Vec<Cube> = (0..size)
+        .filter(|&a| care.get(a) && f.get(a))
+        .map(|a| Cube::minterm(a, n))
+        .collect();
     if cubes.is_empty() {
         return Cover { n, cubes };
     }
-    if cubes.len() == size {
+    if (0..size).all(|a| !care.get(a) || f.get(a)) {
         return Cover { n, cubes: vec![Cube { care: 0, value: 0 }] };
     }
 
-    // EXPAND: greedily drop literals while the cube stays inside the ON-set.
+    // EXPAND: greedily drop literals while the cube avoids the care OFF-set
+    // (don't-care points are absorbable by construction).
     for cube in cubes.iter_mut() {
         for v in 0..n {
             if cube.care >> v & 1 == 0 {
                 continue;
             }
             let candidate = Cube { care: cube.care & !(1 << v), value: cube.value };
-            // Valid iff no OFF-set point is covered. Enumerate the cube's
-            // free variables only (2^(n - literals) points).
-            if cube_inside_on_set(&candidate, f) {
+            // Valid iff no care OFF-set point is covered. Enumerate the
+            // cube's free variables only (2^(n - literals) points).
+            if cube_avoids_off_set(&candidate, f, care) {
                 *cube = candidate;
             }
         }
+    }
+
+    // Normalize (value bits outside the care mask are noise) so dedup and
+    // the canonical ordering see one representative per cube.
+    for cube in cubes.iter_mut() {
+        cube.value &= cube.care;
     }
 
     // Dedup + IRREDUNDANT: remove cubes covered by the union of the others.
@@ -142,20 +167,24 @@ pub fn minimize(f: &BoolFn) -> Cover {
             keep.push(*c);
         }
     }
-    // Full irredundancy: drop any cube whose points are all covered by the
-    // rest.
+    // Full irredundancy: drop any cube all of whose *care* points are
+    // covered by the rest (don't-care points need no cover).
     let mut i = 0;
     while i < keep.len() {
         let cube = keep[i];
-        let others_cover_all = enumerate_cube(&cube, n).all(|addr| {
-            keep.iter().enumerate().any(|(j, k)| j != i && k.covers(addr))
-        });
+        let others_cover_all = enumerate_cube(&cube, n)
+            .filter(|&addr| care.get(addr))
+            .all(|addr| keep.iter().enumerate().any(|(j, k)| j != i && k.covers(addr)));
         if others_cover_all {
             keep.remove(i);
         } else {
             i += 1;
         }
     }
+    // Canonical result order: fewest literals first, then (care, value) —
+    // a total order on cubes, so the cover is a function of the inputs
+    // alone (pinned by `minimize_is_deterministic`).
+    keep.sort_by_key(|c| (c.literals(), c.care, c.value));
     Cover { n, cubes: keep }
 }
 
@@ -172,8 +201,9 @@ fn enumerate_cube(cube: &Cube, n: u32) -> impl Iterator<Item = usize> + '_ {
     })
 }
 
-fn cube_inside_on_set(cube: &Cube, f: &BoolFn) -> bool {
-    enumerate_cube(cube, f.n).all(|addr| f.get(addr))
+/// Does the cube cover no care OFF-set point (care ∧ ¬f)?
+fn cube_avoids_off_set(cube: &Cube, f: &BoolFn, care: &BoolFn) -> bool {
+    enumerate_cube(cube, f.n).all(|addr| f.get(addr) || !care.get(addr))
 }
 
 /// Cube-count statistics for a truth table's output bits (reporting aid).
@@ -261,6 +291,89 @@ mod tests {
         assert_eq!(cover.cubes.len(), 1);
         assert_eq!(cover.literal_count(), 1);
         assert_eq!(cover.to_expression(), "x2");
+    }
+
+    /// Satellite: exhaustive equivalence on random functions up to 8
+    /// inputs, at several densities (not just the hand-picked AND/XOR).
+    #[test]
+    fn random_functions_equal_truth_table_exhaustively() {
+        let mut rng = Rng::new(0xE59);
+        for n in 2..=8u32 {
+            for density in [0.05, 0.25, 0.5, 0.75, 0.95] {
+                let pattern: Vec<bool> =
+                    (0..(1usize << n)).map(|_| rng.chance(density)).collect();
+                let f = from_fn(n, |a| pattern[a]);
+                let cover = minimize(&f);
+                for addr in 0..(1usize << n) {
+                    assert_eq!(
+                        cover.eval(addr),
+                        f.get(addr),
+                        "n={n} density={density} addr={addr}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Satellite: identical inputs must yield identical covers (canonical
+    /// ordering — no dependence on any iteration order).
+    #[test]
+    fn minimize_is_deterministic() {
+        let mut rng = Rng::new(0xD373);
+        for n in 2..=8u32 {
+            let pattern: Vec<bool> = (0..(1usize << n)).map(|_| rng.chance(0.4)).collect();
+            let f = from_fn(n, |a| pattern[a]);
+            let first = minimize(&f);
+            for _ in 0..3 {
+                let again = minimize(&f);
+                assert_eq!(first.cubes, again.cubes, "n={n}");
+            }
+            // Canonical order is (literals, care, value), non-decreasing.
+            let keys: Vec<_> =
+                first.cubes.iter().map(|c| (c.literals(), c.care, c.value)).collect();
+            let mut sorted = keys.clone();
+            sorted.sort();
+            assert_eq!(keys, sorted, "cover not in canonical order, n={n}");
+        }
+    }
+
+    /// `minimize_dc` must agree with f on every care point and never
+    /// exceed the care ON-minterm cover.
+    #[test]
+    fn dc_minimization_agrees_on_care_points() {
+        let mut rng = Rng::new(0xDCDC);
+        for n in 2..=8u32 {
+            for _ in 0..6 {
+                let fpat: Vec<bool> = (0..(1usize << n)).map(|_| rng.chance(0.4)).collect();
+                let cpat: Vec<bool> = (0..(1usize << n)).map(|_| rng.chance(0.7)).collect();
+                let f = from_fn(n, |a| fpat[a]);
+                let care = from_fn(n, |a| cpat[a]);
+                let cover = minimize_dc(&f, &care);
+                for addr in 0..(1usize << n) {
+                    if care.get(addr) {
+                        assert_eq!(cover.eval(addr), f.get(addr), "n={n} addr={addr}");
+                    }
+                }
+                // Never worse than one cube per care ON minterm.
+                let on = (0..(1usize << n)).filter(|&a| care.get(a) && f.get(a)).count();
+                assert!(cover.cubes.len() <= on.max(1), "n={n}");
+            }
+        }
+    }
+
+    /// Don't-cares let a function that is only *reachably* constant
+    /// collapse to the constant cube.
+    #[test]
+    fn dc_collapses_reachably_constant_function() {
+        // f = 1 on all even addresses, 0 on odd; care = even only.
+        let f = from_fn(4, |a| a % 2 == 0);
+        let care = from_fn(4, |a| a % 2 == 0);
+        let cover = minimize_dc(&f, &care);
+        assert_eq!(cover.cubes.len(), 1);
+        assert_eq!(cover.literal_count(), 0, "tautology over the care set");
+        // Empty care ON-set → empty cover.
+        let none = minimize_dc(&f, &BoolFn::constant(4, false));
+        assert!(none.cubes.is_empty());
     }
 
     #[test]

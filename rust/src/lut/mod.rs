@@ -6,7 +6,9 @@ pub mod boolfn;
 pub mod espresso;
 pub mod mapper;
 pub mod netlist;
+pub mod opt;
 pub mod tables;
 
 pub use mapper::{map_network_of, MappedNetwork};
+pub use opt::{optimize, OptLevel, OptReport, Optimized};
 pub use tables::{compile_network, NetworkTables};

@@ -169,9 +169,10 @@ impl Netlist {
     }
 
     /// The original per-sample address-assembly walk (O(64·fan) per LUT
-    /// node), kept as an independent reference the word-level kernel is
-    /// property-tested against.
-    #[cfg(test)]
+    /// node), kept as the only independent implementation of netlist
+    /// semantics: the word-level kernel is property-tested against it, and
+    /// `sim::verify`'s netlist-opt equivalence check uses it as the oracle
+    /// side so a shared-kernel bug cannot mask itself.
     pub fn eval64_reference(&self, wires: &dyn Fn(u32) -> u64) -> Vec<u64> {
         let mut vals = vec![0u64; self.nodes.len()];
         for (i, node) in self.nodes.iter().enumerate() {

@@ -1,0 +1,1411 @@
+//! Netlist optimization pipeline — fewer ops for every engine.
+//!
+//! Runs between table generation / LUT6 mapping and op-stream (or plan)
+//! compilation, in three passes:
+//!
+//! 1. **Structured pruning** (`all` only): sub-neurons whose contribution
+//!    to the adder stage (reachable-code span) falls below a fraction of
+//!    the neuron's strongest sub-neuron are overwritten with their most
+//!    frequent code.  Layout-preserving — strides and table counts do not
+//!    change — so every downstream consumer is oblivious.  The output
+//!    agreement delta vs the unpruned tables is measured and reported.
+//! 2. **Don't-care propagation** (`fold+dc` and up): the set of β-bit
+//!    codes each neuron can actually emit is derived layer by layer
+//!    (layer-0 inputs span the full quantizer range; deeper boundaries
+//!    are the image of the care addresses through each table).  Addresses
+//!    containing an unreachable input code are never presented at
+//!    runtime, so their words are don't-cares: small tables are
+//!    re-materialized through [`espresso::minimize_dc`], larger ones get
+//!    a projection rewrite (`words[addr] = words[π(addr)]`, π clamping
+//!    each unreachable field to its nearest reachable code).  Care
+//!    addresses are untouched, so the rewrite is bit-exact by
+//!    construction for every engine.
+//! 3. **Cross-LUT folding** (`fold` and up): each mapped layer netlist is
+//!    rebuilt to fixpoint — constant-input cofactoring, duplicate-input
+//!    merging, support reduction, identity/constant collapsing, mux
+//!    simplification, and NeuraLUT-style composition of fanout-1 LUTs
+//!    into their consumer when the merged support still fits one LUT6.
+//!    Structural hashing (the arena's hash-consing) dedups as a side
+//!    effect of the rebuild.  Pure logic rewriting: equivalence vs the
+//!    unfolded netlist is checked by `sim::verify`'s netlist-opt section.
+//!
+//! The pipeline is selected by `--netlist-opt <none|fold|fold+dc|all>`
+//! (env `POLYLUT_NETLIST_OPT`), default `fold+dc`.
+
+use std::fmt;
+
+use super::boolfn::BoolFn;
+use super::espresso::minimize_dc;
+use super::mapper::{map_network_of, MappedLayer, MappedNetwork};
+use super::netlist::{Netlist, Node, NodeId};
+use super::tables::{NetworkTables, TruthTable};
+use crate::nn::network::Network;
+use crate::nn::quant::to_twos_complement;
+use crate::util::pool::parallel_map;
+use crate::util::rng::Rng;
+
+/// Env var consulted by [`OptLevel::resolve`] when no explicit level is
+/// given (same design as `POLYLUT_LANES`).
+pub const OPT_ENV: &str = "POLYLUT_NETLIST_OPT";
+
+/// Tables at or below this arity are re-materialized through
+/// `espresso::minimize_dc`; larger ones get the cheap projection rewrite.
+const ESPRESSO_DC_MAX_BITS: u32 = 10;
+
+/// Tables wider than this are never enumerated (reachable set assumed
+/// full — a sound superset).  Far above any geometry in this repo.
+const ENUM_CAP_BITS: u32 = 20;
+
+/// Bounded fold fixpoint (each iteration only shrinks; 8 is generous).
+const MAX_FOLD_ITERS: usize = 8;
+
+/// Default pruning threshold: drop a sub-neuron whose reachable-code span
+/// is below this fraction of the neuron's widest sub-neuron span.
+const PRUNE_FRAC_DEFAULT: f64 = 0.25;
+/// Env override for the pruning fraction (`all` level only).
+pub const PRUNE_FRAC_ENV: &str = "POLYLUT_PRUNE_FRAC";
+
+/// Random input vectors used to measure the pruning agreement delta.
+const AGREEMENT_SAMPLES: usize = 512;
+
+/// Netlist optimization level (`--netlist-opt`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OptLevel {
+    /// Compile the mapped netlists untouched.
+    None,
+    /// Structural folding only (bit-exact).
+    Fold,
+    /// Folding + don't-care propagation (bit-exact by construction).
+    #[default]
+    FoldDc,
+    /// Everything, including structured pruning (accuracy-affecting;
+    /// explicit opt-in — never a default).
+    All,
+}
+
+impl OptLevel {
+    /// Parse a CLI/env spelling. `None` on unknown input.
+    pub fn parse(s: &str) -> Option<OptLevel> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "none" | "off" => Some(OptLevel::None),
+            "fold" => Some(OptLevel::Fold),
+            "fold+dc" | "fold-dc" | "folddc" | "dc" => Some(OptLevel::FoldDc),
+            "all" => Some(OptLevel::All),
+            _ => None,
+        }
+    }
+
+    /// Resolution ladder: explicit value > `POLYLUT_NETLIST_OPT` env >
+    /// default (`fold+dc`).  Both sides of the sharded fingerprint
+    /// handshake resolve through here, so a coordinator and its remote
+    /// workers agree on the table-level rewrites.
+    pub fn resolve(explicit: Option<OptLevel>) -> OptLevel {
+        if let Some(l) = explicit {
+            return l;
+        }
+        match std::env::var(OPT_ENV) {
+            Ok(s) if !s.trim().is_empty() => OptLevel::parse(&s).unwrap_or_else(|| {
+                log::warn!("{OPT_ENV}={s:?} not recognized; using default {}", OptLevel::default());
+                OptLevel::default()
+            }),
+            _ => OptLevel::default(),
+        }
+    }
+
+    /// Does this level rebuild the mapped netlists (fold pass)?
+    pub fn folds(&self) -> bool {
+        !matches!(self, OptLevel::None)
+    }
+
+    /// Does this level rewrite table don't-cares?
+    pub fn dc(&self) -> bool {
+        matches!(self, OptLevel::FoldDc | OptLevel::All)
+    }
+
+    /// Does this level prune sub-neurons (accuracy-affecting)?
+    pub fn prunes(&self) -> bool {
+        matches!(self, OptLevel::All)
+    }
+
+    /// Stable ordinal for the metrics snapshot (inverse of
+    /// [`OptLevel::from_ordinal`]).
+    pub fn ordinal(&self) -> u64 {
+        match self {
+            OptLevel::None => 0,
+            OptLevel::Fold => 1,
+            OptLevel::FoldDc => 2,
+            OptLevel::All => 3,
+        }
+    }
+
+    pub fn from_ordinal(ord: u64) -> Option<OptLevel> {
+        match ord {
+            0 => Some(OptLevel::None),
+            1 => Some(OptLevel::Fold),
+            2 => Some(OptLevel::FoldDc),
+            3 => Some(OptLevel::All),
+            _ => None,
+        }
+    }
+}
+
+/// Parse `--netlist-opt` and publish the choice through
+/// [`OPT_ENV`], so every in-process consumer that resolves lazily
+/// (sharded kernels, fingerprints, RTL emit) sees the same level.
+pub fn level_from_args(args: &crate::util::cli::Args) -> anyhow::Result<Option<OptLevel>> {
+    let Some(raw) = args.get("netlist-opt") else {
+        return Ok(None);
+    };
+    let level = OptLevel::parse(raw).ok_or_else(|| {
+        anyhow::anyhow!("--netlist-opt expects none|fold|fold+dc|all, got {raw:?}")
+    })?;
+    std::env::set_var(OPT_ENV, level.to_string());
+    Ok(Some(level))
+}
+
+impl fmt::Display for OptLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            OptLevel::None => "none",
+            OptLevel::Fold => "fold",
+            OptLevel::FoldDc => "fold+dc",
+            OptLevel::All => "all",
+        })
+    }
+}
+
+/// Per-layer word-op delta (cone-restricted: what the engines execute).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerDelta {
+    pub luts_before: usize,
+    pub muxes_before: usize,
+    pub luts_after: usize,
+    pub muxes_after: usize,
+}
+
+impl LayerDelta {
+    pub fn ops_before(&self) -> usize {
+        self.luts_before + self.muxes_before
+    }
+    pub fn ops_after(&self) -> usize {
+        self.luts_after + self.muxes_after
+    }
+}
+
+/// What the pipeline did — per-layer op counts plus pruning outcome.
+/// Carried on `FrozenModel`, surfaced by `polylut verify`/`compile` and
+/// `coordinator::metrics`.
+#[derive(Debug, Clone, Default)]
+pub struct OptReport {
+    pub level: OptLevel,
+    pub layers: Vec<LayerDelta>,
+    /// Sub-neuron tables overwritten by the pruning pass.
+    pub pruned_subs: usize,
+    /// Fraction of random inputs whose output codes match the unpruned
+    /// tables exactly (measured only when pruning ran).
+    pub exact_agreement: Option<f64>,
+    /// Fraction whose predicted class matches (argmax / sign).
+    pub class_agreement: Option<f64>,
+}
+
+impl OptReport {
+    pub fn ops_before(&self) -> usize {
+        self.layers.iter().map(|l| l.ops_before()).sum()
+    }
+
+    pub fn ops_after(&self) -> usize {
+        self.layers.iter().map(|l| l.ops_after()).sum()
+    }
+
+    /// Percent of word-ops removed by the pipeline.
+    pub fn reduction_pct(&self) -> f64 {
+        let before = self.ops_before();
+        if before == 0 {
+            return 0.0;
+        }
+        100.0 * (before - self.ops_after()) as f64 / before as f64
+    }
+
+    /// The per-layer ops-before/after table (`polylut verify` / `compile`).
+    pub fn render_table(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(l, d)| {
+                let (b, a) = (d.ops_before(), d.ops_after());
+                let pct = if b == 0 { 0.0 } else { 100.0 * (b - a) as f64 / b as f64 };
+                vec![
+                    format!("L{l}"),
+                    d.luts_before.to_string(),
+                    d.muxes_before.to_string(),
+                    b.to_string(),
+                    a.to_string(),
+                    format!("{pct:.1}%"),
+                ]
+            })
+            .chain(std::iter::once({
+                let (b, a) = (self.ops_before(), self.ops_after());
+                vec![
+                    "total".into(),
+                    self.layers.iter().map(|l| l.luts_before).sum::<usize>().to_string(),
+                    self.layers.iter().map(|l| l.muxes_before).sum::<usize>().to_string(),
+                    b.to_string(),
+                    a.to_string(),
+                    format!("{:.1}%", self.reduction_pct()),
+                ]
+            }))
+            .collect();
+        let mut out = crate::util::bench::table_string(
+            &format!("netlist-opt [{}]", self.level),
+            &["layer", "luts", "muxes", "ops before", "ops after", "saved"],
+            &rows,
+        );
+        if let Some(exact) = self.exact_agreement {
+            out.push_str(&format!(
+                "pruned sub-neurons: {} | exact agreement {:.4} | class agreement {:.4}\n",
+                self.pruned_subs,
+                exact,
+                self.class_agreement.unwrap_or(1.0),
+            ));
+        }
+        out
+    }
+}
+
+/// The pipeline's output: rewritten tables, the folded mapping the
+/// engines compile, the unfolded mapping of the same tables (equivalence
+/// baseline for `sim::verify`; `None` at level `none`), and the report.
+pub struct Optimized {
+    pub tables: NetworkTables,
+    pub mapped: MappedNetwork,
+    pub baseline: Option<MappedNetwork>,
+    pub report: OptReport,
+}
+
+/// Run the full pipeline at `level`.  The ops-before figures always come
+/// from a mapping of the *original* tables — the stream an unoptimized
+/// compile would execute.
+pub fn optimize(net: &Network, tables: NetworkTables, level: OptLevel, workers: usize) -> Optimized {
+    let before = map_network_of(net, &tables, workers);
+    let before_counts: Vec<(usize, usize)> = before.layers.iter().map(cone_ops).collect();
+    if !level.folds() {
+        let layers = before_counts
+            .iter()
+            .map(|&(l, m)| LayerDelta {
+                luts_before: l,
+                muxes_before: m,
+                luts_after: l,
+                muxes_after: m,
+            })
+            .collect();
+        let report = OptReport { level, layers, ..OptReport::default() };
+        return Optimized { tables, mapped: before, baseline: None, report };
+    }
+
+    let mut tables = tables;
+    let original = if level.prunes() { Some(tables.clone()) } else { None };
+    let outcome = optimize_tables(net, &mut tables, level);
+    let mut exact_agreement = None;
+    let mut class_agreement = None;
+    if outcome.pruned_subs > 0 {
+        if let Some(original) = &original {
+            let (exact, class) =
+                measure_agreement(net, original, &tables, AGREEMENT_SAMPLES);
+            exact_agreement = Some(exact);
+            class_agreement = Some(class);
+        }
+    }
+
+    // The equivalence baseline must map the *final* tables (fold is a pure
+    // logic rewrite of this netlist); when no table changed, the original
+    // mapping doubles as the baseline.
+    let baseline =
+        if outcome.changed { map_network_of(net, &tables, workers) } else { before };
+    let mapped = fold_network(&baseline, workers);
+    let layers = before_counts
+        .iter()
+        .zip(mapped.layers.iter().map(cone_ops))
+        .map(|(&(lb, mb), (la, ma))| LayerDelta {
+            luts_before: lb,
+            muxes_before: mb,
+            luts_after: la,
+            muxes_after: ma,
+        })
+        .collect();
+    let report = OptReport {
+        level,
+        layers,
+        pruned_subs: outcome.pruned_subs,
+        exact_agreement,
+        class_agreement,
+    };
+    Optimized { tables, mapped, baseline: Some(baseline), report }
+}
+
+/// What [`optimize_tables`] did to the table words.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TableOutcome {
+    /// Sub-neuron tables overwritten by the pruning pass.
+    pub pruned_subs: usize,
+    /// Whether any table word changed (prune or don't-care rewrite).
+    pub changed: bool,
+}
+
+/// The table-level passes alone (prune, then don't-care rewrite), in the
+/// exact order [`optimize`] applies them.  The sharded worker runs this
+/// on its slice of the tables so the coordinator↔worker table-word
+/// fingerprints agree; everything netlist-shaped (folding) stays on the
+/// mapping side.
+pub fn optimize_tables(
+    net: &Network,
+    tables: &mut NetworkTables,
+    level: OptLevel,
+) -> TableOutcome {
+    let mut outcome = TableOutcome::default();
+    if level.prunes() {
+        let reach = derive_reachable(net, tables);
+        outcome.pruned_subs = prune_low_contribution(net, tables, &reach, prune_frac());
+        outcome.changed = outcome.pruned_subs > 0;
+    }
+    if level.dc() {
+        let reach = derive_reachable(net, tables);
+        outcome.changed |= rewrite_dont_cares(net, tables, &reach) > 0;
+    }
+    outcome
+}
+
+fn prune_frac() -> f64 {
+    match std::env::var(PRUNE_FRAC_ENV) {
+        Ok(s) => s.trim().parse::<f64>().ok().filter(|f| (0.0..=1.0).contains(f)).unwrap_or_else(
+            || {
+                log::warn!("{PRUNE_FRAC_ENV}={s:?} invalid; using {PRUNE_FRAC_DEFAULT}");
+                PRUNE_FRAC_DEFAULT
+            },
+        ),
+        Err(_) => PRUNE_FRAC_DEFAULT,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reachable-code derivation (don't-care soundness rests on this set).
+// ---------------------------------------------------------------------------
+
+/// Reachable raw-code sets, derived bottom-up.  `boundaries[b][j][code]`
+/// is true iff neuron `j` of layer boundary `b` can emit raw code `code`
+/// (boundary 0 = quantized network inputs, always the full range —
+/// `nn::quant::unsigned_code` clamps into `[0, 2^β)` and every code in
+/// range is hit).  `subs[l][j][a]` are the reachable sub-neuron codes
+/// feeding layer `l`'s adder stage (empty when A == 1).
+pub struct Reachable {
+    pub boundaries: Vec<Vec<Vec<bool>>>,
+    pub subs: Vec<Vec<Vec<Vec<bool>>>>,
+}
+
+/// Image of `table` over its care addresses: fields of `field_w` bits,
+/// field `i` restricted to `field_reach[i]`.  Returns the reachable raw
+/// output words.  Falls back to the full range (sound superset) past
+/// [`ENUM_CAP_BITS`].
+fn table_image(table: &TruthTable, field_w: u32, field_reach: &[&Vec<bool>]) -> Vec<bool> {
+    let out_size = 1usize << table.out_bits;
+    if table.n_inputs > ENUM_CAP_BITS {
+        return vec![true; out_size];
+    }
+    let mut out = vec![false; out_size];
+    let mask = (1usize << field_w) - 1;
+    'addr: for (addr, &w) in table.words.iter().enumerate() {
+        for (i, reach) in field_reach.iter().enumerate() {
+            if !reach[(addr >> (i as u32 * field_w)) & mask] {
+                continue 'addr;
+            }
+        }
+        out[w as usize & (out_size - 1)] = true;
+    }
+    out
+}
+
+/// Derive the reachable sets for every boundary and sub-neuron.
+pub fn derive_reachable(net: &Network, tables: &NetworkTables) -> Reachable {
+    let cfg = &net.cfg;
+    let a_factor = tables.a_factor;
+    let mut boundaries: Vec<Vec<Vec<bool>>> = Vec::with_capacity(cfg.n_layers() + 1);
+    boundaries.push(vec![vec![true; 1usize << cfg.beta[0]]; cfg.widths[0]]);
+    let mut subs: Vec<Vec<Vec<Vec<bool>>>> = Vec::with_capacity(cfg.n_layers());
+    for (l, lt) in tables.layers.iter().enumerate() {
+        let prev = &boundaries[l];
+        let mut layer_out = Vec::with_capacity(lt.neurons.len());
+        let mut layer_subs = Vec::with_capacity(lt.neurons.len());
+        for (j, neuron) in lt.neurons.iter().enumerate() {
+            match &neuron.adder {
+                None => {
+                    let fields: Vec<&Vec<bool>> = net.layers[l].indices[0][j]
+                        .iter()
+                        .map(|&src| &prev[src])
+                        .collect();
+                    layer_out.push(table_image(&neuron.poly[0], lt.in_bits, &fields));
+                    layer_subs.push(Vec::new());
+                }
+                Some(adder) => {
+                    let sub_reach: Vec<Vec<bool>> = (0..a_factor)
+                        .map(|a| {
+                            let fields: Vec<&Vec<bool>> = net.layers[l].indices[a][j]
+                                .iter()
+                                .map(|&src| &prev[src])
+                                .collect();
+                            table_image(&neuron.poly[a], lt.in_bits, &fields)
+                        })
+                        .collect();
+                    let fields: Vec<&Vec<bool>> = sub_reach.iter().collect();
+                    layer_out.push(table_image(adder, lt.sub_bits, &fields));
+                    layer_subs.push(sub_reach);
+                }
+            }
+        }
+        boundaries.push(layer_out);
+        subs.push(layer_subs);
+    }
+    Reachable { boundaries, subs }
+}
+
+// ---------------------------------------------------------------------------
+// Don't-care rewrite.
+// ---------------------------------------------------------------------------
+
+/// Rewrite one table under per-field reachability.  Care addresses keep
+/// their exact words; don't-care addresses are repainted to whatever
+/// makes the logic simplest.  Returns whether anything changed.
+fn rewrite_table(table: &mut TruthTable, field_w: u32, field_reach: &[&Vec<bool>]) -> bool {
+    if table.n_inputs > ENUM_CAP_BITS {
+        return false;
+    }
+    if field_reach.iter().all(|r| r.iter().all(|&b| b)) {
+        return false;
+    }
+    let mask = (1usize << field_w) - 1;
+    let is_care = |addr: usize| {
+        field_reach
+            .iter()
+            .enumerate()
+            .all(|(i, reach)| reach[(addr >> (i as u32 * field_w)) & mask])
+    };
+    if table.n_inputs <= ESPRESSO_DC_MAX_BITS {
+        // Exact re-materialization: minimize each output bit under the
+        // care set and rebuild the words from the covers.
+        let n = table.n_inputs;
+        let mut care_bits = vec![0u64; super::boolfn::words_for(n)];
+        for addr in 0..table.size() {
+            if is_care(addr) {
+                care_bits[addr / 64] |= 1 << (addr % 64);
+            }
+        }
+        let care = BoolFn::from_bits(n, care_bits);
+        let mut words = vec![0u32; table.size()];
+        for b in 0..table.out_bits {
+            let f = BoolFn::from_bits(n, table.bit_plane(b));
+            let cover = minimize_dc(&f, &care);
+            for (addr, w) in words.iter_mut().enumerate() {
+                if cover.eval(addr) {
+                    *w |= 1 << b;
+                }
+            }
+        }
+        let changed = words != table.words;
+        table.words = words;
+        changed
+    } else {
+        // Projection rewrite: clamp each unreachable field code to its
+        // nearest reachable one (Hamming distance, then value), making
+        // the table constant along unreachable directions so the mapper's
+        // support reduction and cofactor checks can fire.
+        let canon: Vec<Vec<usize>> = field_reach
+            .iter()
+            .map(|reach| {
+                (0..reach.len())
+                    .map(|c| {
+                        if reach[c] {
+                            return c;
+                        }
+                        (0..reach.len())
+                            .filter(|&r| reach[r])
+                            .min_by_key(|&r| ((r ^ c).count_ones(), r))
+                            .unwrap_or(c)
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut changed = false;
+        let old = table.words.clone();
+        for (addr, w) in table.words.iter_mut().enumerate() {
+            let mut src = 0usize;
+            for (i, c) in canon.iter().enumerate() {
+                src |= c[(addr >> (i as u32 * field_w)) & mask] << (i as u32 * field_w);
+            }
+            if src != addr {
+                *w = old[src];
+                changed |= *w != old[addr];
+            }
+        }
+        changed
+    }
+}
+
+/// Apply the don't-care rewrite across the network.  Returns the number
+/// of tables whose words changed.
+fn rewrite_dont_cares(net: &Network, tables: &mut NetworkTables, reach: &Reachable) -> usize {
+    let a_factor = tables.a_factor;
+    let mut touched = 0usize;
+    for (l, lt) in tables.layers.iter_mut().enumerate() {
+        let in_bits = lt.in_bits;
+        let sub_bits = lt.sub_bits;
+        for (j, neuron) in lt.neurons.iter_mut().enumerate() {
+            for (a, poly) in neuron.poly.iter_mut().enumerate() {
+                let fields: Vec<&Vec<bool>> = net.layers[l].indices[a.min(a_factor - 1)][j]
+                    .iter()
+                    .map(|&src| &reach.boundaries[l][src])
+                    .collect();
+                touched += rewrite_table(poly, in_bits, &fields) as usize;
+            }
+            if let Some(adder) = &mut neuron.adder {
+                let fields: Vec<&Vec<bool>> = reach.subs[l][j].iter().collect();
+                touched += rewrite_table(adder, sub_bits, &fields) as usize;
+            }
+        }
+    }
+    touched
+}
+
+// ---------------------------------------------------------------------------
+// Structured pruning (`all` only — accuracy-affecting, explicit opt-in).
+// ---------------------------------------------------------------------------
+
+/// Overwrite low-contribution sub-neuron tables with their most frequent
+/// code.  Contribution = reachable-code span (max − min over care
+/// addresses); a sub-neuron is pruned when its span falls strictly below
+/// `frac` × the widest span among its neuron's sub-neurons (so the
+/// strongest sub-neuron is never pruned).  Layout-preserving: the table
+/// stays, every word becomes the same constant, and the mapper turns it
+/// into `Const` nodes.  Returns the number of pruned tables.
+fn prune_low_contribution(
+    net: &Network,
+    tables: &mut NetworkTables,
+    reach: &Reachable,
+    frac: f64,
+) -> usize {
+    let mut pruned = 0usize;
+    for (l, lt) in tables.layers.iter_mut().enumerate() {
+        let in_bits = lt.in_bits;
+        let sub_bits = lt.sub_bits;
+        for (j, neuron) in lt.neurons.iter_mut().enumerate() {
+            if neuron.adder.is_none() || neuron.poly.len() < 2 {
+                continue; // A == 1: no adder stage to contribute to.
+            }
+            let mask = (1usize << in_bits) - 1;
+            // (span, mode code) per sub-neuron, over care addresses only.
+            let stats: Vec<(i64, i32)> = neuron
+                .poly
+                .iter()
+                .enumerate()
+                .map(|(a, t)| {
+                    let fields: Vec<&Vec<bool>> = net.layers[l].indices[a][j]
+                        .iter()
+                        .map(|&src| &reach.boundaries[l][src])
+                        .collect();
+                    let mut lo = i64::MAX;
+                    let mut hi = i64::MIN;
+                    let mut freq = vec![0usize; 1usize << sub_bits];
+                    'addr: for addr in 0..t.size() {
+                        for (i, r) in fields.iter().enumerate() {
+                            if !r[(addr >> (i as u32 * in_bits)) & mask] {
+                                continue 'addr;
+                            }
+                        }
+                        let c = t.code_at(addr) as i64;
+                        lo = lo.min(c);
+                        hi = hi.max(c);
+                        freq[t.words[addr] as usize & (freq.len() - 1)] += 1;
+                    }
+                    let mode_raw = freq
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|&(raw, &n)| (n, usize::MAX - raw))
+                        .map(|(raw, _)| raw as u32)
+                        .unwrap_or(0);
+                    let mode = crate::nn::quant::from_twos_complement(mode_raw, sub_bits);
+                    (if hi >= lo { hi - lo } else { 0 }, mode)
+                })
+                .collect();
+            let widest = stats.iter().map(|&(s, _)| s).max().unwrap_or(0);
+            for (a, &(span, mode)) in stats.iter().enumerate() {
+                if widest > 0 && (span as f64) < frac * widest as f64 {
+                    let raw = to_twos_complement(mode, sub_bits);
+                    neuron.poly[a].words.iter_mut().for_each(|w| *w = raw);
+                    pruned += 1;
+                }
+            }
+        }
+    }
+    pruned
+}
+
+/// Fixed-point forward pass *through the tables* (not the polynomial
+/// transfer functions) — the oracle for the pruning agreement delta and
+/// for test cross-checks.  Mirrors `Network::forward_codes` addressing.
+pub fn forward_codes_tables(
+    net: &Network,
+    tables: &NetworkTables,
+    in_codes: &[i32],
+) -> Vec<i32> {
+    let cfg = &net.cfg;
+    assert_eq!(in_codes.len(), cfg.widths[0]);
+    let mut codes = in_codes.to_vec();
+    for (l, lt) in tables.layers.iter().enumerate() {
+        let mut next = Vec::with_capacity(cfg.widths[l + 1]);
+        for (j, neuron) in lt.neurons.iter().enumerate() {
+            let gather = |a: usize| -> Vec<i32> {
+                net.layers[l].indices[a][j].iter().map(|&src| codes[src]).collect()
+            };
+            let out = match &neuron.adder {
+                None => neuron.poly[0]
+                    .code_at(super::tables::pack_poly_addr(&gather(0), lt.in_bits)),
+                Some(adder) => {
+                    let subs: Vec<i32> = neuron
+                        .poly
+                        .iter()
+                        .enumerate()
+                        .map(|(a, t)| {
+                            t.code_at(super::tables::pack_poly_addr(&gather(a), lt.in_bits))
+                        })
+                        .collect();
+                    adder.code_at(super::tables::pack_adder_addr(&subs, lt.sub_bits))
+                }
+            };
+            next.push(out);
+        }
+        codes = next;
+    }
+    codes
+}
+
+/// Output agreement between two table sets over random input codes:
+/// (exact output-code agreement, predicted-class agreement).
+fn measure_agreement(
+    net: &Network,
+    original: &NetworkTables,
+    pruned: &NetworkTables,
+    samples: usize,
+) -> (f64, f64) {
+    let cfg = &net.cfg;
+    let mut rng = Rng::new(cfg.seed ^ 0x9E3779B97F4A7C15);
+    let range = 1usize << cfg.beta[0];
+    let mut exact = 0usize;
+    let mut class = 0usize;
+    for _ in 0..samples {
+        let x: Vec<i32> = (0..cfg.widths[0]).map(|_| rng.below(range) as i32).collect();
+        let a = forward_codes_tables(net, original, &x);
+        let b = forward_codes_tables(net, pruned, &x);
+        exact += (a == b) as usize;
+        class += (predicted_class(cfg.n_classes, &a) == predicted_class(cfg.n_classes, &b))
+            as usize;
+    }
+    (exact as f64 / samples as f64, class as f64 / samples as f64)
+}
+
+/// Argmax over output codes (step > 0, so code order = logit order);
+/// binary heads compare the logit sign.
+fn predicted_class(n_classes: usize, codes: &[i32]) -> usize {
+    if n_classes == 1 {
+        (codes[0] > 0) as usize
+    } else {
+        codes
+            .iter()
+            .enumerate()
+            .max_by_key(|&(i, &c)| (c, usize::MAX - i))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-LUT folding (pure logic rewrite of the mapped netlists).
+// ---------------------------------------------------------------------------
+
+/// Fold every layer of a mapped network to fixpoint (non-destructive —
+/// the input stays intact as the equivalence baseline).
+pub fn fold_network(mapped: &MappedNetwork, workers: usize) -> MappedNetwork {
+    let jobs: Vec<usize> = (0..mapped.layers.len()).collect();
+    let layers = parallel_map(&jobs, workers, |_, &l| fold_layer(&mapped.layers[l]));
+    MappedNetwork { layers }
+}
+
+/// Fold one layer: bounded rewrite-to-fixpoint.
+fn fold_layer(ml: &MappedLayer) -> MappedLayer {
+    let mut cur = rewrite_once(ml);
+    for _ in 1..MAX_FOLD_ITERS {
+        if !cur.1 {
+            break;
+        }
+        cur = rewrite_once(&cur.0);
+    }
+    cur.0
+}
+
+/// Dead-node marker: live = backward cone of roots ∪ poly_roots.
+fn live_nodes(ml: &MappedLayer) -> Vec<bool> {
+    let nl = &ml.netlist;
+    let mut live = vec![false; nl.nodes.len()];
+    let mut stack: Vec<NodeId> = ml
+        .roots
+        .iter()
+        .chain(ml.poly_roots.iter())
+        .flatten()
+        .copied()
+        .collect();
+    while let Some(id) = stack.pop() {
+        if std::mem::replace(&mut live[id as usize], true) {
+            continue;
+        }
+        match &nl.nodes[id as usize] {
+            Node::Input { .. } | Node::Const(_) => {}
+            Node::Lut { inputs, .. } => stack.extend(inputs.iter().copied()),
+            Node::Mux { sel, lo, hi, .. } => stack.extend([*sel, *lo, *hi]),
+        }
+    }
+    live
+}
+
+/// One rewrite pass: rebuild the layer netlist through a fresh arena with
+/// constant cofactoring, duplicate-input merging, support reduction,
+/// identity/mux collapsing, structural hashing (the arena's dedup), and
+/// single-level composition of fanout-1 LUTs into their consumer.
+/// Returns the rewritten layer and whether anything changed.
+fn rewrite_once(ml: &MappedLayer) -> (MappedLayer, bool) {
+    let old = &ml.netlist;
+    let live = live_nodes(ml);
+    let n_old = old.nodes.len();
+
+    // Fanout over live nodes; roots are protected uses.
+    let mut fanout = vec![0u32; n_old];
+    let mut only_user: Vec<Option<NodeId>> = vec![None; n_old];
+    let mut is_root = vec![false; n_old];
+    for &r in ml.roots.iter().chain(ml.poly_roots.iter()).flatten() {
+        is_root[r as usize] = true;
+    }
+    for (id, node) in old.nodes.iter().enumerate() {
+        if !live[id] {
+            continue;
+        }
+        let mut user = |i: NodeId| {
+            fanout[i as usize] += 1;
+            only_user[i as usize] = Some(id as NodeId);
+        };
+        match node {
+            Node::Input { .. } | Node::Const(_) => {}
+            Node::Lut { inputs, .. } => inputs.iter().copied().for_each(&mut user),
+            Node::Mux { sel, lo, hi, .. } => [*sel, *lo, *hi].into_iter().for_each(&mut user),
+        }
+    }
+
+    // Compose candidates: a live, non-root LUT with exactly one user,
+    // itself a LUT, where the merged distinct support fits one LUT6.
+    let mut inline_into: Vec<Option<NodeId>> = vec![None; n_old];
+    for (id, node) in old.nodes.iter().enumerate() {
+        let inputs_p = match node {
+            Node::Lut { inputs, .. } if live[id] && !is_root[id] && fanout[id] == 1 => inputs,
+            _ => continue,
+        };
+        let user = match only_user[id] {
+            Some(u) => u,
+            None => continue,
+        };
+        let inputs_c = match &old.nodes[user as usize] {
+            Node::Lut { inputs, .. } => inputs,
+            _ => continue,
+        };
+        let mut support: Vec<NodeId> = inputs_c
+            .iter()
+            .copied()
+            .filter(|&i| i != id as NodeId)
+            .chain(inputs_p.iter().copied())
+            .collect();
+        support.sort_unstable();
+        support.dedup();
+        if support.len() <= 6 {
+            inline_into[id] = Some(user);
+        }
+    }
+    // No chains in one pass: a candidate survives only if its consumer is
+    // not itself being inlined and none of its inputs are candidates (the
+    // fixpoint loop composes chains across iterations).  One inline per
+    // consumer.
+    let mut taken = vec![false; n_old];
+    for id in 0..n_old {
+        let Some(user) = inline_into[id] else { continue };
+        let bad = inline_into[user as usize].is_some()
+            || taken[user as usize]
+            || match &old.nodes[id] {
+                Node::Lut { inputs, .. } => {
+                    inputs.iter().any(|&i| inline_into[i as usize].is_some())
+                }
+                _ => true,
+            };
+        if bad {
+            inline_into[id] = None;
+        } else {
+            taken[user as usize] = true;
+        }
+    }
+    let mut inlined_input: Vec<Option<NodeId>> = vec![None; n_old];
+    for id in 0..n_old {
+        if let Some(user) = inline_into[id] {
+            inlined_input[user as usize] = Some(id as NodeId);
+        }
+    }
+
+    // Rebuild.
+    let mut new = Netlist::new();
+    let mut map: Vec<NodeId> = vec![u32::MAX; n_old];
+    let mut changed = n_old != live.iter().filter(|&&l| l).count();
+    for (id, node) in old.nodes.iter().enumerate() {
+        if !live[id] || inline_into[id].is_some() {
+            continue;
+        }
+        map[id] = match node {
+            Node::Input { wire } => new.input(*wire),
+            Node::Const(v) => new.constant(*v),
+            Node::Lut { inputs, mask } => {
+                let (nid, simplified) = match inlined_input[id] {
+                    None => {
+                        let ins: Vec<NodeId> =
+                            inputs.iter().map(|&i| map[i as usize]).collect();
+                        add_simplified_lut(&mut new, &ins, &|addr| mask >> addr & 1 == 1)
+                    }
+                    Some(p) => {
+                        let (p_inputs, p_mask) = match &old.nodes[p as usize] {
+                            Node::Lut { inputs, mask } => (inputs, *mask),
+                            _ => unreachable!("compose candidates are LUTs"),
+                        };
+                        // Slots: consumer inputs with the p slot removed,
+                        // then p's inputs.  `eval` folds p's value back
+                        // into the consumer's address.
+                        let p_slot =
+                            inputs.iter().position(|&i| i == p).expect("p feeds its user");
+                        let ins: Vec<NodeId> = inputs
+                            .iter()
+                            .enumerate()
+                            .filter(|&(s, _)| s != p_slot)
+                            .map(|(_, &i)| map[i as usize])
+                            .chain(p_inputs.iter().map(|&i| map[i as usize]))
+                            .collect();
+                        let k_c = inputs.len();
+                        let eval = move |addr: usize| {
+                            let mut p_addr = 0usize;
+                            for b in 0..p_inputs.len() {
+                                p_addr |= (addr >> (k_c - 1 + b) & 1) << b;
+                            }
+                            let p_val = p_mask >> p_addr & 1;
+                            let mut c_addr = 0usize;
+                            for (s, _) in inputs.iter().enumerate() {
+                                let bit = match s.cmp(&p_slot) {
+                                    std::cmp::Ordering::Less => addr >> s & 1,
+                                    std::cmp::Ordering::Equal => p_val as usize,
+                                    std::cmp::Ordering::Greater => addr >> (s - 1) & 1,
+                                };
+                                c_addr |= bit << s;
+                            }
+                            mask >> c_addr & 1 == 1
+                        };
+                        let r = add_simplified_lut(&mut new, &ins, &eval);
+                        (r.0, true)
+                    }
+                };
+                changed |= simplified;
+                nid
+            }
+            Node::Mux { sel, lo, hi, free } => {
+                let (s, l, h) =
+                    (map[*sel as usize], map[*lo as usize], map[*hi as usize]);
+                let collapse = if l == h {
+                    Some(l)
+                } else {
+                    match (&new.nodes[s as usize], &new.nodes[l as usize], &new.nodes[h as usize])
+                    {
+                        (Node::Const(v), ..) => Some(if *v { h } else { l }),
+                        (_, Node::Const(false), Node::Const(true)) => Some(s),
+                        _ => None,
+                    }
+                };
+                match collapse {
+                    Some(n) => {
+                        changed = true;
+                        n
+                    }
+                    None => {
+                        let inverts = matches!(new.nodes[l as usize], Node::Const(true))
+                            && matches!(new.nodes[h as usize], Node::Const(false));
+                        if inverts {
+                            changed = true;
+                            add_simplified_lut(&mut new, &[s], &|addr| addr == 0).0
+                        } else {
+                            new.add(Node::Mux { sel: s, lo: l, hi: h, free: *free })
+                        }
+                    }
+                }
+            }
+        };
+    }
+    changed |= new.nodes.len() < live.iter().filter(|&&l| l).count();
+
+    let remap = |roots: &Vec<Vec<NodeId>>| -> Vec<Vec<NodeId>> {
+        roots
+            .iter()
+            .map(|bits| bits.iter().map(|&r| map[r as usize]).collect())
+            .collect()
+    };
+    let roots = remap(&ml.roots);
+    let poly_roots = remap(&ml.poly_roots);
+    let poly_depth = poly_roots
+        .iter()
+        .flatten()
+        .map(|&r| new.depth_of(r))
+        .max()
+        .unwrap_or(0);
+    let depth = roots.iter().flatten().map(|&r| new.depth_of(r)).max().unwrap_or(0);
+    (MappedLayer { netlist: new, roots, poly_roots, poly_depth, depth }, changed)
+}
+
+/// Add a LUT over `ins` (new-arena ids; constants and duplicates
+/// allowed) computing `eval` over the slot address space.  Constant
+/// slots are cofactored away, duplicate slots merged, the remainder
+/// support-reduced; constants and identities collapse to existing
+/// nodes.  Returns the node and whether anything beyond a plain re-add
+/// happened.
+fn add_simplified_lut(
+    nl: &mut Netlist,
+    ins: &[NodeId],
+    eval: &dyn Fn(usize) -> bool,
+) -> (NodeId, bool) {
+    // Classify slots: constant value or index into the distinct var list.
+    enum Slot {
+        Fixed(bool),
+        Var(usize),
+    }
+    let mut distinct: Vec<NodeId> = Vec::with_capacity(ins.len());
+    let slots: Vec<Slot> = ins
+        .iter()
+        .map(|&i| match &nl.nodes[i as usize] {
+            Node::Const(v) => Slot::Fixed(*v),
+            _ => Slot::Var(match distinct.iter().position(|&d| d == i) {
+                Some(p) => p,
+                None => {
+                    distinct.push(i);
+                    distinct.len() - 1
+                }
+            }),
+        })
+        .collect();
+    let m = distinct.len();
+    assert!(m <= 6, "simplified LUT support must fit one LUT6");
+    let mut bits = 0u64;
+    for a in 0..(1usize << m) {
+        let mut addr = 0usize;
+        for (s, slot) in slots.iter().enumerate() {
+            let bit = match slot {
+                Slot::Fixed(v) => *v as usize,
+                Slot::Var(d) => a >> d & 1,
+            };
+            addr |= bit << s;
+        }
+        if eval(addr) {
+            bits |= 1 << a;
+        }
+    }
+    let f = BoolFn::from_bits(m as u32, vec![bits]);
+    let (red, kept) = f.support_reduce();
+    if let Some(v) = red.is_const() {
+        return (nl.constant(v), true);
+    }
+    let wires: Vec<NodeId> = kept.iter().map(|&k| distinct[k as usize]).collect();
+    if red.n == 1 && red.get(1) && !red.get(0) {
+        return (wires[0], true); // identity: alias the input wire
+    }
+    let simplified = wires.len() < ins.len();
+    (nl.add(Node::Lut { inputs: wires, mask: red.lut_mask() }), simplified)
+}
+
+/// Cone-restricted word-op counts (LUTs, muxes) — what the engines
+/// actually execute: the backward cone of the output roots (orphaned
+/// poly sub-bits are dead there, matching `sim::bitslice`'s flatten).
+pub fn cone_ops(ml: &MappedLayer) -> (usize, usize) {
+    let nl = &ml.netlist;
+    let mut seen = vec![false; nl.nodes.len()];
+    let mut stack: Vec<NodeId> = ml.roots.iter().flatten().copied().collect();
+    let (mut luts, mut muxes) = (0usize, 0usize);
+    while let Some(id) = stack.pop() {
+        if std::mem::replace(&mut seen[id as usize], true) {
+            continue;
+        }
+        match &nl.nodes[id as usize] {
+            Node::Input { .. } | Node::Const(_) => {}
+            Node::Lut { inputs, .. } => {
+                luts += 1;
+                stack.extend(inputs.iter().copied());
+            }
+            Node::Mux { sel, lo, hi, .. } => {
+                muxes += 1;
+                stack.extend([*sel, *lo, *hi]);
+            }
+        }
+    }
+    (luts, muxes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lut::tables::{compile_network, LayerTables, NeuronTables};
+    use crate::nn::config;
+    use crate::util::rng::Rng;
+
+    /// The (A, degree) grid shared with the engine bit-exactness suites.
+    const GRID: [(usize, u32); 6] = [(1, 1), (2, 1), (3, 1), (1, 2), (2, 2), (2, 3)];
+
+    fn grid_net(a: usize, d: u32) -> Network {
+        let cfg = config::uniform("t", &[8, 6, 3], 2, 2, 3, 3, 3, d, a, 3);
+        Network::random(&cfg, &mut Rng::new(7 + a as u64 * 31 + d as u64))
+    }
+
+    #[test]
+    fn level_parse_display_roundtrip() {
+        for l in [OptLevel::None, OptLevel::Fold, OptLevel::FoldDc, OptLevel::All] {
+            assert_eq!(OptLevel::parse(&l.to_string()), Some(l));
+        }
+        assert_eq!(OptLevel::parse("garbage"), None);
+        assert_eq!(OptLevel::resolve(Some(OptLevel::All)), OptLevel::All);
+        assert_eq!(OptLevel::default(), OptLevel::FoldDc);
+        assert!(!OptLevel::None.folds() && !OptLevel::None.dc());
+        assert!(OptLevel::Fold.folds() && !OptLevel::Fold.dc());
+        assert!(OptLevel::FoldDc.dc() && !OptLevel::FoldDc.prunes());
+        assert!(OptLevel::All.prunes());
+    }
+
+    /// Satellite: layer-0 inputs span the full quantizer range — the
+    /// unsigned quantizer clamps into [0, 2^β) and hits every code.
+    #[test]
+    fn reachable_layer0_is_full_range() {
+        let net = grid_net(2, 2);
+        let beta = net.cfg.beta[0];
+        let mut seen = vec![false; 1usize << beta];
+        for i in 0..=1000 {
+            let x = i as f32 / 1000.0;
+            let c = crate::nn::quant::unsigned_code(x, beta, 1.0);
+            assert!((0..(1 << beta)).contains(&c), "clamped into range");
+            seen[c as usize] = true;
+        }
+        // Out-of-range values clamp, never escape the code range.
+        assert_eq!(crate::nn::quant::unsigned_code(-5.0, beta, 1.0), 0);
+        assert_eq!(crate::nn::quant::unsigned_code(7.5, beta, 1.0), (1 << beta) - 1);
+        assert!(seen.iter().all(|&s| s), "every code is reachable at the input");
+        let tables = compile_network(&net, 1);
+        let reach = derive_reachable(&net, &tables);
+        for neuron in &reach.boundaries[0] {
+            assert!(neuron.iter().all(|&b| b));
+        }
+    }
+
+    /// Satellite: the derived set is exactly the table image — full
+    /// range, clamped range, and degenerate single-value geometries.
+    #[test]
+    fn reachable_sets_pin_table_images() {
+        // Hand-built 1-layer network shell: 2 inputs (β=2), 1 neuron,
+        // fan 2, A=1 → one fused 4-bit table, out_bits 2.
+        let cfg = config::uniform("r", &[2, 1], 2, 2, 2, 2, 2, 1, 1, 2);
+        let net = Network::random(&cfg, &mut Rng::new(3));
+        let mk = |words: Vec<u32>| NetworkTables {
+            layers: vec![LayerTables {
+                neurons: vec![NeuronTables {
+                    poly: vec![TruthTable {
+                        n_inputs: 4,
+                        out_bits: 2,
+                        signed_out: true,
+                        words,
+                    }],
+                    adder: None,
+                }],
+                in_bits: 2,
+                fan: 2,
+                sub_bits: 3,
+                out_bits: 2,
+                signed_out: true,
+            }],
+            a_factor: 1,
+            total_words: 16,
+        };
+        // Full range: identity-ish table emitting all 4 codes.
+        let full = mk((0..16).map(|a| (a % 4) as u32).collect());
+        let r = derive_reachable(&net, &full);
+        assert_eq!(r.boundaries[1][0], vec![true; 4]);
+        // Clamped range: only codes {1, 2} ever appear.
+        let clamped = mk((0..16).map(|a| 1 + (a % 2) as u32).collect());
+        let r = derive_reachable(&net, &clamped);
+        assert_eq!(r.boundaries[1][0], vec![false, true, true, false]);
+        // Degenerate: constant table → a single reachable code.
+        let constant = mk(vec![3; 16]);
+        let r = derive_reachable(&net, &constant);
+        assert_eq!(r.boundaries[1][0], vec![false, false, false, true]);
+    }
+
+    /// Reachability is sound (a superset of the brute-force table image at
+    /// every boundary) and exact where fields are jointly independent —
+    /// boundary 0 (inputs) and boundary 1 (layer 0 reads the raw inputs,
+    /// which take every combination).  Deeper boundaries may be strict
+    /// supersets: the per-field product ignores correlations between
+    /// neurons of the same layer.
+    #[test]
+    fn reachable_matches_brute_force_enumeration() {
+        let cfg = config::uniform("b", &[3, 2, 2], 2, 2, 2, 3, 2, 2, 1, 3);
+        let net = Network::random(&cfg, &mut Rng::new(11));
+        let tables = compile_network(&net, 1);
+        let reach = derive_reachable(&net, &tables);
+        // Enumerate every input-code vector (2^(2*3) = 64) through the
+        // tables — the same semantics the derivation abstracts.
+        let mut seen: Vec<Vec<Vec<bool>>> = reach
+            .boundaries
+            .iter()
+            .map(|b| b.iter().map(|s| vec![false; s.len()]).collect())
+            .collect();
+        let range = 1usize << cfg.beta[0];
+        for combo in 0..range.pow(3) {
+            let x: Vec<i32> =
+                (0..3u32).map(|i| ((combo / range.pow(i)) % range) as i32).collect();
+            for (src, &c) in x.iter().enumerate() {
+                seen[0][src][c as usize] = true;
+            }
+            let mut codes = x;
+            for (l, lt) in tables.layers.iter().enumerate() {
+                let mut next = Vec::with_capacity(lt.neurons.len());
+                for (j, neuron) in lt.neurons.iter().enumerate() {
+                    let g: Vec<i32> = net.layers[l].indices[0][j]
+                        .iter()
+                        .map(|&s| codes[s])
+                        .collect();
+                    let addr = crate::lut::tables::pack_poly_addr(&g, lt.in_bits);
+                    let raw = neuron.poly[0].words[addr] as usize
+                        & ((1usize << lt.out_bits) - 1);
+                    seen[l + 1][j][raw] = true;
+                    next.push(neuron.poly[0].code_at(addr));
+                }
+                codes = next;
+            }
+        }
+        for (b, layer) in seen.iter().enumerate() {
+            for (j, s) in layer.iter().enumerate() {
+                for (c, &hit) in s.iter().enumerate() {
+                    assert!(
+                        !hit || reach.boundaries[b][j][c],
+                        "unsound: boundary {b} neuron {j} code {c} observed but not derived"
+                    );
+                }
+            }
+        }
+        assert_eq!(seen[0], reach.boundaries[0], "inputs span the full range");
+        assert_eq!(seen[1], reach.boundaries[1], "layer 0 image is exact");
+    }
+
+    /// fold+dc is bit-exact: the optimized tables agree with the
+    /// original ones on every runtime-reachable path, for the whole
+    /// (A, degree) grid.
+    #[test]
+    fn fold_dc_tables_bit_exact_on_grid() {
+        for &(a, d) in &GRID {
+            let net = grid_net(a, d);
+            let tables = compile_network(&net, 1);
+            let opt = optimize(&net, tables.clone(), OptLevel::FoldDc, 1);
+            let mut rng = Rng::new(0xB17 + a as u64);
+            let range = 1usize << net.cfg.beta[0];
+            for _ in 0..200 {
+                let x: Vec<i32> =
+                    (0..net.cfg.widths[0]).map(|_| rng.below(range) as i32).collect();
+                assert_eq!(
+                    forward_codes_tables(&net, &opt.tables, &x),
+                    net.forward_codes(&x),
+                    "A={a} degree={d}"
+                );
+            }
+            assert!(opt.report.ops_after() <= opt.report.ops_before(), "A={a} d={d}");
+            assert!(opt.baseline.is_some());
+        }
+    }
+
+    /// The folded netlist computes the same function as its unfolded
+    /// baseline on random 64-sample words (the verify-section check, run
+    /// here over the grid).
+    #[test]
+    fn folded_netlist_equivalent_to_baseline() {
+        for &(a, d) in &GRID {
+            let net = grid_net(a, d);
+            let tables = compile_network(&net, 1);
+            let opt = optimize(&net, tables, OptLevel::FoldDc, 1);
+            let base = opt.baseline.as_ref().unwrap();
+            let mut rng = Rng::new(0xF01D);
+            for (l, (fl, bl)) in opt.mapped.layers.iter().zip(&base.layers).enumerate() {
+                let seeds: Vec<u64> = (0..256).map(|_| rng.next_u64()).collect();
+                let wires = |w: u32| seeds[w as usize % seeds.len()];
+                let fv = fl.netlist.eval64(&wires);
+                let bv = bl.netlist.eval64_reference(&wires);
+                for (j, (fbits, bbits)) in fl.roots.iter().zip(&bl.roots).enumerate() {
+                    for (b, (&fr, &br)) in fbits.iter().zip(bbits).enumerate() {
+                        assert_eq!(
+                            fv[fr as usize], bv[br as usize],
+                            "A={a} d={d} layer {l} neuron {j} bit {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Folding strictly reduces (or preserves) executed ops and never
+    /// changes root widths or wire numbering semantics.
+    #[test]
+    fn fold_reduces_ops_and_preserves_shape() {
+        let net = grid_net(2, 2);
+        let tables = compile_network(&net, 1);
+        let opt = optimize(&net, tables, OptLevel::FoldDc, 1);
+        for (l, d) in opt.report.layers.iter().enumerate() {
+            assert!(d.ops_after() <= d.ops_before(), "layer {l} grew");
+        }
+        let base = opt.baseline.as_ref().unwrap();
+        for (fl, bl) in opt.mapped.layers.iter().zip(&base.layers) {
+            assert_eq!(fl.roots.len(), bl.roots.len());
+            for (f, b) in fl.roots.iter().zip(&bl.roots) {
+                assert_eq!(f.len(), b.len());
+            }
+            assert!(fl.depth <= bl.depth, "fold must not deepen the layer");
+        }
+    }
+
+    /// Pruning stays behind the explicit opt-in and reports its
+    /// agreement delta; fold+dc never reports one.
+    #[test]
+    fn pruning_is_opt_in_and_reports_agreement() {
+        let net = grid_net(3, 1);
+        let tables = compile_network(&net, 1);
+        let dc = optimize(&net, tables.clone(), OptLevel::FoldDc, 1);
+        assert_eq!(dc.report.pruned_subs, 0);
+        assert!(dc.report.exact_agreement.is_none());
+        let all = optimize(&net, tables, OptLevel::All, 1);
+        assert_eq!(all.report.level, OptLevel::All);
+        if all.report.pruned_subs > 0 {
+            let exact = all.report.exact_agreement.unwrap();
+            let class = all.report.class_agreement.unwrap();
+            assert!((0.0..=1.0).contains(&exact));
+            assert!(class >= exact, "class agreement can only be looser");
+        } else {
+            assert!(all.report.exact_agreement.is_none());
+        }
+    }
+
+    /// Pruning with an aggressive threshold rewrites sub-neuron tables
+    /// to constants and the pipeline still produces runnable mappings.
+    #[test]
+    fn aggressive_pruning_rewrites_tables() {
+        let net = grid_net(3, 1);
+        let tables = compile_network(&net, 1);
+        let original = tables.clone();
+        let mut pruned_tables = tables;
+        let reach = derive_reachable(&net, &pruned_tables);
+        let pruned = prune_low_contribution(&net, &mut pruned_tables, &reach, 1.0);
+        assert!(pruned > 0, "frac=1.0 prunes every non-widest sub-neuron");
+        let (exact, class) = measure_agreement(&net, &original, &pruned_tables, 64);
+        assert!((0.0..=1.0).contains(&exact));
+        assert!((0.0..=1.0).contains(&class));
+        // Layout preserved: same table counts and sizes.
+        for (lo, ln) in original.layers.iter().zip(&pruned_tables.layers) {
+            for (no, nn) in lo.neurons.iter().zip(&ln.neurons) {
+                assert_eq!(no.poly.len(), nn.poly.len());
+                for (to, tn) in no.poly.iter().zip(&nn.poly) {
+                    assert_eq!(to.words.len(), tn.words.len());
+                }
+            }
+        }
+    }
+
+    /// `none` is a true no-op: tables untouched, before == after.
+    #[test]
+    fn level_none_is_identity() {
+        let net = grid_net(2, 1);
+        let tables = compile_network(&net, 1);
+        let words: Vec<Vec<u32>> = tables.layers[0]
+            .neurons
+            .iter()
+            .flat_map(|n| n.poly.iter().map(|t| t.words.clone()))
+            .collect();
+        let opt = optimize(&net, tables, OptLevel::None, 1);
+        assert_eq!(opt.report.ops_before(), opt.report.ops_after());
+        assert!(opt.baseline.is_none());
+        let after: Vec<Vec<u32>> = opt.tables.layers[0]
+            .neurons
+            .iter()
+            .flat_map(|n| n.poly.iter().map(|t| t.words.clone()))
+            .collect();
+        assert_eq!(words, after);
+    }
+
+    /// The DC rewrite is deterministic (fingerprint handshake safety):
+    /// two runs over the same tables produce identical words.
+    #[test]
+    fn dc_rewrite_is_deterministic() {
+        let net = grid_net(2, 2);
+        let tables = compile_network(&net, 1);
+        let a = optimize(&net, tables.clone(), OptLevel::FoldDc, 1);
+        let b = optimize(&net, tables, OptLevel::FoldDc, 2);
+        for (la, lb) in a.tables.layers.iter().zip(&b.tables.layers) {
+            for (na, nb) in la.neurons.iter().zip(&lb.neurons) {
+                for (ta, tb) in na.poly.iter().zip(&nb.poly) {
+                    assert_eq!(ta.words, tb.words);
+                }
+                assert_eq!(
+                    na.adder.as_ref().map(|t| &t.words),
+                    nb.adder.as_ref().map(|t| &t.words)
+                );
+            }
+        }
+    }
+
+    /// render_table shows every layer plus a total row.
+    #[test]
+    fn report_table_renders() {
+        let net = grid_net(2, 1);
+        let tables = compile_network(&net, 1);
+        let opt = optimize(&net, tables, OptLevel::FoldDc, 1);
+        let s = opt.report.render_table();
+        assert!(s.contains("netlist-opt [fold+dc]"));
+        assert!(s.contains("total"));
+        assert!(s.contains("L0") && s.contains("L1"));
+    }
+
+    /// add_simplified_lut: constants cofactor away, duplicates merge,
+    /// identities alias.
+    #[test]
+    fn simplified_lut_collapses() {
+        let mut nl = Netlist::new();
+        let a = nl.input(0);
+        let t = nl.constant(true);
+        // f(a, 1) where f = AND → identity on a.
+        let (id, simplified) =
+            add_simplified_lut(&mut nl, &[a, t], &|addr| addr & 0b11 == 0b11);
+        assert_eq!(id, a);
+        assert!(simplified);
+        // f(a, a) where f = XOR → constant false.
+        let (id, _) = add_simplified_lut(&mut nl, &[a, a], &|addr| {
+            (addr & 1) ^ (addr >> 1 & 1) == 1
+        });
+        assert!(matches!(nl.nodes[id as usize], Node::Const(false)));
+        // A real 2-input function stays a LUT.
+        let b = nl.input(1);
+        let (id, simplified) =
+            add_simplified_lut(&mut nl, &[a, b], &|addr| addr & 0b11 == 0b11);
+        assert!(matches!(nl.nodes[id as usize], Node::Lut { .. }));
+        assert!(!simplified);
+    }
+}

@@ -1351,6 +1351,11 @@ pub(crate) fn shard_fingerprint(
     let cfg = &pnet.cfg;
     let mut h = Fnv::new();
     h.write_u64(shards as u64);
+    // Fold level changes the cones the bitslice kernel schedules (the
+    // table-word hashing below already catches DC/prune divergence), so a
+    // coordinator↔worker mismatch must fail the handshake, not corrupt
+    // the needs schedules.
+    h.write_u64(crate::lut::OptLevel::resolve(None).folds() as u64);
     h.write_u64(cfg.a_factor as u64);
     h.write_u64(cfg.degree as u64);
     for &w in &cfg.widths {
@@ -1675,7 +1680,13 @@ pub(crate) fn bits_kernel_of(
     shards: usize,
     workers: usize,
 ) -> BitsliceKernel {
-    let mapped = map_network_of(pnet, ptables, workers);
+    let mut mapped = map_network_of(pnet, ptables, workers);
+    // Same resolution as the FrozenModel compile path: the sharded engine
+    // executes folded cones at any level above `none` (the tables were
+    // already rewritten by the caller at the same resolved level).
+    if crate::lut::OptLevel::resolve(None).folds() {
+        mapped = crate::lut::opt::fold_network(&mapped, workers);
+    }
     build_bitslice_kernel(pnet, ptables, &mapped, shards.max(1))
 }
 

@@ -75,6 +75,8 @@ pub enum ArtifactKind {
     Hazard,
     /// A remote shard's `wire_plan` needs/result schedule.
     Wire,
+    /// A folded (`lut::opt`) netlist checked against its unfolded baseline.
+    NetlistOpt,
 }
 
 impl fmt::Display for ArtifactKind {
@@ -84,6 +86,7 @@ impl fmt::Display for ArtifactKind {
             ArtifactKind::OpStream => "op-stream",
             ArtifactKind::Hazard => "hazard-schedule",
             ArtifactKind::Wire => "wire-plan",
+            ArtifactKind::NetlistOpt => "netlist-opt",
         })
     }
 }
@@ -1035,6 +1038,95 @@ pub fn verify_shard_streams(a: &ShardedArtifacts) -> Vec<Violation> {
     check_kernel_streams(&a.bits)
 }
 
+// ---------------------------------------------------------------------------
+// Checker 5: netlist-opt fold equivalence
+// ---------------------------------------------------------------------------
+
+/// Fresh 64-sample random wire words fed per equivalence round.
+const OPT_EQUIV_ROUNDS: usize = 4;
+/// Random wire-word pool size (wires index it modulo the length, so both
+/// netlists see identical values whatever wire universe they read).
+const OPT_EQUIV_WIRES: usize = 1024;
+
+/// Random-vector equivalence of each folded (`lut::opt`) layer netlist
+/// against its unfolded baseline — a mapping of the same post-rewrite
+/// tables, so any disagreement is the fold's fault.  The baseline side
+/// runs [`crate::lut::netlist::Netlist::eval64_reference`], the
+/// independent per-sample address walk, so a bug in the shared word-level
+/// LUT kernel cannot mask a bad fold.  `OPT_EQUIV_ROUNDS` rounds of 64
+/// samples per layer.
+pub fn verify_opt(
+    baseline: &crate::lut::MappedNetwork,
+    folded: &crate::lut::MappedNetwork,
+    seed: u64,
+) -> Vec<Violation> {
+    let art = ArtifactKind::NetlistOpt;
+    let mut out = Vec::new();
+    if baseline.layers.len() != folded.layers.len() {
+        out.push(v(
+            art,
+            "layer-count",
+            0,
+            0,
+            format!("{} baseline layers vs {} folded", baseline.layers.len(), folded.layers.len()),
+        ));
+        return out;
+    }
+    let mut rng = crate::util::rng::Rng::new(seed);
+    for (l, (bl, fl)) in baseline.layers.iter().zip(&folded.layers).enumerate() {
+        if bl.roots.len() != fl.roots.len() {
+            out.push(v(
+                art,
+                "root-shape",
+                l,
+                0,
+                format!("{} baseline neurons vs {} folded", bl.roots.len(), fl.roots.len()),
+            ));
+            continue;
+        }
+        let mut shape_ok = true;
+        for (j, (rb, rf)) in bl.roots.iter().zip(&fl.roots).enumerate() {
+            if rb.len() != rf.len() {
+                out.push(v(
+                    art,
+                    "root-shape",
+                    l,
+                    j,
+                    format!("neuron {j}: {} baseline root bits vs {} folded", rb.len(), rf.len()),
+                ));
+                shape_ok = false;
+            }
+        }
+        if !shape_ok {
+            continue;
+        }
+        for round in 0..OPT_EQUIV_ROUNDS {
+            let words: Vec<u64> = (0..OPT_EQUIV_WIRES).map(|_| rng.next_u64()).collect();
+            let wires = |w: u32| words[w as usize % OPT_EQUIV_WIRES];
+            let bv = bl.netlist.eval64_reference(&wires);
+            let fv = fl.netlist.eval64(&wires);
+            for (j, (rb, rf)) in bl.roots.iter().zip(&fl.roots).enumerate() {
+                for (bit, (&nb, &nf)) in rb.iter().zip(rf).enumerate() {
+                    let (wb, wf) = (bv[nb as usize], fv[nf as usize]);
+                    if wb != wf {
+                        out.push(v(
+                            art,
+                            "fold-equivalence",
+                            l,
+                            j,
+                            format!(
+                                "neuron {j} bit {bit} round {round}: \
+                                 baseline {wb:#018x} vs folded {wf:#018x}"
+                            ),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
 /// Verify the two whole-model artifacts every `FrozenModel` carries.
 pub fn verify_frozen(plan: &EvalPlan, bits: &BitsliceNet) -> Report {
     let mut r = Report::default();
@@ -1556,6 +1648,55 @@ mod tests {
         assert!(wp.needs[1].is_empty());
         wp.needs[1].push((1, 2..3));
         assert!(has(&check_wire_plan(&k, 0, &wp), "wire-flightless"));
+    }
+
+    // ---- netlist-opt fold equivalence ----
+
+    #[test]
+    fn fold_equivalence_passes_on_clean_folds() {
+        for (a, d) in [(1usize, 1u32), (2, 1), (1, 2), (2, 2)] {
+            let (net, tables) = grid_net(a, d);
+            let baseline = crate::lut::map_network_of(&net, &tables, 2);
+            let folded = crate::lut::opt::fold_network(&baseline, 2);
+            let vs = verify_opt(&baseline, &folded, 42);
+            assert!(vs.is_empty(), "a={a} d={d}: {vs:?}");
+        }
+    }
+
+    #[test]
+    fn fold_equivalence_rejects_inverted_root_lut() {
+        let (net, tables) = grid_net(1, 2);
+        let baseline = crate::lut::map_network_of(&net, &tables, 2);
+        let mut folded = crate::lut::opt::fold_network(&baseline, 2);
+        // Invert the mask of a LUT sitting directly at a root: the folded
+        // output disagrees on every sample.
+        let layer = &mut folded.layers[0];
+        let root = layer
+            .roots
+            .iter()
+            .flatten()
+            .copied()
+            .find(|&r| {
+                matches!(layer.netlist.nodes[r as usize], crate::lut::netlist::Node::Lut { .. })
+            })
+            .expect("some root is a LUT");
+        if let crate::lut::netlist::Node::Lut { mask, .. } =
+            &mut layer.netlist.nodes[root as usize]
+        {
+            *mask = !*mask;
+        }
+        let vs = verify_opt(&baseline, &folded, 42);
+        assert!(has(&vs, "fold-equivalence"), "{vs:?}");
+    }
+
+    #[test]
+    fn fold_equivalence_rejects_root_shape_mismatch() {
+        let (net, tables) = grid_net(1, 1);
+        let baseline = crate::lut::map_network_of(&net, &tables, 2);
+        let mut folded = crate::lut::opt::fold_network(&baseline, 2);
+        folded.layers[1].roots.pop();
+        let vs = verify_opt(&baseline, &folded, 7);
+        assert!(has(&vs, "root-shape"), "{vs:?}");
     }
 
     // ---- diagnostics are data, and the gate renders them ----

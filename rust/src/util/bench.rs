@@ -382,13 +382,33 @@ pub struct ServeRecord {
     pub p99_us: f64,
 }
 
-/// Accumulator for [`BenchRecord`]s / [`ServeRecord`]s with a JSON
-/// emitter, env-gated via [`BENCH_JSON_ENV`] so normal bench runs stay
-/// file-free.
+/// One netlist-optimization record: a (geometry, opt-level) point pairing
+/// the word-op delta with the bitslice throughput measured at that level —
+/// the unit of the `BENCH_netlist.json` trajectory.
+#[derive(Debug, Clone)]
+pub struct NetlistRecord {
+    /// Model geometry (e.g. `"nid-t4"`).
+    pub geometry: String,
+    /// Optimization level spelling (`"none"`, `"fold"`, `"fold+dc"`, `"all"`).
+    pub level: String,
+    /// Total word-ops of the mapped netlists before the pipeline.
+    pub ops_before: usize,
+    /// Total word-ops the engines execute after it.
+    pub ops_after: usize,
+    /// Bitslice samples/s measured on the level's compiled op streams.
+    pub samples_per_sec: f64,
+    /// Median wall-clock time per measured call, nanoseconds.
+    pub median_ns: f64,
+}
+
+/// Accumulator for [`BenchRecord`]s / [`ServeRecord`]s /
+/// [`NetlistRecord`]s with a JSON emitter, env-gated via
+/// [`BENCH_JSON_ENV`] so normal bench runs stay file-free.
 #[derive(Debug, Default)]
 pub struct BenchJournal {
     records: Vec<BenchRecord>,
     serve: Vec<ServeRecord>,
+    netlist: Vec<NetlistRecord>,
 }
 
 impl BenchJournal {
@@ -415,12 +435,18 @@ impl BenchJournal {
         self.serve.push(r);
     }
 
+    /// Record one netlist-optimization point (built by the caller from an
+    /// `lut::opt::OptReport` plus the throughput measured at its level).
+    pub fn record_netlist(&mut self, r: NetlistRecord) {
+        self.netlist.push(r);
+    }
+
     pub fn len(&self) -> usize {
-        self.records.len() + self.serve.len()
+        self.records.len() + self.serve.len() + self.netlist.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.records.is_empty() && self.serve.is_empty()
+        self.records.is_empty() && self.serve.is_empty() && self.netlist.is_empty()
     }
 
     /// The journal as a JSON document:
@@ -461,6 +487,17 @@ impl BenchJournal {
             o.insert("p99_us", r.p99_us);
             Json::Obj(o)
         }));
+        // Netlist-opt records are marked by the `level` key.
+        records.extend(self.netlist.iter().map(|r| {
+            let mut o = JsonObj::new();
+            o.insert("geometry", r.geometry.as_str());
+            o.insert("level", r.level.as_str());
+            o.insert("ops_before", r.ops_before);
+            o.insert("ops_after", r.ops_after);
+            o.insert("samples_per_sec", r.samples_per_sec);
+            o.insert("median_ns", r.median_ns);
+            Json::Obj(o)
+        }));
         root.insert("records", Json::Arr(records));
         Json::Obj(root)
     }
@@ -490,7 +527,13 @@ impl BenchJournal {
 
 /// Render an aligned text table (paper-style rows) to stdout.
 pub fn table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
-    println!("\n=== {title} ===");
+    print!("{}", table_string(title, headers, rows));
+}
+
+/// [`table`], rendered into a `String` (for reports embedded in other
+/// output, e.g. `lut::opt::OptReport::render_table`).
+pub fn table_string(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = format!("\n=== {title} ===\n");
     let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
     for row in rows {
         for (i, cell) in row.iter().enumerate() {
@@ -499,19 +542,21 @@ pub fn table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
             }
         }
     }
-    let line = |cells: &[String]| {
+    let line = |cells: &[String], out: &mut String| {
         let mut s = String::new();
         for (i, c) in cells.iter().enumerate() {
             s.push_str(&format!("{:<w$}  ", c, w = widths.get(i).copied().unwrap_or(8)));
         }
-        println!("{}", s.trim_end());
+        out.push_str(s.trim_end());
+        out.push('\n');
     };
-    line(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>());
-    line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>());
+    line(&headers.iter().map(|h| h.to_string()).collect::<Vec<_>>(), &mut out);
+    line(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>(), &mut out);
     for row in rows {
-        line(row);
+        line(row, &mut out);
     }
-    println!();
+    out.push('\n');
+    out
 }
 
 #[cfg(test)]
@@ -628,6 +673,30 @@ mod tests {
         assert_eq!(r0.get("deadline_us").unwrap().as_usize().unwrap(), 200);
         assert_eq!(r0.get("shed").unwrap().as_usize().unwrap(), 10);
         assert!(r0.get("p99_us").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn netlist_records_share_the_journal_schema() {
+        let mut j = BenchJournal::new();
+        j.record_netlist(NetlistRecord {
+            geometry: "nid-t4".into(),
+            level: "fold+dc".into(),
+            ops_before: 120,
+            ops_after: 90,
+            samples_per_sec: 1e6,
+            median_ns: 64_000.0,
+        });
+        assert_eq!(j.len(), 1);
+        assert!(!j.is_empty());
+        let doc = Json::parse(&j.to_json().to_string_pretty()).expect("well-formed journal");
+        let root = doc.as_obj().expect("object root");
+        assert_eq!(root.get("schema").unwrap().as_str().unwrap(), "polylut-bench-v1");
+        let recs = root.get("records").unwrap().as_arr().expect("records array");
+        let r0 = recs[0].as_obj().unwrap();
+        assert_eq!(r0.get("level").unwrap().as_str().unwrap(), "fold+dc");
+        assert_eq!(r0.get("ops_before").unwrap().as_usize().unwrap(), 120);
+        assert_eq!(r0.get("ops_after").unwrap().as_usize().unwrap(), 90);
+        assert!(r0.get("samples_per_sec").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -33,7 +33,13 @@ pub fn emit_project_with(
 ) -> Result<Vec<PathBuf>> {
     std::fs::create_dir_all(out_dir)
         .with_context(|| format!("creating {}", out_dir.display()))?;
-    let tables = compile_network(net, default_workers());
+    let mut tables = compile_network(net, default_workers());
+    // Same table-level rewrites the serving engines execute (resolved via
+    // `POLYLUT_NETLIST_OPT`, published by `rtl --netlist-opt`): don't-care
+    // propagation is bit-exact on every reachable address, so the
+    // testbench golden vectors stay valid either way.
+    let level = crate::lut::OptLevel::resolve(None);
+    crate::lut::opt::optimize_tables(net, &mut tables, level);
     let mut files = Vec::new();
     for l in 0..tables.layers.len() {
         let path = out_dir.join(format!("{}_layer{l}.v", module_name(net)));
