@@ -1,0 +1,166 @@
+//! Wire v3 pipeline bench: streamed single-sample serving over loopback
+//! TCP with remote shards, sweeping the epoch window {1, 4, 16} × link
+//! multiplexing {off, on} on the nid-t4 geometry (ROADMAP §Perf, wire
+//! handoff v3 acceptance point).
+//!
+//!   cargo bench --bench wire_pipeline
+//!
+//! Shape: S = 3 intra-sample shards, shard 0 local, shards 1 and 2 hosted
+//! by ONE in-process `ShardWorkerHost` behind 127.0.0.1 — so with mux on,
+//! a single TCP connection carries all four (engine, shard) sessions.
+//! Eight closed-loop client threads stream single samples through the
+//! sharded plan engine; W = 1 serializes them to one epoch in flight
+//! (lock-step), W = 16 lets the epoch ring overlap their epochs
+//! end-to-end.  Every sample is asserted bit-exact against
+//! `Network::forward_codes` inside the measured pass, every config's link
+//! topology and in-flight high-water mark are asserted after it, and the
+//! W=16-vs-W=1 speedup is printed.  POLYLUT_BENCH_JSON=<path> writes the
+//! records as a `polylut-bench-v1` journal (the CI bench leg emits
+//! `BENCH_wire.json` and asserts the speedup > 1.0 from it).
+//! POLYLUT_BENCH_QUICK=1 trims budgets.
+
+// Benches are a separate crate: clippy's allow-unwrap-in-tests doesn't
+// reach them, so the workspace unwrap_used deny is lifted per-file.
+#![allow(clippy::unwrap_used)]
+
+use std::sync::Arc;
+
+use polylut_add::nn::config;
+use polylut_add::nn::network::Network;
+use polylut_add::sim::{
+    ShardPlacement, ShardWorkerHost, ShardedModel, WireConfig, DEFAULT_WIRE_RETRIES,
+};
+use polylut_add::util::bench::{Bench, BenchJournal, Stats};
+use polylut_add::util::pool::default_workers;
+use polylut_add::util::rng::Rng;
+
+/// Intra-sample shard count: shard 0 local, shards 1.. on the worker host.
+const SHARDS: usize = 3;
+/// Concurrent closed-loop client threads streaming single samples.
+const STREAMS: usize = 8;
+
+/// One measured pass: `STREAMS` clients stream the whole sample set
+/// through the sharded plan engine, single sample per call, each answer
+/// asserted bit-exact in-line.  Returns the samples retired.
+fn stream_pass(model: &ShardedModel, xs: &[Vec<i32>], want: &[Vec<i32>]) -> usize {
+    std::thread::scope(|scope| {
+        for t in 0..STREAMS {
+            scope.spawn(move || {
+                let mut i = t;
+                while i < xs.len() {
+                    let got = model.plan.forward_codes(&xs[i]).expect("streamed serve");
+                    assert_eq!(got, want[i], "sample {i} must stay bit-exact");
+                    i += STREAMS;
+                }
+            });
+        }
+    });
+    xs.len()
+}
+
+fn main() {
+    let quick = std::env::var("POLYLUT_BENCH_QUICK").is_ok();
+    let b = Bench::default();
+    let mut journal = BenchJournal::new();
+
+    let cfg = config::nid_add2();
+    let net = Network::random(&cfg, &mut Rng::new(0x317E));
+    let tables = polylut_add::lut::compile_network(&net, default_workers());
+
+    // One in-process worker host on loopback carries both remote shards
+    // (the `polylut shard-worker` process path is covered by the
+    // wire_loopback integration test; in-process keeps the bench
+    // self-contained and the socket cost identical).
+    let host = Arc::new(ShardWorkerHost::compile(&net, &tables, SHARDS, default_workers()));
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    {
+        let host = host.clone();
+        std::thread::spawn(move || host.serve(listener));
+    }
+    let placement: ShardPlacement =
+        (0..SHARDS).map(|s| (s > 0).then(|| addr.clone())).collect();
+
+    let n_samples = if quick { 64 } else { 240 };
+    let mut rng = Rng::new(7);
+    let xs: Vec<Vec<i32>> = (0..n_samples)
+        .map(|_| {
+            let x: Vec<f32> = (0..cfg.widths[0]).map(|_| rng.f32()).collect();
+            net.quantize_input(&x)
+        })
+        .collect();
+    let want: Vec<Vec<i32>> = xs.iter().map(|x| net.forward_codes(x)).collect();
+
+    let mut results: Vec<(usize, bool, Stats)> = Vec::new();
+    for mux in [false, true] {
+        for window in [1usize, 4, 16] {
+            let wire = WireConfig { window, retries: DEFAULT_WIRE_RETRIES, mux };
+            let model = ShardedModel::compile_placed_wire(
+                &net,
+                &tables,
+                SHARDS,
+                default_workers(),
+                &placement,
+                None,
+                wire,
+            )
+            .expect("loopback shard worker");
+            let label = format!("wire/W{window}/mux-{}", if mux { "on" } else { "off" });
+            let st = b.measure(
+                &format!("{label} stream x{n_samples} ({STREAMS} clients, S={SHARDS}, nid-t4)"),
+                || stream_pass(&model, &xs, &want),
+            );
+            println!("  -> {:.0} samples/s streamed", st.throughput(n_samples as f64));
+
+            assert!(!model.faulted(), "{label}: no degraded batches");
+            let ws = model.wire_stats().expect("remote links present");
+            assert_eq!(ws.retry_exhausted, 0, "{label}: {ws:?}");
+            if window == 1 {
+                assert_eq!(ws.inflight_epochs, 1, "{label} is lock-step: {ws:?}");
+            } else {
+                assert!(ws.inflight_epochs > 1, "{label} must overlap epochs: {ws:?}");
+            }
+            // Link topology: mux on folds all four (engine, shard)
+            // sessions onto one TCP connection; off keeps the v2
+            // one-connection-per-session shape.
+            let sessions = 2 * (SHARDS - 1);
+            if mux {
+                assert_eq!(model.wire_links(), 1, "{label}: one TCP connection per host");
+                let hosts = model.wire_host_stats();
+                assert_eq!(hosts.len(), 1, "{label}: {hosts:?}");
+                assert_eq!(hosts[0].sessions as usize, sessions, "{label}: {hosts:?}");
+            } else {
+                assert_eq!(model.wire_links(), sessions, "{label}: one link per session");
+            }
+
+            journal.record("nid-t4", &label, 0, n_samples, &st);
+            results.push((window, mux, st));
+        }
+    }
+
+    let median = |w: usize, m: bool| -> f64 {
+        results
+            .iter()
+            .find(|(rw, rm, _)| *rw == w && *rm == m)
+            .map(|(_, _, s)| s.median_ns)
+            .expect("config measured")
+    };
+    // The v3 acceptance headline: end-to-end epoch pipelining at W=16 vs
+    // lock-step W=1, both multiplexed.  Printed here; the CI bench leg
+    // asserts > 1.0 from the journal so a loaded runner fails loudly
+    // instead of silently shipping a regression.
+    println!(
+        "[wire] W=16 vs W=1 streamed speedup (mux on, {STREAMS} clients): {:.2}x",
+        median(1, true) / median(16, true)
+    );
+    println!(
+        "[wire] link mux on vs off at W=16: {:.2}x",
+        median(16, false) / median(16, true)
+    );
+    println!(
+        "[wire] W=4 (default) vs W=1 (mux on): {:.2}x",
+        median(1, true) / median(4, true)
+    );
+
+    journal.write_if_requested();
+}

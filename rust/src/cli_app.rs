@@ -81,9 +81,16 @@ fn print_help() {
                     [--shard-spin-us N]  worker epoch spin budget before the\n\
                     condvar sleep (default: 20 local, 0 with remote shards;\n\
                     env POLYLUT_SHARD_SPIN_US).\n\
-                    [--wire-window N]  needs flights in flight per remote\n\
-                    link ahead of the last applied result (default 4;\n\
-                    1 = v1 lock-step pacing).\n\
+                    [--wire-window N]  epochs in flight per remote session\n\
+                    ahead of the last applied result (default 4; 1 = lock-\n\
+                    step pacing; 0 is rejected; each session runs at the\n\
+                    max of both ends' windows).\n\
+                    [--wire-mux on|off]  per-host link multiplexing\n\
+                    (default on): every (engine, shard) session to one\n\
+                    worker host shares a single TCP connection with\n\
+                    session-id demux and one reconnect/resume ladder per\n\
+                    host; off restores the v2 one-connection-per-session\n\
+                    topology (see ARCHITECTURE.md §7.6).\n\
                     [--wire-retries N]  reconnect-and-resume attempts per\n\
                     link incident (default 6) before the engine faults and\n\
                     routing degrades to the in-process plan.\n\
@@ -100,7 +107,10 @@ fn print_help() {
                     per engine; shard_cells/shard_waits = per-shard occupancy\n\
                     and handoff-wait counters (cumulative); shard_spin_us and\n\
                     wire_frames/bytes/wait_ns/reconnects plus\n\
-                    wire_inflight_epochs/resumes/retry_exhausted when active;\n\
+                    wire_inflight_epochs/inflight_flights/resumes/\n\
+                    resume_replayed/resume_skipped/retry_exhausted and the\n\
+                    per-host wire_links/wire_sessions_per_link/wire_hosts\n\
+                    rollup when remote shards are active;\n\
                     fleet_replicas/formed/batch_hist/queue_hwm/shed/\n\
                     replica_faults when the fleet is active;\n\
                     simd/lanes = detected kernel level + active lane width;\n\
@@ -110,13 +120,15 @@ fn print_help() {
                     optimization level (default fold+dc, bit-exact; env\n\
                     POLYLUT_NETLIST_OPT) — see compile\n\
            shard-worker --listen H:P --shards S   host shards of a model for\n\
-                    a remote coordinator (each connection claims one\n\
-                    (engine, shard) after a model-fingerprint + resume-epoch\n\
-                    handshake; `serve --shard-hosts` lists one distinct\n\
-                    address per remote shard).  [--wire-window N]\n\
-                    sizes the windowed stream's pending-frame buffer (default\n\
-                    4; sessions honor the larger of this and the\n\
-                    coordinator's window).  Model source: --id <artifact>,\n\
+                    a remote coordinator (one connection per coordinator\n\
+                    host carries every (engine, shard) session, demuxed by\n\
+                    the session id each Hello claims after the\n\
+                    model-fingerprint + resume-epoch handshake;\n\
+                    `serve --shard-hosts` lists one address per remote\n\
+                    shard).  [--wire-window N]  sizes the windowed\n\
+                    stream's pending-frame buffer in epochs (default 4;\n\
+                    0 is rejected; sessions honor the larger of this and\n\
+                    the coordinator's window).  Model source: --id <artifact>,\n\
                     or --widths 8,6,3 [--net-seed N] [--beta-in B] [--beta B]\n\
                     [--beta-out B] [--fan-in F] [--fan F] [--degree D] [--a A]\n\
                     [--classes C] for a random-weight geometry (tests/benches).\n\
@@ -124,8 +136,9 @@ fn print_help() {
                     the coordinator's (the fingerprint handshake enforces it)\n\
            verify   (--id <artifact> | --widths w0,w1,…)   compile every\n\
                     artifact kind and run the static checkers: plan layout,\n\
-                    bitslice + per-shard op streams, hazard schedules and\n\
-                    wire plans.  [--shards N] (default 2) sets the sharded\n\
+                    bitslice + per-shard op streams, hazard schedules,\n\
+                    wire plans and epoch-ring slot layouts.\n\
+                    [--shards N] (default 2) sets the sharded\n\
                     geometry; the same --widths model knobs as shard-worker\n\
                     apply.  Prints a per-artifact report; exits nonzero on\n\
                     any violation.  (The same checkers gate every compile in\n\
@@ -316,7 +329,15 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
     let level = crate::lut::OptLevel::resolve(crate::lut::opt::level_from_args(args)?);
     let mut tables = crate::lut::tables::compile_network(&net, workers);
     crate::lut::opt::optimize_tables(&net, &mut tables, level);
-    let window = args.get_usize("wire-window", crate::sim::DEFAULT_WIRE_WINDOW)?.max(1);
+    let window = args.get_usize("wire-window", crate::sim::DEFAULT_WIRE_WINDOW)?;
+    if window == 0 {
+        bail!(
+            "--wire-window 0 is invalid: the window is counted in in-flight epochs and must \
+             be ≥ 1 (1 = lock-step pacing, {} = default; each session runs at the max of \
+             both ends' windows)",
+            crate::sim::DEFAULT_WIRE_WINDOW
+        );
+    }
     let host = std::sync::Arc::new(crate::sim::ShardWorkerHost::compile_windowed(
         &net, &tables, shards, workers, window,
     ));

@@ -10,7 +10,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use super::fleet::DispatchReason;
-use crate::sim::{LutEngine, ShardStats, WireStats};
+use crate::sim::{LutEngine, ShardStats, WireHostStats, WireStats};
 
 const BUCKETS: usize = 40;
 
@@ -44,15 +44,28 @@ pub struct Metrics {
     pub wire_bytes: AtomicU64,
     pub wire_wait_ns: AtomicU64,
     pub wire_reconnects: AtomicU64,
-    /// High-water mark of in-flight needs flights on any link (the
-    /// `--wire-window` unit; one flight per layer boundary, so an epoch of
-    /// an L-layer model is L flights).
+    /// High-water mark of concurrently in-flight *epochs* through the
+    /// Wire-v3 ring (bounded by `--wire-window`; > 1 proves end-to-end
+    /// epoch pipelining is actually overlapping samples).
     pub wire_inflight_epochs: AtomicU64,
+    /// High-water mark of in-flight needs *flights* on any session (one
+    /// flight per layer boundary with cross-shard reads, so an epoch of
+    /// an L-layer model is up to L flights).
+    pub wire_inflight_flights: AtomicU64,
     /// Successful reconnect-and-resume handshakes over all links.
     pub wire_resumes: AtomicU64,
+    /// Frames re-shipped by checkpointed resumes vs frames the
+    /// applied-boundary high-water marks let them skip.
+    pub wire_resume_replayed: AtomicU64,
+    pub wire_resume_skipped: AtomicU64,
     /// Link incidents whose reconnect budget was exhausted (each one
     /// faulted its engine and degraded routing to the in-process plan).
     pub wire_retry_exhausted: AtomicU64,
+    /// Latest per-host link rollup (one entry per multiplexed TCP
+    /// connection): sessions riding the link, frames/bytes carried,
+    /// reconnect and resume counts — so a saturated or flapping host is
+    /// visible without log diving.  Empty with no wire placement.
+    wire_hosts: Mutex<Vec<WireHostStats>>,
     /// Whether a wire placement is active (controls snapshot rendering).
     wire_active: AtomicU64,
     /// Resolved shard-worker spin budget in µs (`u64::MAX` = not recorded:
@@ -123,8 +136,12 @@ impl Default for Metrics {
             wire_wait_ns: AtomicU64::new(0),
             wire_reconnects: AtomicU64::new(0),
             wire_inflight_epochs: AtomicU64::new(0),
+            wire_inflight_flights: AtomicU64::new(0),
             wire_resumes: AtomicU64::new(0),
+            wire_resume_replayed: AtomicU64::new(0),
+            wire_resume_skipped: AtomicU64::new(0),
             wire_retry_exhausted: AtomicU64::new(0),
+            wire_hosts: Mutex::new(Vec::new()),
             wire_active: AtomicU64::new(0),
             shard_spin_us: AtomicU64::new(u64::MAX),
             verify_violations: AtomicU64::new(u64::MAX),
@@ -204,10 +221,26 @@ impl Metrics {
         self.wire_bytes.store(ws.bytes, Ordering::Relaxed);
         self.wire_wait_ns.store(ws.wait_ns, Ordering::Relaxed);
         self.wire_reconnects.store(ws.reconnects, Ordering::Relaxed);
-        self.wire_inflight_epochs.store(ws.inflight_hwm, Ordering::Relaxed);
+        self.wire_inflight_epochs.store(ws.inflight_epochs, Ordering::Relaxed);
+        self.wire_inflight_flights.store(ws.inflight_hwm, Ordering::Relaxed);
         self.wire_resumes.store(ws.resumes, Ordering::Relaxed);
+        self.wire_resume_replayed.store(ws.resume_replayed_frames, Ordering::Relaxed);
+        self.wire_resume_skipped.store(ws.resume_skipped_frames, Ordering::Relaxed);
         self.wire_retry_exhausted.store(ws.retry_exhausted, Ordering::Relaxed);
         self.wire_active.store(1, Ordering::Relaxed);
+    }
+
+    /// Mirror the per-host link rollup (one entry per multiplexed TCP
+    /// connection; called alongside [`Metrics::record_wire`]).
+    pub fn record_wire_hosts(&self, hosts: &[WireHostStats]) {
+        let mut guard = crate::sim::shard::lock_ignore_poison(&self.wire_hosts);
+        guard.clear();
+        guard.extend_from_slice(hosts);
+    }
+
+    /// Latest per-host link rollup (empty with no wire placement).
+    pub fn wire_hosts(&self) -> Vec<WireHostStats> {
+        crate::sim::shard::lock_ignore_poison(&self.wire_hosts).clone()
     }
 
     /// Record the resolved shard-worker epoch spin budget (µs) so the
@@ -379,15 +412,39 @@ impl Metrics {
         if self.wire_active.load(Ordering::Relaxed) != 0 {
             s.push_str(&format!(
                 " wire_frames={} wire_bytes={} wire_wait_ns={} wire_reconnects={} \
-                 wire_inflight_epochs={} wire_resumes={} wire_retry_exhausted={}",
+                 wire_inflight_epochs={} wire_inflight_flights={} wire_resumes={} \
+                 wire_resume_replayed={} wire_resume_skipped={} wire_retry_exhausted={}",
                 self.wire_frames.load(Ordering::Relaxed),
                 self.wire_bytes.load(Ordering::Relaxed),
                 self.wire_wait_ns.load(Ordering::Relaxed),
                 self.wire_reconnects.load(Ordering::Relaxed),
                 self.wire_inflight_epochs.load(Ordering::Relaxed),
+                self.wire_inflight_flights.load(Ordering::Relaxed),
                 self.wire_resumes.load(Ordering::Relaxed),
+                self.wire_resume_replayed.load(Ordering::Relaxed),
+                self.wire_resume_skipped.load(Ordering::Relaxed),
                 self.wire_retry_exhausted.load(Ordering::Relaxed),
             ));
+            let hosts = crate::sim::shard::lock_ignore_poison(&self.wire_hosts);
+            if !hosts.is_empty() {
+                let sessions: Vec<String> =
+                    hosts.iter().map(|h| h.sessions.to_string()).collect();
+                let rollup: Vec<String> = hosts
+                    .iter()
+                    .map(|h| {
+                        format!(
+                            "{}(sessions={},frames={},bytes={},reconnects={},resumes={})",
+                            h.addr, h.sessions, h.frames, h.bytes, h.reconnects, h.resumes
+                        )
+                    })
+                    .collect();
+                s.push_str(&format!(
+                    " wire_links={} wire_sessions_per_link=[{}] wire_hosts=[{}]",
+                    hosts.len(),
+                    sessions.join(","),
+                    rollup.join(";"),
+                ));
+            }
         }
         s
     }
@@ -452,6 +509,9 @@ mod tests {
             retry_exhausted: 0,
             inflight_hwm: 4,
             handle_clones: 1,
+            inflight_epochs: 3,
+            resume_replayed_frames: 5,
+            resume_skipped_frames: 7,
         });
         let snap = m.snapshot();
         assert!(snap.contains("shard_spin_us=0"), "{snap}");
@@ -460,9 +520,42 @@ mod tests {
             "{snap}"
         );
         assert!(
-            snap.contains("wire_inflight_epochs=4 wire_resumes=2 wire_retry_exhausted=0"),
+            snap.contains(
+                "wire_inflight_epochs=3 wire_inflight_flights=4 wire_resumes=2 \
+                 wire_resume_replayed=5 wire_resume_skipped=7 wire_retry_exhausted=0"
+            ),
             "{snap}"
         );
+        assert!(!snap.contains("wire_links"), "hidden until hosts recorded: {snap}");
+        m.record_wire_hosts(&[
+            WireHostStats {
+                addr: "10.0.0.1:4000".into(),
+                sessions: 4,
+                frames: 8,
+                bytes: 2200,
+                reconnects: 1,
+                resumes: 2,
+            },
+            WireHostStats {
+                addr: "10.0.0.2:4000".into(),
+                sessions: 2,
+                frames: 4,
+                bytes: 1200,
+                reconnects: 0,
+                resumes: 0,
+            },
+        ]);
+        let snap = m.snapshot();
+        assert!(snap.contains("wire_links=2 wire_sessions_per_link=[4,2]"), "{snap}");
+        assert!(
+            snap.contains(
+                "wire_hosts=[10.0.0.1:4000(sessions=4,frames=8,bytes=2200,reconnects=1,\
+                 resumes=2);10.0.0.2:4000(sessions=2,frames=4,bytes=1200,reconnects=0,\
+                 resumes=0)]"
+            ),
+            "{snap}"
+        );
+        assert_eq!(m.wire_hosts().len(), 2);
     }
 
     #[test]

@@ -39,7 +39,9 @@ use crate::sim::bitslice::BitsliceNet;
 use crate::sim::lutsim::LutSim;
 use crate::sim::plan::EvalPlan;
 use crate::sim::shard::ShardedModel;
-use crate::sim::wire::{parse_shard_hosts, ShardPlacement, WireConfig, WireStats};
+use crate::sim::wire::{
+    parse_shard_hosts, ShardPlacement, WireConfig, WireHostStats, WireStats,
+};
 use crate::sim::{
     EngineSelect, LutEngine, ShardStats, DEFAULT_WIRE_RETRIES, DEFAULT_WIRE_WINDOW,
 };
@@ -288,6 +290,20 @@ impl Backend {
         }
     }
 
+    /// Per-host link rollup of the sharded engines (empty when sharding is
+    /// off, every shard is local, or the backend is PJRT) — one entry per
+    /// multiplexed TCP connection.
+    pub fn wire_host_stats(&self) -> Vec<WireHostStats> {
+        match self {
+            Backend::Lut { model, .. } => model
+                .sharded
+                .as_ref()
+                .map(|s| s.wire_host_stats())
+                .unwrap_or_default(),
+            Backend::Pjrt { .. } => Vec::new(),
+        }
+    }
+
     /// Build the PJRT backend from a manifest + trained state.
     pub fn pjrt(engine: &Engine, man: &Manifest, state: &[Vec<f32>]) -> Result<Backend> {
         let exe = engine.load_hlo(&man.eval_hlo)?;
@@ -402,12 +418,20 @@ pub struct ServerConfig {
     /// faults and routing degrades to the in-process plan
     /// (`--wire-retries`).
     pub wire_retries: u32,
+    /// Multiplex every (engine, shard) session to one host over a single
+    /// TCP connection (`--wire-mux`; default on — `off` restores the v2
+    /// one-connection-per-session topology).
+    pub wire_mux: bool,
 }
 
 impl ServerConfig {
     /// The wire knobs as a [`WireConfig`] for the freeze path.
     pub fn wire(&self) -> WireConfig {
-        WireConfig { window: self.wire_window.max(1), retries: self.wire_retries }
+        WireConfig {
+            window: self.wire_window.max(1),
+            retries: self.wire_retries,
+            mux: self.wire_mux,
+        }
     }
 }
 
@@ -420,6 +444,7 @@ impl Default for ServerConfig {
             shard_spin_us: None,
             wire_window: DEFAULT_WIRE_WINDOW,
             wire_retries: DEFAULT_WIRE_RETRIES,
+            wire_mux: true,
         }
     }
 }
@@ -572,6 +597,7 @@ fn batcher_loop(
                         }
                         if let Some(ws) = backend.wire_stats() {
                             metrics.record_wire(&ws);
+                            metrics.record_wire_hosts(&backend.wire_host_stats());
                         }
                     }
                 }
@@ -661,12 +687,21 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
         Some(_) => Some(args.get_usize("shard-spin-us", 0)? as u64),
         None => None,
     };
+    let wire_window = args.get_usize("wire-window", DEFAULT_WIRE_WINDOW)?;
+    if wire_window == 0 {
+        bail!(
+            "--wire-window 0 is invalid: the window is counted in in-flight epochs \
+             and must be ≥ 1 (1 = lock-step pacing, {DEFAULT_WIRE_WINDOW} = default; \
+             each session runs at the max of both ends' windows)"
+        );
+    }
     let cfg = ServerConfig {
         max_batch: args.get_usize("max-batch", 256)?,
         window: Duration::from_micros(args.get_usize("batch-window-us", 200)? as u64),
         shard_spin_us,
-        wire_window: args.get_usize("wire-window", DEFAULT_WIRE_WINDOW)?.max(1),
+        wire_window,
         wire_retries: args.get_usize("wire-retries", DEFAULT_WIRE_RETRIES as usize)? as u32,
+        wire_mux: args.get_choice("wire-mux", "on", &["on", "off"])? == "on",
         ..Default::default()
     };
     let net = man.network_from_state(&state)?;
@@ -722,7 +757,8 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
             n_clients,
         );
     }
-    let (wire_window, wire_retries) = (cfg.wire_window, cfg.wire_retries);
+    let (wire_window, wire_retries, wire_mux) =
+        (cfg.wire_window, cfg.wire_retries, cfg.wire_mux);
     let server = Server::start(backend, man.config.n_classes, cfg);
     if let Some(sharded) = frozen.as_ref().and_then(|m| m.sharded.as_ref()) {
         server.metrics.set_shard_spin_us(sharded.spin_us());
@@ -747,7 +783,10 @@ pub fn serve_cli(dir: &Path, id: &str, args: &Args) -> Result<()> {
 
     if backend_name == "lut" {
         let wire_note = if n_remote > 0 {
-            format!(" wire-window={wire_window} wire-retries={wire_retries}")
+            format!(
+                " wire-window={wire_window} wire-retries={wire_retries} wire-mux={}",
+                if wire_mux { "on" } else { "off" }
+            )
         } else {
             String::new()
         };

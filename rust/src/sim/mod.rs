@@ -56,8 +56,8 @@ pub use shard::{
 };
 pub use verify::{ArtifactKind, Report, Violation};
 pub use wire::{
-    parse_shard_hosts, ShardPlacement, ShardWorkerHost, WireConfig, WireStats,
-    DEFAULT_WIRE_RETRIES, DEFAULT_WIRE_WINDOW,
+    parse_shard_hosts, ShardPlacement, ShardWorkerHost, WireConfig, WireHostStats,
+    WireStats, DEFAULT_WIRE_RETRIES, DEFAULT_WIRE_WINDOW,
 };
 
 /// Which batched LUT engine executes a batch.

@@ -107,6 +107,7 @@
 //! and resumes the open epoch from its boundary (`ARCHITECTURE.md` §7.4)
 //! and only an exhausted retry budget faults the engine.
 
+use std::collections::BTreeSet;
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
@@ -122,7 +123,10 @@ use crate::nn::network::Network;
 use crate::nn::quant::unsigned_code;
 use crate::sim::bitslice::{exec_ops, flatten_cone, mark_cone, pack_word, unpack_word, OpStream, WORD};
 use crate::sim::plan::EvalPlan;
-use crate::sim::wire::{EngineKind, Fnv, Frame, LinkStats, WireConfig, WireLink, WireStats};
+use crate::sim::wire::{
+    EngineKind, Fnv, Frame, HostRegistry, LinkStats, WireConfig, WireHostStats, WireLink,
+    WireStats,
+};
 
 /// Cumulative per-shard execution counters (monotonic over the engine's
 /// lifetime): `cells` counts (layer, shard) work units executed —
@@ -181,22 +185,53 @@ pub(crate) trait Handoff: Send + Sync {
     fn fault(&self) -> Option<String>;
 }
 
+/// Sticky fault cell, shareable across every epoch slot of one runner: a
+/// fault recorded while any epoch is in flight must poison all of them
+/// (and every future one), not just the slot that observed it.
+pub(crate) struct FaultCell {
+    faulted: AtomicBool,
+    msg: Mutex<String>,
+}
+
+impl FaultCell {
+    pub(crate) fn new() -> Arc<FaultCell> {
+        Arc::new(FaultCell { faulted: AtomicBool::new(false), msg: Mutex::new(String::new()) })
+    }
+
+    /// Record a fault; the first message wins.
+    pub(crate) fn set(&self, msg: &str) {
+        let mut m = lock_ignore_poison(&self.msg);
+        if !self.faulted.load(Ordering::Relaxed) {
+            *m = msg.to_string();
+        }
+        self.faulted.store(true, Ordering::Release);
+    }
+
+    pub(crate) fn get(&self) -> Option<String> {
+        if self.faulted.load(Ordering::Acquire) {
+            Some(lock_ignore_poison(&self.msg).clone())
+        } else {
+            None
+        }
+    }
+}
+
 /// Shared-memory handoff: per-shard atomic levels, spin-then-nap waits
 /// with fault polling.  This is the PR 3 protocol unchanged, minus the
-/// ability to deadlock on a dead peer.
+/// ability to deadlock on a dead peer.  The fault cell may be shared by
+/// several handoffs (one per epoch slot of a pipelined runner).
 pub(crate) struct LocalHandoff {
     done: Vec<AtomicU32>,
-    faulted: AtomicBool,
-    fault_msg: Mutex<String>,
+    fault: Arc<FaultCell>,
 }
 
 impl LocalHandoff {
     pub(crate) fn new(shards: usize) -> LocalHandoff {
-        LocalHandoff {
-            done: (0..shards).map(|_| AtomicU32::new(0)).collect(),
-            faulted: AtomicBool::new(false),
-            fault_msg: Mutex::new(String::new()),
-        }
+        Self::with_fault(shards, FaultCell::new())
+    }
+
+    pub(crate) fn with_fault(shards: usize, fault: Arc<FaultCell>) -> LocalHandoff {
+        LocalHandoff { done: (0..shards).map(|_| AtomicU32::new(0)).collect(), fault }
     }
 }
 
@@ -210,7 +245,7 @@ impl Handoff for LocalHandoff {
             if self.done[shard].load(Ordering::Acquire) >= threshold {
                 return Ok(true);
             }
-            if self.faulted.load(Ordering::Relaxed) {
+            if self.fault.faulted.load(Ordering::Relaxed) {
                 return Err(HandoffError(self.fault().unwrap_or_default()));
             }
             spins = spins.wrapping_add(1);
@@ -242,19 +277,11 @@ impl Handoff for LocalHandoff {
     }
 
     fn fail(&self, msg: &str) {
-        let mut m = lock_ignore_poison(&self.fault_msg);
-        if !self.faulted.load(Ordering::Relaxed) {
-            *m = msg.to_string();
-        }
-        self.faulted.store(true, Ordering::Release);
+        self.fault.set(msg);
     }
 
     fn fault(&self) -> Option<String> {
-        if self.faulted.load(Ordering::Acquire) {
-            Some(lock_ignore_poison(&self.fault_msg).clone())
-        } else {
-            None
-        }
+        self.fault.get()
     }
 }
 
@@ -745,11 +772,15 @@ pub(crate) fn run_cells<K: ShardKernel, H: Handoff>(
     deps: &[&[(u32, u32)]],
     cells: &AtomicU64,
     waits: &AtomicU64,
+    start: usize,
     scratch: &mut K::Scratch,
 ) -> Result<(), HandoffError> {
     let n_layers = kernel.n_layers();
     let mut waited = 0u64;
-    for l in 0..n_layers {
+    // `start > 0` is the worker-side checkpointed resume: levels up to
+    // `start` were restored from the coordinator's replay, so the run
+    // recomputes (and counts) only the layers above them.
+    for l in start..n_layers {
         for &(d, thr) in deps[l] {
             if handoff.wait(d as usize, thr)? {
                 waited += 1;
@@ -757,7 +788,7 @@ pub(crate) fn run_cells<K: ShardKernel, H: Handoff>(
         }
         kernel.run_cell(l, s, bufs.src(l), bufs.dst(l, n_layers), scratch);
         if l + 1 == n_layers {
-            cells.fetch_add(n_layers as u64, Ordering::Relaxed);
+            cells.fetch_add((n_layers - start) as u64, Ordering::Relaxed);
             waits.fetch_add(waited, Ordering::Relaxed);
         }
         handoff.publish(s, l as u32 + 1)?;
@@ -765,20 +796,51 @@ pub(crate) fn run_cells<K: ShardKernel, H: Handoff>(
     Ok(())
 }
 
+/// One slot of the epoch ring: private buffers + per-shard completion
+/// levels for a single in-flight epoch.  Epoch `e` runs in slot
+/// `(e - 1) % W`; the admission gate in `run_epoch` guarantees the slot's
+/// previous occupant (epoch `e - W`) was fully collected before the slot
+/// is re-staged.  Cross-epoch isolation therefore needs no extra hazard
+/// bookkeeping — the PR 3 dependency classes apply *within* a slot only.
+struct EpochSlot {
+    bufs: BufSet,
+    handoff: LocalHandoff,
+}
+
 struct Ctrl {
-    epoch: u64,
+    /// Highest epoch id handed to a `run_epoch` caller (ticket counter).
+    admitted: u64,
+    /// Epochs staged but not yet announced (waiting on slower concurrent
+    /// stagers of earlier ids).
+    staged: BTreeSet<u64>,
+    /// Highest epoch the shard loops may run: every id ≤ `announced` has
+    /// its input staged and its slot handoff reset.
+    announced: u64,
+    /// Collected epochs above the contiguous prefix `freed`.
+    done: BTreeSet<u64>,
+    /// Every epoch ≤ `freed` is collected; slot reuse gates on this.
+    freed: u64,
     shutdown: bool,
 }
 
 struct RunnerInner<K: ShardKernel> {
     kernel: K,
-    bufs: BufSet,
-    /// Fast-path epoch counter (spin target); authoritative copy in `ctrl`.
+    /// The W-slot epoch ring (W = [`WireConfig::window`], min 1 — the
+    /// lock-step degenerate case is a 1-slot ring).
+    slots: Vec<EpochSlot>,
+    /// Sticky fault shared by every slot's handoff.
+    fault: Arc<FaultCell>,
+    /// Fast-path announced-epoch counter (spin target); authoritative
+    /// copy in `ctrl`.
     epoch_fast: AtomicU64,
     ctrl: Mutex<Ctrl>,
+    /// Shard loops waiting for the next announcement.
     start_cv: Condvar,
-    /// Per-shard completion levels + the sticky fault cell.
-    handoff: LocalHandoff,
+    /// Admitters waiting for a ring slot to free up.
+    free_cv: Condvar,
+    /// High-water mark of concurrently in-flight epochs
+    /// (`admitted − freed`; the `wire_inflight_epochs` metric).
+    inflight_hwm: AtomicU64,
     /// Per-shard cumulative counters (see [`ShardStats`]).
     cells: Vec<AtomicU64>,
     waits: Vec<AtomicU64>,
@@ -787,10 +849,14 @@ struct RunnerInner<K: ShardKernel> {
     spin_us: u64,
 }
 
+impl<K: ShardKernel> RunnerInner<K> {
+    fn slot(&self, epoch: u64) -> &EpochSlot {
+        &self.slots[((epoch - 1) % self.slots.len() as u64) as usize]
+    }
+}
+
 struct ShardRunner<K: ShardKernel> {
     inner: Arc<RunnerInner<K>>,
-    /// Serializes epochs: one in-flight sample/word at a time.
-    call: Mutex<()>,
     workers: Vec<JoinHandle<()>>,
     /// The wire links of the remote shards (closed at shutdown to wake
     /// their sender/receiver threads).
@@ -799,13 +865,17 @@ struct ShardRunner<K: ShardKernel> {
     link_stats: Vec<Arc<LinkStats>>,
 }
 
-fn wait_for_epoch<K: ShardKernel>(inner: &RunnerInner<K>, seen: u64) -> Option<u64> {
+/// Wait until epoch `next` has been announced (input staged, slot handoff
+/// reset).  Returns the current announce watermark, or `None` on
+/// shutdown.  Every shard loop walks epochs in id order — each epoch owns
+/// a distinct ring slot, so none may be skipped.
+fn wait_for_epoch<K: ShardKernel>(inner: &RunnerInner<K>, next: u64) -> Option<u64> {
     if inner.spin_us > 0 {
         let t0 = Instant::now();
         loop {
             for _ in 0..64 {
                 let e = inner.epoch_fast.load(Ordering::Acquire);
-                if e > seen {
+                if e >= next {
                     return Some(e);
                 }
                 std::hint::spin_loop();
@@ -820,8 +890,8 @@ fn wait_for_epoch<K: ShardKernel>(inner: &RunnerInner<K>, seen: u64) -> Option<u
         if ctrl.shutdown {
             return None;
         }
-        if ctrl.epoch > seen {
-            return Some(ctrl.epoch);
+        if ctrl.announced >= next {
+            return Some(ctrl.announced);
         }
         ctrl = match inner.start_cv.wait(ctrl) {
             Ok(g) => g,
@@ -830,42 +900,44 @@ fn wait_for_epoch<K: ShardKernel>(inner: &RunnerInner<K>, seen: u64) -> Option<u
     }
 }
 
-/// Local shard executor: run this shard's cells each epoch, catching
-/// kernel panics into the sticky fault cell so a crashing shard turns into
-/// a clean engine error instead of a poisoned mutex + deadlocked server.
+/// Local shard executor: run this shard's cells for every epoch in id
+/// order against that epoch's ring slot, catching kernel panics into the
+/// sticky fault cell so a crashing shard turns into a clean engine error
+/// instead of a poisoned mutex + deadlocked server.
 fn worker_loop<K: ShardKernel>(inner: Arc<RunnerInner<K>>, s: usize) {
     let mut scratch = inner.kernel.make_scratch();
     let deps: Vec<&[(u32, u32)]> =
         (0..inner.kernel.n_layers()).map(|l| inner.kernel.deps(l, s)).collect();
-    let mut seen = 0u64;
+    let mut next = 1u64;
     loop {
-        seen = match wait_for_epoch(&inner, seen) {
-            Some(e) => e,
-            None => return,
-        };
-        if inner.handoff.fault().is_some() {
-            continue;
+        if wait_for_epoch(&inner, next).is_none() {
+            return;
         }
-        let run = catch_unwind(AssertUnwindSafe(|| {
-            run_cells(
-                &inner.kernel,
-                &inner.handoff,
-                &inner.bufs,
-                s,
-                &deps,
-                &inner.cells[s],
-                &inner.waits[s],
-                &mut scratch,
-            )
-        }));
-        match run {
-            // A dependency-wait error means some peer already recorded the
-            // fault; nothing to add.
-            Ok(Ok(())) | Ok(Err(_)) => {}
-            Err(p) => inner
-                .handoff
-                .fail(&format!("shard {s} worker panicked: {}", panic_message(&*p))),
+        if inner.fault.get().is_none() {
+            let slot = inner.slot(next);
+            let run = catch_unwind(AssertUnwindSafe(|| {
+                run_cells(
+                    &inner.kernel,
+                    &slot.handoff,
+                    &slot.bufs,
+                    s,
+                    &deps,
+                    &inner.cells[s],
+                    &inner.waits[s],
+                    0,
+                    &mut scratch,
+                )
+            }));
+            match run {
+                // A dependency-wait error means some peer already recorded
+                // the fault; nothing to add.
+                Ok(Ok(())) | Ok(Err(_)) => {}
+                Err(p) => inner
+                    .fault
+                    .set(&format!("shard {s} worker panicked: {}", panic_message(&*p))),
+            }
         }
+        next += 1;
     }
 }
 
@@ -886,21 +958,20 @@ fn wire_send_loop<K: ShardKernel>(
 ) {
     let deps: Vec<&[(u32, u32)]> =
         (0..inner.kernel.n_layers()).map(|l| inner.kernel.deps(l, s)).collect();
-    let mut seen = 0u64;
+    let mut next = 1u64;
     loop {
-        seen = match wait_for_epoch(&inner, seen) {
-            Some(e) => e,
-            None => break,
-        };
-        if inner.handoff.fault().is_some() {
-            continue;
+        if wait_for_epoch(&inner, next).is_none() {
+            break;
         }
-        if let Err(e) = send_epoch(&inner, s, &link, &needs, &deps, seen) {
-            if link.is_shutdown() {
-                break;
+        if inner.fault.get().is_none() {
+            if let Err(e) = send_epoch(&inner, s, &link, &needs, &deps, next) {
+                if link.is_shutdown() {
+                    break;
+                }
+                inner.fault.set(&format!("remote shard {s} ({}): {e}", link.peer()));
             }
-            inner.handoff.fail(&format!("remote shard {s} ({}): {e}", link.peer()));
         }
+        next += 1;
     }
 }
 
@@ -912,6 +983,7 @@ fn send_epoch<K: ShardKernel>(
     deps: &[&[(u32, u32)]],
     epoch: u64,
 ) -> Result<(), HandoffError> {
+    let slot = inner.slot(epoch);
     link.begin_epoch(epoch)?;
     let mut waited = 0u64;
     for (l, layer_needs) in needs.iter().enumerate() {
@@ -928,12 +1000,12 @@ fn send_epoch<K: ShardKernel>(
             continue;
         }
         for &(d, thr) in deps[l] {
-            if inner.handoff.wait(d as usize, thr)? {
+            if slot.handoff.wait(d as usize, thr)? {
                 waited += 1;
             }
         }
-        let src = inner.bufs.src(l);
-        let frames: Vec<Frame> = layer_needs
+        let src = slot.bufs.src(l);
+        let mut frames: Vec<Frame> = layer_needs
             .iter()
             .map(|(producer, range)| {
                 let words: Vec<u64> =
@@ -941,7 +1013,7 @@ fn send_epoch<K: ShardKernel>(
                 Frame::data(epoch, l as u32, *producer, range.start as u32, words)
             })
             .collect();
-        link.ship_flight(l as u32, &frames)?;
+        link.ship_flight(epoch, l as u32, &mut frames)?;
     }
     inner.waits[s].fetch_add(waited, Ordering::Relaxed);
     Ok(())
@@ -966,13 +1038,15 @@ fn wire_recv_loop<K: ShardKernel>(
             Ok(Some(f)) => {
                 let l = f.boundary as usize - 1;
                 let rr = &result[l];
-                if f.shard as usize != s
+                if f.epoch == 0
+                    || f.shard as usize != s
                     || f.start as usize != rr.start
                     || f.words.len() != rr.len()
                 {
                     let msg = format!(
-                        "result frame mismatch: got (boundary {}, shard {}, {}+{}), \
-                         want (boundary {}, shard {s}, {}+{})",
+                        "result frame mismatch: got (epoch {}, boundary {}, shard {}, \
+                         {}+{}), want (boundary {}, shard {s}, {}+{})",
+                        f.epoch,
                         f.boundary,
                         f.shard,
                         f.start,
@@ -982,25 +1056,30 @@ fn wire_recv_loop<K: ShardKernel>(
                         rr.len(),
                     );
                     link.kill(&msg);
-                    inner.handoff.fail(&format!(
+                    inner.fault.set(&format!(
                         "remote shard {s} ({}): {msg}",
                         link.peer()
                     ));
                     return;
                 }
-                let dst = inner.bufs.dst(l, n_layers);
-                for (slot, w) in dst[rr.clone()].iter().zip(&f.words) {
-                    slot.store(*w, Ordering::Relaxed);
+                // The frame's epoch is open on the session (its completion
+                // table drops stale ones), so its ring slot is its own: the
+                // previous occupant was collected before this epoch was
+                // admitted, hence before its Start ever shipped.
+                let es = inner.slot(f.epoch);
+                let dst = es.bufs.dst(l, n_layers);
+                for (word_slot, w) in dst[rr.clone()].iter().zip(&f.words) {
+                    word_slot.store(*w, Ordering::Relaxed);
                 }
-                link.mark_applied(f.boundary);
+                link.mark_applied(&f);
                 if f.boundary as usize == n_layers {
                     inner.cells[s].fetch_add(n_layers as u64, Ordering::Relaxed);
                 }
-                let _ = inner.handoff.publish(s, f.boundary);
+                let _ = es.handoff.publish(s, f.boundary);
             }
             Err(e) => {
                 if !link.is_shutdown() {
-                    inner.handoff.fail(&format!(
+                    inner.fault.set(&format!(
                         "remote shard {s} ({}): {e}",
                         link.peer()
                     ));
@@ -1015,31 +1094,26 @@ impl<K: ShardKernel> ShardRunner<K> {
     /// All-local runner (the PR 3 behavior; cannot fail).
     fn new_local(kernel: K, spin_us: u64) -> ShardRunner<K> {
         let shards = kernel.n_shards();
-        Self::new(
-            kernel,
-            spin_us,
-            EngineKind::Plan,
-            0,
-            &vec![None; shards],
-            WireConfig::default(),
-        )
-        .expect("all-local shard runner construction cannot fail")
+        let registry = HostRegistry::new(shards, 0, WireConfig::default());
+        Self::new(kernel, spin_us, EngineKind::Plan, &vec![None; shards], &registry)
+            .expect("all-local shard runner construction cannot fail")
     }
 
     /// Runner with a placement map: local worker threads for `None`
     /// shards, a windowed sender/receiver thread pair per `Some(addr)`
-    /// shard.  Fails cleanly when a link cannot be established or the
-    /// handshake (shard count / model fingerprint) is rejected.
+    /// shard (sessions opened through the model's shared host registry).
+    /// Fails cleanly when a link cannot be established or the handshake
+    /// (shard count / model fingerprint) is rejected.
     fn new(
         kernel: K,
         spin_us: u64,
         engine: EngineKind,
-        fingerprint: u64,
         placement: &[Option<String>],
-        wire: WireConfig,
+        registry: &HostRegistry,
     ) -> Result<ShardRunner<K>> {
         let shards = kernel.n_shards();
         let has_remote = placement.iter().any(|p| p.is_some());
+        let depth = registry.cfg().window.max(1);
         // All-local runners keep the memory-lean parity buffers (the PR 3
         // layout compute_deps' hazard classes protect).  Runners with any
         // remote shard use per-boundary buffers: the windowed receiver
@@ -1049,25 +1123,41 @@ impl<K: ShardKernel> ShardRunner<K> {
         // of its empty flight) — and with nothing aliased there is no
         // previous generation to clobber, so apply-on-arrival is safe and
         // the local shards' parity-hazard waits become harmlessly
-        // conservative.
+        // conservative.  Either layout is replicated per ring slot:
+        // concurrent epochs touch disjoint slots by construction.
+        let fault = FaultCell::new();
+        let slots: Vec<EpochSlot> = (0..depth)
+            .map(|_| EpochSlot {
+                bufs: if has_remote {
+                    BufSet::per_boundary(&kernel)
+                } else {
+                    BufSet::for_kernel(&kernel)
+                },
+                handoff: LocalHandoff::with_fault(shards, fault.clone()),
+            })
+            .collect();
         let inner = Arc::new(RunnerInner {
-            bufs: if has_remote {
-                BufSet::per_boundary(&kernel)
-            } else {
-                BufSet::for_kernel(&kernel)
-            },
+            slots,
+            fault,
             kernel,
             epoch_fast: AtomicU64::new(0),
-            ctrl: Mutex::new(Ctrl { epoch: 0, shutdown: false }),
+            ctrl: Mutex::new(Ctrl {
+                admitted: 0,
+                staged: BTreeSet::new(),
+                announced: 0,
+                done: BTreeSet::new(),
+                freed: 0,
+                shutdown: false,
+            }),
             start_cv: Condvar::new(),
-            handoff: LocalHandoff::new(shards),
+            free_cv: Condvar::new(),
+            inflight_hwm: AtomicU64::new(0),
             cells: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             waits: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             spin_us,
         });
         let mut runner = ShardRunner {
             inner: inner.clone(),
-            call: Mutex::new(()),
             workers: Vec::with_capacity(shards),
             links: Vec::new(),
             link_stats: Vec::new(),
@@ -1083,16 +1173,8 @@ impl<K: ShardKernel> ShardRunner<K> {
                         .expect("spawn shard worker"),
                 ),
                 Some(addr) => {
-                    let link = WireLink::connect(
-                        addr,
-                        engine,
-                        shards,
-                        s,
-                        fingerprint,
-                        n_layers,
-                        wire,
-                    )
-                    .map_err(|e| anyhow::anyhow!("shard {s} -> {addr}: {e}"))?;
+                    let link = WireLink::connect(registry, addr, engine, s, n_layers)
+                        .map_err(|e| anyhow::anyhow!("shard {s} -> {addr}: {e}"))?;
                     runner.link_stats.push(link.stats());
                     runner.links.push(link.clone());
                     // One wire-plan compilation per link, split between the
@@ -1120,35 +1202,85 @@ impl<K: ShardKernel> ShardRunner<K> {
         Ok(runner)
     }
 
-    /// Run one epoch (one sample / one word): stage the input, launch the
-    /// shards, wait for completion, collect the output.  Epochs are fully
-    /// serialized, which is what keeps the two-buffer parity scheme safe
-    /// across samples.  Errors are sticky: once a shard has panicked or a
-    /// link has died, this and every subsequent call fail fast.
+    /// Run one epoch (one sample / one word): admit it into the ring —
+    /// blocking while all W slots are occupied — stage the input into its
+    /// slot, announce it, wait for this epoch's completion, collect the
+    /// output.  Up to W epochs from concurrent callers overlap end to
+    /// end; bit-exact isolation comes from the distinct buffer slots.
+    /// Errors are sticky: once a shard has panicked or a link's retry
+    /// budget is exhausted, this and every subsequent call fail fast.
     fn run_epoch(
         &self,
         stage: impl FnOnce(&[AtomicU64]),
         collect: impl FnOnce(&[AtomicU64]),
     ) -> Result<(), HandoffError> {
         let inner = &*self.inner;
-        if let Some(msg) = inner.handoff.fault() {
+        if let Some(msg) = inner.fault.get() {
             return Err(HandoffError(msg));
         }
-        let _serial = lock_ignore_poison(&self.call);
-        stage(&inner.bufs.input);
-        inner.handoff.reset();
-        {
+        let depth = inner.slots.len() as u64;
+        // Admission: claim the next epoch id once its ring slot is free,
+        // i.e. the occupant W epochs back has been collected.
+        let epoch = {
             let mut ctrl = lock_ignore_poison(&inner.ctrl);
-            ctrl.epoch += 1;
-            inner.epoch_fast.store(ctrl.epoch, Ordering::Release);
+            loop {
+                if ctrl.shutdown {
+                    return Err(HandoffError("shard runner shut down".into()));
+                }
+                if let Some(msg) = inner.fault.get() {
+                    return Err(HandoffError(msg));
+                }
+                if ctrl.admitted < ctrl.freed + depth {
+                    break;
+                }
+                ctrl = match inner.free_cv.wait(ctrl) {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+            }
+            ctrl.admitted += 1;
+            inner.inflight_hwm.fetch_max(ctrl.admitted - ctrl.freed, Ordering::Relaxed);
+            ctrl.admitted
+        };
+        let slot = inner.slot(epoch);
+        stage(&slot.bufs.input);
+        slot.handoff.reset();
+        {
+            // Announce in id order: the watermark advances over the
+            // contiguous staged prefix, so a shard loop never runs an
+            // epoch whose input a slower concurrent caller is still
+            // staging.
+            let mut ctrl = lock_ignore_poison(&inner.ctrl);
+            ctrl.staged.insert(epoch);
+            while ctrl.staged.remove(&(ctrl.announced + 1)) {
+                ctrl.announced += 1;
+            }
+            inner.epoch_fast.store(ctrl.announced, Ordering::Release);
             inner.start_cv.notify_all();
         }
         let n_layers = inner.kernel.n_layers() as u32;
+        let mut result = Ok(());
         for s in 0..inner.kernel.n_shards() {
-            inner.handoff.wait(s, n_layers)?;
+            if let Err(e) = slot.handoff.wait(s, n_layers) {
+                result = Err(e);
+                break;
+            }
         }
-        collect(&inner.bufs.output);
-        Ok(())
+        if result.is_ok() {
+            collect(&slot.bufs.output);
+        }
+        // Free the slot even on a fault: peers blocked on admission must
+        // wake and observe the sticky fault, not hang on a ring that will
+        // never drain.
+        {
+            let mut ctrl = lock_ignore_poison(&inner.ctrl);
+            ctrl.done.insert(epoch);
+            while ctrl.done.remove(&(ctrl.freed + 1)) {
+                ctrl.freed += 1;
+            }
+            inner.free_cv.notify_all();
+        }
+        result
     }
 
     fn stats(&self) -> Vec<ShardStats> {
@@ -1163,11 +1295,23 @@ impl<K: ShardKernel> ShardRunner<K> {
             .collect()
     }
 
-    /// Summed wire counters of this runner's remote links.
+    /// Summed wire counters of this runner's remote links (sessions
+    /// only — host-level recovery counters are folded once per host by
+    /// `ShardedModel::wire_stats`), plus this runner's epoch-ring
+    /// concurrency high-water mark.
     fn wire_stats(&self) -> WireStats {
-        self.link_stats
+        let mut ws = self
+            .link_stats
             .iter()
-            .fold(WireStats::default(), |acc, l| acc.merged(l.snapshot()))
+            .fold(WireStats::default(), |acc, l| acc.merged(l.snapshot()));
+        ws.inflight_epochs =
+            ws.inflight_epochs.max(self.inner.inflight_hwm.load(Ordering::Relaxed));
+        ws
+    }
+
+    /// Ring depth W: how many epochs may be in flight at once.
+    fn ring_depth(&self) -> usize {
+        self.inner.slots.len()
     }
 
     fn n_remote(&self) -> usize {
@@ -1181,6 +1325,7 @@ impl<K: ShardKernel> Drop for ShardRunner<K> {
             let mut ctrl = lock_ignore_poison(&self.inner.ctrl);
             ctrl.shutdown = true;
             self.inner.start_cv.notify_all();
+            self.inner.free_cv.notify_all();
         }
         // Close every link: sets the shutdown flag and shuts the socket,
         // so senders blocked on the window gate and receivers parked in a
@@ -1432,18 +1577,19 @@ impl ShardedPlan {
     pub fn compile(net: &Network, tables: &NetworkTables, shards: usize) -> ShardedPlan {
         let (pnet, ptables) = permuted_for_shards(net, tables);
         let kernel = plan_kernel_of(&pnet, &ptables, shards);
-        Self::from_kernel(kernel, resolve_spin_us(None, false), 0, &[], WireConfig::default())
+        let registry = HostRegistry::new(shards, 0, WireConfig::default());
+        Self::from_kernel(kernel, resolve_spin_us(None, false), &[], &registry)
             .expect("all-local plan shards cannot fail")
     }
 
-    /// Build from a compiled kernel, a placement map and the wire knobs
-    /// (shared with [`ShardedModel::compile_placed_wire`]).
+    /// Build from a compiled kernel, a placement map and the model's host
+    /// registry (shared with [`ShardedModel::compile_placed_wire`] so
+    /// both engines' sessions multiplex over the same host links).
     pub(crate) fn from_kernel(
         kernel: PlanKernel,
         spin_us: u64,
-        fingerprint: u64,
         placement: &[Option<String>],
-        wire: WireConfig,
+        registry: &HostRegistry,
     ) -> Result<ShardedPlan> {
         let n_features = kernel.plan.n_features();
         let n_outputs = kernel.plan.n_outputs();
@@ -1451,14 +1597,7 @@ impl ShardedPlan {
         let out_step = kernel.plan.out_step;
         let shards = kernel.shards;
         Ok(ShardedPlan {
-            runner: ShardRunner::new(
-                kernel,
-                spin_us,
-                EngineKind::Plan,
-                fingerprint,
-                placement,
-                wire,
-            )?,
+            runner: ShardRunner::new(kernel, spin_us, EngineKind::Plan, placement, registry)?,
             n_features,
             n_outputs,
             in_bits,
@@ -1487,7 +1626,7 @@ impl ShardedPlan {
     }
 
     pub(crate) fn faulted(&self) -> bool {
-        self.runner.inner.handoff.fault().is_some()
+        self.runner.inner.fault.get().is_some()
     }
 
     /// Sharded table-only forward pass over input codes.  Errors when the
@@ -1510,10 +1649,42 @@ impl ShardedPlan {
         Ok(out)
     }
 
-    /// Batched code-level forward pass (samples sequential, each sample
-    /// internally parallel across shards).
+    /// Batched code-level forward pass.  All-local (or W = 1) runners go
+    /// sample-by-sample; runners with remote shards and a W-deep epoch
+    /// ring submit from W lanes so up to W samples overlap end to end —
+    /// each sample's network round-trips hide behind its neighbors'
+    /// compute.  Sample order is restored on merge and epochs are
+    /// isolated by ring slot, so the result is bit-exact with the serial
+    /// path.
     pub fn forward_batch(&self, xs: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
-        xs.iter().map(|x| self.forward_codes(x)).collect()
+        let lanes = self.runner.ring_depth().min(xs.len());
+        if self.runner.n_remote() == 0 || lanes <= 1 {
+            return xs.iter().map(|x| self.forward_codes(x)).collect();
+        }
+        let mut rows: Vec<Option<Vec<i32>>> = (0..xs.len()).map(|_| None).collect();
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(lanes);
+            for t in 0..lanes {
+                handles.push(scope.spawn(move || -> Result<Vec<(usize, Vec<i32>)>> {
+                    let mut got = Vec::new();
+                    let mut i = t;
+                    while i < xs.len() {
+                        got.push((i, self.forward_codes(&xs[i])?));
+                        i += lanes;
+                    }
+                    Ok(got)
+                }));
+            }
+            for h in handles {
+                let got =
+                    h.join().map_err(|_| anyhow::anyhow!("batch submit lane panicked"))??;
+                for (i, row) in got {
+                    rows[i] = Some(row);
+                }
+            }
+            Ok(())
+        })?;
+        Ok(rows.into_iter().map(|r| r.expect("every sample produced a row")).collect())
     }
 
     /// Forward from raw [0,1] features; returns dequantized logits
@@ -1777,18 +1948,19 @@ impl ShardedBitslice {
     ) -> ShardedBitslice {
         let (pnet, ptables) = permuted_for_shards(net, tables);
         let kernel = bits_kernel_of(&pnet, &ptables, shards, workers);
-        Self::from_kernel(kernel, resolve_spin_us(None, false), 0, &[], WireConfig::default())
+        let registry = HostRegistry::new(shards, 0, WireConfig::default());
+        Self::from_kernel(kernel, resolve_spin_us(None, false), &[], &registry)
             .expect("all-local bitslice shards cannot fail")
     }
 
-    /// Build from a compiled kernel, a placement map and the wire knobs
-    /// (shared with [`ShardedModel::compile_placed_wire`]).
+    /// Build from a compiled kernel, a placement map and the model's host
+    /// registry (shared with [`ShardedModel::compile_placed_wire`] so
+    /// both engines' sessions multiplex over the same host links).
     pub(crate) fn from_kernel(
         kernel: BitsliceKernel,
         spin_us: u64,
-        fingerprint: u64,
         placement: &[Option<String>],
-        wire: WireConfig,
+        registry: &HostRegistry,
     ) -> Result<ShardedBitslice> {
         Ok(ShardedBitslice {
             n_features: kernel.n_features,
@@ -1803,9 +1975,8 @@ impl ShardedBitslice {
                 kernel,
                 spin_us,
                 EngineKind::Bitslice,
-                fingerprint,
                 placement,
-                wire,
+                registry,
             )?,
         })
     }
@@ -1847,7 +2018,7 @@ impl ShardedBitslice {
     }
 
     pub(crate) fn faulted(&self) -> bool {
-        self.runner.inner.handoff.fault().is_some()
+        self.runner.inner.fault.get().is_some()
     }
 
     /// One ≤64-sample word: pack to planes, run the sharded streams, unpack.
@@ -1883,16 +2054,53 @@ impl ShardedBitslice {
         Ok(())
     }
 
-    /// Batched code-level forward pass: words sequential, each word
-    /// internally parallel across shards; ragged tails handled (invalid
-    /// lanes are packed as zero and never unpacked).  Bit-exact with
-    /// `BitsliceNet::forward_batch`; errors when the engine has faulted.
+    /// Batched code-level forward pass: each ≤64-sample word is one
+    /// epoch; ragged tails handled (invalid lanes are packed as zero and
+    /// never unpacked).  All-local (or W = 1) runners go word-by-word;
+    /// runners with remote shards and a W-deep epoch ring submit words
+    /// from W lanes so their network round-trips overlap (order restored
+    /// on merge — bit-exact with `BitsliceNet::forward_batch` either
+    /// way).  Errors when the engine has faulted.
     pub fn forward_batch(&self, xs: &[Vec<i32>]) -> Result<Vec<Vec<i32>>> {
-        let mut out = Vec::with_capacity(xs.len());
-        for word in xs.chunks(WORD) {
-            self.forward_word(word, &mut out)?;
+        let words: Vec<&[Vec<i32>]> = xs.chunks(WORD).collect();
+        let lanes = self.runner.ring_depth().min(words.len());
+        if self.runner.n_remote() == 0 || lanes <= 1 {
+            let mut out = Vec::with_capacity(xs.len());
+            for word in words {
+                self.forward_word(word, &mut out)?;
+            }
+            return Ok(out);
         }
-        Ok(out)
+        let mut chunks: Vec<Option<Vec<Vec<i32>>>> = (0..words.len()).map(|_| None).collect();
+        std::thread::scope(|scope| -> Result<()> {
+            let words = &words;
+            let mut handles = Vec::with_capacity(lanes);
+            for t in 0..lanes {
+                handles.push(scope.spawn(move || -> Result<Vec<(usize, Vec<Vec<i32>>)>> {
+                    let mut got = Vec::new();
+                    let mut i = t;
+                    while i < words.len() {
+                        let mut rows = Vec::with_capacity(words[i].len());
+                        self.forward_word(words[i], &mut rows)?;
+                        got.push((i, rows));
+                        i += lanes;
+                    }
+                    Ok(got)
+                }));
+            }
+            for h in handles {
+                let got =
+                    h.join().map_err(|_| anyhow::anyhow!("batch submit lane panicked"))??;
+                for (i, rows) in got {
+                    chunks[i] = Some(rows);
+                }
+            }
+            Ok(())
+        })?;
+        Ok(chunks
+            .into_iter()
+            .flat_map(|c| c.expect("every word produced its rows"))
+            .collect())
     }
 }
 
@@ -1912,6 +2120,11 @@ pub struct ShardedModel {
     pub plan: ShardedPlan,
     /// Plane-range sharded bitslice engine.
     pub bits: ShardedBitslice,
+    /// Host-link registry both engines' sessions were opened through:
+    /// with [`WireConfig::mux`] (the default) all (engine, shard)
+    /// sessions to one host share one TCP connection and one recovery
+    /// ladder.
+    registry: Arc<HostRegistry>,
     shards: usize,
     spin_us: u64,
 }
@@ -1983,11 +2196,14 @@ impl ShardedModel {
         if crate::sim::verify::gate_enabled() {
             crate::sim::verify::report_for_kernels(&plan_kernel, &bits_kernel).gate()?;
         }
-        let plan =
-            ShardedPlan::from_kernel(plan_kernel, spin_us, fingerprint, placement, wire)?;
-        let bits =
-            ShardedBitslice::from_kernel(bits_kernel, spin_us, fingerprint, placement, wire)?;
-        Ok(ShardedModel { plan, bits, shards, spin_us })
+        // One registry for both engines: with mux on, the bitslice
+        // engine's sessions ride the host links the plan engine already
+        // dialed (one connection, one reader, one recovery ladder per
+        // host).
+        let registry = Arc::new(HostRegistry::new(shards, fingerprint, wire));
+        let plan = ShardedPlan::from_kernel(plan_kernel, spin_us, placement, &registry)?;
+        let bits = ShardedBitslice::from_kernel(bits_kernel, spin_us, placement, &registry)?;
+        Ok(ShardedModel { plan, bits, registry, shards, spin_us })
     }
 
     /// Shard count S.
@@ -2001,12 +2217,33 @@ impl ShardedModel {
     }
 
     /// Summed wire counters over both engines' remote links (`None` when
-    /// every shard is local).
+    /// every shard is local): session-level transport counters summed per
+    /// engine, host-level recovery counters (reconnects, resumes, replay
+    /// totals) folded **once per host link** — with mux on both engines
+    /// share each host's link, so folding those per engine would
+    /// double-count every incident.
     pub fn wire_stats(&self) -> Option<WireStats> {
         if self.plan.n_remote() + self.bits.n_remote() == 0 {
             return None;
         }
-        Some(self.plan.wire_stats().merged(self.bits.wire_stats()))
+        let mut ws = self.plan.wire_stats().merged(self.bits.wire_stats());
+        for h in self.registry.hosts() {
+            ws = ws.merged(h.recovery_stats());
+        }
+        Some(ws)
+    }
+
+    /// Distinct host links in use — with mux on, exactly one TCP
+    /// connection per remote worker host, however many (engine, shard)
+    /// sessions it carries.
+    pub fn wire_links(&self) -> usize {
+        self.registry.hosts().len()
+    }
+
+    /// Per-host transport/recovery rollup (the `wire_hosts=[…]` metrics
+    /// group).
+    pub fn wire_host_stats(&self) -> Vec<WireHostStats> {
+        self.registry.hosts().iter().map(|h| h.host_stats()).collect()
     }
 
     /// Whether either sharded engine carries a sticky fault (panicked
@@ -2023,8 +2260,8 @@ impl ShardedModel {
     /// state without a real failure).
     #[cfg(test)]
     pub(crate) fn inject_fault(&self, msg: &str) {
-        self.plan.runner.inner.handoff.fail(msg);
-        self.bits.runner.inner.handoff.fail(msg);
+        self.plan.runner.inner.fault.set(msg);
+        self.bits.runner.inner.fault.set(msg);
     }
 
     /// Batched feature-level forward pass: word-sized batches run through

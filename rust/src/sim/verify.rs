@@ -75,6 +75,10 @@ pub enum ArtifactKind {
     Hazard,
     /// A remote shard's `wire_plan` needs/result schedule.
     Wire,
+    /// A sharded kernel's per-epoch buffer-slot layout (the Wire-v3 epoch
+    /// ring reuses slots across epochs W apart; isolation requires each
+    /// epoch's reads to be closed over that epoch's own writes).
+    EpochRing,
     /// A folded (`lut::opt`) netlist checked against its unfolded baseline.
     NetlistOpt,
 }
@@ -86,6 +90,7 @@ impl fmt::Display for ArtifactKind {
             ArtifactKind::OpStream => "op-stream",
             ArtifactKind::Hazard => "hazard-schedule",
             ArtifactKind::Wire => "wire-plan",
+            ArtifactKind::EpochRing => "epoch-ring",
             ArtifactKind::NetlistOpt => "netlist-opt",
         })
     }
@@ -982,6 +987,102 @@ pub(crate) fn check_wire_plans<K: ShardKernel>(k: &K) -> Vec<Violation> {
 }
 
 // ---------------------------------------------------------------------------
+// Checker 5: epoch-ring slot safety
+// ---------------------------------------------------------------------------
+
+/// Check that one epoch's buffer footprint is **self-contained**, so the
+/// Wire-v3 epoch ring may hand the kernel a recycled `BufSet` slot
+/// without any value leaking between the epochs that share it.
+///
+/// A ring slot is reused by epochs W apart without being cleared; the
+/// recycled buffers still hold the previous tenant's boundary values.
+/// Isolation therefore rests on three structural facts, checked here per
+/// kernel rather than trusted:
+///
+/// - `ring-slot-capacity` — every interior boundary's write tiling fits
+///   inside the slot buffer (`buf_len`); an oversized tiling would spill
+///   a cell's stores past its epoch's slot.
+/// - `ring-output-width` — the final layer's write tiling fills the
+///   output staging buffer exactly, so a collected epoch never exposes
+///   positions last written by an earlier epoch.
+/// - `ring-stale-read` — every read at layer `l ≥ 1` lands inside the
+///   *same epoch's* boundary-`l` write tiling.  A position that is
+///   readable (within `buf_len`) but unwritten this epoch would yield
+///   whatever epoch `e − W` left in the slot — the precise cross-epoch
+///   leak the ring must exclude, and the reason a checkpointed resume
+///   may trim replay flights below the applied boundary (no layer can
+///   reach data its own boundary's flights did not carry).
+///
+/// The within-epoch ordering of these accesses is the hazard checkers'
+/// job ([`check_hazards`]); this checker is about which *slot positions*
+/// an epoch may legally touch at all.
+pub(crate) fn check_epoch_slots<K: ShardKernel>(k: &K) -> Vec<Violation> {
+    let art = ArtifactKind::EpochRing;
+    let mut out = Vec::new();
+    let l_count = k.n_layers();
+    let shards = k.n_shards();
+    // Tiled width of each boundary ≥ 1 (max write end; tiling gaps and
+    // overlaps are check_hazards' "write-tiling" — tolerate them here).
+    let mut width = vec![0usize; l_count + 1];
+    width[0] = k.in_len();
+    for b in 1..=l_count {
+        width[b] =
+            (0..shards).map(|s| k.write_range(b - 1, s).end).max().unwrap_or(0);
+    }
+    for b in 1..l_count {
+        if width[b] > k.buf_len() {
+            out.push(v(
+                art,
+                "ring-slot-capacity",
+                b,
+                width[b],
+                format!(
+                    "boundary {b} tiles {} positions but the slot buffer holds {}",
+                    width[b],
+                    k.buf_len()
+                ),
+            ));
+        }
+    }
+    if l_count > 0 && width[l_count] != k.out_len() {
+        out.push(v(
+            art,
+            "ring-output-width",
+            l_count,
+            width[l_count],
+            format!(
+                "final boundary tiles {} positions but output staging holds {} — \
+                 a short tiling exposes the slot's previous epoch",
+                width[l_count],
+                k.out_len()
+            ),
+        ));
+    }
+    for l in 1..l_count {
+        for s in 0..shards {
+            for &x in k.reads(l, s) {
+                if x >= width[l] {
+                    out.push(v(
+                        art,
+                        "ring-stale-read",
+                        l,
+                        x,
+                        format!(
+                            "cell ({l},{s}) reads boundary-{l} position {x}, never \
+                             written this epoch (tiled width {}) — the value would \
+                             bleed from the slot's previous tenant",
+                            width[l]
+                        ),
+                    ));
+                    break; // one per cell localizes the leak
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
 // Aggregate entry points
 // ---------------------------------------------------------------------------
 
@@ -1038,8 +1139,16 @@ pub fn verify_shard_streams(a: &ShardedArtifacts) -> Vec<Violation> {
     check_kernel_streams(&a.bits)
 }
 
+/// Epoch-ring slot-safety violations of both sharded kernels (cross-epoch
+/// isolation of recycled `BufSet` slots — see [`check_epoch_slots`]).
+pub fn verify_epoch_slots(a: &ShardedArtifacts) -> Vec<Violation> {
+    let mut out = check_epoch_slots(&a.plan);
+    out.extend(check_epoch_slots(&a.bits));
+    out
+}
+
 // ---------------------------------------------------------------------------
-// Checker 5: netlist-opt fold equivalence
+// Checker 6: netlist-opt fold equivalence
 // ---------------------------------------------------------------------------
 
 /// Fresh 64-sample random wire words fed per equivalence round.
@@ -1146,6 +1255,9 @@ pub(crate) fn report_for_kernels(pk: &PlanKernel, bk: &BitsliceKernel) -> Report
     let mut wires = check_wire_plans(pk);
     wires.extend(check_wire_plans(bk));
     r.section("wire plans", wires);
+    let mut slots = check_epoch_slots(pk);
+    slots.extend(check_epoch_slots(bk));
+    r.section("epoch-ring slots", slots);
     r
 }
 
@@ -1648,6 +1760,47 @@ mod tests {
         assert!(wp.needs[1].is_empty());
         wp.needs[1].push((1, 2..3));
         assert!(has(&check_wire_plan(&k, 0, &wp), "wire-flightless"));
+    }
+
+    // ---- checker 5: epoch-ring slot safety ----
+
+    #[test]
+    fn epoch_slots_accept_clean_kernels() {
+        let vs = check_epoch_slots(&uniform_kernel());
+        assert!(vs.is_empty(), "{vs:?}");
+        let (pk, bk) = kernels(2);
+        let vs = check_epoch_slots(&pk);
+        assert!(vs.is_empty(), "plan kernel: {vs:?}");
+        let vs = check_epoch_slots(&bk);
+        assert!(vs.is_empty(), "bitslice kernel: {vs:?}");
+    }
+
+    #[test]
+    fn epoch_slots_reject_oversized_tiling() {
+        let mut k = uniform_kernel();
+        // Boundary 2's tiling runs past the slot buffer: stores would
+        // spill out of the epoch's slot.
+        k.write[1] = vec![0..2, 2..6];
+        assert!(has(&check_epoch_slots(&k), "ring-slot-capacity"));
+    }
+
+    #[test]
+    fn epoch_slots_reject_short_output_tiling() {
+        let mut k = uniform_kernel();
+        // The final layer leaves output positions 2..4 unwritten — a
+        // collected epoch would expose the slot's previous tenant there.
+        k.write[3] = vec![0..1, 1..2];
+        assert!(has(&check_epoch_slots(&k), "ring-output-width"));
+    }
+
+    #[test]
+    fn epoch_slots_reject_stale_read() {
+        let mut k = uniform_kernel();
+        // Boundary 2 only tiles positions 0..2 but layer 2 still reads
+        // 0..4: positions 2 and 3 are within buffer capacity yet never
+        // written this epoch — a cross-epoch leak through the ring slot.
+        k.write[1] = vec![0..1, 1..2];
+        assert!(has(&check_epoch_slots(&k), "ring-stale-read"));
     }
 
     // ---- netlist-opt fold equivalence ----

@@ -35,11 +35,31 @@
 //! epochs may share a flight.  Link failures are no longer sticky: the
 //! coordinator keeps a per-epoch replay log, re-handshakes on reconnect
 //! (fingerprint + resume-epoch header in the Hello frame) and replays the
-//! open epoch from its boundary; only an exhausted retry budget
-//! ([`WireConfig::retries`]) faults the engine and lets `Backend::route`
-//! degrade to the in-process plan.  See `ARCHITECTURE.md` §7 for the
-//! frame layout, the window diagram and the retry → resume → degrade
-//! failure ladder.
+//! open epochs from their applied boundaries; only an exhausted retry
+//! budget ([`WireConfig::retries`]) faults the engine and lets
+//! `Backend::route` degrade to the in-process plan.
+//!
+//! Wire handoff **v3** (`PLW3`) adds two structural changes on top:
+//!
+//! - **Per-host link multiplexing**: every `(engine, shard)` pair is a
+//!   *session* (u16 id in the frame header) and all sessions to one host
+//!   share a single TCP connection owned by a [`HostLink`].  A dedicated
+//!   per-host reader thread demultiplexes inbound frames to sessions; a
+//!   host dying is **one** recovery ladder (redial, re-Hello every
+//!   session, replay each open epoch's unapplied suffix), not E×S
+//!   independent ones.  `WireConfig::mux = false` falls back to one
+//!   connection per session over the identical code path.
+//! - **Epoch pipelining + checkpointed suffix resume**: a session keeps up
+//!   to W epochs open at once (the runner's epoch ring, `sim::shard`), and
+//!   each open epoch checkpoints the worker's last applied result frame as
+//!   its applied-boundary high-water mark.  On reconnect the replay ships
+//!   `Start(resume = h)` + that checkpoint + only the needs flights at
+//!   level ≥ h — the worker re-runs cells from layer h instead of replaying
+//!   the whole epoch (`resume_replayed_frames` / `resume_skipped_frames`
+//!   count the split).
+//!
+//! See `ARCHITECTURE.md` §7 for the frame layout, the window diagram, the
+//! session demux and the retry → resume → degrade failure ladder.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::io::{Read, Write};
@@ -90,13 +110,15 @@ impl Fnv {
 // Frame codec
 // ---------------------------------------------------------------------------
 
-/// Versioned frame magic: ASCII `PLW2`.  A major protocol change bumps the
+/// Versioned frame magic: ASCII `PLW3`.  A major protocol change bumps the
 /// trailing digit, so mismatched builds fail the handshake with
 /// [`WireError::BadMagic`] instead of misparsing frames.  `PLW1` was the
-/// lock-step request/response protocol; `PLW2` is the pipelined, windowed
+/// lock-step request/response protocol; `PLW2` the pipelined, windowed
 /// stream with the resume handshake (Hello carries a resume-epoch and
-/// window header).
-pub const MAGIC: u32 = u32::from_le_bytes(*b"PLW2");
+/// window header); `PLW3` multiplexes all (engine, shard) sessions to one
+/// host over a single connection — the previously-reserved u16 at header
+/// bytes 6..8 became the session id.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"PLW3");
 
 /// Header bytes after the `u32` length prefix.
 const HEADER_LEN: usize = 40;
@@ -153,6 +175,11 @@ pub struct Frame {
     /// `boundary`, carried so a receiver can cheaply assert which of the
     /// two parity buffers the payload belongs to.
     pub parity: u8,
+    /// Multiplexing session id: which (engine, shard) conversation on the
+    /// shared per-host connection this frame belongs to.  `0` is the host
+    /// control channel (`Bye(0)` closes the whole connection); sessions
+    /// count from 1.  Header bytes 6..8 (reserved-zero in PLW2).
+    pub session: u16,
     /// Epoch (sample / word sequence number) the frame belongs to.
     pub epoch: u64,
     /// Boundary index (0 = network input, L = network output).
@@ -166,11 +193,13 @@ pub struct Frame {
 }
 
 impl Frame {
-    /// A `Data` frame for `words` at positions `start..` of `boundary`.
+    /// A `Data` frame for `words` at positions `start..` of `boundary`
+    /// (session 0 until stamped by the link that ships it).
     pub fn data(epoch: u64, boundary: u32, shard: u32, start: u32, words: Vec<u64>) -> Frame {
         Frame {
             kind: FrameKind::Data,
             parity: (boundary % 2) as u8,
+            session: 0,
             epoch,
             boundary,
             shard,
@@ -180,7 +209,16 @@ impl Frame {
     }
 
     fn control(kind: FrameKind, epoch: u64) -> Frame {
-        Frame { kind, parity: 0, epoch, boundary: 0, shard: 0, start: 0, words: Vec::new() }
+        Frame {
+            kind,
+            parity: 0,
+            session: 0,
+            epoch,
+            boundary: 0,
+            shard: 0,
+            start: 0,
+            words: Vec::new(),
+        }
     }
 }
 
@@ -230,7 +268,7 @@ impl std::fmt::Display for WireError {
         match self {
             WireError::Io(e) => write!(f, "wire i/o: {e}"),
             WireError::BadMagic(m) => {
-                write!(f, "bad frame magic {m:#010x} (want {MAGIC:#010x} = \"PLW2\")")
+                write!(f, "bad frame magic {m:#010x} (want {MAGIC:#010x} = \"PLW3\")")
             }
             WireError::BadKind(k) => write!(f, "unknown frame kind {k}"),
             WireError::Truncated { need, got } => {
@@ -282,7 +320,7 @@ pub fn encode_frame(f: &Frame) -> Result<Vec<u8>, WireError> {
     out.extend_from_slice(&MAGIC.to_le_bytes());
     out.push(f.kind as u8);
     out.push(f.parity);
-    out.extend_from_slice(&0u16.to_le_bytes());
+    out.extend_from_slice(&f.session.to_le_bytes());
     out.extend_from_slice(&f.epoch.to_le_bytes());
     out.extend_from_slice(&f.boundary.to_le_bytes());
     out.extend_from_slice(&f.shard.to_le_bytes());
@@ -323,9 +361,7 @@ pub fn decode_frame(body: &[u8]) -> Result<Frame, WireError> {
     }
     let kind = FrameKind::from_u8(body[4]).ok_or(WireError::BadKind(body[4]))?;
     let parity = body[5];
-    if le_u16(&body[6..8]) != 0 {
-        return Err(WireError::Protocol("reserved header bytes not zero".into()));
-    }
+    let session = le_u16(&body[6..8]);
     let epoch = le_u64(&body[8..16]);
     let boundary = le_u32(&body[16..20]);
     let shard = le_u32(&body[20..24]);
@@ -344,7 +380,7 @@ pub fn decode_frame(body: &[u8]) -> Result<Frame, WireError> {
         return Err(WireError::BadChecksum { got, want });
     }
     let words = body[HEADER_LEN..].chunks_exact(8).map(le_u64).collect();
-    Ok(Frame { kind, parity, epoch, boundary, shard, start, words })
+    Ok(Frame { kind, parity, session, epoch, boundary, shard, start, words })
 }
 
 /// Write one frame (length prefix + body).
@@ -472,6 +508,7 @@ fn fault_frame(msg: &str) -> Frame {
     Frame {
         kind: FrameKind::Fault,
         parity: 0,
+        session: 0,
         epoch: 0,
         boundary: 0,
         shard: 0,
@@ -504,24 +541,36 @@ pub const DEFAULT_WIRE_WINDOW: usize = 4;
 /// degrades to the in-process plan.
 pub const DEFAULT_WIRE_RETRIES: u32 = 6;
 
-/// Tuning knobs of the v2 wire protocol, plumbed from `ServerConfig` /
-/// `polylut serve --wire-window / --wire-retries` down to every link.
+/// Tuning knobs of the wire protocol, plumbed from `ServerConfig` /
+/// `polylut serve --wire-window / --wire-retries / --wire-mux` down to
+/// every link.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WireConfig {
-    /// Maximum needs flights (one per layer boundary) in flight per link
-    /// ahead of the last applied result.  `1` = lock-step parity with the
-    /// v1 protocol; values ≥ the layer count stream a whole epoch without
-    /// ever blocking on a result.
+    /// Maximum needs flights (one per layer boundary) in flight per
+    /// session ahead of the last applied result, **and** the depth of the
+    /// coordinator's epoch ring (how many epochs may be in flight at
+    /// once).  `1` = lock-step parity with the v1 protocol; values ≥ the
+    /// layer count stream a whole epoch without ever blocking on a
+    /// result.
     pub window: usize,
-    /// Reconnect attempts per link incident before the sticky engine
+    /// Reconnect attempts per host-link incident before the sticky engine
     /// fault.  The *initial* connect at compile time keeps a short fixed
     /// budget (a dead address is a config error, not an outage).
     pub retries: u32,
+    /// v3 per-host link multiplexing: all (engine, shard) sessions to one
+    /// `host:port` share a single TCP connection (and one recovery
+    /// ladder).  `false` restores the v2 topology — one connection per
+    /// session — over the identical code path.
+    pub mux: bool,
 }
 
 impl Default for WireConfig {
     fn default() -> WireConfig {
-        WireConfig { window: DEFAULT_WIRE_WINDOW, retries: DEFAULT_WIRE_RETRIES }
+        WireConfig {
+            window: DEFAULT_WIRE_WINDOW,
+            retries: DEFAULT_WIRE_RETRIES,
+            mux: true,
+        }
     }
 }
 
@@ -612,19 +661,30 @@ pub struct WireStats {
     /// exhausted — each one faulted its engine and degraded routing.
     pub retry_exhausted: u64,
     /// High-water mark of in-flight needs flights (the `--wire-window`
-    /// unit: one flight per layer boundary) observed on any link.
+    /// unit: one flight per layer boundary) observed on any session.
     pub inflight_hwm: u64,
-    /// Cached socket handles installed — exactly one per link generation
-    /// (initial connect and each successful reconnect).  `ship` and
-    /// `recv_applied` share this per-generation handle; a regression back
-    /// to per-flight/per-frame `try_clone` dup syscalls would show up here
-    /// as this counter scaling with `frames`.
+    /// Cached socket handles installed — exactly one per host-link
+    /// generation (initial connect and each successful reconnect).  Every
+    /// session's sender and receiver share this per-generation handle; a
+    /// regression back to per-flight/per-frame `try_clone` dup syscalls
+    /// would show up here as this counter scaling with `frames`.
     pub handle_clones: u64,
+    /// High-water mark of concurrently in-flight **epochs** on the runner's
+    /// epoch ring (admitted but not yet collected; bounded by
+    /// [`WireConfig::window`]; 1 under lock-step pacing).
+    pub inflight_epochs: u64,
+    /// Frames re-sent by reconnect-and-resume replays — with v3
+    /// checkpointed resume, only the unapplied suffix of each open epoch.
+    pub resume_replayed_frames: u64,
+    /// Frames a full-epoch (v2-style) replay would have re-sent but the
+    /// checkpointed resume skipped (trimmed below the applied-boundary
+    /// high-water mark of their epoch).
+    pub resume_skipped_frames: u64,
 }
 
 impl WireStats {
     /// Merge two counter sets: element-wise sums, except the in-flight
-    /// high-water mark, which takes the max.
+    /// high-water marks, which take the max.
     pub fn merged(self, o: WireStats) -> WireStats {
         WireStats {
             frames: self.frames + o.frames,
@@ -635,11 +695,39 @@ impl WireStats {
             retry_exhausted: self.retry_exhausted + o.retry_exhausted,
             inflight_hwm: self.inflight_hwm.max(o.inflight_hwm),
             handle_clones: self.handle_clones + o.handle_clones,
+            inflight_epochs: self.inflight_epochs.max(o.inflight_epochs),
+            resume_replayed_frames: self.resume_replayed_frames
+                + o.resume_replayed_frames,
+            resume_skipped_frames: self.resume_skipped_frames
+                + o.resume_skipped_frames,
         }
     }
 }
 
-/// Shared atomic wire counters of one live link.
+/// Per-host rollup of one multiplexed link (rendered by
+/// `coordinator::metrics` as the `wire_hosts=[…]` snapshot group), so a
+/// saturated or flapping host is visible without log diving.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireHostStats {
+    /// Worker address the link dials.
+    pub addr: String,
+    /// Sessions multiplexed over the link: plan + bitslice engines × their
+    /// remote shards on this host (1 with [`WireConfig::mux`] off).
+    pub sessions: u64,
+    /// Frames sent + received over the host connection, all sessions plus
+    /// handshakes.
+    pub frames: u64,
+    /// Bytes sent + received over the host connection.
+    pub bytes: u64,
+    /// Connection attempts beyond the link's first.
+    pub reconnects: u64,
+    /// Successful reconnect-and-resume ladders — one per host incident,
+    /// however many sessions the link carries.
+    pub resumes: u64,
+}
+
+/// Shared atomic wire counters of one live session (or, for the
+/// recovery-class counters, of one host link).
 #[derive(Default)]
 pub(crate) struct LinkStats {
     frames: AtomicU64,
@@ -650,6 +738,9 @@ pub(crate) struct LinkStats {
     retry_exhausted: AtomicU64,
     inflight_hwm: AtomicU64,
     handle_clones: AtomicU64,
+    inflight_epochs: AtomicU64,
+    resume_replayed_frames: AtomicU64,
+    resume_skipped_frames: AtomicU64,
 }
 
 impl LinkStats {
@@ -668,6 +759,11 @@ impl LinkStats {
             retry_exhausted: self.retry_exhausted.load(Ordering::Relaxed),
             inflight_hwm: self.inflight_hwm.load(Ordering::Relaxed),
             handle_clones: self.handle_clones.load(Ordering::Relaxed),
+            inflight_epochs: self.inflight_epochs.load(Ordering::Relaxed),
+            resume_replayed_frames: self
+                .resume_replayed_frames
+                .load(Ordering::Relaxed),
+            resume_skipped_frames: self.resume_skipped_frames.load(Ordering::Relaxed),
         }
     }
 }
@@ -774,7 +870,7 @@ fn frames_per_epoch(plan: &WirePlan) -> usize {
 }
 
 // ---------------------------------------------------------------------------
-// Coordinator side: WireLink (windowed sender + demuxing receiver)
+// Coordinator side: HostLink (per-host mux + recovery) + WireLink (session handle)
 // ---------------------------------------------------------------------------
 
 /// How long one blocking read waits before waking to re-check liveness (a
@@ -795,134 +891,304 @@ fn shutdown_error() -> WireError {
     WireError::Io(std::io::Error::new(std::io::ErrorKind::Interrupted, "link shut down"))
 }
 
-/// Mutable link state, guarded by [`WireLink::core`].
-struct LinkCore {
-    /// Live stream (`None` after an idle drop, until the next epoch's
-    /// first ship redials).  Held behind an `Arc` so `ship` and
-    /// `recv_applied` can take a shared handle under the lock and do their
-    /// IO outside it **without** a `try_clone` dup syscall per
-    /// flight/frame — one handle is installed per link generation
-    /// (counted in [`WireStats::handle_clones`]).
-    stream: Option<Arc<TcpStream>>,
-    /// Bumped on every successful (re)connect; a failed IO call whose
-    /// observed generation is stale was already recovered by the peer
-    /// thread and needs no action of its own.
-    generation: u64,
-    /// A reconnect-and-resume is in progress (single-flight guard).
-    reconnecting: bool,
-    /// Sticky link death (retry budget exhausted / protocol violation).
-    dead: Option<String>,
-    /// Epoch currently (or last) streamed on this link.
-    epoch: u64,
-    /// `Start` shipped, final result not yet applied.
-    epoch_open: bool,
-    /// Needs flights shipped this epoch (only boundaries with cross-shard
-    /// needs ship a flight).
-    shipped: u32,
-    /// Shipped flights whose boundary's result has been applied — the
-    /// window credit.  Counted in *flight* units (not raw boundary
-    /// numbers: boundaries without a flight must neither consume nor
-    /// grant window room, or `--wire-window` would not bind).
-    acked: u32,
+/// Per-epoch bookkeeping of one session (coordinator side).  One exists
+/// per epoch the session has opened but not yet fully applied — the shard
+/// runner's epoch ring admits up to [`WireConfig::window`] of them.
+struct EpochState {
+    /// The session-stamped `Start` frame.  A resume re-ships it with
+    /// `boundary` set to the checkpoint high-water mark, telling the
+    /// worker to restart this epoch's cells at that layer instead of
+    /// layer 0.
+    start: Frame,
     /// Boundaries of the shipped flights, in ship order, not yet acked.
     flight_bounds: VecDeque<u32>,
-    /// Result boundaries applied this epoch (contiguous prefix; drives
-    /// the completion-table dedupe).
+    /// Result boundaries applied this epoch (contiguous prefix) — the
+    /// checkpoint high-water mark a resume replays from.
     applied: u32,
-    /// Replay log of the open epoch (`Start` + every needs frame): a
-    /// reconnect replays it from the epoch boundary, so a link death
-    /// mid-epoch costs a round of recomputation, not the batch.
-    replay: Vec<Frame>,
+    /// The last applied result frame: re-shipped on resume as the
+    /// boundary-`applied` restore, so the worker has its own slice of
+    /// that boundary without recomputing layers below it.
+    checkpoint: Option<Frame>,
+    /// Needs-frame replay ledger as `(boundary, frame)`.  `mark_applied`
+    /// trims entries below the checkpoint, so a reconnect replays only
+    /// the unapplied suffix of the epoch.
+    replay: Vec<(u32, Frame)>,
+    /// Frames trimmed off `replay` by checkpoint advancement — what a
+    /// full-epoch (v2-style) replay would have re-sent
+    /// ([`WireStats::resume_skipped_frames`]).
+    trimmed: u64,
     /// Completion table for result frames that arrived ahead of the next
-    /// contiguous boundary (keyed by boundary; epoch-checked on insert) —
-    /// completion no longer assumes TCP delivery order.
+    /// contiguous boundary (keyed by boundary).
     pending: BTreeMap<u32, Frame>,
 }
 
-/// Coordinator end of one (engine, shard) link.  Two runner threads share
-/// it: the *sender* replays the shard's hazard schedule and ships needs
-/// flights up to [`WireConfig::window`] boundaries ahead, the *receiver*
-/// demultiplexes result frames through the completion table, applies them
-/// to the shared buffers and advances `done[s]`.  Either thread recovers a
-/// failed stream via [`WireLink::recover`] (reconnect, re-handshake with a
-/// resume-epoch header, replay the open epoch); the other thread observes
-/// the bumped generation and retries transparently.
-pub(crate) struct WireLink {
-    addr: String,
+impl EpochState {
+    fn new(start: Frame) -> EpochState {
+        EpochState {
+            start,
+            flight_bounds: VecDeque::new(),
+            applied: 0,
+            checkpoint: None,
+            replay: Vec::new(),
+            trimmed: 0,
+            pending: BTreeMap::new(),
+        }
+    }
+}
+
+/// One (engine, shard) conversation multiplexed over a host link.
+struct SessionCore {
     engine: EngineKind,
-    shards: usize,
     shard: usize,
-    fingerprint: u64,
-    cfg: WireConfig,
     n_layers: usize,
-    core: Mutex<LinkCore>,
-    cv: Condvar,
-    shutdown: AtomicBool,
+    /// HelloAck received on the current connection generation.
+    open_acked: bool,
+    /// Closed by its [`WireLink`] (Bye sent); skipped by re-handshakes.
+    closed: bool,
+    /// Sticky session death (worker fault / protocol violation).
+    dead: Option<String>,
+    /// Highest epoch ever opened — epoch ids must ascend per session.
+    last_epoch: u64,
+    /// Open epochs, ascending (the lowest is the resume epoch).
+    epochs: BTreeMap<u64, EpochState>,
+    /// Needs flights shipped minus acked, counted across all open epochs —
+    /// the per-session window credit, in *flight* units (boundaries
+    /// without a flight neither consume nor grant window room, or
+    /// `--wire-window` would not bind).
+    shipped: u32,
+    acked: u32,
+    /// Per-session transport counters, shared with the owning
+    /// [`WireLink`].
     stats: Arc<LinkStats>,
 }
 
-impl WireLink {
-    /// Connect to a shard worker and run the handshake (fail-fast initial
-    /// budget — see [`CONNECT_ATTEMPTS`]).
-    pub(crate) fn connect(
-        addr: &str,
-        engine: EngineKind,
-        shards: usize,
-        shard: usize,
-        fingerprint: u64,
-        n_layers: usize,
-        cfg: WireConfig,
-    ) -> Result<Arc<WireLink>, WireError> {
-        let link = Arc::new(WireLink {
+impl SessionCore {
+    /// Lowest open epoch — where a resume handshake restarts the stream.
+    fn resume_epoch(&self) -> u64 {
+        self.epochs.keys().next().copied().unwrap_or(0)
+    }
+}
+
+/// Everything a (re)connect dial needs to greet one session, snapshotted
+/// under the host lock before the lock-free dial + replay.
+struct ResumeSpec {
+    session: u16,
+    engine: EngineKind,
+    shard: usize,
+    resume_epoch: u64,
+    /// Encoded replay suffix: per open epoch ascending, the `Start` (with
+    /// `boundary` = checkpoint), the checkpoint restore frame when one
+    /// exists, then the needs frames at or above the checkpoint.
+    replay: Vec<u8>,
+    /// Frames in `replay` (counted into `resume_replayed_frames`).
+    replayed: u64,
+    /// Frames a full-epoch replay would have added but checkpoints
+    /// trimmed (counted into `resume_skipped_frames`).
+    skipped: u64,
+    stats: Arc<LinkStats>,
+}
+
+/// Snapshot one session's resume handshake + checkpointed replay suffix.
+fn resume_spec(session: u16, sc: &SessionCore) -> ResumeSpec {
+    let mut replay = Vec::new();
+    let mut replayed = 0u64;
+    let mut skipped = 0u64;
+    for es in sc.epochs.values() {
+        let mut start = es.start.clone();
+        // Re-ship the Start with the checkpoint boundary: the worker
+        // restarts this epoch's cells at that layer, not layer 0.
+        start.boundary = es.applied;
+        let enc = encode_frame(&start)
+            .expect("replayed frame was encodable when first shipped");
+        replay.extend_from_slice(&enc);
+        replayed += 1;
+        if let Some(cp) = &es.checkpoint {
+            let enc = encode_frame(cp)
+                .expect("replayed frame was encodable when first shipped");
+            replay.extend_from_slice(&enc);
+            replayed += 1;
+        }
+        for (_, f) in &es.replay {
+            let enc = encode_frame(f)
+                .expect("replayed frame was encodable when first shipped");
+            replay.extend_from_slice(&enc);
+            replayed += 1;
+        }
+        skipped += es.trimmed;
+    }
+    ResumeSpec {
+        session,
+        engine: sc.engine,
+        shard: sc.shard,
+        resume_epoch: sc.resume_epoch(),
+        replay,
+        replayed,
+        skipped,
+        stats: sc.stats.clone(),
+    }
+}
+
+/// Mutable host-link state, guarded by [`HostLink::core`].
+struct HostCore {
+    /// Live stream (`None` after an idle drop, until a ship requests a
+    /// redial).  Shared per-generation handle: the reader thread and
+    /// every session's sender take Arc bumps, not `try_clone` dup
+    /// syscalls (counted in [`WireStats::handle_clones`]).
+    stream: Option<Arc<TcpStream>>,
+    /// Bumped on every install *and* teardown; a failed IO call whose
+    /// observed generation is stale was already handled.
+    generation: u64,
+    /// The reader thread is mid-recovery (dial + re-handshake + replay).
+    recovering: bool,
+    /// A teardown (or an idle ship) wants the reader to redial; carries
+    /// the original failure for the resume log and the death message.
+    need_reconnect: Option<String>,
+    /// The reader thread has been spawned.
+    reader: bool,
+    /// An initial (inline) connect is in progress.
+    connecting: bool,
+    /// Sticky host death (retry budget exhausted) — fanned out to every
+    /// session.
+    dead: Option<String>,
+    /// Next session id to hand out (0 is the host control channel).
+    next_session: u16,
+    sessions: BTreeMap<u16, SessionCore>,
+}
+
+/// Coordinator end of one **host link**: a single TCP connection carrying
+/// every (engine, shard) session to one `host:port` worker.  A dedicated
+/// per-host reader thread owns all socket reads, demultiplexes inbound
+/// frames by session id, and runs the one reconnect/resume ladder for
+/// the whole host — a host dying is one recovery, not engines × shards
+/// independent ones.  Senders (each session's runner thread) serialize
+/// whole-frame writes on [`HostLink::wlock`]; bookkeeping stays on
+/// [`HostLink::core`] so a wide flight's bytes never block the window
+/// credit that unblocks pipelining.
+///
+/// Lock order: `core` may be held while acquiring `wlock`; never the
+/// reverse.
+pub(crate) struct HostLink {
+    addr: String,
+    shards: usize,
+    fingerprint: u64,
+    cfg: WireConfig,
+    core: Mutex<HostCore>,
+    cv: Condvar,
+    /// Serializes writes to the shared connection (frame granularity).
+    wlock: Mutex<()>,
+    shutdown: AtomicBool,
+    /// Host-level recovery counters (`reconnects` / `resumes` /
+    /// `retry_exhausted` / `handle_clones`); transport counters live in
+    /// each session's [`LinkStats`].
+    stats: Arc<LinkStats>,
+    /// Host-rollup transport counters (all sessions + handshakes), for
+    /// [`WireHostStats`].
+    frames: AtomicU64,
+    bytes: AtomicU64,
+    /// Deterministic backoff-jitter seed (FNV of the address): links to
+    /// different hosts spread over the backoff interval instead of
+    /// sharing one synchronized schedule, reproducibly.
+    seed: u64,
+}
+
+impl HostLink {
+    fn new(addr: &str, shards: usize, fingerprint: u64, cfg: WireConfig) -> Arc<HostLink> {
+        let mut h = Fnv::new();
+        h.write(addr.as_bytes());
+        Arc::new(HostLink {
             addr: addr.to_string(),
-            engine,
             shards,
-            shard,
             fingerprint,
             cfg,
-            n_layers,
-            core: Mutex::new(LinkCore {
+            core: Mutex::new(HostCore {
                 stream: None,
                 generation: 0,
-                reconnecting: false,
+                recovering: false,
+                need_reconnect: None,
+                reader: false,
+                connecting: false,
                 dead: None,
-                epoch: 0,
-                epoch_open: false,
-                shipped: 0,
-                acked: 0,
-                flight_bounds: VecDeque::new(),
-                applied: 0,
-                replay: Vec::new(),
-                pending: BTreeMap::new(),
+                next_session: 1,
+                sessions: BTreeMap::new(),
             }),
             cv: Condvar::new(),
+            wlock: Mutex::new(()),
             shutdown: AtomicBool::new(false),
             stats: Arc::new(LinkStats::default()),
-        });
-        let stream = link.dial(0, CONNECT_ATTEMPTS, false)?;
-        link.stats.handle_clones.fetch_add(1, Ordering::Relaxed);
-        link.lock().stream = Some(Arc::new(stream));
-        Ok(link)
+            frames: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            seed: h.finish(),
+        })
     }
 
-    fn lock(&self) -> MutexGuard<'_, LinkCore> {
+    fn lock(&self) -> MutexGuard<'_, HostCore> {
         self.core.lock().unwrap_or_else(|p| p.into_inner())
     }
 
-    pub(crate) fn peer(&self) -> &str {
+    pub(crate) fn addr(&self) -> &str {
         &self.addr
     }
 
-    pub(crate) fn stats(&self) -> Arc<LinkStats> {
-        self.stats.clone()
-    }
-
-    pub(crate) fn is_shutdown(&self) -> bool {
+    fn is_shutdown(&self) -> bool {
         self.shutdown.load(Ordering::Relaxed)
     }
 
-    /// One dial + handshake attempt (bounded by [`CONNECT_TIMEOUT`]).
-    fn try_dial(&self, resume_epoch: u64) -> Result<TcpStream, WireError> {
+    /// Host-level recovery counters (summed into the model's
+    /// [`WireStats`] exactly once per host, however many sessions ride
+    /// the link).
+    pub(crate) fn recovery_stats(&self) -> WireStats {
+        self.stats.snapshot()
+    }
+
+    /// Per-host rollup for the metrics snapshot.
+    pub(crate) fn host_stats(&self) -> WireHostStats {
+        let core = self.lock();
+        let s = self.stats.snapshot();
+        WireHostStats {
+            addr: self.addr.clone(),
+            sessions: core.sessions.len() as u64,
+            frames: self.frames.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            reconnects: s.reconnects,
+            resumes: s.resumes,
+        }
+    }
+
+    fn count_host_frame(&self, words: usize) {
+        self.frames.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(frame_bytes(words), Ordering::Relaxed);
+    }
+
+    fn hello_frame(
+        &self,
+        session: u16,
+        engine: EngineKind,
+        shard: usize,
+        resume_epoch: u64,
+    ) -> Frame {
+        Frame {
+            kind: FrameKind::Hello,
+            parity: 0,
+            session,
+            epoch: resume_epoch,
+            boundary: 0,
+            shard: shard as u32,
+            start: 0,
+            words: vec![
+                engine as u64,
+                self.shards as u64,
+                self.fingerprint,
+                resume_epoch,
+                self.cfg.window.max(1) as u64,
+            ],
+        }
+    }
+
+    /// One dial + per-session handshake attempt (bounded by
+    /// [`CONNECT_TIMEOUT`]): connect, then greet every session in `specs`
+    /// in order — Hello with its resume epoch, HelloAck validated —
+    /// before any replay traffic.
+    fn try_dial_sessions(&self, specs: &[ResumeSpec]) -> Result<TcpStream, WireError> {
         let sockaddr = self.addr.to_socket_addrs()?.next().ok_or_else(|| {
             WireError::Io(std::io::Error::new(
                 std::io::ErrorKind::AddrNotAvailable,
@@ -932,63 +1198,61 @@ impl WireLink {
         let mut stream = TcpStream::connect_timeout(&sockaddr, CONNECT_TIMEOUT)?;
         stream.set_nodelay(true)?;
         stream.set_read_timeout(Some(RECV_TIMEOUT))?;
-        let hello = Frame {
-            kind: FrameKind::Hello,
-            parity: 0,
-            epoch: resume_epoch,
-            boundary: 0,
-            shard: self.shard as u32,
-            start: 0,
-            words: vec![
-                self.engine as u64,
-                self.shards as u64,
-                self.fingerprint,
-                resume_epoch,
-                self.cfg.window.max(1) as u64,
-            ],
-        };
-        write_frame(&mut stream, &hello)?;
-        self.stats.count_frame(hello.words.len());
-        let ack = read_frame(&mut stream)?;
-        self.stats.count_frame(ack.words.len());
-        match ack.kind {
-            FrameKind::HelloAck => {
-                if ack.words.first().copied() != Some(self.fingerprint) {
-                    return Err(WireError::Protocol(format!(
-                        "{}: model fingerprint mismatch (worker {:#018x}, \
-                         coordinator {:#018x}) — same weights, shard count and \
-                         build required",
-                        self.addr,
-                        ack.words.first().copied().unwrap_or(0),
-                        self.fingerprint,
-                    )));
+        for spec in specs {
+            let hello =
+                self.hello_frame(spec.session, spec.engine, spec.shard, spec.resume_epoch);
+            write_frame(&mut stream, &hello)?;
+            spec.stats.count_frame(hello.words.len());
+            self.count_host_frame(hello.words.len());
+            let ack = read_frame(&mut stream)?;
+            spec.stats.count_frame(ack.words.len());
+            self.count_host_frame(ack.words.len());
+            match ack.kind {
+                FrameKind::HelloAck => {
+                    if ack.session != spec.session {
+                        return Err(WireError::Protocol(format!(
+                            "{}: handshake ack for session {} while greeting \
+                             session {}",
+                            self.addr, ack.session, spec.session
+                        )));
+                    }
+                    if ack.words.first().copied() != Some(self.fingerprint) {
+                        return Err(WireError::Protocol(format!(
+                            "{}: model fingerprint mismatch (worker {:#018x}, \
+                             coordinator {:#018x}) — same weights, shard count and \
+                             build required",
+                            self.addr,
+                            ack.words.first().copied().unwrap_or(0),
+                            self.fingerprint,
+                        )));
+                    }
                 }
-            }
-            FrameKind::Fault => {
-                return Err(WireError::Protocol(format!(
-                    "{} rejected handshake: {}",
-                    self.addr,
-                    fault_message(&ack)
-                )))
-            }
-            k => {
-                return Err(WireError::Protocol(format!(
-                    "{}: expected HelloAck, got {k:?}",
-                    self.addr
-                )))
+                FrameKind::Fault => {
+                    return Err(WireError::Protocol(format!(
+                        "{} rejected handshake: {}",
+                        self.addr,
+                        fault_message(&ack)
+                    )))
+                }
+                k => {
+                    return Err(WireError::Protocol(format!(
+                        "{}: expected HelloAck, got {k:?}",
+                        self.addr
+                    )))
+                }
             }
         }
         Ok(stream)
     }
 
-    /// Dial with a bounded retry budget and exponential backoff.  Handshake
-    /// rejections (fingerprint / shard count) are permanent and end the
-    /// loop immediately; only transport errors are retried.  `count_all`
-    /// counts every attempt into `reconnects` (resume dials); otherwise
-    /// only attempts beyond the link's first are counted.
-    fn dial(
+    /// Dial with a bounded retry budget and jittered exponential backoff.
+    /// Handshake rejections (fingerprint / shard count / session demux)
+    /// are permanent and end the loop immediately; only transport errors
+    /// are retried.  `count_all` counts every attempt into `reconnects`
+    /// (resume dials); otherwise only attempts beyond the host's first.
+    fn dial_sessions(
         &self,
-        resume_epoch: u64,
+        specs: &[ResumeSpec],
         attempts: u32,
         count_all: bool,
     ) -> Result<TcpStream, WireError> {
@@ -998,15 +1262,7 @@ impl WireLink {
                 return Err(shutdown_error());
             }
             if attempt > 0 {
-                // Shutdown-aware backoff: sleep in short slices so a
-                // runner being dropped mid-outage never waits out the
-                // whole exponential schedule.
-                let mut left = 50u64 << attempt.min(5);
-                while left > 0 && !self.is_shutdown() {
-                    let step = left.min(50);
-                    std::thread::sleep(Duration::from_millis(step));
-                    left -= step;
-                }
+                self.backoff(attempt);
                 if self.is_shutdown() {
                     return Err(shutdown_error());
                 }
@@ -1014,7 +1270,7 @@ impl WireLink {
             if attempt > 0 || count_all {
                 self.stats.reconnects.fetch_add(1, Ordering::Relaxed);
             }
-            match self.try_dial(resume_epoch) {
+            match self.try_dial_sessions(specs) {
                 Ok(s) => return Ok(s),
                 Err(e @ WireError::Protocol(_)) => return Err(e),
                 Err(e) => last = Some(e),
@@ -1023,86 +1279,441 @@ impl WireLink {
         Err(last.unwrap_or_else(|| WireError::Protocol("no connect attempts".into())))
     }
 
-    /// Recover a failed stream: single-flight reconnect + re-handshake with
-    /// the resume-epoch header + replay of the open epoch from its
-    /// boundary.  An idle link (no epoch open) defers the redial to the
-    /// next epoch's first ship.  `Ok(())` means the link is usable again
-    /// (or was already recovered by the other thread — stale `seen`
-    /// generation); `Err` is the sticky death after the retry budget.
-    fn recover(&self, seen: u64, why: &WireError) -> Result<(), WireError> {
-        let (resume_epoch, replay) = {
-            let mut core = self.lock();
-            loop {
-                if self.is_shutdown() {
-                    return Err(shutdown_error());
-                }
-                if let Some(m) = &core.dead {
-                    return Err(WireError::Protocol(m.clone()));
-                }
-                if core.generation != seen {
-                    return Ok(());
-                }
-                if core.reconnecting {
-                    core = self.cv.wait(core).unwrap_or_else(|p| p.into_inner());
-                    continue;
-                }
-                break;
+    /// Shutdown-aware exponential backoff with deterministic
+    /// **decorrelation jitter**: attempt `a` sleeps somewhere in
+    /// `[base/2, base)` for `base = 50ms << min(a, 5)`, the point drawn
+    /// from an FNV hash of `(address, attempt)`.  Links to different
+    /// hosts therefore never share a synchronized reconnect schedule (no
+    /// thundering-herd redials against a recovering worker), while any
+    /// one link's schedule stays fully reproducible for tests.
+    fn backoff(&self, attempt: u32) {
+        let base = 50u64 << attempt.min(5);
+        let mut h = Fnv::new();
+        h.write_u64(self.seed);
+        h.write_u64(attempt as u64);
+        let jitter = h.finish() % (base / 2).max(1);
+        // Sleep in short slices so a runner being dropped mid-outage
+        // never waits out the whole exponential schedule.
+        let mut left = base / 2 + jitter;
+        while left > 0 && !self.is_shutdown() {
+            let step = left.min(50);
+            std::thread::sleep(Duration::from_millis(step));
+            left -= step;
+        }
+    }
+
+    /// Register a new (engine, shard) session and bring it up.  The first
+    /// session on a host dials inline with the fail-fast
+    /// [`CONNECT_ATTEMPTS`] budget (a dead address at compile time is a
+    /// config error, not an outage) and spawns the reader thread; later
+    /// sessions piggyback a Hello on the live connection and wait for the
+    /// reader to route the HelloAck.
+    fn open_session(
+        self: &Arc<HostLink>,
+        engine: EngineKind,
+        shard: usize,
+        n_layers: usize,
+        stats: Arc<LinkStats>,
+    ) -> Result<u16, WireError> {
+        let mut core = self.lock();
+        if self.is_shutdown() {
+            return Err(shutdown_error());
+        }
+        if let Some(m) = &core.dead {
+            return Err(WireError::Protocol(m.clone()));
+        }
+        let sid = core.next_session;
+        core.next_session = core.next_session.checked_add(1).ok_or_else(|| {
+            WireError::Protocol(format!("{}: session ids exhausted", self.addr))
+        })?;
+        core.sessions.insert(
+            sid,
+            SessionCore {
+                engine,
+                shard,
+                n_layers,
+                open_acked: false,
+                closed: false,
+                dead: None,
+                last_epoch: 0,
+                epochs: BTreeMap::new(),
+                shipped: 0,
+                acked: 0,
+                stats,
+            },
+        );
+        // Track the generation we last wrote a Hello on, so exactly one
+        // Hello per session reaches any one connection (the recovery
+        // ladder re-greets every registered session itself on the
+        // generations it creates, and flags them acked before waking us).
+        let mut hello_gen: Option<u64> = None;
+        loop {
+            if self.is_shutdown() {
+                core.sessions.remove(&sid);
+                return Err(shutdown_error());
             }
+            if let Some(m) = core.sessions.get(&sid).and_then(|sc| sc.dead.clone()) {
+                core.sessions.remove(&sid);
+                self.cv.notify_all();
+                return Err(WireError::Protocol(m));
+            }
+            let host_dead = core.dead.clone();
+            if let Some(m) = host_dead {
+                core.sessions.remove(&sid);
+                self.cv.notify_all();
+                return Err(WireError::Protocol(m));
+            }
+            if core.sessions.get(&sid).is_some_and(|sc| sc.open_acked) {
+                return Ok(sid);
+            }
+            if !core.reader && !core.connecting {
+                // First connection on this host: dial inline, greeting
+                // every registered-but-unacked session in one handshake.
+                core.connecting = true;
+                let specs: Vec<ResumeSpec> = core
+                    .sessions
+                    .iter()
+                    .filter(|(_, sc)| !sc.closed && sc.dead.is_none() && !sc.open_acked)
+                    .map(|(id, sc)| resume_spec(*id, sc))
+                    .collect();
+                drop(core);
+                let dialed = self.dial_sessions(&specs, CONNECT_ATTEMPTS, false);
+                core = self.lock();
+                core.connecting = false;
+                match dialed {
+                    Ok(s) => {
+                        core.stream = Some(Arc::new(s));
+                        core.generation = core.generation.wrapping_add(1);
+                        self.stats.handle_clones.fetch_add(1, Ordering::Relaxed);
+                        for spec in &specs {
+                            if let Some(sc) = core.sessions.get_mut(&spec.session) {
+                                sc.open_acked = true;
+                            }
+                        }
+                        if !core.reader {
+                            core.reader = true;
+                            let host = Arc::clone(self);
+                            std::thread::Builder::new()
+                                .name("polylut-wire-host".into())
+                                .spawn(move || host.reader_loop())
+                                .expect("spawn wire host reader");
+                        }
+                        self.cv.notify_all();
+                        continue;
+                    }
+                    Err(e) => {
+                        core.sessions.remove(&sid);
+                        self.cv.notify_all();
+                        return Err(e);
+                    }
+                }
+            }
+            if core.reader
+                && !core.recovering
+                && !core.connecting
+                && hello_gen != Some(core.generation)
+            {
+                if let Some(s) = core.stream.clone() {
+                    hello_gen = Some(core.generation);
+                    let hello = self.hello_frame(sid, engine, shard, 0);
+                    let bytes = encode_frame(&hello)
+                        .expect("hello frame is always encodable");
+                    let sent = {
+                        let _w = self.wlock.lock().unwrap_or_else(|p| p.into_inner());
+                        let mut w: &TcpStream = &s;
+                        w.write_all(&bytes).and_then(|_| w.flush()).is_ok()
+                    };
+                    if sent {
+                        if let Some(sc) = core.sessions.get(&sid) {
+                            sc.stats.count_frame(hello.words.len());
+                        }
+                        self.count_host_frame(hello.words.len());
+                    } else {
+                        self.fail_stream_locked(&mut core, "hello write failed");
+                    }
+                    // Fall through to the wait: the reader routes the
+                    // HelloAck (or runs the recovery ladder, which
+                    // re-greets us on its own generation).
+                } else if core.need_reconnect.is_none() {
+                    core.need_reconnect =
+                        Some("opening a session on a dropped link".into());
+                    self.cv.notify_all();
+                }
+            }
+            core = self.cv.wait(core).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Tear down the live stream under the lock: bump the generation and
+    /// either arm the reader's recovery (an epoch is open somewhere — the
+    /// outage must be resumed now) or defer the redial to the next ship
+    /// (idle link).
+    fn fail_stream_locked(&self, core: &mut HostCore, why: &str) {
+        if let Some(s) = core.stream.take() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        core.generation = core.generation.wrapping_add(1);
+        let open = core
+            .sessions
+            .values()
+            .any(|sc| !sc.closed && sc.dead.is_none() && !sc.epochs.is_empty());
+        if open {
+            if core.need_reconnect.is_none() {
+                core.need_reconnect = Some(why.to_string());
+            }
+            log::warn!(
+                "[wire] {}: link failed mid-epoch ({why}); reconnect-and-resume \
+                 pending",
+                self.addr
+            );
+        } else if core.need_reconnect.is_none() {
+            log::info!(
+                "[wire] {}: link dropped while idle ({why}); reconnecting at the \
+                 next epoch",
+                self.addr
+            );
+        }
+        self.cv.notify_all();
+    }
+
+    /// Body of the dedicated per-host reader thread: owns every socket
+    /// read *and* the whole recovery ladder, so a host dying is exactly
+    /// one reconnect-and-resume however many sessions ride the link.
+    fn reader_loop(self: Arc<HostLink>) {
+        loop {
+            // Pin a live stream (or wait for one / run recovery / exit).
+            let mut pinned: Option<(Arc<TcpStream>, u64, bool)> = None;
+            {
+                let mut core = self.lock();
+                loop {
+                    if self.is_shutdown() || core.dead.is_some() {
+                        return;
+                    }
+                    if core.need_reconnect.is_some() {
+                        break; // recover below, outside this guard
+                    }
+                    if let Some(s) = &core.stream {
+                        let idle =
+                            core.sessions.values().all(|sc| sc.epochs.is_empty());
+                        pinned = Some((Arc::clone(s), core.generation, idle));
+                        break;
+                    }
+                    core = self.cv.wait(core).unwrap_or_else(|p| p.into_inner());
+                }
+            }
+            let Some((stream, generation, idle)) = pinned else {
+                self.recover();
+                continue;
+            };
+            let mut r: &TcpStream = &stream;
+            match read_frame_patient(&mut r, idle) {
+                Ok(None) => continue, // idle timeout between epochs — benign
+                Ok(Some(f)) => {
+                    let mut core = self.lock();
+                    self.route(&mut core, f);
+                    drop(core);
+                    self.cv.notify_all();
+                }
+                Err(e) => {
+                    if self.is_shutdown() {
+                        return;
+                    }
+                    let mut core = self.lock();
+                    // A stale generation means the stream was already torn
+                    // down (ship-side write failure or a routed Bye) and
+                    // the bookkeeping ran there.
+                    if core.generation == generation {
+                        self.fail_stream_locked(&mut core, &e.to_string());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Route one inbound frame under the host lock: count it, then
+    /// dispatch by session id.
+    fn route(&self, core: &mut HostCore, f: Frame) {
+        self.count_host_frame(f.words.len());
+        if f.kind == FrameKind::Bye {
+            // Worker-initiated teardown (today always connection-wide):
+            // one stream failure, recovered by this thread if any epoch
+            // is open.
+            self.fail_stream_locked(core, "worker sent Bye");
+            return;
+        }
+        let Some(sc) = core.sessions.get_mut(&f.session) else {
+            log::warn!(
+                "[wire] {}: frame for unknown session {}",
+                self.addr,
+                f.session
+            );
+            return;
+        };
+        sc.stats.count_frame(f.words.len());
+        match f.kind {
+            FrameKind::HelloAck => {
+                if f.words.first().copied() == Some(self.fingerprint) {
+                    sc.open_acked = true;
+                } else if sc.dead.is_none() {
+                    sc.dead = Some(format!(
+                        "{}: model fingerprint mismatch (worker {:#018x}, \
+                         coordinator {:#018x}) — same weights, shard count and \
+                         build required",
+                        self.addr,
+                        f.words.first().copied().unwrap_or(0),
+                        self.fingerprint,
+                    ));
+                }
+            }
+            FrameKind::Fault => {
+                let msg = fault_message(&f);
+                let text = if sc.open_acked {
+                    format!("{} faulted: {msg}", self.addr)
+                } else {
+                    format!("{} rejected handshake: {msg}", self.addr)
+                };
+                if sc.dead.is_none() {
+                    sc.dead = Some(text);
+                }
+            }
+            FrameKind::Data => {
+                let n_layers = sc.n_layers as u32;
+                let shard = sc.shard as u32;
+                match sc.epochs.get_mut(&f.epoch) {
+                    None => {
+                        // A fully-applied epoch is retired from the map —
+                        // late duplicates (resume replays recompute
+                        // boundaries we already have) drop silently.  An
+                        // epoch we never opened is a protocol violation.
+                        if f.epoch > sc.last_epoch && sc.dead.is_none() {
+                            sc.dead = Some(format!(
+                                "{}: unexpected result frame (epoch {}, boundary \
+                                 {}, shard {}) ahead of epoch {}",
+                                self.addr, f.epoch, f.boundary, f.shard, sc.last_epoch
+                            ));
+                        }
+                    }
+                    Some(es) => {
+                        if f.boundary <= es.applied {
+                            // Stale duplicate below the checkpoint.
+                        } else if f.boundary > n_layers || f.shard != shard {
+                            if sc.dead.is_none() {
+                                sc.dead = Some(format!(
+                                    "{}: unexpected result frame (epoch {}, \
+                                     boundary {}, shard {})",
+                                    self.addr, f.epoch, f.boundary, f.shard
+                                ));
+                            }
+                        } else {
+                            es.pending.insert(f.boundary, f);
+                        }
+                    }
+                }
+            }
+            k => {
+                if sc.dead.is_none() {
+                    sc.dead = Some(format!(
+                        "{}: unexpected {k:?} frame on the result path",
+                        self.addr
+                    ));
+                }
+            }
+        }
+    }
+
+    /// The one recovery ladder of the host (reader thread only): snapshot
+    /// every session's resume handshake + checkpointed replay suffix,
+    /// redial with the [`WireConfig::retries`] budget, re-greet each
+    /// session and write the replays, then install the stream.  Failure
+    /// is the sticky host death, fanned out to every session.
+    fn recover(&self) {
+        let (why, specs) = {
+            let mut core = self.lock();
+            if self.is_shutdown() || core.dead.is_some() {
+                core.need_reconnect = None;
+                return;
+            }
+            let why = core
+                .need_reconnect
+                .take()
+                .unwrap_or_else(|| "re-establishing link".into());
+            core.recovering = true;
             if let Some(s) = core.stream.take() {
                 let _ = s.shutdown(Shutdown::Both);
             }
-            if !core.epoch_open {
-                // Idle link: nothing to replay — reconnect lazily when the
-                // next epoch ships its Start.
-                core.generation = core.generation.wrapping_add(1);
-                self.cv.notify_all();
-                log::info!(
-                    "[wire] {}: link dropped while idle ({why}); reconnecting at \
-                     the next epoch",
-                    self.addr
-                );
-                return Ok(());
+            core.generation = core.generation.wrapping_add(1);
+            for sc in core.sessions.values_mut() {
+                sc.open_acked = false;
             }
-            core.reconnecting = true;
-            (core.epoch, core.replay.clone())
+            let specs: Vec<ResumeSpec> = core
+                .sessions
+                .iter()
+                .filter(|(_, sc)| !sc.closed && sc.dead.is_none())
+                .map(|(id, sc)| resume_spec(*id, sc))
+                .collect();
+            (why, specs)
         };
         log::warn!(
-            "[wire] {}: link failed mid-epoch ({why}); reconnect-and-resume at \
-             epoch {resume_epoch}",
-            self.addr
+            "[wire] {}: reconnect-and-resume across {} session(s): {why}",
+            self.addr,
+            specs.len()
         );
-        let dialed = self.dial(resume_epoch, self.cfg.retries, true).and_then(|mut s| {
-            let mut bytes = Vec::new();
-            for f in &replay {
-                bytes.extend_from_slice(&encode_frame(f)?);
-            }
-            s.write_all(&bytes)?;
-            s.flush()?;
-            // Replayed traffic is counted here, once it left — ship()
-            // skips counting on a failed write precisely so an incident
-            // accounts its frames exactly once.
-            for f in &replay {
-                self.stats.count_frame(f.words.len());
-            }
-            Ok(s)
-        });
+        let dialed = self
+            .dial_sessions(&specs, self.cfg.retries, true)
+            .and_then(|mut s| {
+                for spec in &specs {
+                    if !spec.replay.is_empty() {
+                        s.write_all(&spec.replay)?;
+                    }
+                }
+                s.flush()?;
+                // Replayed traffic is counted here, once it left — `ship`
+                // skips counting on a failed write precisely so an
+                // incident accounts its frames exactly once.
+                for spec in &specs {
+                    spec.stats.frames.fetch_add(spec.replayed, Ordering::Relaxed);
+                    spec.stats
+                        .bytes
+                        .fetch_add(spec.replay.len() as u64, Ordering::Relaxed);
+                    spec.stats
+                        .resume_replayed_frames
+                        .fetch_add(spec.replayed, Ordering::Relaxed);
+                    spec.stats
+                        .resume_skipped_frames
+                        .fetch_add(spec.skipped, Ordering::Relaxed);
+                    self.frames.fetch_add(spec.replayed, Ordering::Relaxed);
+                    self.bytes
+                        .fetch_add(spec.replay.len() as u64, Ordering::Relaxed);
+                }
+                Ok(s)
+            });
         let mut core = self.lock();
-        core.reconnecting = false;
+        core.recovering = false;
         match dialed {
             Ok(s) => {
-                self.stats.handle_clones.fetch_add(1, Ordering::Relaxed);
                 core.stream = Some(Arc::new(s));
                 core.generation = core.generation.wrapping_add(1);
+                self.stats.handle_clones.fetch_add(1, Ordering::Relaxed);
                 self.stats.resumes.fetch_add(1, Ordering::Relaxed);
-                self.cv.notify_all();
+                for spec in &specs {
+                    if let Some(sc) = core.sessions.get_mut(&spec.session) {
+                        sc.open_acked = true;
+                    }
+                }
+                let replayed: u64 = specs.iter().map(|s| s.replayed).sum();
+                let skipped: u64 = specs.iter().map(|s| s.skipped).sum();
                 log::info!(
-                    "[wire] {}: resumed epoch {resume_epoch} ({} frames replayed)",
+                    "[wire] {}: resumed {} session(s) ({replayed} frames \
+                     replayed, {skipped} skipped below checkpoints)",
                     self.addr,
-                    replay.len()
+                    specs.len()
                 );
-                Ok(())
             }
             Err(e) => {
+                if self.is_shutdown() {
+                    self.cv.notify_all();
+                    return;
+                }
                 self.stats.retry_exhausted.fetch_add(1, Ordering::Relaxed);
                 let msg = format!(
                     "{}: reconnect failed after {} attempts: {e} (link originally \
@@ -1111,15 +1722,40 @@ impl WireLink {
                     self.cfg.retries.max(1)
                 );
                 core.dead = Some(msg.clone());
-                self.cv.notify_all();
-                Err(WireError::Protocol(msg))
+                for sc in core.sessions.values_mut() {
+                    if sc.dead.is_none() {
+                        sc.dead = Some(msg.clone());
+                    }
+                }
             }
         }
+        self.cv.notify_all();
     }
 
-    /// Wait until the link accepts new frames: not reconnecting, not dead,
-    /// and (for needs flights) the in-flight window has room.
-    fn lock_gate(&self, flight: bool) -> Result<MutexGuard<'_, LinkCore>, WireError> {
+    /// Sender side of one session: record the frames in the replay ledger
+    /// under the core lock (opening the epoch first when `open` carries
+    /// its Start), then write them on the shared connection under
+    /// [`HostLink::wlock`].  Delivery is guaranteed once this returns: a
+    /// failed write tears the stream down and the recovery replay carries
+    /// everything the ledger recorded.
+    fn ship_session(
+        &self,
+        sid: u16,
+        epoch: u64,
+        open: Option<Frame>,
+        frames: &[Frame],
+        flight: Option<u32>,
+    ) -> Result<(), WireError> {
+        // Encode (copy + checksum) outside the lock: a wide boundary's
+        // frames must not serialize the receiver's bookkeeping — the
+        // window credit that unblocks pipelining — against the sender.
+        let mut bytes = Vec::new();
+        if let Some(f) = &open {
+            bytes.extend_from_slice(&encode_frame(f)?);
+        }
+        for f in frames {
+            bytes.extend_from_slice(&encode_frame(f)?);
+        }
         let mut core = self.lock();
         loop {
             if self.is_shutdown() {
@@ -1128,283 +1764,480 @@ impl WireLink {
             if let Some(m) = &core.dead {
                 return Err(WireError::Protocol(m.clone()));
             }
-            let window_full = flight
-                && core.shipped.saturating_sub(core.acked) as usize
+            let Some(sc) = core.sessions.get(&sid) else {
+                return Err(shutdown_error());
+            };
+            if sc.closed {
+                return Err(shutdown_error());
+            }
+            if let Some(m) = &sc.dead {
+                return Err(WireError::Protocol(m.clone()));
+            }
+            let window_full = flight.is_some()
+                && sc.shipped.saturating_sub(sc.acked) as usize
                     >= self.cfg.window.max(1);
-            if core.reconnecting || window_full {
+            if core.recovering || core.connecting || window_full {
                 core = self.cv.wait(core).unwrap_or_else(|p| p.into_inner());
                 continue;
             }
-            return Ok(core);
-        }
-    }
-
-    /// Append frames to the replay log and ship them in **one flight** (one
-    /// write + flush — frames of one boundary, or of adjacent epochs when
-    /// the queue drains across a `Start`, share a TCP send).  `flight`
-    /// counts the batch against the in-flight window.  Delivery is
-    /// guaranteed once this returns: a write failure recovers the link and
-    /// the replay log carries the frames.
-    fn ship(&self, frames: &[Frame], flight: Option<u32>) -> Result<(), WireError> {
-        // Encode (copy + checksum) outside the lock: a wide boundary's
-        // frames must not serialize the receiver's bookkeeping — the
-        // window credit that unblocks pipelining — against the sender.
-        let mut bytes = Vec::new();
-        for f in frames {
-            bytes.extend_from_slice(&encode_frame(f)?);
-        }
-        let (gen, stream) = {
-            let mut core = self.lock_gate(flight.is_some())?;
-            core.replay.extend(frames.iter().cloned());
-            if let Some(boundary) = flight {
-                core.shipped += 1;
-                core.flight_bounds.push_back(boundary);
-                let inflight = core.shipped.saturating_sub(core.acked) as u64;
-                self.stats.inflight_hwm.fetch_max(inflight, Ordering::Relaxed);
+            if core.stream.is_none() {
+                if core.need_reconnect.is_none() {
+                    core.need_reconnect = Some("re-establishing idle link".into());
+                    self.cv.notify_all();
+                }
+                core = self.cv.wait(core).unwrap_or_else(|p| p.into_inner());
+                continue;
             }
-            // Shared per-generation handle (Arc bump, no dup syscall) so
-            // the write happens outside the lock.
-            (core.generation, core.stream.clone())
-        };
-        match stream {
-            // Idle-dropped link: the recover path redials with the
-            // resume-epoch header and replays the log (which now includes
-            // these frames).
-            None => self.recover(
-                gen,
-                &WireError::Protocol("re-establishing idle link".into()),
-            ),
-            Some(s) => {
-                let mut w: &TcpStream = &s;
-                match w.write_all(&bytes).and_then(|_| w.flush()) {
-                    Ok(()) => {
-                        // Count traffic only once it actually left: failed
-                        // or skipped writes are accounted by the replay
-                        // instead (no double counting per link incident).
-                        for f in frames {
-                            self.stats.count_frame(f.words.len());
-                        }
-                        Ok(())
-                    }
-                    // Replay delivers the frames (or the link dies
-                    // cleanly).
-                    Err(e) => self.recover(gen, &WireError::Io(e)),
+            break;
+        }
+        let stream = Arc::clone(core.stream.as_ref().expect("stream gated above"));
+        let generation = core.generation;
+        let stats = {
+            let sc = core.sessions.get_mut(&sid).expect("session gated above");
+            if let Some(start) = &open {
+                if epoch <= sc.last_epoch {
+                    return Err(WireError::Protocol(format!(
+                        "epoch went backwards: {epoch} after {}",
+                        sc.last_epoch
+                    )));
+                }
+                sc.last_epoch = epoch;
+                sc.epochs.insert(epoch, EpochState::new(start.clone()));
+            }
+            if !frames.is_empty() || flight.is_some() {
+                let Some(es) = sc.epochs.get_mut(&epoch) else {
+                    return Err(WireError::Protocol(format!(
+                        "flight shipped for unopened epoch {epoch}"
+                    )));
+                };
+                for f in frames {
+                    es.replay.push((f.boundary, f.clone()));
+                }
+                if let Some(boundary) = flight {
+                    es.flight_bounds.push_back(boundary);
+                    sc.shipped += 1;
+                    let inflight = sc.shipped.saturating_sub(sc.acked) as u64;
+                    sc.stats.inflight_hwm.fetch_max(inflight, Ordering::Relaxed);
                 }
             }
-        }
-    }
-
-    /// Open epoch `epoch` on this link: reset the per-epoch window/replay
-    /// state and ship the `Start` frame.  The previous epoch is complete by
-    /// construction (the runner serializes epochs on the handoff levels).
-    pub(crate) fn begin_epoch(&self, epoch: u64) -> Result<(), WireError> {
-        {
-            let mut core = self.lock_gate(false)?;
-            core.epoch = epoch;
-            core.epoch_open = true;
-            core.shipped = 0;
-            core.acked = 0;
-            core.flight_bounds.clear();
-            core.applied = 0;
-            core.replay.clear();
-            core.pending.clear();
-        }
-        self.ship(&[Frame::control(FrameKind::Start, epoch)], None)
-    }
-
-    /// Ship the needs flight for `boundary` (window-gated).  Only
-    /// boundaries with cross-shard needs are shipped (the sender skips
-    /// empty ones — see `send_epoch`), and the window counts in *flight*
-    /// units on both sides (a flight is acked when its boundary's result
-    /// is applied), so `window == 1` lock-steps exactly the flights that
-    /// exist even when flightless boundaries sit between them.
-    pub(crate) fn ship_flight(
-        &self,
-        boundary: u32,
-        frames: &[Frame],
-    ) -> Result<(), WireError> {
-        self.ship(frames, Some(boundary))
-    }
-
-    /// Receiver side: block until the next **in-order, not yet applied**
-    /// result frame of the open epoch is available.  Duplicates (resume
-    /// replays recompute boundaries the coordinator already applied) are
-    /// dropped by the completion table; frames arriving ahead of the
-    /// contiguous prefix are parked in it.  `Ok(None)` = shutdown.
-    pub(crate) fn recv_applied(&self) -> Result<Option<Frame>, WireError> {
-        loop {
-            let (stream, gen, idle) = {
+            sc.stats.clone()
+        };
+        drop(core);
+        let written = {
+            let _w = self.wlock.lock().unwrap_or_else(|p| p.into_inner());
+            let mut w: &TcpStream = &stream;
+            w.write_all(&bytes).and_then(|_| w.flush())
+        };
+        match written {
+            Ok(()) => {
+                // Count traffic only once it actually left: failed writes
+                // are accounted by the recovery replay instead (no double
+                // counting per link incident).
+                if let Some(f) = &open {
+                    stats.count_frame(f.words.len());
+                    self.count_host_frame(f.words.len());
+                }
+                for f in frames {
+                    stats.count_frame(f.words.len());
+                    self.count_host_frame(f.words.len());
+                }
+                Ok(())
+            }
+            Err(e) => {
                 let mut core = self.lock();
-                loop {
-                    if self.is_shutdown() {
-                        return Ok(None);
-                    }
-                    if let Some(m) = &core.dead {
-                        return Err(WireError::Protocol(m.clone()));
-                    }
-                    let next = core.applied + 1;
-                    if let Some(f) = core.pending.remove(&next) {
-                        return Ok(Some(f));
-                    }
-                    if core.reconnecting || core.stream.is_none() {
-                        core = self.cv.wait(core).unwrap_or_else(|p| p.into_inner());
-                        continue;
-                    }
+                if core.generation == generation {
+                    self.fail_stream_locked(&mut core, &format!("wire i/o: {e}"));
+                }
+                // The ledger already holds everything this call shipped —
+                // the recovery replay delivers it.
+                Ok(())
+            }
+        }
+    }
+
+    /// Receiver side of one session: block until the next in-order,
+    /// not-yet-applied result frame of **any** of its open epochs is
+    /// available (the reader thread parks demuxed frames in the epochs'
+    /// completion tables).  `Ok(None)` = session closed or host shut
+    /// down.
+    fn recv_session(&self, sid: u16) -> Result<Option<Frame>, WireError> {
+        let mut core = self.lock();
+        loop {
+            if self.is_shutdown() {
+                return Ok(None);
+            }
+            if let Some(m) = &core.dead {
+                return Err(WireError::Protocol(m.clone()));
+            }
+            let Some(sc) = core.sessions.get_mut(&sid) else {
+                return Ok(None);
+            };
+            if sc.closed {
+                return Ok(None);
+            }
+            if let Some(m) = &sc.dead {
+                return Err(WireError::Protocol(m.clone()));
+            }
+            let mut found = None;
+            for es in sc.epochs.values_mut() {
+                let next = es.applied + 1;
+                if let Some(f) = es.pending.remove(&next) {
+                    found = Some(f);
                     break;
                 }
-                // Shared per-generation handle (Arc bump, no dup syscall)
-                // so the blocking read happens outside the lock.
-                let s = Arc::clone(core.stream.as_ref().expect("stream checked above"));
-                (s, core.generation, !core.epoch_open)
-            };
+            }
+            if let Some(f) = found {
+                return Ok(Some(f));
+            }
+            let idle = sc.epochs.is_empty();
+            let stats = sc.stats.clone();
             let t0 = Instant::now();
-            let mut r: &TcpStream = &stream;
-            let res = read_frame_patient(&mut r, idle);
-            // Idle timeouts between epochs are not "blocked waiting for a
-            // frame" — funding wait_ns from them would swamp the metric on
-            // an idle server.
-            if !matches!(res, Ok(None)) {
-                self.stats
+            core = self.cv.wait(core).unwrap_or_else(|p| p.into_inner());
+            // Idle waits between epochs are not "blocked waiting for a
+            // frame" — funding wait_ns from them would swamp the metric
+            // on an idle server.
+            if !idle {
+                stats
                     .wait_ns
                     .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             }
-            match res {
-                Ok(None) => continue, // idle timeout between epochs — benign
-                Ok(Some(f)) => {
-                    self.stats.count_frame(f.words.len());
-                    match f.kind {
-                        FrameKind::Data => {
-                            let mut core = self.lock();
-                            if f.epoch < core.epoch
-                                || (f.epoch == core.epoch && f.boundary <= core.applied)
-                            {
-                                // Stale duplicate from a resume replay.
-                                continue;
-                            }
-                            if f.epoch > core.epoch
-                                || f.boundary as usize > self.n_layers
-                                || f.shard as usize != self.shard
-                            {
-                                let msg = format!(
-                                    "{}: unexpected result frame (epoch {}, boundary \
-                                     {}, shard {}) during epoch {}",
-                                    self.addr, f.epoch, f.boundary, f.shard, core.epoch
-                                );
-                                core.dead = Some(msg.clone());
-                                self.cv.notify_all();
-                                return Err(WireError::Protocol(msg));
-                            }
-                            if f.boundary == core.applied + 1 {
-                                return Ok(Some(f));
-                            }
-                            core.pending.insert(f.boundary, f);
-                            continue;
-                        }
-                        FrameKind::Fault => {
-                            let msg = format!(
-                                "{} faulted: {}",
-                                self.addr,
-                                fault_message(&f)
-                            );
-                            let mut core = self.lock();
-                            core.dead = Some(msg.clone());
-                            self.cv.notify_all();
-                            return Err(WireError::Protocol(msg));
-                        }
-                        FrameKind::Bye => {
-                            self.recover(
-                                gen,
-                                &WireError::Protocol("worker sent Bye".into()),
-                            )?;
-                            continue;
-                        }
-                        k => {
-                            let msg = format!(
-                                "{}: unexpected {k:?} frame on the result path",
-                                self.addr
-                            );
-                            let mut core = self.lock();
-                            core.dead = Some(msg.clone());
-                            self.cv.notify_all();
-                            return Err(WireError::Protocol(msg));
-                        }
-                    }
-                }
-                Err(e) => {
-                    if self.is_shutdown() {
-                        return Ok(None);
-                    }
-                    self.recover(gen, &e)?;
-                    continue;
+        }
+    }
+
+    /// Record that result frame `f` has been applied to the runner's
+    /// buffers: window credit, checkpoint advancement (the replay ledger
+    /// trims below it) and epoch retirement at the final boundary.
+    fn mark_applied(&self, sid: u16, f: &Frame) {
+        let mut core = self.lock();
+        let Some(sc) = core.sessions.get_mut(&sid) else {
+            return;
+        };
+        let n_layers = sc.n_layers as u32;
+        let mut acked = 0u32;
+        if let Some(es) = sc.epochs.get_mut(&f.epoch) {
+            if f.boundary > es.applied {
+                es.applied = f.boundary;
+            }
+            // Ack every shipped flight whose boundary's result (boundary
+            // l + 1 for a flight at boundary l) is now covered —
+            // flight-unit credit for the window gate.
+            while es.flight_bounds.front().is_some_and(|&l| l + 1 <= f.boundary) {
+                es.flight_bounds.pop_front();
+                acked += 1;
+            }
+            if f.boundary < n_layers {
+                // Checkpoint: the resume replay restores this frame and
+                // re-ships only the needs at or above its boundary.
+                es.checkpoint = Some(f.clone());
+                let before = es.replay.len();
+                es.replay.retain(|(level, _)| *level >= f.boundary);
+                es.trimmed += (before - es.replay.len()) as u64;
+            }
+        }
+        if f.boundary == n_layers {
+            sc.epochs.remove(&f.epoch);
+        }
+        sc.acked += acked;
+        self.cv.notify_all();
+    }
+
+    /// Mark one session dead with a protocol-level message (receiver-side
+    /// validation failures — transport errors go through the recovery
+    /// ladder instead).
+    fn kill_session(&self, sid: u16, msg: &str) {
+        let mut core = self.lock();
+        if let Some(sc) = core.sessions.get_mut(&sid) {
+            if sc.dead.is_none() {
+                sc.dead = Some(msg.to_string());
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Close one session (best-effort Bye on its id); the last session to
+    /// close shuts the whole host link down — Bye on the control channel,
+    /// FIN, and the reader thread exits.
+    fn close_session(&self, sid: u16) {
+        let mut core = self.lock();
+        let stream = core.stream.clone();
+        if let Some(sc) = core.sessions.get_mut(&sid) {
+            if !sc.closed {
+                sc.closed = true;
+                sc.epochs.clear();
+                if let Some(s) = &stream {
+                    let mut bye = Frame::control(FrameKind::Bye, 0);
+                    bye.session = sid;
+                    let _w = self.wlock.lock().unwrap_or_else(|p| p.into_inner());
+                    let mut w: &TcpStream = s;
+                    let _ = write_frame(&mut w, &bye);
                 }
             }
         }
-    }
-
-    /// Record that the result for `boundary` has been applied to the shared
-    /// buffers (window credit + epoch-completion bookkeeping).
-    pub(crate) fn mark_applied(&self, boundary: u32) {
-        let mut core = self.lock();
-        if boundary > core.applied {
-            core.applied = boundary;
-        }
-        // Ack every shipped flight whose boundary's result (boundary
-        // l + 1 for a flight at boundary l) is now covered — flight-unit
-        // credit for the window gate.
-        while core.flight_bounds.front().is_some_and(|&l| l + 1 <= boundary) {
-            core.flight_bounds.pop_front();
-            core.acked += 1;
-        }
-        if boundary as usize == self.n_layers {
-            core.epoch_open = false;
-        }
-        self.cv.notify_all();
-    }
-
-    /// Mark the link dead with a protocol-level message (receiver-side
-    /// validation failures — not transport errors, which go through
-    /// [`WireLink::recover`]).
-    pub(crate) fn kill(&self, msg: &str) {
-        let mut core = self.lock();
-        if core.dead.is_none() {
-            core.dead = Some(msg.to_string());
-        }
-        self.cv.notify_all();
-    }
-
-    /// Best-effort clean shutdown (Bye frame + FIN) and wake every blocked
-    /// link call.
-    pub(crate) fn close(&self) {
-        self.shutdown.store(true, Ordering::Relaxed);
-        let mut core = self.lock();
-        if let Some(s) = core.stream.take() {
-            let _ = write_frame(&mut (&*s), &Frame::control(FrameKind::Bye, 0));
-            let _ = s.shutdown(Shutdown::Both);
+        let all_closed = !core.sessions.is_empty()
+            && core.sessions.values().all(|sc| sc.closed);
+        if all_closed && !self.shutdown.swap(true, Ordering::Relaxed) {
+            if let Some(s) = core.stream.take() {
+                let _w = self.wlock.lock().unwrap_or_else(|p| p.into_inner());
+                let mut w: &TcpStream = &s;
+                let _ = write_frame(&mut w, &Frame::control(FrameKind::Bye, 0));
+                let _ = s.shutdown(Shutdown::Both);
+            }
         }
         self.cv.notify_all();
     }
 }
 
+/// Per-model registry of host links.  With [`WireConfig::mux`] (the
+/// default) every remote (engine, shard) session to one `host:port`
+/// shares a single [`HostLink`] — and therefore one TCP connection, one
+/// reader thread and one recovery ladder.  With mux off each session gets
+/// a private host link (the v2 one-connection-per-session topology) over
+/// the identical code path.
+pub(crate) struct HostRegistry {
+    shards: usize,
+    fingerprint: u64,
+    cfg: WireConfig,
+    hosts: Mutex<Vec<Arc<HostLink>>>,
+}
+
+impl HostRegistry {
+    pub(crate) fn new(shards: usize, fingerprint: u64, cfg: WireConfig) -> HostRegistry {
+        HostRegistry { shards, fingerprint, cfg, hosts: Mutex::new(Vec::new()) }
+    }
+
+    /// The wire knobs every link from this registry shares (the runner
+    /// sizes its epoch ring from `cfg().window`).
+    pub(crate) fn cfg(&self) -> WireConfig {
+        self.cfg
+    }
+
+    fn host(&self, addr: &str) -> Arc<HostLink> {
+        let mut hosts = self.hosts.lock().unwrap_or_else(|p| p.into_inner());
+        if self.cfg.mux {
+            if let Some(h) = hosts.iter().find(|h| h.addr() == addr) {
+                return Arc::clone(h);
+            }
+        }
+        let h = HostLink::new(addr, self.shards, self.fingerprint, self.cfg);
+        hosts.push(Arc::clone(&h));
+        h
+    }
+
+    /// Every host link the registry handed out (with mux off: one per
+    /// session).
+    pub(crate) fn hosts(&self) -> Vec<Arc<HostLink>> {
+        self.hosts.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+}
+
+/// Coordinator end of one (engine, shard) **session**.  The per-link API
+/// the shard runner's sender/receiver thread pair drives is unchanged
+/// from v2; transport, demux and recovery live in the shared
+/// [`HostLink`].
+pub(crate) struct WireLink {
+    host: Arc<HostLink>,
+    session: u16,
+    closed: AtomicBool,
+    stats: Arc<LinkStats>,
+}
+
+impl WireLink {
+    /// Open a session to a shard worker through the model's host
+    /// registry, running the handshake (fail-fast initial budget on a
+    /// fresh host — see [`CONNECT_ATTEMPTS`]).
+    pub(crate) fn connect(
+        registry: &HostRegistry,
+        addr: &str,
+        engine: EngineKind,
+        shard: usize,
+        n_layers: usize,
+    ) -> Result<Arc<WireLink>, WireError> {
+        let host = registry.host(addr);
+        let stats = Arc::new(LinkStats::default());
+        let session = host.open_session(engine, shard, n_layers, stats.clone())?;
+        Ok(Arc::new(WireLink {
+            host,
+            session,
+            closed: AtomicBool::new(false),
+            stats,
+        }))
+    }
+
+    pub(crate) fn peer(&self) -> &str {
+        self.host.addr()
+    }
+
+    pub(crate) fn stats(&self) -> Arc<LinkStats> {
+        self.stats.clone()
+    }
+
+    /// The host link carrying this session (per-host stats + identity for
+    /// the `wire_links` rollup).
+    pub(crate) fn host(&self) -> &Arc<HostLink> {
+        &self.host
+    }
+
+    pub(crate) fn is_shutdown(&self) -> bool {
+        self.closed.load(Ordering::Relaxed) || self.host.is_shutdown()
+    }
+
+    /// Open epoch `epoch` on this session: register it in the replay
+    /// ledger and ship its `Start`.  Epochs may overlap — the runner
+    /// admits up to [`WireConfig::window`] — but their ids must ascend.
+    pub(crate) fn begin_epoch(&self, epoch: u64) -> Result<(), WireError> {
+        let mut start = Frame::control(FrameKind::Start, epoch);
+        start.session = self.session;
+        self.host.ship_session(self.session, epoch, Some(start), &[], None)
+    }
+
+    /// Ship the needs flight for `boundary` of `epoch` (window-gated in
+    /// flight units across all of the session's open epochs).  Only
+    /// boundaries with cross-shard needs ship a flight — see
+    /// `send_epoch` — so `window == 1` lock-steps exactly the flights
+    /// that exist even when flightless boundaries sit between them.
+    pub(crate) fn ship_flight(
+        &self,
+        epoch: u64,
+        boundary: u32,
+        frames: &mut [Frame],
+    ) -> Result<(), WireError> {
+        for f in frames.iter_mut() {
+            f.session = self.session;
+        }
+        self.host.ship_session(self.session, epoch, None, frames, Some(boundary))
+    }
+
+    /// Receiver side: block until the next in-order, not-yet-applied
+    /// result frame of any open epoch is available.  Duplicates (resume
+    /// replays recompute boundaries the coordinator already applied) are
+    /// dropped by the completion tables; frames ahead of an epoch's
+    /// contiguous prefix are parked in them.  `Ok(None)` = shutdown.
+    pub(crate) fn recv_applied(&self) -> Result<Option<Frame>, WireError> {
+        self.host.recv_session(self.session)
+    }
+
+    /// Record that result frame `f` has been applied to the shared
+    /// buffers (window credit + checkpoint + epoch-completion
+    /// bookkeeping).
+    pub(crate) fn mark_applied(&self, f: &Frame) {
+        self.host.mark_applied(self.session, f);
+    }
+
+    /// Mark the session dead with a protocol-level message
+    /// (receiver-side validation failures — not transport errors, which
+    /// go through the host recovery ladder).
+    pub(crate) fn kill(&self, msg: &str) {
+        self.host.kill_session(self.session, msg);
+    }
+
+    /// Best-effort clean shutdown of this session; the host link (and
+    /// its reader thread) goes down with the last session.
+    pub(crate) fn close(&self) {
+        self.closed.store(true, Ordering::Relaxed);
+        self.host.close_session(self.session);
+    }
+}
+
 // ---------------------------------------------------------------------------
-// Worker side: RemoteHandoff + ShardWorkerHost
+// Worker side: connection demux + RemoteHandoff + ShardWorkerHost
 // ---------------------------------------------------------------------------
+
+/// Inbound frame queue of one worker-side session.  The per-connection
+/// demux thread owns the socket and pushes each session's frames here;
+/// the session thread blocks on `recv`.
+#[derive(Default)]
+struct SessionInbox {
+    q: Mutex<VecDeque<Frame>>,
+    cv: Condvar,
+    closed: AtomicBool,
+}
+
+impl SessionInbox {
+    fn push(&self, f: Frame) {
+        let mut q = self.q.lock().unwrap_or_else(|p| p.into_inner());
+        q.push_back(f);
+        self.cv.notify_all();
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::Relaxed);
+        self.cv.notify_all();
+    }
+
+    /// Blocking pop with the same liveness discipline the socket reads
+    /// have: with `idle_ok` a quiet [`RECV_TIMEOUT`] window returns
+    /// `Ok(None)` (idle server between epochs); without it,
+    /// [`LIVENESS_STRIKES`] consecutive empty windows declare the peer
+    /// (or its session) dead — any delivered frame resets the count.
+    fn recv(&self, idle_ok: bool) -> Result<Option<Frame>, WireError> {
+        let mut q = self.q.lock().unwrap_or_else(|p| p.into_inner());
+        let mut strikes = 0u32;
+        loop {
+            if let Some(f) = q.pop_front() {
+                return Ok(Some(f));
+            }
+            if self.closed.load(Ordering::Relaxed) {
+                return Err(WireError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "link closed",
+                )));
+            }
+            let (guard, timeout) = self
+                .cv
+                .wait_timeout(q, RECV_TIMEOUT)
+                .unwrap_or_else(|p| p.into_inner());
+            q = guard;
+            if timeout.timed_out() && q.is_empty() {
+                if idle_ok {
+                    return Ok(None);
+                }
+                strikes += 1;
+                if strikes >= LIVENESS_STRIKES {
+                    return Err(WireError::Io(std::io::Error::new(
+                        std::io::ErrorKind::TimedOut,
+                        format!(
+                            "no frames for {strikes} consecutive liveness windows"
+                        ),
+                    )));
+                }
+            } else {
+                strikes = 0;
+            }
+        }
+    }
+}
+
+/// A session's two endpoints on the shared connection: the write half
+/// (serialized with every other session on the link) and its private
+/// inbox fed by the demux thread.
+#[derive(Clone)]
+struct SessionIo {
+    session: u16,
+    writer: Arc<Mutex<TcpStream>>,
+    inbox: Arc<SessionInbox>,
+}
 
 /// Worker-side [`Handoff`]: the per-cell `(shard, threshold)` dependency
 /// waits of the generic cell loop are satisfied by **frame arrival**.
-/// `wait(d, thr)` pulls frames off the socket and applies them through a
-/// per-`(epoch, boundary, producer)` completion table until producer `d`'s
-/// level reaches `thr`; `publish(s, level)` ships the shard's
-/// boundary-`level` slice back to the coordinator.  The coordinator's
-/// pseudo-shard (`shards`) produces boundary 0 (input staging) at level 1.
+/// `wait(d, thr)` pulls frames off the session inbox and applies them
+/// through a per-`(epoch, boundary, producer)` completion table until
+/// producer `d`'s level reaches `thr`; `publish(s, level)` ships the
+/// shard's boundary-`level` slice back to the coordinator.  The
+/// coordinator's pseudo-shard (`shards`) produces boundary 0 (input
+/// staging) at level 1.
 ///
-/// v2 drops the TCP-order assumption: the worker's buffers are
+/// v2 dropped the TCP-order assumption: the worker's buffers are
 /// **per-boundary** (no parity aliasing), so a current-epoch frame is
 /// applied the moment it arrives regardless of arrival order, levels
 /// advance via `fetch_max`, and frames for a *future* epoch (the windowed
-/// sender may start streaming epoch e+1 while e's tail is still being
-/// read) park in a bounded pending buffer that `begin_epoch` drains.
+/// sender streams up to `window` epochs ahead) park in a bounded pending
+/// buffer that `begin_epoch` drains.  v3 adds the checkpointed resume: a
+/// `Start` whose `boundary` is `h > 0` means the coordinator already
+/// holds everything below boundary `h` — the replay restores this
+/// shard's own boundary-`h` slice (`own_restore`) and the cell loop
+/// starts at layer `h` instead of layer 0.
 struct RemoteHandoff {
-    stream: Mutex<TcpStream>,
+    io: SessionIo,
     bufs: Arc<BufSet>,
     plan: WirePlan,
     n_layers: usize,
@@ -1418,13 +2251,17 @@ struct RemoteHandoff {
     pending: Mutex<Vec<Frame>>,
     pending_cap: usize,
     epoch: AtomicU64,
+    /// Highest boundary restored from a resume checkpoint this epoch (the
+    /// coordinator re-ships this shard's own applied slice so the cell
+    /// loop can restart above it without recomputing).
+    own_restore: AtomicU32,
     stats: Arc<LinkStats>,
     fault: Mutex<Option<String>>,
 }
 
 impl RemoteHandoff {
     fn new(
-        stream: TcpStream,
+        io: SessionIo,
         bufs: Arc<BufSet>,
         plan: WirePlan,
         n_layers: usize,
@@ -1433,9 +2270,12 @@ impl RemoteHandoff {
         window: usize,
     ) -> RemoteHandoff {
         let remaining = plan.counts.clone();
-        let pending_cap = window.max(1) * frames_per_epoch(&plan) + 4;
+        // The coordinator keeps up to `window` epochs open at once and a
+        // resume can replay all of them back to back — size the pending
+        // buffer for every one of them plus slack for restore frames.
+        let pending_cap = (window.max(1) + 1) * frames_per_epoch(&plan) + 8;
         RemoteHandoff {
-            stream: Mutex::new(stream),
+            io,
             bufs,
             plan,
             n_layers,
@@ -1446,54 +2286,37 @@ impl RemoteHandoff {
             pending: Mutex::new(Vec::new()),
             pending_cap,
             epoch: AtomicU64::new(0),
+            own_restore: AtomicU32::new(0),
             stats: Arc::new(LinkStats::default()),
             fault: Mutex::new(None),
         }
     }
 
-    /// Idle probe between epochs: `Ok(true)` when at least one byte is
-    /// pending, `Ok(false)` on a benign read timeout, `Err` on EOF or any
-    /// real socket error.
-    fn peek_ready(&self) -> Result<bool, WireError> {
-        let stream = self.stream.lock().unwrap_or_else(|p| p.into_inner());
-        let mut probe = [0u8; 1];
-        match stream.peek(&mut probe) {
-            Ok(0) => Err(WireError::Io(std::io::Error::new(
-                std::io::ErrorKind::UnexpectedEof,
-                "link closed",
-            ))),
-            Ok(_) => Ok(true),
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
-                ) =>
-            {
-                Ok(false)
-            }
-            Err(e) => Err(WireError::Io(e)),
-        }
-    }
-
-    /// Blocking read of the next frame (any kind), with the progress-aware
-    /// liveness bound: a slow wide frame trickling in never times out as
-    /// long as bytes keep arriving; only [`LIVENESS_STRIKES`] consecutive
-    /// zero-progress windows declare the peer dead (the epoch-aware fix
-    /// for the v1 whole-frame 30 s bound, which could drop a live peer
-    /// mid-epoch under the windowed stream).
+    /// Blocking read of the next frame (any kind) from the session inbox,
+    /// with the liveness bound (see [`SessionInbox::recv`]).
     fn recv_frame(&self) -> Result<Frame, WireError> {
-        let mut stream = self.stream.lock().unwrap_or_else(|p| p.into_inner());
         let t0 = Instant::now();
-        let f = read_frame_patient(&mut stream, false);
+        let f = self.io.inbox.recv(false);
         self.stats.wait_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         let f = f?.expect("idle_ok=false never yields None");
         self.stats.count_frame(f.words.len());
         Ok(f)
     }
 
+    /// Idle-tolerant read between epochs: `Ok(None)` on a quiet timeout
+    /// window (the coordinator simply has no traffic), `Err` once the
+    /// connection goes away.
+    fn recv_idle(&self) -> Result<Option<Frame>, WireError> {
+        let f = self.io.inbox.recv(true)?;
+        if let Some(f) = &f {
+            self.stats.count_frame(f.words.len());
+        }
+        Ok(f)
+    }
+
     fn send_frame(&self, f: &Frame) -> Result<(), WireError> {
-        let mut stream = self.stream.lock().unwrap_or_else(|p| p.into_inner());
-        write_frame(&mut *stream, f)?;
+        let mut w = self.io.writer.lock().unwrap_or_else(|p| p.into_inner());
+        write_frame(&mut *w, f)?;
         self.stats.count_frame(f.words.len());
         Ok(())
     }
@@ -1510,6 +2333,7 @@ impl RemoteHandoff {
         for l in &self.levels {
             l.store(0, Ordering::Relaxed);
         }
+        self.own_restore.store(0, Ordering::Relaxed);
         *self.remaining.lock().unwrap_or_else(|p| p.into_inner()) = self.plan.counts.clone();
         let ready: Vec<Frame> = {
             let mut pending = self.pending.lock().unwrap_or_else(|p| p.into_inner());
@@ -1605,6 +2429,14 @@ impl RemoteHandoff {
         for (slot, w) in target[start..end].iter().zip(&f.words) {
             slot.store(*w, Ordering::Relaxed);
         }
+        if q == self.shard {
+            // A resume checkpoint restoring our *own* applied slice — it
+            // has no entry in the needs completion table (shards never
+            // ship themselves their own data mid-epoch); it just unblocks
+            // the cell loop's restart layer.
+            self.own_restore.fetch_max(f.boundary, Ordering::Release);
+            return Ok(());
+        }
         let mut remaining = self.remaining.lock().unwrap_or_else(|p| p.into_inner());
         let entry = remaining[b].iter_mut().find(|(d, n)| *d == q && *n > 0);
         match entry {
@@ -1622,6 +2454,37 @@ impl RemoteHandoff {
                 return Err(WireError::Protocol(format!(
                     "unexpected frame from producer {q} for boundary {b}"
                 )))
+            }
+        }
+        Ok(())
+    }
+
+    /// Block until the resume replay has restored this shard's own slice
+    /// of boundary `resume` (needs frames and future-epoch Starts keep
+    /// routing normally while we wait).
+    fn wait_restore(&self, resume: u32) -> Result<(), WireError> {
+        while self.own_restore.load(Ordering::Acquire) < resume {
+            let f = self.recv_frame()?;
+            match f.kind {
+                FrameKind::Data => self.apply(f)?,
+                FrameKind::Start => self.pend(f)?,
+                FrameKind::Fault => {
+                    return Err(WireError::Protocol(format!(
+                        "coordinator faulted: {}",
+                        fault_message(&f)
+                    )))
+                }
+                FrameKind::Bye => {
+                    return Err(WireError::Io(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "link closed mid-epoch",
+                    )))
+                }
+                k => {
+                    return Err(WireError::Protocol(format!(
+                        "unexpected {k:?} frame while waiting for data"
+                    )))
+                }
             }
         }
         Ok(())
@@ -1665,8 +2528,9 @@ impl Handoff for RemoteHandoff {
         let words: Vec<u64> =
             src[rr.clone()].iter().map(|w| w.load(Ordering::Relaxed)).collect();
         let epoch = self.epoch.load(Ordering::Relaxed);
-        self.send_frame(&Frame::data(epoch, level, self.shard, rr.start as u32, words))
-            .map_err(HandoffError::from)
+        let mut f = Frame::data(epoch, level, self.shard, rr.start as u32, words);
+        f.session = self.io.session;
+        self.send_frame(&f).map_err(HandoffError::from)
     }
 
     fn level(&self, shard: usize) -> u32 {
@@ -1689,13 +2553,31 @@ impl Handoff for RemoteHandoff {
     }
 }
 
+/// Send a session-stamped Fault on the shared write half (best effort
+/// error signalling to one coordinator session).
+fn send_fault(
+    writer: &Arc<Mutex<TcpStream>>,
+    session: u16,
+    msg: &str,
+) -> Result<(), WireError> {
+    let mut f = fault_frame(msg);
+    f.session = session;
+    let mut w = writer.lock().unwrap_or_else(|p| p.into_inner());
+    write_frame(&mut *w, &f)
+}
+
 /// The `polylut shard-worker` process body: the full sharded kernels
 /// (compiled deterministically from the same network, tables and shard
 /// count as the coordinator — verified by a fingerprint handshake), served
-/// over TCP.  Each accepted connection claims one `(engine, shard)` pair
-/// and gets private boundary buffers plus a thread running the same
-/// generic cell loop as a local shard worker, with `RemoteHandoff` mapping
-/// its dependency waits onto frame arrival.
+/// over TCP.  v3: one accepted **connection** carries any number of
+/// (engine, shard) **sessions** — a demux thread owns the socket reads,
+/// admits sessions as their Hello frames arrive (each gets a session id
+/// from the coordinator's header), and routes every subsequent frame to
+/// the claiming session's inbox.  Each session gets private boundary
+/// buffers plus a thread running the same generic cell loop as a local
+/// shard worker, with `RemoteHandoff` mapping its dependency waits onto
+/// frame arrival; writes back to the coordinator share the connection
+/// under one lock.
 pub struct ShardWorkerHost {
     plan: Arc<PlanKernel>,
     bits: Arc<BitsliceKernel>,
@@ -1752,18 +2634,18 @@ impl ShardWorkerHost {
         self.fingerprint
     }
 
-    /// Accept loop: serves every incoming connection on its own thread
-    /// until the listener errors (e.g. is closed).  Blocking — spawn it on
-    /// a dedicated thread for in-process use.
+    /// Accept loop: serves every incoming connection on its own demux
+    /// thread until the listener errors (e.g. is closed).  Blocking —
+    /// spawn it on a dedicated thread for in-process use.
     pub fn serve(self: Arc<Self>, listener: TcpListener) {
         for stream in listener.incoming() {
             match stream {
                 Ok(s) => {
                     let host = self.clone();
                     std::thread::Builder::new()
-                        .name("polylut-wire-session".into())
-                        .spawn(move || host.session(s))
-                        .expect("spawn wire session");
+                        .name("polylut-wire-conn".into())
+                        .spawn(move || host.connection(s))
+                        .expect("spawn wire connection");
                 }
                 Err(e) => {
                     log::warn!("shard-worker accept failed: {e}");
@@ -1773,12 +2655,43 @@ impl ShardWorkerHost {
         }
     }
 
-    fn session(&self, mut stream: TcpStream) {
+    /// Validate one session's Hello against the compiled kernels.  A
+    /// rejection faults only that session — the connection (and any other
+    /// sessions riding it) stays up.
+    fn admit(&self, hello: &Frame) -> Result<(EngineKind, usize), String> {
+        let engine = hello
+            .words
+            .first()
+            .copied()
+            .and_then(EngineKind::from_u64)
+            .ok_or_else(|| "Hello names no engine".to_string())?;
+        let shards = hello.words.get(1).copied().unwrap_or(0) as usize;
+        let fp = hello.words.get(2).copied().unwrap_or(0);
+        let shard = hello.shard as usize;
+        if shards != self.shards {
+            return Err(format!(
+                "shard count mismatch: coordinator {shards}, worker {}",
+                self.shards
+            ));
+        }
+        if fp != self.fingerprint {
+            return Err(format!(
+                "model fingerprint mismatch: coordinator {fp:#018x}, worker {:#018x}",
+                self.fingerprint
+            ));
+        }
+        if shard >= self.shards {
+            return Err(format!("shard {shard} out of range (shards {})", self.shards));
+        }
+        Ok((engine, shard))
+    }
+
+    fn connection(&self, mut stream: TcpStream) {
         let peer = stream
             .peer_addr()
             .map(|a| a.to_string())
             .unwrap_or_else(|_| "<unknown>".into());
-        if let Err(e) = self.session_inner(&mut stream) {
+        if let Err(e) = self.connection_inner(&mut stream, &peer) {
             match &e {
                 // EOF without a Bye is how a killed coordinator looks;
                 // don't alarm on it.
@@ -1786,7 +2699,7 @@ impl ShardWorkerHost {
                     log::info!("[shard-worker] {peer}: link closed");
                 }
                 _ => {
-                    log::warn!("[shard-worker] {peer}: session failed: {e}");
+                    log::warn!("[shard-worker] {peer}: connection failed: {e}");
                     let _ = write_frame(&mut stream, &fault_frame(&e.to_string()));
                 }
             }
@@ -1796,100 +2709,178 @@ impl ShardWorkerHost {
         let _ = stream.shutdown(Shutdown::Both);
     }
 
-    fn session_inner(&self, stream: &mut TcpStream) -> Result<(), WireError> {
+    /// Per-connection demux loop: owns every read on the socket, admits
+    /// sessions on Hello, routes Data/Start frames to session inboxes,
+    /// and tears every session down when the connection dies.
+    fn connection_inner(&self, stream: &mut TcpStream, peer: &str) -> Result<(), WireError> {
         stream.set_nodelay(true)?;
         // Liveness bound on the worker side too: a half-open link (peer
-        // died without FIN) must not pin a session thread in a blocking
-        // read forever.  Between epochs a timeout is benign (idle server)
-        // and the serve loop retries; mid-epoch the progress-aware bound
-        // applies — only `LIVENESS_STRIKES` consecutive zero-progress
-        // windows tear the session down, so a slow wide frame trickling
-        // in under the windowed stream is never dropped mid-epoch.
+        // died without FIN) must not pin the demux thread in a blocking
+        // read forever.  An idle timeout is benign (idle coordinator) and
+        // the loop retries; mid-frame reads use the progress-aware bound
+        // of `read_frame_patient`, so a slow wide frame trickling in is
+        // never dropped.
         stream.set_read_timeout(Some(RECV_TIMEOUT))?;
-        let hello = read_frame(stream)?;
-        if hello.kind != FrameKind::Hello {
-            return Err(WireError::Protocol(format!(
-                "expected Hello, got {:?}",
-                hello.kind
-            )));
+        let writer = Arc::new(Mutex::new(stream.try_clone()?));
+        let mut sessions: BTreeMap<u16, Arc<SessionInbox>> = BTreeMap::new();
+        let mut threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let result = loop {
+            let f = match read_frame_patient(stream, true) {
+                Ok(None) => continue, // quiet window — idle coordinator
+                Ok(Some(f)) => f,
+                Err(e) => break Err(e),
+            };
+            match f.kind {
+                FrameKind::Hello => {
+                    let sid = f.session;
+                    if sid == 0 || sessions.contains_key(&sid) {
+                        break Err(WireError::Protocol(format!(
+                            "reserved or duplicate session id {sid} in Hello"
+                        )));
+                    }
+                    let (engine, shard) = match self.admit(&f) {
+                        Ok(ok) => ok,
+                        Err(msg) => {
+                            log::warn!(
+                                "[shard-worker] {peer}: rejected session {sid}: {msg}"
+                            );
+                            if let Err(e) = send_fault(&writer, sid, &msg) {
+                                break Err(e);
+                            }
+                            continue;
+                        }
+                    };
+                    let resume_epoch = f.words.get(3).copied().unwrap_or(0);
+                    let peer_window = f.words.get(4).copied().unwrap_or(1) as usize;
+                    let window = self.window.max(peer_window);
+                    let inbox = Arc::new(SessionInbox::default());
+                    sessions.insert(sid, inbox.clone());
+                    let ack = Frame {
+                        kind: FrameKind::HelloAck,
+                        parity: 0,
+                        session: sid,
+                        epoch: 0,
+                        boundary: 0,
+                        shard: shard as u32,
+                        start: 0,
+                        words: vec![self.fingerprint],
+                    };
+                    {
+                        let mut w = writer.lock().unwrap_or_else(|p| p.into_inner());
+                        if let Err(e) = write_frame(&mut *w, &ack) {
+                            break Err(e);
+                        }
+                    }
+                    // The effective window is the max of both ends — the
+                    // coordinator gates its in-flight epochs on its own
+                    // setting, the worker just sizes buffers to match.
+                    log::info!(
+                        "[shard-worker] {peer}: session {sid} admitted: {engine:?} \
+                         shard {shard} window={window} (effective max of worker {}, \
+                         coordinator {peer_window})",
+                        self.window
+                    );
+                    if resume_epoch > 0 {
+                        log::info!(
+                            "[shard-worker] resume handshake: shard {shard} from \
+                             epoch {resume_epoch}"
+                        );
+                    }
+                    let io = SessionIo {
+                        session: sid,
+                        writer: writer.clone(),
+                        inbox: inbox.clone(),
+                    };
+                    let plan = self.plan.clone();
+                    let bits = self.bits.clone();
+                    let fault_writer = writer.clone();
+                    let peer = peer.to_string();
+                    let t = std::thread::Builder::new()
+                        .name("polylut-wire-session".into())
+                        .spawn(move || {
+                            let r = match engine {
+                                EngineKind::Plan => serve_shard(&*plan, shard, io, window),
+                                EngineKind::Bitslice => {
+                                    serve_shard(&*bits, shard, io, window)
+                                }
+                            };
+                            match r {
+                                Ok(()) => log::info!(
+                                    "[shard-worker] {peer}: session {sid} closed"
+                                ),
+                                Err(WireError::Io(e))
+                                    if e.kind() == std::io::ErrorKind::UnexpectedEof =>
+                                {
+                                    log::info!(
+                                        "[shard-worker] {peer}: session {sid} link \
+                                         closed"
+                                    );
+                                }
+                                Err(e) => {
+                                    log::warn!(
+                                        "[shard-worker] {peer}: session {sid} \
+                                         failed: {e}"
+                                    );
+                                    let _ = send_fault(&fault_writer, sid, &e.to_string());
+                                }
+                            }
+                        })
+                        .expect("spawn wire session");
+                    threads.push(t);
+                }
+                FrameKind::Data | FrameKind::Start => match sessions.get(&f.session) {
+                    Some(inbox) => inbox.push(f),
+                    None => {
+                        let msg = format!("frame for unknown session {}", f.session);
+                        log::warn!("[shard-worker] {peer}: {msg}");
+                        if let Err(e) = send_fault(&writer, f.session, &msg) {
+                            break Err(e);
+                        }
+                    }
+                },
+                FrameKind::Bye => {
+                    if f.session == 0 {
+                        break Ok(()); // connection-wide clean shutdown
+                    }
+                    if let Some(inbox) = sessions.remove(&f.session) {
+                        inbox.push(f);
+                    }
+                }
+                k => {
+                    break Err(WireError::Protocol(format!(
+                        "unexpected {k:?} frame on the demux path"
+                    )))
+                }
+            }
+        };
+        for inbox in sessions.values() {
+            inbox.close();
         }
-        let engine = hello
-            .words
-            .first()
-            .copied()
-            .and_then(EngineKind::from_u64)
-            .ok_or_else(|| WireError::Protocol("Hello names no engine".into()))?;
-        let shards = hello.words.get(1).copied().unwrap_or(0) as usize;
-        let fp = hello.words.get(2).copied().unwrap_or(0);
-        // v2 resume handshake: the Hello carries the epoch the coordinator
-        // will (re)start from and its in-flight window.  The worker is
-        // stateless across sessions, so resuming just means accepting the
-        // next Start at that epoch; the window sizes the pending buffer.
-        let resume_epoch = hello.words.get(3).copied().unwrap_or(0);
-        let peer_window = hello.words.get(4).copied().unwrap_or(1) as usize;
-        let shard = hello.shard as usize;
-        if resume_epoch > 0 {
-            log::info!(
-                "[shard-worker] resume handshake: shard {shard} from epoch {resume_epoch}"
-            );
+        let _ = stream.shutdown(Shutdown::Both);
+        for t in threads {
+            let _ = t.join();
         }
-        if shards != self.shards {
-            let msg = format!(
-                "shard count mismatch: coordinator {shards}, worker {}",
-                self.shards
-            );
-            write_frame(stream, &fault_frame(&msg))?;
-            return Err(WireError::Protocol(msg));
-        }
-        if fp != self.fingerprint {
-            let msg = format!(
-                "model fingerprint mismatch: coordinator {fp:#018x}, worker {:#018x}",
-                self.fingerprint
-            );
-            write_frame(stream, &fault_frame(&msg))?;
-            return Err(WireError::Protocol(msg));
-        }
-        if shard >= self.shards {
-            let msg = format!("shard {shard} out of range (shards {})", self.shards);
-            write_frame(stream, &fault_frame(&msg))?;
-            return Err(WireError::Protocol(msg));
-        }
-        write_frame(
-            stream,
-            &Frame {
-                kind: FrameKind::HelloAck,
-                parity: 0,
-                epoch: 0,
-                boundary: 0,
-                shard: shard as u32,
-                start: 0,
-                words: vec![self.fingerprint],
-            },
-        )?;
-        let stream = stream.try_clone()?;
-        let window = self.window.max(peer_window);
-        match engine {
-            EngineKind::Plan => serve_shard(&*self.plan, shard, stream, window),
-            EngineKind::Bitslice => serve_shard(&*self.bits, shard, stream, window),
-        }
+        result
     }
 }
 
-/// Serve one (engine, shard) link: per Start frame, run the generic cell
-/// loop for this shard over private **per-boundary** buffers with the
+/// Serve one (engine, shard) session: per Start frame, run the generic
+/// cell loop for this shard over private **per-boundary** buffers with the
 /// `RemoteHandoff` (per-boundary staging is what lets the windowed stream
-/// apply frames in any arrival order — no parity aliasing to protect).
+/// apply frames in any arrival order — no parity aliasing to protect).  A
+/// Start with `boundary = h > 0` is a checkpointed resume: wait for the
+/// replay to restore our own boundary-`h` slice, then run from layer `h`.
 fn serve_shard<K: ShardKernel>(
     kernel: &K,
     shard: usize,
-    stream: TcpStream,
+    io: SessionIo,
     window: usize,
 ) -> Result<(), WireError> {
     let bufs = Arc::new(BufSet::per_boundary(kernel));
     let plan = wire_plan(kernel, shard);
     let deps_owned = plan.deps.clone();
     let handoff = RemoteHandoff::new(
-        stream,
+        io,
         bufs.clone(),
         plan,
         kernel.n_layers(),
@@ -1904,31 +2895,33 @@ fn serve_shard<K: ShardKernel>(
     loop {
         // The windowed sender may have streamed the next epoch's Start
         // while the previous epoch's tail was still being read — serve it
-        // from the pending buffer before touching the socket.
-        let next = handoff.take_pending_start();
-        let f = match next {
+        // from the pending buffer before blocking on the inbox.
+        let f = match handoff.take_pending_start() {
             Some(f) => f,
-            None => {
-                // Between epochs, wait via a 1-byte peek: a read timeout
-                // there just means the coordinator is idle — keep waiting
-                // (but an EOF/RST is a dead link and ends the session, so
-                // half-open peers cannot pin this thread forever once TCP
-                // notices).  Only start a frame read once a byte is
-                // pending; mid-frame and mid-epoch reads then use the
-                // progress-aware liveness bound (`read_frame_patient`), so
-                // neither an idle probe nor a slow wide frame can
-                // desynchronize or tear down a live session.
-                if !handoff.peek_ready()? {
-                    continue;
-                }
-                handoff.recv_frame()?
-            }
+            None => match handoff.recv_idle()? {
+                Some(f) => f,
+                None => continue, // idle coordinator between epochs
+            },
         };
         match f.kind {
             FrameKind::Start => {
+                let resume = f.boundary;
                 handoff.begin_epoch(f.epoch)?;
-                run_cells(kernel, &handoff, &bufs, shard, &deps, &cells, &waits, &mut scratch)
-                    .map_err(|e| WireError::Protocol(e.0))?;
+                if resume > 0 {
+                    handoff.wait_restore(resume)?;
+                }
+                run_cells(
+                    kernel,
+                    &handoff,
+                    &bufs,
+                    shard,
+                    &deps,
+                    &cells,
+                    &waits,
+                    resume as usize,
+                    &mut scratch,
+                )
+                .map_err(|e| WireError::Protocol(e.0))?;
             }
             // Stale or early Data frames between epochs route through the
             // epoch completion table (stale → dropped, future → pended).
@@ -1967,6 +2960,7 @@ mod tests {
         Frame {
             kind: kinds[rng.below(kinds.len())],
             parity: (boundary % 2) as u8,
+            session: rng.below(100) as u16,
             epoch: rng.next_u64(),
             boundary,
             shard: rng.below(17) as u32,
@@ -2548,7 +3542,7 @@ mod tests {
             for window in [1usize, 4, 16] {
                 let placement: ShardPlacement =
                     (0..shards).map(|s| (s > 0).then(|| addr.clone())).collect();
-                let wire = WireConfig { window, retries: 3 };
+                let wire = WireConfig { window, retries: 3, mux: true };
                 let model = ShardedModel::compile_placed_wire(
                     &net, &tables, shards, 1, &placement, None, wire,
                 )
@@ -2655,7 +3649,7 @@ mod tests {
         let upstream = spawn_host(&net, &tables, 2);
         let proxy = flaky_proxy(upstream, 300, None);
         let placement: ShardPlacement = vec![None, Some(proxy)];
-        let wire = WireConfig { window: 4, retries: 8 };
+        let wire = WireConfig { window: 4, retries: 8, mux: true };
         let model =
             ShardedModel::compile_placed_wire(&net, &tables, 2, 1, &placement, None, wire)
                 .expect("placement through proxy");
@@ -2672,12 +3666,13 @@ mod tests {
         assert_eq!(ws.retry_exhausted, 0, "{ws:?}");
         assert!(!model.faulted(), "no degraded batches");
         // Pin the cached-handle fix: exactly one socket handle is installed
-        // per link generation — the 2 initial connects (plan + bitslice
-        // links) plus one per resume — never one per flight/frame.
+        // per host-link generation — one initial connect (the multiplexed
+        // host link carries both engines' sessions) plus one per resume —
+        // never one per flight/frame, and never one per session.
         assert_eq!(
             ws.handle_clones,
-            2 + ws.resumes,
-            "one cached handle per link generation: {ws:?}"
+            1 + ws.resumes,
+            "one cached handle per host-link generation: {ws:?}"
         );
         assert!(
             ws.frames > ws.handle_clones,
@@ -2694,10 +3689,11 @@ mod tests {
     fn retry_exhaustion_is_clean_sticky_fault() {
         let (net, tables) = grid_net(1, 1);
         let upstream = spawn_host(&net, &tables, 2);
-        // Two conns = the plan + bitslice links; nothing after.
-        let proxy = flaky_proxy(upstream, 250, Some(2));
+        // One conn = the multiplexed host link (both engines' sessions
+        // share it); nothing after.
+        let proxy = flaky_proxy(upstream, 250, Some(1));
         let placement: ShardPlacement = vec![None, Some(proxy)];
-        let wire = WireConfig { window: 4, retries: 2 };
+        let wire = WireConfig { window: 4, retries: 2, mux: true };
         let model =
             ShardedModel::compile_placed_wire(&net, &tables, 2, 1, &placement, None, wire)
                 .expect("placement through proxy");
@@ -2714,5 +3710,196 @@ mod tests {
         assert!(model.plan.forward_codes(&xs[0]).is_err(), "fault is sticky");
         let ws = model.wire_stats().expect("remote link present");
         assert!(ws.retry_exhausted >= 1, "{ws:?}");
+    }
+
+    /// Tentpole pin: W-deep epoch pipelining is bit-exact under
+    /// concurrently streamed single-sample requests, the epoch-ring
+    /// concurrency high-water mark actually exceeds 1 for W > 1 (epochs
+    /// overlap end to end) while W = 1 stays strictly lock-step, and one
+    /// multiplexed TCP connection per host carries every (engine, shard)
+    /// session.
+    #[test]
+    fn interleaved_epochs_are_bit_exact_and_overlap() {
+        for shards in [2usize, 3] {
+            let (net, tables) = grid_net(2, 2);
+            let addr = spawn_host(&net, &tables, shards);
+            for window in [1usize, 2, 8] {
+                let placement: ShardPlacement =
+                    (0..shards).map(|s| (s > 0).then(|| addr.clone())).collect();
+                let wire = WireConfig { window, retries: 3, mux: true };
+                let model = ShardedModel::compile_placed_wire(
+                    &net, &tables, shards, 1, &placement, None, wire,
+                )
+                .expect("loopback placement");
+                // Several streaming clients, each firing single-sample
+                // requests back to back: the admission ring must overlap
+                // their epochs rather than drain the pipe between samples.
+                let streams = 4usize;
+                let xs = random_codes(&net, streams * 16, 0xA11CE ^ window as u64);
+                std::thread::scope(|scope| {
+                    for t in 0..streams {
+                        let (model, xs, net) = (&model, &xs, &net);
+                        scope.spawn(move || {
+                            let mut i = t;
+                            while i < xs.len() {
+                                assert_eq!(
+                                    model
+                                        .plan
+                                        .forward_codes(&xs[i])
+                                        .expect("pipelined serve"),
+                                    net.forward_codes(&xs[i]),
+                                    "S={shards} W={window} sample {i}"
+                                );
+                                i += streams;
+                            }
+                        });
+                    }
+                });
+                let ws = model.wire_stats().expect("remote links present");
+                if window == 1 {
+                    assert_eq!(ws.inflight_epochs, 1, "W=1 is lock-step: {ws:?}");
+                } else {
+                    assert!(
+                        ws.inflight_epochs > 1,
+                        "W={window} must overlap epochs: {ws:?}"
+                    );
+                }
+                assert!(
+                    ws.inflight_epochs <= window as u64,
+                    "ring depth bounds the overlap: {ws:?} (W={window})"
+                );
+                assert_eq!(ws.retry_exhausted, 0, "{ws:?}");
+                // Link multiplexing: every session to this host — all
+                // remote shards, both engines — rides one connection.
+                assert_eq!(model.wire_links(), 1, "one host => one TCP link");
+                let hosts = model.wire_host_stats();
+                assert_eq!(hosts.len(), 1, "{hosts:?}");
+                assert_eq!(
+                    hosts[0].sessions as usize,
+                    2 * (shards - 1),
+                    "plan+bitslice sessions share the link: {hosts:?}"
+                );
+            }
+        }
+    }
+
+    /// TCP proxy that severs the *worker → coordinator* direction after
+    /// forwarding exactly `cut_after` length-prefixed frames on the first
+    /// connection.  The cut is frame-aligned (never mid-frame) and held
+    /// for a beat before the sockets die, so the coordinator definitively
+    /// applies the last forwarded result — pinning the applied-boundary
+    /// high-water mark the resume must honor.  Later connections forward
+    /// untouched.
+    fn frame_cut_proxy(upstream: String, cut_after: usize) -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind proxy");
+        let addr = listener.local_addr().expect("proxy addr").to_string();
+        std::thread::spawn(move || {
+            for idx in 0usize.. {
+                let (client, _) = match listener.accept() {
+                    Ok(c) => c,
+                    Err(_) => break,
+                };
+                let up = match TcpStream::connect(&upstream) {
+                    Ok(u) => u,
+                    Err(_) => break,
+                };
+                let (mut c_in, mut u_out) = (
+                    client.try_clone().expect("clone client"),
+                    up.try_clone().expect("clone upstream"),
+                );
+                std::thread::spawn(move || {
+                    let mut buf = [0u8; 1024];
+                    loop {
+                        let n = match c_in.read(&mut buf) {
+                            Ok(0) | Err(_) => break,
+                            Ok(n) => n,
+                        };
+                        if u_out.write_all(&buf[..n]).is_err() {
+                            break;
+                        }
+                    }
+                    let _ = c_in.shutdown(Shutdown::Both);
+                    let _ = u_out.shutdown(Shutdown::Both);
+                });
+                let cut = (idx == 0).then_some(cut_after);
+                let (mut u_in, mut c_out) = (up, client);
+                std::thread::spawn(move || {
+                    let mut forwarded = 0usize;
+                    loop {
+                        let mut len = [0u8; 4];
+                        if u_in.read_exact(&mut len).is_err() {
+                            break;
+                        }
+                        let n = u32::from_le_bytes(len) as usize;
+                        let mut body = vec![0u8; n];
+                        if u_in.read_exact(&mut body).is_err() {
+                            break;
+                        }
+                        if c_out.write_all(&len).is_err()
+                            || c_out.write_all(&body).is_err()
+                        {
+                            break;
+                        }
+                        forwarded += 1;
+                        if cut.is_some_and(|k| forwarded >= k) {
+                            // Let the coordinator apply what it got, then die.
+                            std::thread::sleep(Duration::from_millis(150));
+                            break;
+                        }
+                    }
+                    let _ = u_in.shutdown(Shutdown::Both);
+                    let _ = c_out.shutdown(Shutdown::Both);
+                });
+            }
+        });
+        addr
+    }
+
+    /// Checkpointed suffix resume (v3): sever the worker→coordinator
+    /// direction right after an epoch's boundary-1 result.  The
+    /// coordinator applies it before the link dies (applied high-water
+    /// mark = 1), so recovery must replay only the *unapplied suffix* of
+    /// the open epoch — its Start re-aimed at boundary 1, the checkpoint
+    /// frame, and any needs flights at or above the mark — while the
+    /// already-applied boundary's needs frames are trimmed from the
+    /// replay set, pinned here on the frame counters.
+    #[test]
+    fn resume_replays_only_unapplied_suffix() {
+        let (net, tables) = grid_net(2, 1);
+        let upstream = spawn_host(&net, &tables, 2);
+        // Worker→coordinator frames on the multiplexed link, in order: 2
+        // HelloAcks (plan + bitslice sessions greet at compile time),
+        // then per plan epoch its boundary-1 and boundary-2 results.
+        // Forwarding 7 frames cuts right after epoch 3's boundary-1
+        // result, leaving epoch 3 open at applied = 1.
+        let proxy = frame_cut_proxy(upstream, 7);
+        let placement: ShardPlacement = vec![None, Some(proxy)];
+        let wire = WireConfig { window: 4, retries: 8, mux: true };
+        let model =
+            ShardedModel::compile_placed_wire(&net, &tables, 2, 1, &placement, None, wire)
+                .expect("placement through proxy");
+        let xs = random_codes(&net, 8, 0xC0DE);
+        // Single-threaded stream: epochs run strictly one at a time, so
+        // the worker's result-frame sequence (and thus where the cut
+        // lands) is fully deterministic.
+        for (i, x) in xs.iter().enumerate() {
+            assert_eq!(
+                model.plan.forward_codes(x).expect("suffix resume keeps serving"),
+                net.forward_codes(x),
+                "sample {i} must stay bit-exact across the cut"
+            );
+        }
+        let ws = model.wire_stats().expect("remote link present");
+        assert_eq!(ws.resumes, 1, "exactly one recovery ladder: {ws:?}");
+        assert!(
+            ws.resume_replayed_frames >= 2,
+            "the re-aimed Start and the checkpoint frame must replay: {ws:?}"
+        );
+        assert!(
+            ws.resume_skipped_frames >= 1,
+            "the applied boundary's needs flights must be trimmed, not replayed: {ws:?}"
+        );
+        assert_eq!(ws.retry_exhausted, 0, "{ws:?}");
+        assert!(!model.faulted(), "no sticky fault");
     }
 }

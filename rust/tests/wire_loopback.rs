@@ -123,6 +123,24 @@ fn assert_wire_bit_exact(a: usize, degree: u32, shards: usize, workers: &[&Worke
     let ws = model.wire_stats().expect("remote links present");
     assert!(ws.frames > 0, "frames crossed the wire");
     assert!(ws.bytes > ws.frames, "bytes include headers");
+    // Wire v3 link multiplexing: every (engine, shard) session to one
+    // worker process shares a single TCP connection, so the link count is
+    // the number of distinct worker addresses — not the session count.
+    let hosts: std::collections::BTreeSet<&str> =
+        placement.iter().flatten().map(String::as_str).collect();
+    assert_eq!(
+        model.wire_links(),
+        hosts.len(),
+        "one TCP connection per worker host A={a} D={degree} S={shards}"
+    );
+    let per_host = model.wire_host_stats();
+    assert_eq!(per_host.len(), hosts.len(), "per-host rollup: {per_host:?}");
+    for h in &per_host {
+        // Both engines (plan + bitslice) open one session per remote shard
+        // placed on this host.
+        assert!(h.sessions >= 2, "mux carries both engines' sessions: {h:?}");
+        assert!(h.frames > 0 && h.bytes > 0, "per-host traffic counted: {h:?}");
+    }
 }
 
 /// S = 2: one local shard + one shard in a worker process.
@@ -158,7 +176,7 @@ fn kill_and_restart_resumes_bit_exact() {
     let placement: ShardPlacement = vec![None, Some(addr.clone())];
     // Generous retry budget: the restarted process needs a moment to
     // recompile the model before it listens again.
-    let wire = WireConfig { window: 4, retries: 12 };
+    let wire = WireConfig { window: 4, retries: 12, mux: true };
     let model =
         ShardedModel::compile_placed_wire(&net, &tables, 2, 1, &placement, None, wire)
             .expect("placed compile against worker process");
